@@ -1,0 +1,89 @@
+"""Roofline report: reads the dry-run artifacts and renders the per-cell
+three-term table (§Roofline of EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(mesh: str = "16_16", tag: str = "") -> list[dict]:
+    """Baseline artifacts are <arch>--<shape>--<mesh>.json; hillclimb
+    variants carry a -<tag> suffix and are excluded unless requested."""
+    suffix = f"-{tag}" if tag else ""
+    out = []
+    for fn in sorted(glob.glob(os.path.join(ARTIFACTS,
+                                            f"*--{mesh}{suffix}.json"))):
+        base = os.path.basename(fn)
+        parts = base[:-5].split("--")
+        if len(parts) != 3 or parts[2] != mesh + suffix:
+            continue
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def cell_row(c: dict) -> dict:
+    if c.get("status") == "skipped":
+        return {"arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+                "status": "skipped (documented)"}
+    r = c["roofline"]
+    total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return {
+        "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+        "compute_ms": round(r["compute_s"] * 1e3, 2),
+        "memory_ms": round(r["memory_s"] * 1e3, 2),
+        "collective_ms": round(r["collective_s"] * 1e3, 2),
+        "dominant": r["dominant"].replace("_s", ""),
+        "roofline_fraction": round(r["compute_s"] / total, 3) if total else 0,
+        "useful_flops_ratio": round(c["useful_flops_ratio"], 2),
+        "peak_gb": round(c["memory"]["tpu_adjusted_peak_bytes"] / 1e9, 2),
+        "fits_16gb": c["fits_hbm"],
+    }
+
+
+def report(mesh: str = "16_16"):
+    cells = load_cells(mesh)
+    rows = [cell_row(c) for c in cells]
+    rows.sort(key=lambda r: (r["arch"],
+                             SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    ok = [r for r in rows if "roofline_fraction" in r]
+    derived = (f"{len(rows)} cells on {mesh}; "
+               f"{sum(1 for r in ok if r['dominant'] == 'compute')} compute-"
+               f"bound, {sum(1 for r in ok if r['dominant'] == 'memory')} "
+               f"memory-bound, "
+               f"{sum(1 for r in ok if r['dominant'] == 'collective')} "
+               f"collective-bound; median roofline fraction "
+               f"{sorted(r['roofline_fraction'] for r in ok)[len(ok)//2] if ok else 0}")
+    return rows, derived
+
+
+def markdown_table(mesh: str = "16_16") -> str:
+    rows, _ = report(mesh)
+    hdr = ("| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | frac | useful | peak GB | fits |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if "roofline_fraction" not in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | — | — | — | n/a |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_ms']} | "
+            f"{r['memory_ms']} | {r['collective_ms']} | {r['dominant']} | "
+            f"{r['roofline_fraction']} | {r['useful_flops_ratio']} | "
+            f"{r['peak_gb']} | {'y' if r['fits_16gb'] else 'N'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for mesh in ("16_16", "2_16_16"):
+        print(f"\n== mesh {mesh} ==")
+        print(markdown_table(mesh))

@@ -1,0 +1,46 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
+benchmark computation itself)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import paper_tables, roofline
+
+OUTDIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def main() -> None:
+    os.makedirs(OUTDIR, exist_ok=True)
+    benches = [
+        ("fig6_scalability", paper_tables.fig6_scalability),
+        ("fig6_recovery", paper_tables.fig6_recovery),
+        ("fig3_orchestration", paper_tables.fig3_orchestration),
+        ("table1_cost", paper_tables.table1_cost),
+        ("table2_cow", paper_tables.table2_cow),
+        ("table3_datagen", paper_tables.table3_datagen),
+        ("roofline_single_pod", lambda: roofline.report("16_16")),
+        ("roofline_multi_pod", lambda: roofline.report("2_16_16")),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        t0 = time.time()
+        try:
+            rows, derived = fn()
+            us = (time.time() - t0) * 1e6
+            with open(os.path.join(OUTDIR, f"{name}.json"), "w") as f:
+                json.dump(rows, f, indent=1, default=str)
+            print(f'{name},{us:.0f},"{derived}"')
+        except Exception as e:  # pragma: no cover
+            print(f'{name},-1,"FAILED: {e!r}"')
+    print("# artifacts in", os.path.abspath(OUTDIR), file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Parallel demonstration collection (§4.2 stage 1): agents drive OS replicas
+through the data server; trajectories (screenshot/thought/action) are encoded
+for SFT. Real threaded execution at laptop scale + the 1024-replica
+virtual-time projection the paper reports.
+
+    PYTHONPATH=src python examples/collect_trajectories.py --tasks 12
+"""
+import argparse
+import time
+
+from repro.core import (CowStore, DiskImage, DataServer, FaultInjector,
+                        Gateway, RunnerPool)
+from repro.core.replica import LatencyModel
+from repro.core.tasks import TaskSuite, TABLE3_ROWS
+from repro.data import Trajectory, TrajectoryStep, ByteTokenizer, \
+    encode_trajectory
+
+
+def scripted_agent(obs, step_idx):
+    """Stand-in for UI-TARS / Agent-S: deterministic scripted policy."""
+    actions = ["click(120, 84)", "type('quarterly report')", "scroll(-2)",
+               "key('ctrl+s')", "drag(40, 40, 200, 90)"]
+    thought = f"The screen shows state {obs.sum() % 997}; next I will act."
+    return thought, actions[step_idx % len(actions)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=12)
+    ap.add_argument("--replicas", type=int, default=16)
+    args = ap.parse_args()
+
+    store = CowStore()
+    base = DiskImage.create_base(store, "ubuntu", 24 * 10**9)
+    pools = [RunnerPool(f"node{i}", base, size=args.replicas // 2,
+                        faults=FaultInjector(enabled=True, seed=i), seed=i)
+             for i in range(2)]
+    server = DataServer(Gateway(pools), max_workers=args.replicas)
+    tasks = [t.to_dict() for t in TaskSuite(seed=0).sample(args.tasks)]
+
+    t0 = time.time()
+    obs0 = server.reset(tasks)
+    trajs: dict[int, list] = {o["slot"]: [] for o in obs0}
+    last_obs = {o["slot"]: o["obs"] for o in obs0}
+    virtual_s = 0.0
+    it = 0
+    while server.live_slots():
+        pending = {}
+        for s in server.live_slots():
+            pending[s] = scripted_agent(last_obs[s], it)
+        results = server.step({s: a for s, (_, a) in pending.items()})
+        for s, (obs, rew, done, info) in results.items():
+            thought, action = pending[s]
+            trajs[s].append(TrajectoryStep(obs, thought, action))
+            last_obs[s] = obs
+        it += 1
+    scores = server.evaluate()
+    wall = time.time() - t0
+    for ep in list(trajs):
+        virtual_s += server.episode(ep).virtual_seconds
+
+    out = [Trajectory(t["task_id"], t["description"], steps,
+                      scores.get(slot, 0.0))
+           for (slot, steps), t in zip(trajs.items(), tasks)]
+    tok = ByteTokenizer()
+    enc = [encode_trajectory(t, tok, 151936) for t in out]
+    n_steps = sum(len(t.steps) for t in out)
+    n_tokens = sum(len(ids) for ids, _ in enc)
+
+    print(f"collected {len(out)} trajectories / {n_steps} steps / "
+          f"{n_tokens} tokens in {wall:.1f}s wall")
+    print(f"virtual env time: {virtual_s:,.0f}s "
+          f"({virtual_s / max(n_steps,1):.1f}s/step — paper: ~2s/step)")
+    rate_1024 = 1024 * 60 / (virtual_s / max(len(out), 1))
+    print(f"projected 1024-replica rate: {rate_1024:,.0f} trajectories/min "
+          f"(paper: ~1420)")
+    print("telemetry:", server.telemetry.snapshot()["counters"])
+    server.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: spin up an OSGym fleet, run tasks through the single-entry
+data server, and inspect the infrastructure metrics the paper reports.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (CowStore, DiskImage, DataServer, FaultInjector,
+                        Gateway, RunnerPool)
+from repro.core.tasks import TaskSuite
+
+# 1. One 24 GB bootable base image; every replica reflink-clones it (§3.3).
+store = CowStore()
+base = DiskImage.create_base(store, "ubuntu-22.04", 24 * 10**9)
+print(f"base image: {len(base.blocks)} blocks, "
+      f"{store.physical_bytes()/1e9:.1f} GB physical")
+
+# 2. Two executor nodes with pre-warmed runner pools (§3.4) behind a
+#    task-affinity gateway, with stochastic software faults enabled.
+pools = [RunnerPool(f"node{i}", base, size=8,
+                    faults=FaultInjector(enabled=True, seed=i), seed=i)
+         for i in range(2)]
+gateway = Gateway(pools)
+
+# 3. The centralized data server: one object, batched reset/step (§3.6).
+server = DataServer(gateway, max_workers=16)
+tasks = [t.to_dict() for t in TaskSuite(seed=0).sample(8)]
+obs = server.reset(tasks)
+print(f"started {len(obs)} episodes across "
+      f"{len(gateway.healthy_nodes())} nodes")
+
+# 4. Drive all episodes to completion; failures are retried/reassigned
+#    transparently (§3.4 multi-layer recovery).
+steps = 0
+while server.live_slots():
+    results = server.step({s: {"type": "click", "x": 100, "y": 200}
+                           for s in server.live_slots()})
+    steps += len(results)
+scores = server.evaluate()
+
+print(f"completed {len(scores)} episodes in {steps} env steps")
+print(f"mean task score: {sum(scores.values())/len(scores):.3f}")
+print("telemetry:", server.telemetry.snapshot()["counters"])
+print(f"physical disk after run: {store.physical_bytes()/1e9:.2f} GB "
+      f"(naive would be {(len(pools)*8+1)*24:.0f} GB)")
+server.close()

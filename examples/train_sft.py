@@ -1,0 +1,92 @@
+"""End-to-end SFT driver (§4.2 stage 2): collect demonstrations from the
+OSGym fleet, pack them into interleaved (instruction, screenshot, thought,
+action) sequences, and finetune an agent backbone for a few hundred steps
+with fault-tolerant checkpointing.
+
+Default: a reduced qwen3-family backbone that trains in minutes on CPU.
+`--model-scale 100m` builds a ~100M-parameter config (the assignment's
+end-to-end target; sized for a GPU/TPU host).
+
+    PYTHONPATH=src python examples/train_sft.py --steps 300
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_reduced
+from repro.data import ByteTokenizer, encode_trajectory, pack_batches, \
+    synthetic_trajectories
+from repro.distributed.checkpoint import CheckpointManager
+from repro.models import build_model
+from repro.train.optimizer import OptimizerConfig
+from repro.train.sft import SFTTrainer
+
+
+def build_cfg(scale: str):
+    base = get_reduced("qwen3-1.7b")
+    if scale == "smoke":
+        return base
+    if scale == "100m":
+        return dataclasses.replace(
+            base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=32768)
+    raise ValueError(scale)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--model-scale", default="smoke",
+                    choices=["smoke", "100m"])
+    ap.add_argument("--from-fleet", action="store_true",
+                    help="collect live from the simulated fleet instead of "
+                         "the synthetic offline set")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.model_scale)
+    model = build_model(cfg)
+
+    if args.from_fleet:
+        import tests.test_system as helpers  # reuse the fleet collector
+        trajs = helpers.collect_trajectories(n_tasks=16)
+    else:
+        trajs = synthetic_trajectories(128, seed=0)
+    tok = ByteTokenizer()
+    enc = [encode_trajectory(t, tok, cfg.vocab_size) for t in trajs]
+
+    def stream():
+        epoch = 0
+        while True:
+            yield from pack_batches(enc, batch=args.batch, seq_len=args.seq,
+                                    seed=epoch)
+            epoch += 1
+
+    batches = stream()
+    trainer = SFTTrainer(
+        model, seed=0,
+        opt_cfg=OptimizerConfig(lr=3e-4, warmup_steps=30,
+                                decay_steps=args.steps))
+    ckpt = CheckpointManager(keep=2)
+
+    n = sum(p.size for p in jax.tree.leaves(trainer.params))
+    print(f"training {n/1e6:.1f}M-param {cfg.family} backbone for "
+          f"{args.steps} steps ({args.batch}x{args.seq} tokens/step)")
+    losses = []
+    for step in range(1, args.steps + 1):
+        res = trainer.fit([next(batches)], verbose=False)
+        losses.append(res.final_loss)
+        if step % 25 == 0:
+            print(f"step {step:4d}  loss {losses[-1]:.4f}")
+        if step % 100 == 0:
+            stats = ckpt.save(step, {"params": trainer.params})
+            print(f"  checkpoint @{step}: +{stats['new_physical_bytes']/1e6:.1f} "
+                  f"MB physical (block-dedup)")
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {args.steps} steps")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

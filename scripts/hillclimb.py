@@ -1,0 +1,90 @@
+"""§Perf hillclimb driver: run a named variant of a cell and diff it against
+the baseline artifact.
+
+    PYTHONPATH=src python scripts/hillclimb.py <arch> <shape> <mesh> <tag> \
+        [--moe-ep] [--remat X] [--microbatches N] [--optimizer X]
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell, ARTIFACTS  # noqa: E402 (sets XLA_FLAGS)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("mesh", choices=["single", "multi"])
+    ap.add_argument("tag")
+    ap.add_argument("--moe-ep", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--no-tp", action="store_true",
+                    help="train: pure-FSDP/ZeRO (batch over both axes, "
+                         "no tensor parallelism)")
+    ap.add_argument("--tp-only", action="store_true",
+                    help="serve: weights resident on the model axis only "
+                         "(no FSDP over data -> no weight gathers)")
+    ap.add_argument("--cache-seq-tp", action="store_true",
+                    help="serve: shard the KV cache over the model axis by "
+                         "sequence (flash-decoding layout)")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.no_tp or args.tp_only or args.cache_seq_tp:
+        from repro.launch.mesh import make_production_mesh
+        from repro.distributed.sharding import (train_rules, serve_rules,
+                                                configure_moe)
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        if args.no_tp:
+            dp = ("pod", "data", "model") if args.mesh == "multi" else                  ("data", "model")
+            rules = train_rules(mesh).with_overrides(
+                batch=dp, q_dim=(), kv_dim=(), heads=(), mlp=(),
+                expert_mlp=(), ssm_inner=(), groups=("data", "model"))
+        else:
+            rules = serve_rules(
+                mesh, long_context=(args.shape == "long_500k"))
+            if args.tp_only:
+                rules = rules.with_overrides(embed=(), frontend=(),
+                                             lm_embed=())
+            if args.cache_seq_tp:
+                rules = rules.with_overrides(cache_seq=("model",))
+        overrides["rules"] = rules
+    if args.moe_ep:
+        overrides["moe_ep"] = True
+    if args.remat is not None:
+        overrides["remat"] = None if args.remat == "none" else args.remat
+    if args.microbatches:
+        overrides["microbatches"] = args.microbatches
+    if args.optimizer:
+        overrides["optimizer"] = args.optimizer
+
+    r = run_cell(args.arch, args.shape, multi_pod=(args.mesh == "multi"),
+                 overrides=overrides, tag=args.tag)
+
+    mesh_tag = "2_16_16" if args.mesh == "multi" else "16_16"
+    base_fn = os.path.join(ARTIFACTS,
+                           f"{args.arch}--{args.shape}--{mesh_tag}.json")
+    if os.path.exists(base_fn):
+        with open(base_fn) as f:
+            base = json.load(f)
+        b, v = base["roofline"], r["roofline"]
+        print(f"\n{'term':<14}{'baseline':>12}{'variant':>12}{'delta':>9}")
+        for k in ("compute_s", "memory_s", "collective_s"):
+            d = (v[k] - b[k]) / max(b[k], 1e-12) * 100
+            print(f"{k:<14}{b[k]*1e3:>10.1f}ms{v[k]*1e3:>10.1f}ms"
+                  f"{d:>+8.1f}%")
+        pb = base["memory"]["tpu_adjusted_peak_bytes"] / 1e9
+        pv = r["memory"]["tpu_adjusted_peak_bytes"] / 1e9
+        print(f"{'peak GB (adj)':<14}{pb:>12.2f}{pv:>12.2f}")
+        print(f"{'useful flops':<14}{base['useful_flops_ratio']:>12.2f}"
+              f"{r['useful_flops_ratio']:>12.2f}")
+
+
+if __name__ == "__main__":
+    main()

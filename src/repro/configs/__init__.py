@@ -1,0 +1,51 @@
+"""Architecture config registry: ``get_config("<arch-id>")``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    ModelConfig, MoEConfig, SSMConfig, ShapeConfig,
+    SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    shape_applicable, reduced,
+)
+
+# arch-id -> module basename
+ARCHS = {
+    "grok-1-314b": "grok_1_314b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "starcoder2-15b": "starcoder2_15b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+}
+
+
+def list_arch_ids() -> list[str]:
+    return list(ARCHS)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch_id]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch_id: str, **over) -> ModelConfig:
+    return reduced(get_config(arch_id), **over)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SHAPES",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "ARCHS", "list_arch_ids", "get_config", "get_reduced", "get_shape",
+    "shape_applicable", "reduced",
+]

@@ -1,0 +1,223 @@
+"""Model / shape configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the four assigned
+input shapes are ``ShapeConfig``s. ``param_count()`` / ``active_param_count()``
+feed the roofline's MODEL_FLOPS = 6*N*D term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration."""
+
+    n_experts: int                 # routed experts
+    top_k: int
+    n_shared: int = 0              # always-on shared experts (DeepSeekMoE)
+    expert_d_ff: int = 0           # per-expert hidden size (0 -> use model d_ff)
+    every: int = 1                 # MoE every k-th layer (Jamba: 2)
+    first_k_dense: int = 0         # first k layers use a dense MLP (DeepSeekMoE: 1)
+    dense_d_ff: int = 0            # hidden size of those dense layers
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    ep_fsplit: int = 1     # expert-parallel hidden-dim split (E < data axis)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD block configuration."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+    ngroups: int = 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    act: str = "silu"              # silu | relu2 | gelu
+    gated_mlp: bool = True         # SwiGLU-style (2 input mats) vs plain
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0        # 0 = full attention
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    attn_every: int = 0            # hybrid: one attention layer per `attn_every`
+    frontend: str = "none"         # none | audio | vision
+    frontend_dim: int = 0          # embedding dim delivered by the (stub) frontend
+    enc_layers: int = 0            # encoder-decoder: encoder depth
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    source: str = ""
+
+    # ------------------------------------------------------------------ helpers
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        assert self.ssm is not None
+        return self.ssm.expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        assert self.ssm is not None
+        return self.d_inner // self.ssm.head_dim
+
+    def is_attn_layer(self, i: int) -> bool:
+        """Hybrid interleave: layer i uses attention (else SSM)."""
+        if self.family != "hybrid":
+            return self.family != "ssm"
+        k = self.attn_every
+        # Jamba places the attention layer in the middle of each period.
+        return (i % k) == (k // 2)
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        if i < self.moe.first_k_dense:
+            return False
+        return ((i - self.moe.first_k_dense) % self.moe.every) == 0
+
+    @property
+    def is_subquadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # no encoder-only arch in the assignment
+
+    # -------------------------------------------------------------- param math
+    def _mlp_params(self, d_ff: int) -> int:
+        n_in = 2 if self.gated_mlp else 1
+        return (n_in + 1) * self.d_model * d_ff
+
+    def _attn_params(self) -> int:
+        hd = self.resolved_head_dim
+        q = self.d_model * self.n_heads * hd
+        kv = 2 * self.d_model * self.n_kv_heads * hd
+        o = self.n_heads * hd * self.d_model
+        return q + kv + o
+
+    def _ssm_params(self) -> int:
+        s = self.ssm
+        di = self.d_inner
+        nh = self.n_ssm_heads
+        # in_proj -> [z, x, B, C, dt] ; out_proj
+        in_proj = self.d_model * (2 * di + 2 * s.ngroups * s.d_state + nh)
+        conv = s.d_conv * (di + 2 * s.ngroups * s.d_state)
+        out_proj = di * self.d_model
+        extras = 3 * nh  # A_log, dt_bias, D
+        return in_proj + conv + out_proj + extras
+
+    def _layer_params(self, i: int, active_only: bool = False) -> int:
+        n = 2 * self.d_model  # two norms
+        if self.family == "ssm" or (self.family == "hybrid" and not self.is_attn_layer(i)):
+            n += self._ssm_params()
+        else:
+            n += self._attn_params()
+        if self.is_moe_layer(i):
+            m = self.moe
+            e_ff = m.expert_d_ff or self.d_ff
+            n_routed = m.top_k if active_only else m.n_experts
+            n += n_routed * self._mlp_params(e_ff)
+            n += m.n_shared * self._mlp_params(e_ff)
+            n += self.d_model * m.n_experts  # router
+        elif self.family != "ssm":  # pure-SSM blocks have no MLP
+            d_ff = self.d_ff
+            if self.moe is not None and self.moe.first_k_dense and i < self.moe.first_k_dense:
+                d_ff = self.moe.dense_d_ff or self.d_ff
+            if d_ff:
+                n += self._mlp_params(d_ff)
+        return n
+
+    def param_count(self, active_only: bool = False) -> int:
+        n = self.vocab_size * self.d_model  # embedding
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model  # lm head
+        for i in range(self.n_layers):
+            n += self._layer_params(i, active_only)
+        if self.family == "encdec":
+            for i in range(self.enc_layers):
+                n += self._layer_params(i, active_only)
+                n += self._attn_params() + self.d_model  # decoder cross-attn + norm
+        if self.frontend != "none" and self.frontend_dim:
+            n += self.frontend_dim * self.d_model  # projector
+        n += self.d_model  # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        return self.param_count(active_only=True)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, and why not if it doesn't."""
+    if shape.name == "long_500k" and not model.is_subquadratic:
+        return False, "long_500k needs sub-quadratic attention; %s is full-attention" % model.name
+    return True, ""
+
+
+def reduced(cfg: ModelConfig, **over) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    changes: dict = dict(
+        n_layers=min(cfg.n_layers, 2),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        enc_layers=min(cfg.enc_layers, 2),
+        frontend_dim=32 if cfg.frontend != "none" else 0,
+    )
+    if cfg.sliding_window:
+        changes["sliding_window"] = 16
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=min(cfg.moe.top_k, 2), expert_d_ff=64,
+            dense_d_ff=128 if cfg.moe.first_k_dense else 0)
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=16, chunk=32)
+    if cfg.family == "hybrid":
+        changes["n_layers"] = max(cfg.attn_every, 4)
+    changes.update(over)
+    return dataclasses.replace(cfg, **changes)

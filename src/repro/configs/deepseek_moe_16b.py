@@ -1,0 +1,23 @@
+"""DeepSeekMoE 16B: 2 shared + 64 routed top-6, fine-grained experts, first
+layer dense. [arXiv:2401.06066; hf]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,                 # per-expert fine-grained hidden
+    vocab_size=102400,
+    act="silu",
+    gated_mlp=True,
+    norm="rmsnorm",
+    rope_theta=10000.0,
+    moe=MoEConfig(
+        n_experts=64, top_k=6, n_shared=2, expert_d_ff=1408,
+        first_k_dense=1, dense_d_ff=10944),
+    source="arXiv:2401.06066",
+)

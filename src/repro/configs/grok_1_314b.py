@@ -1,0 +1,20 @@
+"""Grok-1 314B MoE. [hf:xai-org/grok-1; unverified]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    act="gelu",
+    gated_mlp=True,
+    norm="rmsnorm",
+    rope_theta=10000.0,
+    moe=MoEConfig(n_experts=8, top_k=2),
+    source="hf:xai-org/grok-1",
+)

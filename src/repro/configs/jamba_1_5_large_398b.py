@@ -1,0 +1,27 @@
+"""Jamba-1.5-large 398B: Mamba+attention 1:7 interleave, MoE 16e top-2 on
+every other layer. [arXiv:2403.19887; hf]
+
+Unspecified-by-assignment SSM constants follow the Jamba paper (d_state=16,
+d_conv=4, expand=2); the mixer is run through our SSD layer with head_dim 128.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    act="silu",
+    gated_mlp=True,
+    norm="rmsnorm",
+    rope_theta=10000.0,
+    attn_every=8,              # 1 attention layer per 8 (1:7 interleave)
+    moe=MoEConfig(n_experts=16, top_k=2, every=2),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=128, chunk=256),
+    source="arXiv:2403.19887",
+)

@@ -1,0 +1,23 @@
+"""LLaVA-NeXT (Mistral-7B backbone) with anyres patch tiling.
+Backbone only; the vision tower is a stub providing precomputed patch
+embeddings per the assignment. [hf:llava-hf/llava-v1.6-mistral-7b-hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    act="silu",
+    gated_mlp=True,
+    norm="rmsnorm",
+    rope_theta=1000000.0,
+    frontend="vision",
+    frontend_dim=1024,         # CLIP-ViT-L patch embedding dim (stub)
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

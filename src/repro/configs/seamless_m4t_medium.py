@@ -1,0 +1,24 @@
+"""SeamlessM4T-medium: encoder-decoder multimodal (audio) transformer.
+Backbone only; the speech frontend is a stub providing precomputed frame
+embeddings per the assignment. [arXiv:2308.11596; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,               # decoder layers
+    enc_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    act="relu2",               # conformer-ish FFN; squared-relu stand-in
+    gated_mlp=False,
+    norm="layernorm",
+    rope_theta=10000.0,
+    frontend="audio",
+    frontend_dim=1024,         # w2v-BERT frame embedding dim (stub)
+    source="arXiv:2308.11596",
+)

@@ -1,0 +1,62 @@
+"""Input-shape stand-ins (ShapeDtypeStruct) for every (arch x shape) cell.
+
+``input_specs`` mirrors the pattern used by the multi-pod dry-run: weak-type
+correct, shardable, zero device allocation. Data inputs only — parameter and
+KV-cache ShapeDtypeStructs come from the model builders.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# Vision anyres tiling: base 576 patches + one high-res tile (LLaVA-NeXT).
+VISION_PATCHES = 1152
+
+
+def frontend_len(model: ModelConfig, shape: ShapeConfig) -> int:
+    """Frames/patches delivered by the (stub) modality frontend."""
+    if model.frontend == "audio":
+        return max(shape.seq_len // 4, 8)
+    if model.frontend == "vision":
+        return min(VISION_PATCHES, shape.seq_len // 2)
+    return 0
+
+
+def text_len(model: ModelConfig, shape: ShapeConfig) -> int:
+    """Decoder token length such that the backbone sees `seq_len` positions."""
+    if model.family == "encdec":
+        return shape.seq_len           # decoder length; encoder is separate
+    return shape.seq_len - (frontend_len(model, shape) if model.frontend != "none" else 0)
+
+
+def input_specs(model: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every data input of the lowered step."""
+    B = shape.global_batch
+    f32 = jnp.float32
+    bf16 = jnp.bfloat16
+    i32 = jnp.int32
+
+    if shape.kind == "decode":
+        specs = {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+        return specs
+
+    S_txt = text_len(model, shape)
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S_txt), i32)}
+    if model.frontend != "none":
+        S_f = frontend_len(model, shape)
+        specs["frames"] = jax.ShapeDtypeStruct((B, S_f, model.frontend_dim), bf16)
+    if shape.kind == "train":
+        S_total = shape.seq_len
+        specs["targets"] = jax.ShapeDtypeStruct((B, S_total), i32)
+        specs["mask"] = jax.ShapeDtypeStruct((B, S_total), f32)
+    return specs
+
+
+def cache_len(model: ModelConfig, shape: ShapeConfig) -> int:
+    """KV-cache length for decode cells (window-clamped for SWA archs)."""
+    assert shape.kind == "decode"
+    if model.sliding_window:
+        return min(shape.seq_len, model.sliding_window)
+    return shape.seq_len

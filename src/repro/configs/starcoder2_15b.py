@@ -1,0 +1,19 @@
+"""StarCoder2 15B: dense, GQA(kv=4), RoPE, GELU. [arXiv:2402.19173; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    act="gelu",
+    gated_mlp=False,
+    norm="layernorm",
+    rope_theta=100000.0,
+    source="arXiv:2402.19173",
+)

@@ -1,0 +1,16 @@
+"""OSGym core: scalable OS-environment infrastructure (the paper's
+contribution). Decentralized state management, hardware-aware orchestration,
+CoW disk management, robust runner pools, gateway, and the centralized
+single-entry data server."""
+from repro.core.cow_store import CowStore, DiskImage, BlobStore
+from repro.core.data_server import DataServer
+from repro.core.faults import FaultInjector, FaultType, ReplicaError, RetryPolicy
+from repro.core.gateway import Gateway
+from repro.core.replica import SimOSReplica, LatencyModel
+from repro.core.runner_pool import RunnerPool, SimHost, HostSpec, ResourceGuard
+from repro.core.state_manager import (ReplicaStateManager, TaskAborted,
+                                      CentralizedManager,
+                                      SemiDecentralizedManager,
+                                      DecentralizedManager)
+from repro.core.tasks import TaskSuite, TaskSpec, TABLE3_ROWS
+from repro.core.telemetry import Telemetry

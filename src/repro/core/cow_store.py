@@ -1,0 +1,172 @@
+"""Reflink copy-on-write block store (§3.3).
+
+Two clients share this store:
+
+1. **Replica disk images** — a bootable base image is a sequence of block
+   content-IDs; ``clone()`` is an O(1) metadata copy (the reflink), and only
+   blocks a VM writes are physically allocated. Reproduces Table 2
+   (physical-disk reduction, provisioning speedup).
+
+2. **Training checkpoints** — real byte payloads are chunked and
+   content-addressed, so consecutive step snapshots share every unchanged
+   block (the paper's disk insight applied to the training plane).
+
+Reference-counted; freeing a clone releases only blocks no image still uses.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+DEFAULT_BLOCK = 4 * 1024 * 1024  # 4 MiB
+
+
+def _hash(data: bytes) -> str:
+    return hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+@dataclass
+class _Block:
+    size: int
+    refs: int = 0
+    payload: Optional[bytes] = None   # None for virtual (disk-model) blocks
+
+
+class CowStore:
+    """Content-addressed, refcounted block store."""
+
+    def __init__(self, block_size: int = DEFAULT_BLOCK):
+        self.block_size = block_size
+        self._blocks: dict[str, _Block] = {}
+        self._lock = threading.Lock()
+        # timing model (calibrated to the paper's Table 2: 24 GB image,
+        # 30 s full copy vs 0.8 s reflink)
+        self.copy_bw_bytes_per_s = 24e9 / 30.0
+        self.reflink_latency_s = 0.8
+
+    # ---------------------------------------------------------- block API
+    def put_virtual(self, content_id: str, size: Optional[int] = None) -> str:
+        with self._lock:
+            blk = self._blocks.get(content_id)
+            if blk is None:
+                self._blocks[content_id] = _Block(size or self.block_size, 1)
+            else:
+                blk.refs += 1
+        return content_id
+
+    def put_bytes(self, data: bytes) -> str:
+        cid = _hash(data)
+        with self._lock:
+            blk = self._blocks.get(cid)
+            if blk is None:
+                self._blocks[cid] = _Block(len(data), 1, data)
+            else:
+                blk.refs += 1
+        return cid
+
+    def get_bytes(self, cid: str) -> bytes:
+        blk = self._blocks[cid]
+        assert blk.payload is not None, "virtual block has no payload"
+        return blk.payload
+
+    def release(self, cid: str) -> None:
+        with self._lock:
+            blk = self._blocks.get(cid)
+            if blk is None:
+                return
+            blk.refs -= 1
+            if blk.refs <= 0:
+                del self._blocks[cid]
+
+    # ------------------------------------------------------------ metrics
+    def physical_bytes(self) -> int:
+        with self._lock:
+            return sum(b.size for b in self._blocks.values())
+
+    def n_blocks(self) -> int:
+        return len(self._blocks)
+
+
+class DiskImage:
+    """A bootable disk: list of block content-IDs in a CowStore."""
+
+    def __init__(self, store: CowStore, block_ids: list[str], name: str = ""):
+        self.store = store
+        self.blocks = list(block_ids)
+        self.name = name
+        self._closed = False
+
+    @classmethod
+    def create_base(cls, store: CowStore, name: str, size_bytes: int
+                    ) -> "DiskImage":
+        n = -(-size_bytes // store.block_size)
+        ids = [store.put_virtual(f"{name}/base/{i}") for i in range(n)]
+        return cls(store, ids, name)
+
+    def clone(self, name: str = "") -> tuple["DiskImage", float]:
+        """Reflink copy. Returns (image, provisioning_seconds)."""
+        for cid in self.blocks:
+            self.store.put_virtual(cid)
+        return (DiskImage(self.store, self.blocks, name or f"{self.name}+"),
+                self.store.reflink_latency_s)
+
+    def full_copy(self, name: str = "") -> tuple["DiskImage", float]:
+        """Naive duplication baseline (no reflink)."""
+        ids = [self.store.put_virtual(f"{name}/copy/{i}")
+               for i in range(len(self.blocks))]
+        secs = self.logical_bytes() / self.store.copy_bw_bytes_per_s
+        return DiskImage(self.store, ids, name), secs
+
+    def write_block(self, idx: int, content: str) -> None:
+        """CoW: writing allocates a private block; the shared one is released."""
+        assert not self._closed
+        old = self.blocks[idx]
+        new = self.store.put_virtual(f"{self.name}/w/{idx}/{content}")
+        self.store.release(old)
+        self.blocks[idx] = new
+
+    def logical_bytes(self) -> int:
+        return len(self.blocks) * self.store.block_size
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for cid in self.blocks:
+            self.store.release(cid)
+
+
+class BlobStore:
+    """Chunked, deduplicated byte storage on a CowStore (checkpoints)."""
+
+    def __init__(self, store: Optional[CowStore] = None,
+                 chunk: int = 1 << 20):
+        self.store = store or CowStore(block_size=chunk)
+        self.chunk = chunk
+        self._manifests: dict[str, list[str]] = {}
+
+    def put(self, key: str, data: bytes) -> dict:
+        chunks = [data[i:i + self.chunk]
+                  for i in range(0, max(len(data), 1), self.chunk)]
+        ids = [self.store.put_bytes(c) for c in chunks]
+        old = self._manifests.get(key)
+        self._manifests[key] = ids
+        if old:
+            for cid in old:
+                self.store.release(cid)
+        return {"key": key, "n_chunks": len(ids),
+                "logical": len(data),
+                "physical_total": self.store.physical_bytes()}
+
+    def get(self, key: str) -> bytes:
+        return b"".join(self.store.get_bytes(c)
+                        for c in self._manifests[key])
+
+    def delete(self, key: str) -> None:
+        for cid in self._manifests.pop(key, []):
+            self.store.release(cid)
+
+    def keys(self):
+        return list(self._manifests)

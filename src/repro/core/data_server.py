@@ -1,0 +1,149 @@
+"""Centralized data server with a single-entry interface (§3.6).
+
+One Python object bridges the training loop and the replica fleet: batched
+``reset`` / ``step`` (async via futures, so the training loop never blocks),
+internal queuing and load balancing through the gateway, and task-level fault
+recovery (reassignment to a fresh runner; the paper's multi-layer retry).
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.gateway import Gateway
+from repro.core.runner_pool import Runner, RunnerPool
+from repro.core.state_manager import TaskAborted
+from repro.core.telemetry import Telemetry
+
+
+@dataclass
+class Episode:
+    """A live environment slot owned by the data server."""
+
+    slot: int
+    task: dict
+    node: str
+    runner: Runner
+    obs: Any = None
+    done: bool = False
+    steps: int = 0
+    virtual_seconds: float = 0.0
+    reassignments: int = 0
+
+
+class DataServer:
+    """Single-entry, batched, asynchronous access to N OS replicas."""
+
+    def __init__(self, gateway: Gateway, *, max_workers: int = 32,
+                 max_reassignments: int = 3,
+                 telemetry: Optional[Telemetry] = None):
+        self.gateway = gateway
+        self.pool = ThreadPoolExecutor(max_workers=max_workers,
+                                       thread_name_prefix="dataserver")
+        self.max_reassignments = max_reassignments
+        self.telemetry = telemetry or Telemetry()
+        self._episodes: dict[int, Episode] = {}
+        self._lock = threading.Lock()
+        self._next_slot = 0
+
+    # ------------------------------------------------------------- public
+    def reset(self, tasks: list[dict]) -> list[Any]:
+        """Batched reset: assign each task to a runner, configure + reset.
+
+        Returns the initial observations (blocking; reset happens once per
+        episode so there is nothing useful to overlap)."""
+        futs = [self.pool.submit(self._start_episode, t) for t in tasks]
+        return [f.result() for f in futs]
+
+    def step_async(self, actions: dict[int, Any]) -> dict[int, Future]:
+        """Batched async step: slot -> action, returns slot -> Future.
+
+        The Future resolves to (obs, reward, done, info). Failed steps are
+        transparently reassigned to fresh runners (task-level recovery)."""
+        return {slot: self.pool.submit(self._step_episode, slot, a)
+                for slot, a in actions.items()}
+
+    def step(self, actions: dict[int, Any]) -> dict[int, tuple]:
+        futs = self.step_async(actions)
+        return {s: f.result() for s, f in futs.items()}
+
+    def evaluate(self, slots: Optional[list[int]] = None) -> dict[int, float]:
+        with self._lock:
+            eps = [self._episodes[s] for s in (slots or self._episodes)]
+        out = {}
+        for ep in eps:
+            score, dur = ep.runner.manager.evaluate()
+            ep.virtual_seconds += dur
+            out[ep.slot] = score
+        return out
+
+    def close_episode(self, slot: int) -> None:
+        with self._lock:
+            ep = self._episodes.pop(slot, None)
+        if ep is not None:
+            self.gateway.release(ep.node, ep.runner)
+
+    def close(self) -> None:
+        with self._lock:
+            eps = list(self._episodes.values())
+            self._episodes.clear()
+        for ep in eps:
+            self.gateway.release(ep.node, ep.runner)
+        self.pool.shutdown(wait=True)
+
+    def live_slots(self) -> list[int]:
+        with self._lock:
+            return [s for s, e in self._episodes.items() if not e.done]
+
+    def episode(self, slot: int) -> Episode:
+        return self._episodes[slot]
+
+    # ----------------------------------------------------------- internals
+    def _assign(self, task: dict) -> tuple[str, Runner]:
+        got = self.gateway.acquire(task["task_id"], timeout=5.0)
+        if got is None:
+            raise RuntimeError("no healthy executor nodes with free runners")
+        return got
+
+    def _start_episode(self, task: dict) -> Any:
+        node, runner = self._assign(task)
+        with self._lock:
+            slot = self._next_slot
+            self._next_slot += 1
+        ep = Episode(slot, task, node, runner)
+        dur = runner.manager.configure(task)
+        obs, d2 = runner.manager.reset()
+        ep.obs, ep.virtual_seconds = obs, dur + d2
+        with self._lock:
+            self._episodes[slot] = ep
+        self.telemetry.count("episodes_started")
+        return {"slot": slot, "obs": obs}
+
+    def _step_episode(self, slot: int, action: Any) -> tuple:
+        ep = self._episodes[slot]
+        for _ in range(self.max_reassignments + 1):
+            try:
+                obs, rew, done, info, dur = ep.runner.manager.step(action)
+                ep.obs, ep.done, ep.steps = obs, done, ep.steps + 1
+                ep.virtual_seconds += dur
+                self.telemetry.count("steps")
+                self.telemetry.observe("step_latency_vs", dur)
+                return obs, rew, done, info
+            except TaskAborted as e:
+                ep.virtual_seconds += e.virtual_seconds
+                self.telemetry.count("task_reassignments")
+                # return the broken runner (pool recycles/recovers it)
+                self.gateway.release(ep.node, ep.runner)
+                ep.node, ep.runner = self._assign(ep.task)
+                ep.reassignments += 1
+                d = ep.runner.manager.configure(ep.task)
+                _, d2 = ep.runner.manager.reset()
+                ep.virtual_seconds += d + d2
+                # episode restarts from the task's initial conditions
+                ep.steps = 0
+        raise RuntimeError(f"task {ep.task['task_id']} failed after "
+                           f"{self.max_reassignments} reassignments")

@@ -1,0 +1,87 @@
+"""Stochastic fault model and retry policies (§3.4 of the paper).
+
+Replicas fail in the same ways the paper enumerates: connection errors,
+timeouts, runtime operation failures (retryable at the step level), crashes
+and hangs (recoverable by the replica's own state manager), and *silent*
+failures — the failure mode caused by exhausted kernel limits, which succeed
+apparently but corrupt the result.
+"""
+from __future__ import annotations
+
+import enum
+import random
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class FaultType(enum.Enum):
+    CONNECTION = "connection"
+    TIMEOUT = "timeout"
+    RUNTIME = "runtime"
+    CRASH = "crash"
+    HANG = "hang"
+    SILENT = "silent"
+
+
+# step-retryable faults (paper: retry covers connection/timeout/runtime)
+STEP_RETRYABLE = (FaultType.CONNECTION, FaultType.TIMEOUT, FaultType.RUNTIME)
+
+
+class ReplicaError(RuntimeError):
+    def __init__(self, fault: FaultType, msg: str = ""):
+        super().__init__(f"{fault.value}: {msg}")
+        self.fault = fault
+
+
+@dataclass
+class RetryPolicy:
+    """Step-level retry (paper default: 10 retries)."""
+
+    max_retries: int = 10
+    retry_on: tuple = STEP_RETRYABLE
+    backoff_base: float = 0.05     # virtual seconds
+    backoff_factor: float = 1.5
+
+    def backoff(self, attempt: int) -> float:
+        return self.backoff_base * (self.backoff_factor ** attempt)
+
+    def should_retry(self, fault: FaultType, attempt: int) -> bool:
+        return attempt < self.max_retries and fault in self.retry_on
+
+
+# default per-step fault probabilities (stochastic software errors, §1)
+DEFAULT_RATES = {
+    FaultType.CONNECTION: 0.010,
+    FaultType.TIMEOUT: 0.008,
+    FaultType.RUNTIME: 0.012,
+    FaultType.CRASH: 0.002,
+    FaultType.HANG: 0.001,
+}
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic, seeded fault sampler."""
+
+    rates: dict = field(default_factory=lambda: dict(DEFAULT_RATES))
+    seed: int = 0
+    enabled: bool = True
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+
+    def sample(self) -> Optional[FaultType]:
+        if not self.enabled:
+            return None
+        u = self._rng.random()
+        acc = 0.0
+        for fault, rate in self.rates.items():
+            acc += rate
+            if u < acc:
+                return fault
+        return None
+
+    def scaled(self, factor: float) -> "FaultInjector":
+        return FaultInjector(
+            rates={f: r * factor for f, r in self.rates.items()},
+            seed=self._rng.randrange(1 << 30), enabled=self.enabled)

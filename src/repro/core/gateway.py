@@ -1,0 +1,122 @@
+"""Gateway layer (§3.4): task-affinity routing across executor nodes,
+periodic background health checks, automatic failover when a node becomes
+unreachable."""
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.runner_pool import Runner, RunnerPool
+
+
+@dataclass
+class NodeStatus:
+    healthy: bool = True
+    consecutive_failures: int = 0
+    last_check: float = 0.0
+
+
+class Gateway:
+    """Routes task executions to runner pools with affinity + failover."""
+
+    def __init__(self, pools: list[RunnerPool], *,
+                 health_interval_s: float = 10.0,
+                 unhealthy_threshold: int = 3,
+                 start_background: bool = False):
+        assert pools, "need at least one executor node"
+        self.pools = {p.node_id: p for p in pools}
+        self.status = {p.node_id: NodeStatus() for p in pools}
+        self.health_interval_s = health_interval_s
+        self.unhealthy_threshold = unhealthy_threshold
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.failovers = 0
+        if start_background:
+            self.start()
+
+    # ------------------------------------------------------------ routing
+    def _affinity_order(self, task_id: str) -> list[str]:
+        """Stable hash ring: preferred node first, failover order after."""
+        nodes = sorted(self.pools)
+        h = int.from_bytes(
+            hashlib.blake2b(task_id.encode(), digest_size=8).digest(),
+            "little")
+        start = h % len(nodes)
+        return nodes[start:] + nodes[:start]
+
+    def acquire(self, task_id: str, timeout: Optional[float] = 1.0
+                ) -> Optional[tuple[str, Runner]]:
+        """Acquire a runner, honoring affinity and skipping unhealthy nodes."""
+        order = self._affinity_order(task_id)
+        for attempt, node in enumerate(order):
+            with self._lock:
+                healthy = self.status[node].healthy
+            if not healthy:
+                continue
+            r = self.pools[node].acquire(task_id, timeout=timeout)
+            if r is not None:
+                if attempt > 0:
+                    self.failovers += 1
+                return node, r
+        return None
+
+    def release(self, node: str, runner: Runner, **kw) -> float:
+        return self.pools[node].release(runner, **kw)
+
+    # ------------------------------------------------------- health checks
+    def check_now(self) -> dict:
+        """One health sweep (the background loop calls this every 10 s)."""
+        report = {}
+        for node, pool in self.pools.items():
+            h = pool.health()
+            ok = h["alive"] > 0
+            st = self.status[node]
+            with self._lock:
+                st.last_check = time.time()
+                if ok:
+                    st.consecutive_failures = 0
+                    st.healthy = True
+                else:
+                    st.consecutive_failures += 1
+                    if st.consecutive_failures >= self.unhealthy_threshold:
+                        st.healthy = False
+            report[node] = {**h, "healthy": st.healthy}
+            pool.reclaim_leaked()
+        return report
+
+    def mark_unreachable(self, node: str) -> None:
+        with self._lock:
+            self.status[node].healthy = False
+
+    def mark_recovered(self, node: str) -> None:
+        with self._lock:
+            self.status[node].healthy = True
+            self.status[node].consecutive_failures = 0
+
+    # ---------------------------------------------------------- background
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(self.health_interval_s):
+                self.check_now()
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="gateway-health")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+            self._thread = None
+
+    def healthy_nodes(self) -> list[str]:
+        with self._lock:
+            return [n for n, s in self.status.items() if s.healthy]

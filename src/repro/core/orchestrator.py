@@ -1,0 +1,168 @@
+"""Hardware-aware replica orchestration + cost model (§3.2, Fig. 3, Table 1).
+
+The paper's insight: pack K replicas per server. At small K every replica is
+CPU-bound (burst demand exceeds its server's cores); at large K bursts
+multiplex and RAM becomes the binding constraint — and RAM is 5-10x cheaper
+per unit of hosting than CPU. We model replica CPU demand as
+idle + Bernoulli(duty) * burst and compute overload fractions by Monte Carlo,
+and we calibrate the price model so Table 1 reproduces exactly
+(0.727/0.80/0.073 USD per core-day for 8275CL / 8259CL / E5-2699;
+0.03 USD per GB-day DDR4 — a 16-core CPU then costs ~8-13x a 32 GB DIMM,
+matching the paper's "10-20%" remark).
+"""
+from __future__ import annotations
+
+import math
+import random
+import statistics
+from dataclasses import dataclass, field
+from typing import Optional
+
+# ------------------------------------------------------------- price model
+CORE_USD_PER_DAY = {
+    "8275CL": 0.727,   # modern Xeon (on-demand cloud)
+    "8259CL": 0.800,
+    "E5-2699": 0.073,  # previous-gen bare metal — the paper's cheap pick
+    "small-vm": 0.550, # small-instance pricing (2-8 vCPU shapes)
+}
+RAM_USD_PER_GB_DAY = 0.03   # DDR4
+HOST_RAM_OVERHEAD_GB = 12.0
+RAM_PER_REPLICA_GB = 5.0
+MAX_REPLICAS_PER_NODE = 128  # pool default
+
+
+@dataclass(frozen=True)
+class MachineSpec:
+    cores: int
+    ram_gb: int
+    cpu_type: str
+    ram_type: str = "DDR4"
+
+    def price_per_day(self) -> float:
+        return (CORE_USD_PER_DAY[self.cpu_type] * self.cores
+                + RAM_USD_PER_GB_DAY * self.ram_gb)
+
+    def replica_capacity(self) -> int:
+        by_ram = int((self.ram_gb - HOST_RAM_OVERHEAD_GB)
+                     // RAM_PER_REPLICA_GB)
+        return max(min(by_ram, MAX_REPLICAS_PER_NODE), 0)
+
+
+# Table 1 machines
+TABLE1_MACHINES = [
+    MachineSpec(96, 192, "8275CL"),
+    MachineSpec(96, 768, "8259CL"),
+    MachineSpec(88, 768, "E5-2699"),
+]
+
+
+def table1() -> list[dict]:
+    rows = []
+    for m in TABLE1_MACHINES:
+        cap = m.replica_capacity()
+        rows.append({
+            "cores": m.cores, "ram_gb": m.ram_gb, "cpu": m.cpu_type,
+            "ram_type": m.ram_type, "replicas": cap,
+            "machine_usd_day": round(m.price_per_day(), 2),
+            "usd_per_replica_day": round(m.price_per_day() / cap, 2),
+        })
+    return rows
+
+
+# ------------------------------------------------------- CPU demand model
+@dataclass(frozen=True)
+class ReplicaDemand:
+    idle_cores: float = 0.30
+    burst_cores: float = 3.0
+    duty: float = 0.25          # fraction of time slots at burst
+
+
+def overload_fraction(K: int, cores: float, demand: ReplicaDemand,
+                      *, slots: int = 20, trials: int = 200,
+                      rng: Optional[random.Random] = None) -> float:
+    """Fraction of replicas that hit CPU starvation within a window.
+
+    A slot starves its bursting replicas when total demand exceeds cores."""
+    rng = rng or random.Random(0)
+    overloaded = 0
+    total = 0
+    for _ in range(trials):
+        hit = [False] * K
+        for _ in range(slots):
+            bursting = [rng.random() < demand.duty for _ in range(K)]
+            load = (demand.idle_cores * K
+                    + demand.burst_cores * sum(bursting) + 0.5)
+            if load > cores:
+                for i, b in enumerate(bursting):
+                    if b:
+                        hit[i] = True
+        overloaded += sum(hit)
+        total += K
+    return overloaded / total
+
+
+def utilizations(K: int, spec: "MachineSpec") -> tuple[float, float]:
+    """(cpu_util, ram_util) of K replicas on `spec` (mean CPU demand)."""
+    d = ReplicaDemand()
+    mean = d.idle_cores + d.burst_cores * d.duty
+    cpu = (K * mean + 0.5) / spec.cores
+    overhead = 2.0 if spec.cpu_type == "small-vm" else HOST_RAM_OVERHEAD_GB
+    ram = (overhead + K * RAM_PER_REPLICA_GB) / spec.ram_gb
+    return cpu, ram
+
+
+# -------------------------------------------------- Fig. 3 configurations
+def server_for_group(K: int) -> MachineSpec:
+    """Pick the cheapest adequate server for K replicas.
+
+    Small K -> small modern-CPU instances provisioned for burst peaks
+    (no multiplexing); large K -> big-RAM previous-gen machines provisioned
+    near the demand mean."""
+    d = ReplicaDemand()
+    if K <= 8:
+        # small instances: provision for burst peaks, modern-CPU pricing
+        ram = int(math.ceil(2.0 + K * RAM_PER_REPLICA_GB))
+        cores = int(math.ceil(K * (d.idle_cores + d.burst_cores) + 0.5))
+        return MachineSpec(cores, max(ram, 8), "small-vm")
+    ram = int(math.ceil(HOST_RAM_OVERHEAD_GB + K * RAM_PER_REPLICA_GB))
+    mean = d.idle_cores + d.burst_cores * d.duty
+    cores = int(math.ceil(K * mean * 1.25 + 1))
+    return MachineSpec(cores, ram, "E5-2699")
+
+
+def fig3_sweep(n_replicas: int = 128, seeds: int = 10) -> list[dict]:
+    """Reproduce Fig. 3's bottom plots: overload fraction and cost vs K."""
+    rows = []
+    ks = [k for k in (1, 2, 4, 8, 16, 32, 64, 128) if k <= n_replicas]
+    for K in ks:
+        servers = n_replicas // K
+        # fixed-total-CPU variant for the overload plot (paper freezes N and
+        # total CPU, varying only the grouping)
+        cores_fixed = 2 * K
+        fracs = [overload_fraction(K, cores_fixed, ReplicaDemand(),
+                                   rng=random.Random(s))
+                 for s in range(seeds)]
+        spec = server_for_group(K)
+        cpu_util, ram_util = utilizations(K, spec)
+        cost = servers * spec.price_per_day()
+        rows.append({
+            "K": K, "servers": servers,
+            "overload_frac_mean": statistics.fmean(fracs),
+            "overload_frac_std": (statistics.pstdev(fracs)
+                                  if len(fracs) > 1 else 0.0),
+            "cpu_util": round(cpu_util, 3),
+            "ram_util": round(ram_util, 3),
+            "bottleneck": bottleneck(K),
+            "server": f"{spec.cores}c/{spec.ram_gb}g/{spec.cpu_type}",
+            "usd_per_day": round(cost, 1),
+            "usd_per_replica_day": round(cost / n_replicas, 3),
+        })
+    return rows
+
+
+def bottleneck(K: int) -> str:
+    """The paper's Remark: small K -> CPU-bound; large K -> RAM-bound."""
+    frac = overload_fraction(K, 2 * K, ReplicaDemand())
+    spec = server_for_group(K)
+    cpu_util, ram_util = utilizations(K, spec)
+    return "cpu" if (frac > 0.2 or cpu_util > ram_util) else "ram"

@@ -1,0 +1,263 @@
+"""Robust container pool (§3.4): pre-warmed fixed-size runner pool, resource
+guard, kernel-limits tuning, leaked-task reclamation.
+
+A *runner* is (replica + its decentralized state manager). The pool
+pre-creates every runner before training begins and recycles them between
+tasks. Creation is gated by the resource guard (simulated /proc/meminfo and
+/proc/loadavg): blocked if available memory < 10% or < 8 GB absolute,
+accounting in-flight creations at their 6 GB container limit. Kernel limits
+(fd / inotify / AIO / conntrack) are enforced: exceeding an untuned limit
+produces *silent* replica failures, reproducing the paper's failure mode.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.cow_store import CowStore, DiskImage
+from repro.core.faults import FaultInjector, FaultType
+from repro.core.replica import SimOSReplica, ReplicaResources, LatencyModel
+from repro.core.state_manager import ReplicaStateManager, TaskAborted
+
+
+# ------------------------------------------------------------- host model
+@dataclass
+class HostSpec:
+    cores: int = 88
+    ram_gb: float = 768.0
+    # untuned kernel defaults (the paper's §3.4 examples)
+    limits: dict = field(default_factory=lambda: {
+        "fs.aio-max-nr": 65536,
+        "fs.inotify.max_user_instances": 128,
+        "fs.file-max": 65536,
+        "net.netfilter.nf_conntrack_max": 65536,
+    })
+
+
+TUNED_LIMITS = {
+    "fs.aio-max-nr": 1048576,
+    "fs.inotify.max_user_instances": 8192,
+    "fs.file-max": 4194304,
+    "net.netfilter.nf_conntrack_max": 1048576,
+}
+
+# per-VM kernel resource consumption (qemu + docker + GUI stack)
+PER_VM_USAGE = {
+    "fs.aio-max-nr": 1024,
+    "fs.inotify.max_user_instances": 4,
+    "fs.file-max": 512,
+    "net.netfilter.nf_conntrack_max": 600,
+}
+
+
+class SimHost:
+    """Simulated executor node: RAM accounting + kernel limit registry."""
+
+    def __init__(self, spec: Optional[HostSpec] = None):
+        self.spec = spec or HostSpec()
+        self.limits = dict(self.spec.limits)
+        self.used: dict[str, int] = {k: 0 for k in self.limits}
+        self.ram_used_gb = 4.0          # host OS baseline
+        self._lock = threading.Lock()
+
+    def tune_limits(self) -> None:
+        self.limits.update(TUNED_LIMITS)
+
+    def meminfo(self) -> dict:
+        """Simulated /proc/meminfo (GB)."""
+        total = self.spec.ram_gb
+        avail = max(total - self.ram_used_gb, 0.0)
+        return {"MemTotal": total, "MemAvailable": avail}
+
+    def loadavg(self) -> float:
+        return min(self.used.get("fs.file-max", 0) / 512 * 0.5,
+                   self.spec.cores * 1.5)
+
+    def allocate_vm(self, ram_gb: float) -> bool:
+        """Consume kernel resources for one VM. Returns False on silent
+        exhaustion (untuned limits)."""
+        with self._lock:
+            self.ram_used_gb += ram_gb
+            ok = True
+            for k, v in PER_VM_USAGE.items():
+                self.used[k] += v
+                if self.used[k] > self.limits.get(k, 1 << 62):
+                    ok = False   # silent failure — no exception raised
+            return ok
+
+    def free_vm(self, ram_gb: float) -> None:
+        with self._lock:
+            self.ram_used_gb = max(self.ram_used_gb - ram_gb, 0.0)
+            for k, v in PER_VM_USAGE.items():
+                self.used[k] = max(self.used[k] - v, 0)
+
+
+@dataclass
+class ResourceGuard:
+    """Paper §3.4: block VM creation when headroom is too small."""
+
+    host: SimHost
+    min_fraction: float = 0.10
+    min_absolute_gb: float = 8.0
+    inflight_vm_gb: float = 6.0
+
+    def __post_init__(self):
+        self._inflight = 0
+        self._lock = threading.Lock()
+
+    def try_begin_creation(self) -> bool:
+        with self._lock:
+            mem = self.host.meminfo()
+            headroom = (mem["MemAvailable"]
+                        - self._inflight * self.inflight_vm_gb)
+            if headroom < self.min_absolute_gb:
+                return False
+            if headroom / mem["MemTotal"] < self.min_fraction:
+                return False
+            self._inflight += 1
+            return True
+
+    def end_creation(self) -> None:
+        with self._lock:
+            self._inflight = max(self._inflight - 1, 0)
+
+    @property
+    def inflight(self) -> int:
+        return self._inflight
+
+
+@dataclass
+class Runner:
+    runner_id: str
+    manager: ReplicaStateManager
+    busy: bool = False
+    task_id: Optional[str] = None
+    deadline_vt: float = float("inf")   # leaked-task reclamation
+    silent_broken: bool = False
+
+
+class RunnerPool:
+    """Fixed-size pre-warmed pool with recycle + reclamation (§3.4)."""
+
+    def __init__(self, node_id: str, base_image: DiskImage, *,
+                 size: int = 128, host: Optional[SimHost] = None,
+                 faults: Optional[FaultInjector] = None,
+                 tune_limits: bool = True, seed: int = 0,
+                 latency: Optional[LatencyModel] = None,
+                 task_timeout_vs: float = 600.0):
+        self.node_id = node_id
+        self.base_image = base_image
+        self.host = host or SimHost()
+        if tune_limits:
+            self.host.tune_limits()
+        self.guard = ResourceGuard(self.host)
+        self.task_timeout_vs = task_timeout_vs
+        self._faults = faults or FaultInjector(enabled=False)
+        self._latency = latency
+        self._seed = seed
+        self._free: deque[Runner] = deque()
+        self._all: dict[str, Runner] = {}
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self.prewarm_seconds = 0.0
+        self.blocked_creations = 0
+        self._vt = 0.0                   # pool-local virtual clock
+        self._prewarm(size)
+
+    # ------------------------------------------------------------ prewarm
+    def _make_runner(self, i: int) -> Optional[Runner]:
+        if not self.guard.try_begin_creation():
+            self.blocked_creations += 1
+            return None
+        try:
+            rid = f"{self.node_id}/r{i}"
+            rep = SimOSReplica(
+                rid, self.base_image,
+                faults=self._faults.scaled(1.0),
+                seed=self._seed + i, latency=self._latency)
+            ok = self.host.allocate_vm(rep.resources.ram_limit_gb)
+            boot_s = rep.boot()
+            runner = Runner(rid, ReplicaStateManager(rep))
+            runner.silent_broken = not ok
+            self.prewarm_seconds += boot_s
+            return runner
+        finally:
+            self.guard.end_creation()
+
+    def _prewarm(self, size: int) -> None:
+        for i in range(size):
+            r = self._make_runner(i)
+            if r is None:
+                break
+            self._all[r.runner_id] = r
+            self._free.append(r)
+
+    # ------------------------------------------------------------ acquire
+    def acquire(self, task_id: str, timeout: Optional[float] = None
+                ) -> Optional[Runner]:
+        with self._cv:
+            if not self._free:
+                self._cv.wait(timeout=timeout)
+            if not self._free:
+                return None
+            r = self._free.popleft()
+            r.busy = True
+            r.task_id = task_id
+            r.deadline_vt = self._vt + self.task_timeout_vs
+            return r
+
+    def release(self, runner: Runner, *, recycle: bool = True) -> float:
+        """Return a runner to the pool; recycle = reset to a clean state."""
+        dur = 0.0
+        if recycle and not runner.manager.replica.alive:
+            dur += runner.manager.recover_if_needed()
+        with self._cv:
+            runner.busy = False
+            runner.task_id = None
+            runner.deadline_vt = float("inf")
+            self._free.append(runner)
+            self._cv.notify()
+        return dur
+
+    def advance_time(self, dt: float) -> None:
+        with self._lock:
+            self._vt += dt
+
+    def reclaim_leaked(self) -> list[str]:
+        """Reclaim runners whose task exceeded the timeout (leaked)."""
+        reclaimed = []
+        with self._cv:
+            for r in self._all.values():
+                if r.busy and self._vt > r.deadline_vt:
+                    r.busy = False
+                    tid, r.task_id = r.task_id, None
+                    r.deadline_vt = float("inf")
+                    self._free.append(r)
+                    reclaimed.append(tid)
+            if reclaimed:
+                self._cv.notify_all()
+        return reclaimed
+
+    # ------------------------------------------------------------ metrics
+    @property
+    def size(self) -> int:
+        return len(self._all)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def health(self) -> dict:
+        alive = sum(1 for r in self._all.values()
+                    if r.manager.replica.alive)
+        return {"node": self.node_id, "size": self.size, "alive": alive,
+                "free": self.n_free,
+                "ram_used_gb": self.host.ram_used_gb,
+                "blocked_creations": self.blocked_creations}
+
+    def close(self) -> None:
+        for r in self._all.values():
+            r.manager.close()

@@ -1,0 +1,146 @@
+"""Discrete-event fleet simulation for the Figure-6 experiments.
+
+Real threads cannot scale to 1024 replicas on this container, so the
+scalability / latency / recovery experiments run in virtual time: each
+replica emits step events with the calibrated latency model; the manager
+design (centralized / semi / decentralized) contributes dispatcher queueing
+delay modeled as M/M/1 around the measured dispatch overheads.
+"""
+from __future__ import annotations
+
+import math
+import random
+import statistics
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.state_manager import ManagerOverheadModel
+
+
+@dataclass
+class SimConfig:
+    step_mean_s: float = 2.0
+    step_sigma: float = 0.35
+    dispatch_service_s: float = 0.005   # centralized dispatcher service time
+    semi_group_size: int = 64
+    inter_group_sync_s: float = 0.05
+    boot_s: float = 12.0
+    configure_s: float = 3.0
+    boot_jitter_sigma: float = 0.3
+    boot_concurrency_per_node: int = 32  # disk-bandwidth bound on node
+    replicas_per_node: int = 128
+
+
+def _mm1_wait(arrival_rate: float, service_s: float,
+              rng: random.Random) -> float:
+    """Expected queueing delay for one op through a shared dispatcher."""
+    rho = min(arrival_rate * service_s, 0.999)
+    wait = service_s * rho / max(1.0 - rho, 1e-3)
+    return max(rng.gauss(wait, 0.1 * wait), 0.0) + service_s
+
+
+def run_throughput(n_replicas: int, design: str, *, sim_seconds: float = 120.0,
+                   seed: int = 0, cfg: Optional[SimConfig] = None) -> dict:
+    """Simulate `sim_seconds` of fleet operation; return throughput/latency."""
+    cfg = cfg or SimConfig()
+    rng = random.Random((seed, n_replicas, design).__hash__() & 0x7FFFFFFF)
+    step_rate = n_replicas / cfg.step_mean_s     # fleet-wide op arrival rate
+
+    total_steps = 0
+    latencies = []
+    for _ in range(n_replicas):
+        t = rng.uniform(0, cfg.step_mean_s)      # desynchronized start
+        while t < sim_seconds:
+            step = cfg.step_mean_s * rng.lognormvariate(0, cfg.step_sigma)
+            if design == "centralized":
+                extra = _mm1_wait(step_rate, cfg.dispatch_service_s, rng)
+            elif design == "semi":
+                group_rate = (min(cfg.semi_group_size, n_replicas)
+                              / cfg.step_mean_s)
+                extra = (_mm1_wait(group_rate, cfg.dispatch_service_s, rng)
+                         + cfg.inter_group_sync_s)
+            else:                               # decentralized
+                extra = cfg.dispatch_service_s
+            lat = step + extra
+            t += lat
+            if t < sim_seconds:
+                total_steps += 1
+                latencies.append(lat)
+    return {
+        "design": design, "replicas": n_replicas,
+        "steps_per_s": total_steps / sim_seconds,
+        "latency_mean_s": statistics.fmean(latencies) if latencies else 0.0,
+        "latency_p95_s": (sorted(latencies)[int(0.95 * (len(latencies) - 1))]
+                          if latencies else 0.0),
+    }
+
+
+def sweep_throughput(designs=("centralized", "semi", "decentralized"),
+                     sizes=(16, 32, 64, 128, 256, 512, 1024),
+                     seeds: int = 10, cfg: Optional[SimConfig] = None
+                     ) -> list[dict]:
+    rows = []
+    for design in designs:
+        for n in sizes:
+            runs = [run_throughput(n, design, seed=s, cfg=cfg)
+                    for s in range(seeds)]
+            rows.append({
+                "design": design, "replicas": n,
+                "steps_per_s_mean": statistics.fmean(
+                    r["steps_per_s"] for r in runs),
+                "steps_per_s_std": statistics.pstdev(
+                    [r["steps_per_s"] for r in runs]),
+                "latency_mean_s": statistics.fmean(
+                    r["latency_mean_s"] for r in runs),
+                "latency_std_s": statistics.pstdev(
+                    [r["latency_mean_s"] for r in runs]),
+            })
+    return rows
+
+
+def run_recovery(n_replicas: int, *, seed: int = 0,
+                 cfg: Optional[SimConfig] = None,
+                 resolution_s: float = 1.0) -> dict:
+    """Fig. 6 right: full crash at t=0, every manager recovers autonomously.
+
+    Recovery = reflink re-clone (0.8 s) + boot + configure, with per-node
+    boot concurrency bounded by disk bandwidth. Returns the healthy-fraction
+    timeline and the full-recovery time."""
+    cfg = cfg or SimConfig()
+    rng = random.Random((seed, n_replicas).__hash__() & 0x7FFFFFFF)
+    n_nodes = max(1, math.ceil(n_replicas / cfg.replicas_per_node))
+    finish = []
+    for node in range(n_nodes):
+        k = min(cfg.replicas_per_node, n_replicas - node * cfg.replicas_per_node)
+        # waves of `boot_concurrency` parallel boots per node
+        lanes = [0.0] * cfg.boot_concurrency_per_node
+        for i in range(k):
+            lane = min(range(len(lanes)), key=lanes.__getitem__)
+            dur = (0.8 + (cfg.boot_s + cfg.configure_s)
+                   * rng.lognormvariate(0, cfg.boot_jitter_sigma))
+            lanes[lane] += dur
+            finish.append(lanes[lane])
+    finish.sort()
+    t_full = finish[-1]
+    timeline = []
+    t = 0.0
+    while t <= t_full + resolution_s:
+        healthy = sum(1 for f in finish if f <= t) / n_replicas
+        timeline.append((round(t, 1), round(healthy, 4)))
+        t += resolution_s
+    return {"replicas": n_replicas, "full_recovery_s": round(t_full, 1),
+            "t50_s": round(finish[len(finish) // 2], 1),
+            "timeline": timeline}
+
+
+def recovery_stats(n_replicas: int = 1024, seeds: int = 10,
+                   cfg: Optional[SimConfig] = None) -> dict:
+    runs = [run_recovery(n_replicas, seed=s, cfg=cfg) for s in range(seeds)]
+    fulls = [r["full_recovery_s"] for r in runs]
+    return {
+        "replicas": n_replicas,
+        "full_recovery_mean_s": statistics.fmean(fulls),
+        "full_recovery_std_s": statistics.pstdev(fulls),
+        "t50_mean_s": statistics.fmean(r["t50_s"] for r in runs),
+        "example_timeline": runs[0]["timeline"][::5],
+    }

@@ -1,0 +1,236 @@
+"""OS state management: decentralized (the paper's design) plus centralized /
+semi-decentralized baselines (§3.1, Figure 2).
+
+Each ``ReplicaStateManager`` owns exactly one replica and exposes OpenAI-Gym-
+style public methods (configure / reset / step / evaluate / close) plus
+private low-level health & recovery methods. Faults are handled where they
+occur: step-retryable errors are retried per policy; crashes trigger an
+autonomous local recovery (re-clone disk from base, reboot, re-configure) —
+failures never propagate beyond the replica.
+
+The baselines model the coordination cost the paper argues against: every
+operation through a centralized manager serializes behind one dispatcher
+whose per-op overhead grows with the number of managed replicas; the
+semi-decentralized variant pays it per group plus an inter-group sync term.
+These constants drive the Figure-6 scalability benchmark.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+from repro.core.faults import FaultInjector, FaultType, ReplicaError, RetryPolicy
+from repro.core.replica import SimOSReplica, ReplicaState
+
+
+class ManagerState(enum.Enum):
+    COLD = "cold"
+    CONFIGURED = "configured"
+    READY = "ready"
+    RUNNING = "running"
+    EVALUATING = "evaluating"
+    DONE = "done"
+    FAILED = "failed"
+    RECOVERING = "recovering"
+    CLOSED = "closed"
+
+
+@dataclass
+class ManagerStats:
+    steps: int = 0
+    retries: int = 0
+    recoveries: int = 0
+    failures: int = 0
+    virtual_seconds: float = 0.0
+
+
+class ReplicaStateManager:
+    """Decentralized per-replica state manager (one per OS replica)."""
+
+    def __init__(self, replica: SimOSReplica,
+                 retry: Optional[RetryPolicy] = None):
+        self.replica = replica
+        self.retry = retry or RetryPolicy()
+        self.state = ManagerState.COLD
+        self.stats = ManagerStats()
+        self._lock = threading.Lock()  # per-replica only — no global locks
+
+    # ------------------------------------------------------------- public
+    def configure(self, task: dict) -> float:
+        with self._lock:
+            dur = self._ensure_booted()
+            dur += self.replica.configure(task)
+            self.state = ManagerState.CONFIGURED
+            self.stats.virtual_seconds += dur
+            return dur
+
+    def reset(self) -> tuple[Any, float]:
+        with self._lock:
+            obs, dur = self.replica.reset()
+            self.state = ManagerState.RUNNING
+            self.stats.virtual_seconds += dur
+            return obs, dur
+
+    def step(self, action: Any) -> tuple[Any, float, bool, dict, float]:
+        """Step with the paper's step-level retry policy."""
+        with self._lock:
+            total = 0.0
+            attempt = 0
+            while True:
+                try:
+                    obs, rew, done, info, dur = self.replica.step(action)
+                    total += dur
+                    self.stats.steps += 1
+                    self.stats.virtual_seconds += total
+                    if done:
+                        self.state = ManagerState.EVALUATING
+                    return obs, rew, done, info, total
+                except ReplicaError as e:
+                    if e.fault in (FaultType.CRASH, FaultType.HANG):
+                        # charge the hang timeout before detection
+                        if e.fault == FaultType.HANG:
+                            total += self.replica.latency.hang_timeout_s
+                        total += self._recover()
+                        self.stats.virtual_seconds += total
+                        self.state = ManagerState.FAILED
+                        self.stats.failures += 1
+                        raise TaskAborted(self.replica.replica_id,
+                                          total) from e
+                    if not self.retry.should_retry(e.fault, attempt):
+                        self.state = ManagerState.FAILED
+                        self.stats.failures += 1
+                        self.stats.virtual_seconds += total
+                        raise TaskAborted(self.replica.replica_id,
+                                          total) from e
+                    total += self.retry.backoff(attempt)
+                    attempt += 1
+                    self.stats.retries += 1
+
+    def evaluate(self) -> tuple[float, float]:
+        with self._lock:
+            score, dur = self.replica.evaluate()
+            self.state = ManagerState.DONE
+            self.stats.virtual_seconds += dur
+            return score, dur
+
+    def close(self) -> float:
+        with self._lock:
+            dur = self.replica.close()
+            self.state = ManagerState.CLOSED
+            return dur
+
+    def status(self) -> dict:
+        return {"state": self.state.value,
+                "replica": self.replica.state.value,
+                "steps": self.stats.steps,
+                "retries": self.stats.retries,
+                "recoveries": self.stats.recoveries}
+
+    # ------------------------------------------------------------ private
+    def _ensure_booted(self) -> float:
+        if self.replica.alive:
+            return 0.0
+        return self.replica.boot()
+
+    def _health_check(self) -> bool:
+        return self.replica.alive
+
+    def _recover(self) -> float:
+        """Autonomous local recovery: re-clone disk, reboot, reconfigure."""
+        self.state = ManagerState.RECOVERING
+        dur = self.replica.boot()             # reflink clone + boot
+        if self.replica.task is not None:
+            dur += self.replica.configure(self.replica.task)
+        self.stats.recoveries += 1
+        self.state = ManagerState.READY
+        return dur
+
+    def recover_if_needed(self) -> float:
+        with self._lock:
+            if self._health_check():
+                return 0.0
+            return self._recover()
+
+
+class TaskAborted(RuntimeError):
+    """Raised when a runner fails permanently; the pool reassigns the task."""
+
+    def __init__(self, replica_id: str, virtual_seconds: float):
+        super().__init__(f"task aborted on {replica_id}")
+        self.replica_id = replica_id
+        self.virtual_seconds = virtual_seconds
+
+
+# --------------------------------------------------------------- baselines
+@dataclass
+class ManagerOverheadModel:
+    """Per-op dispatcher overhead in virtual seconds (drives Fig. 6 sims)."""
+
+    base_s: float = 0.002
+    per_replica_s: float = 0.004      # queueing delay per managed replica
+    inter_group_sync_s: float = 0.05  # semi-decentralized coordination
+
+
+class CentralizedManager:
+    """One dispatcher in front of every replica (anti-pattern baseline)."""
+
+    kind = "centralized"
+
+    def __init__(self, managers: list[ReplicaStateManager],
+                 overhead: Optional[ManagerOverheadModel] = None):
+        self.managers = managers
+        self.overhead = overhead or ManagerOverheadModel()
+        self._global_lock = threading.Lock()
+
+    def dispatch_overhead(self) -> float:
+        return (self.overhead.base_s
+                + self.overhead.per_replica_s * len(self.managers))
+
+    def step(self, idx: int, action: Any):
+        with self._global_lock:       # the bottleneck, made explicit
+            out = self.managers[idx].step(action)
+            return out[:-1] + (out[-1] + self.dispatch_overhead(),)
+
+
+class SemiDecentralizedManager:
+    """Replicas split into groups; one dispatcher per group + group sync."""
+
+    kind = "semi"
+
+    def __init__(self, managers: list[ReplicaStateManager], group_size: int,
+                 overhead: Optional[ManagerOverheadModel] = None):
+        self.managers = managers
+        self.group_size = group_size
+        self.overhead = overhead or ManagerOverheadModel()
+        n_groups = -(-len(managers) // group_size)
+        self._locks = [threading.Lock() for _ in range(n_groups)]
+
+    def dispatch_overhead(self) -> float:
+        return (self.overhead.base_s
+                + self.overhead.per_replica_s * self.group_size
+                + self.overhead.inter_group_sync_s)
+
+    def step(self, idx: int, action: Any):
+        with self._locks[idx // self.group_size]:
+            out = self.managers[idx].step(action)
+            return out[:-1] + (out[-1] + self.dispatch_overhead(),)
+
+
+class DecentralizedManager:
+    """The paper's design: no shared dispatcher at all."""
+
+    kind = "decentralized"
+
+    def __init__(self, managers: list[ReplicaStateManager],
+                 overhead: Optional[ManagerOverheadModel] = None):
+        self.managers = managers
+        self.overhead = overhead or ManagerOverheadModel()
+
+    def dispatch_overhead(self) -> float:
+        return self.overhead.base_s
+
+    def step(self, idx: int, action: Any):
+        out = self.managers[idx].step(action)
+        return out[:-1] + (out[-1] + self.dispatch_overhead(),)

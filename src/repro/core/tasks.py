@@ -1,0 +1,72 @@
+"""Universally diverse tasks with a unified flow (§3.5, Table 3).
+
+Every task follows the four-phase flow the paper defines — configure, reset,
+operate, evaluate — regardless of domain. The suite mirrors Table 3's ten
+application domains with the paper's trajectory statistics (10-25 steps per
+trajectory), so the datagen benchmark can reproduce the table.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+# (task_type, domain, description, trajectories, steps) — Table 3 rows
+TABLE3_ROWS = [
+    ("Office", "LibreOffice Writer", "Document Editing", 493, 5028),
+    ("Office", "LibreOffice Calc", "Spreadsheet Editing", 222, 4240),
+    ("Office", "LibreOffice Impress", "Presentation Editing", 314, 4898),
+    ("Daily", "Chrome", "Web Browsing", 291, 4285),
+    ("Daily", "ThunderBird", "Email", 189, 3627),
+    ("Daily", "VLC", "Media Control", 107, 1701),
+    ("Professional", "VS Code", "Programming", 309, 4604),
+    ("Professional", "GIMP", "Image Editing", 203, 3410),
+    ("Professional", "OS", "System Configuration", 491, 5333),
+    ("Workflow", "Multi-Apps", "Combined Above", 244, 5709),
+]
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    task_id: str
+    task_type: str
+    domain: str
+    description: str
+    horizon: int                      # steps per trajectory (10-25)
+    setup_software: tuple = ()
+
+    def to_dict(self) -> dict:
+        return {"task_id": self.task_id, "task_type": self.task_type,
+                "domain": self.domain, "description": self.description,
+                "horizon": self.horizon}
+
+
+class TaskSuite:
+    """Generates task specs matching Table 3's domain mix."""
+
+    def __init__(self, seed: int = 0):
+        self._rng = random.Random(seed)
+
+    def sample(self, n: int) -> list[TaskSpec]:
+        weights = [r[3] for r in TABLE3_ROWS]   # trajectory counts
+        rows = self._rng.choices(TABLE3_ROWS, weights=weights, k=n)
+        out = []
+        for i, (ttype, domain, desc, _t, _s) in enumerate(rows):
+            horizon = self._rng.randint(10, 25)
+            out.append(TaskSpec(
+                task_id=f"{domain.replace(' ', '_').lower()}-{i}",
+                task_type=ttype, domain=domain, description=desc,
+                horizon=horizon, setup_software=(domain,)))
+        return out
+
+    def by_domain(self, domain: str, n: int) -> list[TaskSpec]:
+        row = next(r for r in TABLE3_ROWS if r[1] == domain)
+        return [TaskSpec(
+            task_id=f"{domain.replace(' ', '_').lower()}-{i}",
+            task_type=row[0], domain=domain, description=row[2],
+            horizon=self._rng.randint(10, 25), setup_software=(domain,))
+            for i in range(n)]
+
+    @staticmethod
+    def domains() -> list[str]:
+        return [r[1] for r in TABLE3_ROWS]

@@ -1,0 +1,44 @@
+"""Counters / histograms / timelines for throughput, latency and recovery."""
+from __future__ import annotations
+
+import statistics
+import threading
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+
+class Telemetry:
+    def __init__(self):
+        self._counters: dict[str, int] = defaultdict(int)
+        self._series: dict[str, list[float]] = defaultdict(list)
+        self._lock = threading.Lock()
+
+    def count(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self._counters[name] += n
+
+    def observe(self, name: str, value: float) -> None:
+        with self._lock:
+            self._series[name].append(value)
+
+    def counter(self, name: str) -> int:
+        return self._counters.get(name, 0)
+
+    def summary(self, name: str) -> dict:
+        xs = self._series.get(name, [])
+        if not xs:
+            return {"n": 0}
+        return {
+            "n": len(xs),
+            "mean": statistics.fmean(xs),
+            "p50": statistics.median(xs),
+            "p95": sorted(xs)[int(0.95 * (len(xs) - 1))],
+            "max": max(xs),
+        }
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "counters": dict(self._counters),
+                "series": {k: self.summary(k) for k in self._series},
+            }

@@ -1,0 +1,5 @@
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.pipeline import (Trajectory, TrajectoryStep,
+                                 encode_trajectory, pack_batches,
+                                 synthetic_trajectories, PrefetchIterator)
+from repro.data.replay_buffer import ReplayBuffer

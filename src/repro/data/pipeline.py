@@ -1,0 +1,130 @@
+"""Trajectory data pipeline: data-server episodes -> packed token batches.
+
+Sequence layout per the paper (§4.2): instruction, then per step
+[IMG screenshot-tokens SEP thought-bytes SEP action-bytes]; the loss mask is
+1 on thought/action tokens and 0 on instruction/screenshot tokens (the model
+is conditioned on them, not trained to produce them).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.data.tokenizer import (ByteTokenizer, screenshot_tokens,
+                                  BOS, EOS, SEP, IMG, PAD)
+
+
+@dataclass
+class TrajectoryStep:
+    observation: np.ndarray
+    thought: str
+    action: str
+
+
+@dataclass
+class Trajectory:
+    task_id: str
+    instruction: str
+    steps: list[TrajectoryStep]
+    score: float = 0.0
+
+
+def encode_trajectory(traj: Trajectory, tok: ByteTokenizer,
+                      vocab_size: int, obs_tokens: int = 16
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (token_ids, loss_mask)."""
+    ids: list[int] = [BOS] + tok.encode(traj.instruction)
+    mask: list[int] = [0] * len(ids)
+    for st in traj.steps:
+        img = [IMG] + screenshot_tokens(st.observation, obs_tokens,
+                                        vocab_size)
+        ids += img
+        mask += [0] * len(img)
+        for text in (st.thought, st.action):
+            seg = [SEP] + tok.encode(text)
+            ids += seg
+            mask += [0] + [1] * (len(seg) - 1)
+    ids.append(EOS)
+    mask.append(1)
+    ids = [min(i, vocab_size - 1) for i in ids]
+    return np.asarray(ids, np.int32), np.asarray(mask, np.float32)
+
+
+def pack_batches(encoded: list[tuple[np.ndarray, np.ndarray]], *,
+                 batch: int, seq_len: int, seed: int = 0
+                 ) -> Iterator[dict]:
+    """Greedy sequence packing into fixed (batch, seq_len) training batches.
+
+    Yields {"tokens", "targets", "mask"}: next-token prediction with the
+    mask shifted alongside the targets."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(encoded))
+    stream_ids: list[int] = []
+    stream_mask: list[float] = []
+    rows_t, rows_m = [], []
+    need = seq_len + 1
+    for idx in order:
+        ids, mask = encoded[idx]
+        stream_ids.extend(ids.tolist())
+        stream_mask.extend(mask.tolist())
+        while len(stream_ids) >= need:
+            chunk = np.asarray(stream_ids[:need], np.int32)
+            cmask = np.asarray(stream_mask[:need], np.float32)
+            del stream_ids[:seq_len], stream_mask[:seq_len]
+            rows_t.append(chunk)
+            rows_m.append(cmask)
+            if len(rows_t) == batch:
+                t = np.stack(rows_t)
+                m = np.stack(rows_m)
+                yield {"tokens": t[:, :-1], "targets": t[:, 1:],
+                       "mask": m[:, 1:]}
+                rows_t, rows_m = [], []
+
+
+def synthetic_trajectories(n: int, *, seed: int = 0,
+                           steps_range=(10, 25)) -> list[Trajectory]:
+    """Deterministic synthetic demonstrations (offline smoke/bench data)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    actions = ["click(120, 80)", "type('hello')", "scroll(-3)",
+               "key('ctrl+s')", "drag(10,10,50,60)"]
+    for i in range(n):
+        n_steps = int(rng.integers(*steps_range))
+        steps = [
+            TrajectoryStep(
+                observation=rng.integers(0, 256, (48, 64, 3), np.uint8),
+                thought=f"I should {actions[int(rng.integers(len(actions)))][:-1]} next",
+                action=actions[int(rng.integers(len(actions)))],
+            ) for _ in range(n_steps)]
+        out.append(Trajectory(f"task-{i}", f"Complete workflow #{i}", steps,
+                              float(rng.random())))
+    return out
+
+
+class PrefetchIterator:
+    """Background-thread prefetch so the accelerator never waits on packing."""
+
+    def __init__(self, it: Iterator[dict], depth: int = 4):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._done = object()
+
+        def worker():
+            for x in it:
+                self._q.put(x)
+            self._q.put(self._done)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        x = self._q.get()
+        if x is self._done:
+            raise StopIteration
+        return x

@@ -1,0 +1,40 @@
+"""Replay buffer for the semi-online asynchronous RL pipeline (§4.2):
+rollout workers append experiences while the learner samples batches —
+producers and consumers are decoupled exactly as in the paper."""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Any, Optional
+
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int = 4096, seed: int = 0):
+        self._buf: deque = deque(maxlen=capacity)
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self.total_added = 0
+
+    def add(self, item: Any) -> None:
+        with self._lock:
+            self._buf.append(item)
+            self.total_added += 1
+
+    def extend(self, items) -> None:
+        with self._lock:
+            for it in items:
+                self._buf.append(it)
+                self.total_added += 1
+
+    def sample(self, n: int) -> list:
+        with self._lock:
+            if not self._buf:
+                return []
+            idx = self._rng.integers(0, len(self._buf), size=n)
+            return [self._buf[i] for i in idx]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._buf)

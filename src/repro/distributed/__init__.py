@@ -1,0 +1,1 @@
+from repro.distributed.sharding import AxisRules, train_rules, serve_rules, pspec_for

@@ -1,0 +1,85 @@
+"""Distributed-optimization collectives: int8 gradient compression with
+error feedback, and quantized all-reduce building blocks.
+
+At multi-pod scale the pod-axis all-reduce rides the slow inter-pod links,
+so we compress there: per-block max-scaled int8 quantization (4x fewer bytes
+than bf16 all-gather-based reduction, 8x vs f32), with the quantization
+residual fed back into the next step (error feedback keeps SGD convergence;
+Karimireddy et al., arXiv:1901.09847). Inside a pod gradients stay exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+BLOCK = 2048  # quantization block (per-block scales)
+
+
+def quantize_int8(x: jax.Array, block: int = BLOCK):
+    """Per-block symmetric int8 quantization. Returns (q, scales, pad)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, pad: int, shape, dtype):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compress_roundtrip(x: jax.Array) -> jax.Array:
+    """Quantize-dequantize (what the wire sees); used for error feedback."""
+    q, s, pad = quantize_int8(x)
+    return dequantize_int8(q, s, pad, x.shape, jnp.float32)
+
+
+def make_error_feedback_compressor():
+    """Returns (init_state(grads), compress(grads, ef_state)).
+
+    compress applies int8 round-trip per leaf and carries the residual:
+        g_hat = Q(g + e);  e' = (g + e) - g_hat
+    """
+
+    def init_state(grads):
+        return jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def compress(grads, ef_state):
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            g_hat = compress_roundtrip(corrected)
+            return g_hat.astype(g.dtype), corrected - g_hat
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(ef_state)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+                jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+    return init_state, compress
+
+
+def quantized_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce via int8 all-gather + local sum (inside shard_map).
+
+    Wire bytes: n int8 per device vs 2n bf16 for ring all-reduce — the
+    baseline-vs-compressed collective-bytes comparison in §Perf."""
+    q, s, pad = quantize_int8(x)
+    qg = jax.lax.all_gather(q, axis_name)          # (n_dev, blocks, BLOCK) i8
+    sg = jax.lax.all_gather(s, axis_name)
+    parts = qg.astype(jnp.float32) * sg
+    total = jnp.sum(parts, axis=0)
+    flat = total.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(x.shape)

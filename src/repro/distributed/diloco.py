@@ -1,0 +1,83 @@
+"""DiLoCo-style semi-synchronous multi-pod training (arXiv:2311.08105),
+the pod-scale analogue of the paper's decoupled rollout/update pipeline.
+
+Each pod runs H inner steps with gradients reduced only over its intra-pod
+axes; every H steps the pods exchange parameter *deltas* (optionally int8-
+compressed) and apply an outer Nesterov-momentum update. Cross-pod collective
+bytes drop by ~H x relative to per-step all-reduce — measured in §Perf.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.collectives import compress_roundtrip
+
+
+@dataclass(frozen=True)
+class DiLoCoConfig:
+    inner_steps: int = 50          # H
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    nesterov: bool = True
+    compress_int8: bool = True
+
+
+def init_outer_state(params):
+    return {
+        "anchor": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "momentum": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def outer_sync(params, outer_state, cfg: DiLoCoConfig, *,
+               pod_axis: Optional[str] = None):
+    """One outer step. Under pjit on the multi-pod mesh this lowers to the
+    only cross-pod collective of the whole cycle (params delta mean).
+
+    delta  = anchor - pod_params          (per pod)
+    delta  = mean_over_pods(delta)        [int8-compressed on the wire]
+    m      = mu*m + delta
+    anchor = anchor - outer_lr * (delta + mu*m  if nesterov else m)
+
+    Pass pod_axis when calling inside shard_map over the pod mesh axis
+    (per-pod divergent params); under plain pjit with pod-replicated params
+    the mean is a no-op and GSPMD inserts the cross-pod broadcast itself.
+    """
+    anchor, mom = outer_state["anchor"], outer_state["momentum"]
+
+    def one(a, p, m):
+        delta = a - p.astype(jnp.float32)
+        if cfg.compress_int8:
+            delta = compress_roundtrip(delta)
+        if pod_axis is not None:
+            delta = jax.lax.pmean(delta, pod_axis)
+        m_new = cfg.outer_momentum * m + delta
+        step_dir = (delta + cfg.outer_momentum * m_new
+                    if cfg.nesterov else m_new)
+        a_new = a - cfg.outer_lr * step_dir
+        return a_new, m_new
+
+    flat_a, tdef = jax.tree.flatten(anchor)
+    outs = [one(a, p, m) for a, p, m in zip(
+        flat_a, jax.tree.leaves(params), jax.tree.leaves(mom))]
+    new_anchor = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_mom = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_params = jax.tree.map(
+        lambda a, p: a.astype(p.dtype), new_anchor, params)
+    return new_params, {"anchor": new_anchor, "momentum": new_mom}
+
+
+def cross_pod_bytes_per_cycle(n_params: int, cfg: DiLoCoConfig) -> dict:
+    """Collective-bytes accounting: per-step all-reduce vs DiLoCo cycle."""
+    per_step_allreduce = 2 * n_params * 2           # ring, bf16
+    diloco = n_params * (1 if cfg.compress_int8 else 4)
+    return {
+        "baseline_bytes_per_H_steps": per_step_allreduce * cfg.inner_steps,
+        "diloco_bytes_per_H_steps": diloco,
+        "reduction_x": per_step_allreduce * cfg.inner_steps / diloco,
+    }

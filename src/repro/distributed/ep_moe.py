@@ -1,0 +1,154 @@
+"""Expert-parallel MoE via shard_map all-to-all (the §Perf alternative).
+
+The baseline MoE keeps activations token-sharded and lets GSPMD gather the
+FSDP-sharded expert weights to the tokens — wire bytes scale with *weight*
+size (for grok-1, 550 GB of expert weights x 3 passes x microbatches).
+This variant keeps expert weights stationary and moves *tokens* through
+lax.all_to_all inside shard_map: wire bytes scale with activation size,
+~100x smaller at 300B scale.
+
+Layouts (data axis of width R):
+  - E >= R (deepseek 64e, jamba 16e): each row owns E/R experts.
+  - E <  R (grok 8e): each expert's FFN hidden dim is split across
+    fs = R/E consecutive rows (`MoEConfig.ep_fsplit`); tokens are sent to
+    all fs rows of their expert and the partial outputs are psum'd within
+    the slice group.
+The expert hidden dim additionally rides the tensor-parallel (model) axis.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation
+from repro.models.moe import route, capacity
+from repro.models.mlp import mlp_apply
+
+
+def moe_apply_ep(p: dict, cfg: ModelConfig, x: jax.Array, rules,
+                 data_axis: str = "data"):
+    """x: (B, S, D) -> (y, aux). Requires rules.mesh with `data_axis`."""
+    mesh = rules.mesh
+    assert mesh is not None
+    m = cfg.moe
+    E, k = m.n_experts, m.top_k
+    R = dict(zip(mesh.axis_names, mesh.devices.shape))[data_axis]
+    fs = m.ep_fsplit                       # storage layout is authoritative
+    assert (fs == 1 and E % R == 0) or (fs > 1 and E * fs == R), \
+        f"EP layout needs E%R==0 or E*fs==R (E={E}, fs={fs}, R={R})"
+    epr = (E * fs) // R                    # (expert, slice) pairs per row
+    B, S, D = x.shape
+    act = activation(cfg.act)
+
+    # per-row token count and capacity
+    dp_axes = rules.mapping.get("batch", (data_axis,))
+    # only the data axis shards tokens inside this shard_map
+    T_loc = (B // R) * S
+    C = capacity(T_loc, k, E, m.capacity_factor)
+
+    w_axes = ("w_in", "w_gate", "w_out") if cfg.gated_mlp else \
+             ("w_in", "w_out")
+
+    def fn(x_loc, router, w_in, w_out, *w_gate):
+        # x_loc: (B/R, S, D) — replicated over the model axis
+        wg = w_gate[0] if w_gate else None
+        Tl, _ = x_loc.reshape(-1, D).shape
+        xt = x_loc.reshape(Tl, D)
+        logits = xt.astype(jnp.float32) @ router            # (Tl, E)
+        probs, gate_vals, de, dc = route(logits[None], E, k, C)
+        gate_vals, de, dc = gate_vals[0], de[0], dc[0]      # strip group dim
+        e_idx = jnp.argmax(de, axis=-1)                     # (Tl, k)
+        slot = jnp.argmax(dc, axis=-1)                      # (Tl, k)
+        kept = dc.max(axis=-1) > 0                          # (Tl, k)
+
+        # ---- build send buffers (E, C, ...) with per-device scatters
+        flat_e = e_idx.reshape(-1)
+        flat_s = jnp.where(kept.reshape(-1), slot.reshape(-1), C)  # C = drop
+        tok_of = jnp.tile(jnp.arange(Tl)[:, None], (1, k)).reshape(-1)
+        send = jnp.zeros((E, C + 1, D), xt.dtype).at[flat_e, flat_s].set(
+            xt[tok_of], mode="drop")[:, :C]                 # (E, C, D)
+
+        # ---- all_to_all (tiled): tokens to their expert's row(s).
+        # Sender row-major layout: row (dest*epr + j) goes to dest; receiver
+        # sees recv[src*epr + j] = src's buffer for my j-th local expert.
+        if fs > 1:
+            send_rows = jnp.repeat(send, fs, axis=0)        # (R, C, D)
+        else:
+            send_rows = send                                # (R*epr, C, D)
+        recv = jax.lax.all_to_all(send_rows, data_axis, 0, 0, tiled=True)
+
+        if fs > 1:
+            xin = recv.reshape(R * C, D)                    # my slice's tokens
+            h = act(xin @ w_in[0])                          # (R*C, F/fs/TP)
+            if wg is not None:
+                h = h * (xin @ wg[0])
+            y = h @ w_out[0]                                # partial over F
+            y = jax.lax.psum(y, "model")
+            groups = [list(range(g * fs, (g + 1) * fs))
+                      for g in range(R // fs)]
+            y = jax.lax.psum(y, data_axis, axis_index_groups=groups)
+            y_rows = y.reshape(R, C, D)
+        else:
+            xin = (recv.reshape(R, epr, C, D)
+                   .transpose(1, 0, 2, 3).reshape(epr, R * C, D))
+            h = act(jnp.einsum("erd,edf->erf", xin, w_in))
+            if wg is not None:
+                h = h * jnp.einsum("erd,edf->erf", xin, wg)
+            y = jnp.einsum("erf,efd->erd", h, w_out)
+            y = jax.lax.psum(y, "model")
+            y_rows = (y.reshape(epr, R, C, D)
+                      .transpose(1, 0, 2, 3).reshape(R * epr, C, D))
+
+        # ---- return trip (same layout backwards)
+        back = jax.lax.all_to_all(y_rows, data_axis, 0, 0, tiled=True)
+        if fs > 1:
+            y_exp = back[::fs]                              # (E, C, D)
+        else:
+            y_exp = back[:E]                                # (E, C, D)
+        # gather each token's k outputs and combine
+        y_exp = jnp.concatenate(
+            [y_exp, jnp.zeros((E, 1, D), y_exp.dtype)], axis=1)
+        gathered = y_exp[flat_e, flat_s]                    # (Tl*k, D)
+        w = (gate_vals * kept).reshape(-1, 1).astype(gathered.dtype)
+        y_tok = jnp.sum((gathered * w).reshape(Tl, k, D), axis=1)
+
+        # aux load-balance (local estimate, averaged over rows)
+        frac_tokens = jnp.mean(
+            jnp.sum(de * kept[..., None].astype(jnp.float32), axis=1), axis=0)
+        frac_probs = jnp.mean(probs[0], axis=0)
+        aux = E * jnp.sum(frac_tokens * frac_probs) * m.router_aux_weight
+        aux = jax.lax.pmean(aux, data_axis)
+        return y_tok.reshape(x_loc.shape), aux
+
+    # param specs: router replicated; expert weights expert-sharded over data
+    # + hidden over model (matching the EP storage layout)
+    w_in_spec = P(data_axis, None, "model")
+    w_out_spec = P(data_axis, "model", None)
+    in_specs = [P(data_axis, None, None), P(None, None), w_in_spec,
+                w_out_spec]
+    if cfg.gated_mlp:
+        in_specs.append(w_in_spec)
+    args = [x, p["router"], p["w_in"], p["w_out"]]
+    if cfg.gated_mlp:
+        args.append(p["w_gate"])
+
+    try:
+        mapped = shard_map(
+            fn, mesh=mesh, in_specs=tuple(in_specs),
+            out_specs=(P(data_axis, None, None), P()),
+            check_rep=False)
+    except TypeError:  # newer jax renamed the kwarg
+        mapped = shard_map(
+            fn, mesh=mesh, in_specs=tuple(in_specs),
+            out_specs=(P(data_axis, None, None), P()),
+            check_vma=False)
+    y, aux = mapped(*args)
+    if m.n_shared:
+        y = y + mlp_apply(p["shared"], cfg, x)
+    return y, aux.astype(jnp.float32)

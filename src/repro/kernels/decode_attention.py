@@ -1,0 +1,103 @@
+"""Decode attention against a long KV cache (TPU Pallas).
+
+Flash-decoding adapted to TPU: on GPU the cache is split across SMs with a
+separate reduction kernel; on TPU we instead walk the cache blocks in the
+"arbitrary" (sequential) grid dimension per (batch, kv-head), keeping the
+online-softmax state for the G grouped q-heads in VMEM scratch. All q heads
+of one kv group ride in a single (G x hd) tile so GQA costs one cache pass.
+Valid-length masking reads a per-batch cache_len from a (B, 1) VMEM block.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _dec_kernel(q_ref, k_ref, v_ref, cl_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, block_s: int, n_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)              # (block_s, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    G = q.shape[0]
+    kpos = (si * block_s
+            + jax.lax.broadcasted_iota(jnp.int32, (G, block_s), 1))
+    valid = kpos < cl_ref[0, 0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[:, 0:1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[:, 0:1] = l_scr[:, 0:1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_scr[:, 0:1] = m_new
+    v = v_ref[0, 0].astype(jnp.float32)              # (block_s, hd)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[:, 0:1], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len, *, softmax_scale: Optional[float] = None,
+                     block_s: int = DEFAULT_BLOCK_S,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, 1, H, hd); caches: (B, S, KVH, hd); cache_len: (B,) or scalar."""
+    B, _, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    n_s = S // block_s
+
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    cl2 = cl[:, None]                                 # (B, 1)
+
+    qg = q.reshape(B, KVH, G, hd)
+    kt = k_cache.transpose(0, 2, 1, 3)                # (B, KVH, S, hd)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_dec_kernel, scale=scale, block_s=block_s,
+                               n_s=n_s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KVH, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qg, kt, vt, cl2)
+    return out.reshape(B, 1, H, hd)

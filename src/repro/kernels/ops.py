@@ -1,0 +1,86 @@
+"""jit-ready kernel entry points with backend dispatch.
+
+Models call these; the implementation is chosen by ``repro_kernel_mode``:
+  - "ref":       pure-jnp oracle (CPU path; what the dry-run lowers)
+  - "pallas":    pl.pallas_call TPU kernels (the deployment path)
+  - "interpret": Pallas kernels in interpret mode (CPU correctness tests)
+Default: "pallas" on TPU backends, else "ref".
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+
+_mode_override: Optional[str] = None
+
+
+def set_mode(mode: Optional[str]) -> None:
+    """Force a kernel backend: "ref" | "pallas" | "interpret" | None (auto)."""
+    global _mode_override
+    assert mode in (None, "ref", "pallas", "interpret"), mode
+    _mode_override = mode
+
+
+def kernel_mode() -> str:
+    if _mode_override is not None:
+        return _mode_override
+    env = os.environ.get("REPRO_KERNELS", "").strip()
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    softmax_scale=None):
+    mode = kernel_mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            softmax_scale=softmax_scale, interpret=(mode == "interpret"))
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, softmax_scale=softmax_scale)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, softmax_scale=None):
+    mode = kernel_mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import decode_attention as da
+        return da.decode_attention(
+            q, k_cache, v_cache, cache_len, softmax_scale=softmax_scale,
+            interpret=(mode == "interpret"))
+    return _ref.decode_attention_ref(q, k_cache, v_cache, cache_len,
+                                     softmax_scale=softmax_scale)
+
+
+def ssd_scan(x, dt, A, B_in, C_in, D, *, chunk=256, initial_state=None,
+             return_state=False):
+    mode = kernel_mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import ssd_scan as ssd
+        return ssd.ssd_scan(
+            x, dt, A, B_in, C_in, D, chunk=chunk, initial_state=initial_state,
+            return_state=return_state, interpret=(mode == "interpret"))
+    return _ref.ssd_ref(x, dt, A, B_in, C_in, D, chunk=chunk,
+                        initial_state=initial_state, return_state=return_state)
+
+
+def ssd_decode(x, dt, A, B_in, C_in, D, state):
+    # O(1)-state single-token update; jnp is already optimal here.
+    return _ref.ssd_decode_ref(x, dt, A, B_in, C_in, D, state)
+
+
+def causal_conv1d(x, w, bias=None):
+    return _ref.causal_conv1d_ref(x, w, bias)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    mode = kernel_mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import rmsnorm as rn
+        return rn.rmsnorm(x, scale, eps, interpret=(mode == "interpret"))
+    return _ref.rmsnorm_ref(x, scale, eps)

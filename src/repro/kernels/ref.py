@@ -1,0 +1,230 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are also the CPU execution path for the models (the dry-run lowers
+these), so they are written to be memory-efficient at 32k-500k contexts:
+attention is chunked over query blocks (banded for sliding-window), the SSD
+scan is chunked with an O(1) carried state.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# The dry-run sets this so internal chunk scans are unrolled and XLA's
+# cost_analysis (which counts a while-loop body once) sees every chunk.
+SCAN_UNROLL = False
+
+
+# ---------------------------------------------------------------- attention
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  q_offset: int = 0, q_chunk: int = 1024,
+                  softmax_scale: Optional[float] = None) -> jax.Array:
+    """Multi-head attention with GQA, causal masking, optional sliding window.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KVH, hd). `q_offset` is the absolute
+    position of q[0] (prefill continuation / decode). Chunked over q so the
+    (Sq x Sk) score matrix is never materialized.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+
+    def attend(qc, kc, vc, qpos, kpos):
+        # qc: (B, n, H, hd); kc/vc: (B, m, KVH, hd); positions absolute
+        n, m = qc.shape[1], kc.shape[1]
+        qg = qc.reshape(qc.shape[0], n, KVH, G, hd)
+        s = jnp.einsum("bnkgd,bmkd->bkgnm", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((n, m), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # rows where everything is masked produce uniform garbage; zero them
+        p = jnp.where(mask.any(axis=-1)[None, None, None, :, None], p, 0.0)
+        o = jnp.einsum("bkgnm,bmkd->bnkgd", p.astype(vc.dtype), vc)
+        return o.reshape(qc.shape[0], n, H, hd)
+
+    if Sq <= q_chunk:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(Sk)
+        return attend(q, k, v, qpos, kpos)
+
+    assert Sq % q_chunk == 0, (Sq, q_chunk)
+    nq = Sq // q_chunk
+    qs = q.reshape(B, nq, q_chunk, H, hd)
+
+    banded = bool(window) and Sk > 2 * window
+    if banded:
+        # Sliding window: each q chunk only sees a band of the keys.
+        band = window + q_chunk
+        band = min(_round_up(band, q_chunk), Sk)
+
+        def body(_, i):
+            qc = qs[:, i]
+            qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+            start = jnp.clip(i * q_chunk + q_chunk - band, 0, Sk - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpos = start + jnp.arange(band)
+            return None, attend(qc, kc, vc, qpos, kpos)
+    else:
+        def body(_, i):
+            qc = qs[:, i]
+            qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+            kpos = jnp.arange(Sk)
+            return None, attend(qc, k, v, qpos, kpos)
+
+    _, out = jax.lax.scan(body, None, jnp.arange(nq),
+                          unroll=nq if SCAN_UNROLL else 1)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         cache_len, *, softmax_scale: Optional[float] = None
+                         ) -> jax.Array:
+    """Single-token decode attention. q: (B, 1, H, hd); caches: (B, S, KVH, hd);
+    cache_len: (B,) or scalar number of valid cache entries."""
+    B, _, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bhgd,bmhd->bhgm", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 0:
+        cl = jnp.full((B,), cl)
+    valid = jnp.arange(S)[None] < cl[:, None]                 # (B, S)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgm,bmhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, hd)
+
+
+# ----------------------------------------------------------------- conv1d
+def causal_conv1d_ref(x: jax.Array, w: jax.Array, bias: Optional[jax.Array]
+                      = None) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + pad[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    if bias is not None:
+        out = out + bias
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- SSD
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B_in: jax.Array,
+            C_in: jax.Array, D: jax.Array, *, chunk: int = 256,
+            initial_state: Optional[jax.Array] = None,
+            return_state: bool = False):
+    """Mamba2 SSD chunked scan (arXiv:2405.21060 listing 1 semantics).
+
+    x: (B, S, H, P); dt: (B, S, H) (already softplus'd); A: (H,) negative;
+    B_in/C_in: (B, S, G, N); D: (H,). Returns y (B, S, H, P) and optionally
+    the final state (B, H, N, P).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B_in.shape[2], B_in.shape[3]
+    rep = H // G
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+
+    xr = x.reshape(Bb, nc, c, H, P)
+    dtr = dt.reshape(Bb, nc, c, H).astype(jnp.float32)
+    Br = B_in.reshape(Bb, nc, c, G, N)
+    Cr = C_in.reshape(Bb, nc, c, G, N)
+    Af = A.astype(jnp.float32)
+
+    dA = dtr * Af                                             # (B,nc,c,H)
+    cum = jnp.cumsum(dA, axis=2)                              # inclusive
+
+    h0 = (jnp.zeros((Bb, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    idx = jnp.arange(c)
+    ltmask = idx[:, None] >= idx[None, :]                     # j <= i
+
+    def body(h, inputs):
+        xc, dtc, Bc, Cc, cumc = inputs                        # per-chunk
+        # heads share their group's B/C
+        Bh = jnp.repeat(Bc, rep, axis=2)                      # (B,c,H,N)
+        Ch = jnp.repeat(Cc, rep, axis=2)
+        # ---- intra-chunk (quadratic within chunk)
+        cb = jnp.einsum("bihn,bjhn->bhij", Ch.astype(jnp.float32),
+                        Bh.astype(jnp.float32))               # (B,H,c,c)
+        diff = (cumc.transpose(0, 2, 1)[:, :, :, None]
+                - cumc.transpose(0, 2, 1)[:, :, None, :])     # (B,H,i,j)
+        decay = jnp.exp(jnp.minimum(diff, 0.0))  # exact on j<=i; avoids inf
+        scores = cb * decay * dtc.transpose(0, 2, 1)[:, :, None, :]
+        scores = jnp.where(ltmask[None, None], scores, 0.0)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", scores,
+                             xc.astype(jnp.float32))
+        # ---- contribution of the carried state
+        state_decay = jnp.exp(cumc)                           # (B,c,H)
+        y_inter = jnp.einsum("bihn,bhnp->bihp",
+                             Ch.astype(jnp.float32) * state_decay[..., None],
+                             h)
+        # ---- update state
+        last = cumc[:, -1:, :]                                # (B,1,H)
+        w = jnp.exp(last - cumc) * dtc                        # (B,c,H)
+        new_contrib = jnp.einsum("bjhn,bjhp->bhnp",
+                                 Bh.astype(jnp.float32) * w[..., None],
+                                 xc.astype(jnp.float32))
+        h_new = jnp.exp(last[:, 0, :])[:, :, None, None] * h + new_contrib
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    xs = (xr.transpose(1, 0, 2, 3, 4), dtr.transpose(1, 0, 2, 3),
+          Br.transpose(1, 0, 2, 3, 4), Cr.transpose(1, 0, 2, 3, 4),
+          cum.transpose(1, 0, 2, 3))
+    h_final, ys = jax.lax.scan(body, h0, xs,
+                               unroll=nc if SCAN_UNROLL else 1)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, P)
+    y = y + (D.astype(jnp.float32)[:, None] * x.astype(jnp.float32)).astype(x.dtype)
+    if return_state:
+        return y, h_final
+    return y
+
+
+def ssd_decode_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B_in: jax.Array,
+                   C_in: jax.Array, D: jax.Array, state: jax.Array):
+    """One-token SSD update. x: (B, H, P); dt: (B, H); B_in/C_in: (B, G, N);
+    state: (B, H, N, P). Returns (y, new_state)."""
+    H = x.shape[1]
+    G = B_in.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_in, rep, axis=1).astype(jnp.float32)    # (B,H,N)
+    Ch = jnp.repeat(C_in, rep, axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))                 # (B,H)
+    xf = x.astype(jnp.float32)
+    new_state = (dA[:, :, None, None] * state.astype(jnp.float32)
+                 + jnp.einsum("bhn,bhp->bhnp", Bh * dtf[..., None], xf))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), new_state
+
+
+# ------------------------------------------------------------------ rmsnorm
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)

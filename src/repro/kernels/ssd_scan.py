@@ -1,0 +1,130 @@
+"""Mamba2 SSD chunked scan (TPU Pallas).
+
+The SSD recurrence is computed chunk-by-chunk: intra-chunk interactions are a
+(chunk x chunk) masked matmul (MXU-friendly), and the cross-chunk recurrent
+state (N x P per head) lives in VMEM scratch, carried along the sequential
+"arbitrary" grid dimension — the TPU analogue of the paper's
+chunk-parallel-then-state-pass GPU kernel. Heads are tiled so the per-step
+working set (x, B, C, scores, state for `block_h` heads) fits VMEM.
+
+Grid: (batch, head_blocks, chunks); chunks sequential. ngroups == 1 only
+(all assigned configs); the wrapper falls back to the jnp oracle otherwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_H = 8
+
+
+def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, init_ref,
+                y_ref, fin_ref, state_scr, *, n_c: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = init_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)            # (c, hb, P)
+    dt = dt_ref[0].astype(jnp.float32)          # (c, hb)
+    Bm = B_ref[0].astype(jnp.float32)           # (c, N)
+    Cm = C_ref[0].astype(jnp.float32)           # (c, N)
+    A = A_ref[...].astype(jnp.float32)          # (hb,)
+    D = D_ref[...].astype(jnp.float32)          # (hb,)
+
+    dA = dt * A[None, :]                        # (c, hb)
+    cum = jnp.cumsum(dA, axis=0)                # inclusive
+    state = state_scr[...]                      # (hb, N, P)
+
+    # intra-chunk: masked decay-weighted (C B^T) @ x
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, c)
+    diff = cum[:, None, :] - cum[None, :, :]    # (i, j, hb)
+    decay = jnp.exp(jnp.minimum(diff, 0.0))
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ltmask = (i_idx >= j_idx)[:, :, None]
+    scores = jnp.where(ltmask, cb[:, :, None] * decay * dt[None, :, :], 0.0)
+    y = jnp.einsum("ijh,jhp->ihp", scores, x,
+                   preferred_element_type=jnp.float32)
+
+    # inter-chunk: carried state contribution
+    Ce = Cm[:, None, :] * jnp.exp(cum)[:, :, None]          # (c, hb, N)
+    y = y + jnp.einsum("ihn,hnp->ihp", Ce, state,
+                       preferred_element_type=jnp.float32)
+
+    # state update
+    last = cum[-1:, :]                                       # (1, hb)
+    w = jnp.exp(last - cum) * dt                             # (c, hb)
+    Bw = Bm[:, None, :] * w[:, :, None]                      # (c, hb, N)
+    new_contrib = jnp.einsum("jhn,jhp->hnp", Bw, x,
+                             preferred_element_type=jnp.float32)
+    state_scr[...] = jnp.exp(last[0])[:, None, None] * state + new_contrib
+
+    y_ref[0] = (y + D[None, :, None] * x).astype(y_ref.dtype)
+
+    @pl.when(ci == n_c - 1)
+    def _finish():
+        fin_ref[0] = state_scr[...]
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B_in: jax.Array,
+             C_in: jax.Array, D: jax.Array, *, chunk: int = 256,
+             initial_state: Optional[jax.Array] = None,
+             return_state: bool = False, block_h: int = DEFAULT_BLOCK_H,
+             interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A,D: (H,); B_in/C_in: (B,S,G,N)."""
+    Bb, S, H, P = x.shape
+    G, N = B_in.shape[2], B_in.shape[3]
+    if G != 1:
+        from repro.kernels import ref
+        return ref.ssd_ref(x, dt, A, B_in, C_in, D, chunk=chunk,
+                           initial_state=initial_state,
+                           return_state=return_state)
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    n_c = S // c
+    hb = min(block_h, H)
+    assert H % hb == 0, (H, hb)
+    n_h = H // hb
+
+    init = (jnp.zeros((Bb, H, N, P), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    Bs = B_in[:, :, 0]                                       # (B, S, N)
+    Cs = C_in[:, :, 0]
+
+    kernel = functools.partial(_ssd_kernel, n_c=n_c, chunk=c)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=(Bb, n_h, n_c),
+        in_specs=[
+            pl.BlockSpec((1, c, hb, P), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, c, hb), lambda b, h, i: (b, i, h)),
+            pl.BlockSpec((hb,), lambda b, h, i: (h,)),
+            pl.BlockSpec((1, c, N), lambda b, h, i: (b, i, 0)),
+            pl.BlockSpec((1, c, N), lambda b, h, i: (b, i, 0)),
+            pl.BlockSpec((hb,), lambda b, h, i: (h,)),
+            pl.BlockSpec((1, hb, N, P), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, hb, P), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, hb, N, P), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bs, Cs, D, init)
+    if return_state:
+        return y, fin
+    return y

@@ -1,0 +1,577 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
+# cell with ShapeDtypeStruct stand-ins (no allocation), record
+# memory_analysis() / cost_analysis(), and parse the partitioned HLO for
+# per-device collective bytes. This is the proof that the distribution config
+# is coherent, and the source of every §Roofline number.
+#
+# FLOPs accounting: XLA's cost_analysis counts a while-loop body ONCE,
+# regardless of trip count, and our models scan over layers (and gradient
+# accumulation scans over microbatches). Fully unrolling for the dry-run is
+# compile-time-prohibitive at 512 devices, so each cell additionally lowers
+# tiny "correction modules" (one layer-period body; one microbatch grad) and
+# combines:   T = R_full + (mb-1)*R_mb + mb*(n_blocks-1)*R_layer
+# (exact by linearity; same combination applies to HLO bytes and collective
+# bytes). Memory analysis comes from the full rolled module — that is the
+# buffer assignment that would really execute.
+
+import argparse
+import dataclasses
+import gc
+import json
+import math
+import re
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (get_config, get_reduced, get_shape, list_arch_ids,
+                           SHAPES, shape_applicable)
+from repro.configs.shapes import input_specs, cache_len, frontend_len
+from repro.distributed.sharding import (train_rules, serve_rules,
+                                        configure_moe, tree_shardings,
+                                        tree_pspecs, AxisRules)
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.kernels import ref as kernels_ref
+from repro.models import build_model
+from repro.models import attention as attn_mod
+from repro.models import blocks as blk
+from repro.models.param import param_shapes, param_axes
+from repro.train.optimizer import Optimizer, OptimizerConfig
+from repro.train.train_step import TrainConfig, make_train_step, make_grad_fn
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+# TPU v5e constants (assignment-specified)
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9,
+      "hbm_bytes": 16e9}
+
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Per-device collective wire bytes from the partitioned HLO."""
+    out = {k: 0.0 for k in _COLL_FACTOR}
+    counts = {k: 0 for k in _COLL_FACTOR}
+    for line in hlo.splitlines():
+        for op, factor in _COLL_FACTOR.items():
+            if f" {op}(" not in line and f" {op}-start(" not in line:
+                continue
+            lhs = line.split("=", 1)
+            if len(lhs) != 2:
+                continue
+            result = lhs[1].split(op, 1)[0]
+            nbytes = 0
+            for dt, dims in _SHAPE_RE.findall(result):
+                if dt not in _DTYPE_BYTES:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dt]
+            out[op] += nbytes * factor
+            counts[op] += 1
+            break
+    return {"per_device_bytes": out, "counts": counts,
+            "total_per_device": sum(out.values())}
+
+
+def pick_microbatches(cfg, shape, n_chips: int,
+                      target: Optional[float] = None) -> int:
+    """Bound per-device activation memory: saved residuals across the layer
+    scan plus the f32 logits + CE temporaries of one microbatch."""
+    if target is None:
+        target = 0.6e9 if cfg.param_count() >= 1e11 else 1.5e9
+    per_token = (cfg.n_layers * cfg.d_model * 2       # saved residuals (bf16)
+                 + cfg.vocab_size * 6)                # logits f32 + CE temps
+    act = shape.tokens * per_token / n_chips
+    mb = 1
+    while act / mb > target and mb < shape.global_batch:
+        mb *= 2
+    while shape.global_batch % mb:
+        mb //= 2
+    return max(mb, 1)
+
+
+def batch_shardings(rules: AxisRules, specs: dict):
+    out = {}
+    for k, v in specs.items():
+        logical = ["batch"] + [None] * (len(v.shape) - 1)
+        out[k] = rules.sharding(v.shape, logical)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch      # decode: 1 new token
+
+
+# -------------------------------------------------------- correction modules
+def _period_specs(model, cfg):
+    return {f"l{j}": blk.block_spec(cfg, model.prefix_len + j,
+                                    cross=model.is_encdec)
+            for j in range(model.period)}
+
+
+def lower_layer_module(model, cfg, rules, *, mode: str, batch: int, seq: int,
+                       cache_size: int = 0, enc_len: int = 0,
+                       remat: Optional[str] = None):
+    """One scan-period of layers, standalone: mode train (fwd+bwd), fwd, or
+    decode. Its cost_analysis gives the exact per-body FLOPs/bytes/collective
+    contribution that the rolled scan hides."""
+    spec = _period_specs(model, cfg)
+    pshapes = param_shapes(spec, cfg.dtype)
+    pshard = tree_shardings(rules, pshapes, param_axes(spec))
+    D = cfg.d_model
+
+    def chain(bp, x, enc_out=None):
+        aux = jnp.zeros((), jnp.float32)
+        for j in range(model.period):
+            i = model.prefix_len + j
+            enc_kv = (attn_mod.cross_kv(bp[f"l{j}"]["cross"], cfg, enc_out)
+                      if model.is_encdec else None)
+            x, a = blk.block_apply(bp[f"l{j}"], cfg, i, x, rules=rules,
+                                   enc_kv=enc_kv)
+            aux = aux + a
+        return x, aux
+
+    if mode in ("train", "fwd"):
+        xs = jax.ShapeDtypeStruct((batch, seq, D), jnp.bfloat16)
+        xsh = rules.sharding(xs.shape, ("batch", None, None))
+        args, shards = [pshapes, xs], [pshard, xsh]
+        if model.is_encdec:
+            es = jax.ShapeDtypeStruct((batch, enc_len, D), jnp.bfloat16)
+            args.append(es)
+            shards.append(rules.sharding(es.shape, ("batch", None, None)))
+
+        if mode == "fwd":
+            fn = lambda bp, x, *e: chain(bp, x, *e)[0]
+        else:
+            body = chain if remat is None else jax.checkpoint(chain)
+
+            def scalar(bp, x, *e):
+                y, aux = body(bp, x, *e)
+                return jnp.sum(y.astype(jnp.float32)) + aux
+            fn = jax.grad(scalar, argnums=(0, 1))
+        return jax.jit(fn, in_shardings=tuple(shards)).lower(*args)
+
+    # decode
+    cshapes = {f"l{j}": blk.block_cache_shapes(cfg, model.prefix_len + j,
+                                               batch, cache_size)
+               for j in range(model.period)}
+    caxes = {f"l{j}": blk.block_cache_axes(cfg, model.prefix_len + j)
+             for j in range(model.period)}
+    cshard = tree_shardings(rules, cshapes, caxes)
+    xs = jax.ShapeDtypeStruct((batch, 1, D), jnp.bfloat16)
+    xsh = rules.sharding(xs.shape, ("batch", None, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    args = [pshapes, cshapes, xs, pos]
+    shards = [pshard, cshard, xsh, None]
+    if model.is_encdec:
+        hd = cfg.resolved_head_dim
+        ekv = jax.ShapeDtypeStruct((batch, enc_len, cfg.n_kv_heads, hd),
+                                   jnp.bfloat16)
+        esh = rules.sharding(ekv.shape,
+                             ("cache_batch", "cache_seq", "cache_kv", None))
+        args += [ekv, ekv]
+        shards += [esh, esh]
+
+    def dec(bp, caches, x, pos, *ekv):
+        new = {}
+        for j in range(model.period):
+            i = model.prefix_len + j
+            x, c = blk.block_decode(bp[f"l{j}"], cfg, i, x, caches[f"l{j}"],
+                                    pos, rules=rules,
+                                    enc_kv=(ekv if ekv else None))
+            new[f"l{j}"] = c
+        return x, new
+
+    return jax.jit(dec, in_shardings=tuple(shards),
+                   donate_argnums=(1,)).lower(*args)
+
+
+def lower_enc_module(model, cfg, rules, *, batch: int, enc_len: int,
+                     with_grad: bool, remat: Optional[str] = None):
+    spec = {"l0": blk.block_spec(cfg, 0)}
+    pshapes = param_shapes(spec, cfg.dtype)
+    pshard = tree_shardings(rules, pshapes, param_axes(spec))
+    xs = jax.ShapeDtypeStruct((batch, enc_len, cfg.d_model), jnp.bfloat16)
+    xsh = rules.sharding(xs.shape, ("batch", None, None))
+
+    def chain(bp, x):
+        y, _ = blk.block_apply(bp["l0"], cfg, 0, x, causal=False)
+        return y
+
+    if not with_grad:
+        return jax.jit(chain, in_shardings=(pshard, xsh)).lower(pshapes, xs)
+    body = chain if remat is None else jax.checkpoint(chain)
+    scalar = lambda bp, x: jnp.sum(body(bp, x).astype(jnp.float32))
+    return jax.jit(jax.grad(scalar, argnums=(0, 1)),
+                   in_shardings=(pshard, xsh)).lower(pshapes, xs)
+
+
+def lower_mb_grad(model, cfg, rules, specs, mb: int, remat, pshard, pshapes,
+                  ppspecs=None):
+    """value_and_grad of the loss at microbatch size (rolled layer scan)."""
+    tc = TrainConfig(microbatches=1, remat=remat)
+    grad_fn = make_grad_fn(model, rules, tc, param_pspecs=ppspecs)
+    mb_specs = {k: jax.ShapeDtypeStruct((v.shape[0] // mb,) + v.shape[1:],
+                                        v.dtype)
+                for k, v in specs.items()}
+    bshard = batch_shardings(rules, mb_specs)
+    return jax.jit(grad_fn,
+                   in_shardings=(pshard, bshard)).lower(pshapes, mb_specs)
+
+
+def _cost_of(lowered) -> dict:
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    out = {"flops": float(ca.get("flops", 0.0)),
+           "bytes": float(ca.get("bytes accessed", 0.0)),
+           "coll": coll["total_per_device"],
+           "coll_by_op": coll["per_device_bytes"],
+           "coll_counts": coll["counts"]}
+    del compiled
+    gc.collect()
+    return out
+
+
+# ------------------------------------------------------------------- cells
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+               reduced: bool = False, overrides: Optional[dict] = None):
+    cfg = get_reduced(arch_id) if reduced else get_config(arch_id)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh_chips(mesh)
+    model = build_model(cfg)
+    over = overrides or {}
+    # Chunk-scan unrolling: OFF for the main module (its memory_analysis is
+    # the deliverable — rolled scans are what would really execute), ON for
+    # the correction modules so cost_analysis sees every attention/SSD chunk.
+    kernels_ref.SCAN_UNROLL = False
+
+    pshapes = model.param_shapes()
+    paxes = model.param_logical_axes()
+    specs = input_specs(cfg, shape)
+    nb = model.n_blocks
+    corrections = []   # (multiplier, lowered)
+
+    if over.get("moe_ep") and cfg.moe is not None:
+        # expert-parallel variant: tokens move (shard_map all_to_all),
+        # expert weights stay put. Storage may split the hidden dim so the
+        # (expert, slice) dim exactly covers the data axis (grok: 8e x 2).
+        R = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+        fs = R // cfg.moe.n_experts if cfg.moe.n_experts < R else 1
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, ep_fsplit=max(fs, 1)))
+        model = build_model(cfg)
+        pshapes = model.param_shapes()
+        paxes = model.param_logical_axes()
+        specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        rules = over.get("rules") or train_rules(
+            mesh, wide_fsdp=(cfg.param_count() >= 1e11 and multi_pod))
+        if cfg.moe is not None:
+            rules = configure_moe(rules, cfg.moe.n_experts)
+        if over.get("moe_ep") and cfg.moe is not None:
+            rules = rules.with_overrides(
+                moe_impl=("ep",), expert=("data",), expert_mlp=("model",))
+        mb = over.get("microbatches") or pick_microbatches(cfg, shape, n_chips)
+        remat = over.get("remat", "full")
+        opt = Optimizer(OptimizerConfig(
+            name=over.get("optimizer", "adamw"),
+            moment_dtype=("bfloat16" if cfg.param_count() >= 5e10
+                          else "float32")))
+        tc = TrainConfig(
+            microbatches=mb, remat=remat,
+            accum_dtype=("bfloat16" if cfg.param_count() >= 1e11
+                         else "float32"))
+        ppspecs = tree_pspecs(rules, pshapes, paxes)
+        step_fn = make_train_step(model, opt, rules, tc,
+                                  param_pspecs=ppspecs)
+        oshapes = jax.eval_shape(opt.init, pshapes)
+        oaxes = opt.state_logical_axes(paxes)
+        pshard = tree_shardings(rules, pshapes, paxes)
+        oshard = tree_shardings(rules, oshapes, oaxes)
+        bshard = batch_shardings(rules, specs)
+        jitted = jax.jit(step_fn, in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(pshapes, oshapes, specs)
+        kernels_ref.SCAN_UNROLL = over.get("unroll_chunks", True)
+
+        b_mb = shape.global_batch // mb
+        if mb > 1:
+            corrections.append((mb - 1, lower_mb_grad(
+                model, cfg, rules, specs, mb, remat, pshard, pshapes,
+                ppspecs=ppspecs)))
+        if nb > 1:
+            corrections.append((mb * (nb - 1), lower_layer_module(
+                model, cfg, rules, mode="train", batch=b_mb,
+                seq=shape.seq_len, remat=remat,
+                enc_len=frontend_len(cfg, shape))))
+        if model.is_encdec and cfg.enc_layers > 1:
+            corrections.append((mb * (cfg.enc_layers - 1), lower_enc_module(
+                model, cfg, rules, batch=b_mb,
+                enc_len=frontend_len(cfg, shape), with_grad=True,
+                remat=remat)))
+        extra = {"microbatches": mb, "optimizer_moments": opt.cfg.moment_dtype}
+
+    elif shape.kind == "prefill":
+        rules = over.get("rules") or serve_rules(mesh)
+        if cfg.moe is not None:
+            rules = configure_moe(rules, cfg.moe.n_experts)
+        pshard = tree_shardings(rules, pshapes, paxes)
+        bshard = batch_shardings(rules, specs)
+        frames = "frames" in specs
+
+        if frames:
+            def fn(params, tokens, fr):
+                return model.prefill(params, tokens, fr,
+                                     cache_size=shape.seq_len, rules=rules)
+            args = (pshapes, specs["tokens"], specs["frames"])
+            in_sh = (pshard, bshard["tokens"], bshard["frames"])
+        else:
+            def fn(params, tokens):
+                return model.prefill(params, tokens, None,
+                                     cache_size=shape.seq_len, rules=rules)
+            args = (pshapes, specs["tokens"])
+            in_sh = (pshard, bshard["tokens"])
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=None)
+        lowered = jitted.lower(*args)
+        kernels_ref.SCAN_UNROLL = over.get("unroll_chunks", True)
+        if nb > 1:
+            corrections.append((nb - 1, lower_layer_module(
+                model, cfg, rules, mode="fwd", batch=shape.global_batch,
+                seq=(shape.seq_len if cfg.family != "encdec"
+                     else shape.seq_len),
+                enc_len=frontend_len(cfg, shape))))
+        if model.is_encdec and cfg.enc_layers > 1:
+            corrections.append((cfg.enc_layers - 1, lower_enc_module(
+                model, cfg, rules, batch=shape.global_batch,
+                enc_len=frontend_len(cfg, shape), with_grad=False)))
+        extra = {}
+
+    else:  # decode
+        long = shape.name == "long_500k"
+        rules = over.get("rules") or serve_rules(mesh, long_context=long)
+        if cfg.moe is not None:
+            rules = configure_moe(rules, cfg.moe.n_experts)
+        clen = cache_len(cfg, shape)
+        enc_len = frontend_len(cfg, shape) if cfg.family == "encdec" else 0
+        cshapes = model.cache_shapes(shape.global_batch, clen,
+                                     enc_len=enc_len)
+        caxes = model.cache_logical_axes()
+        pshard = tree_shardings(rules, pshapes, paxes)
+        cshard = tree_shardings(rules, cshapes, caxes)
+        bshard = batch_shardings(rules, specs)
+
+        def fn(params, cache, token):
+            return model.decode_step(params, cache, token, rules=rules)
+
+        jitted = jax.jit(fn, in_shardings=(pshard, cshard, bshard["token"]),
+                         out_shardings=(None, cshard), donate_argnums=(1,))
+        lowered = jitted.lower(pshapes, cshapes, specs["token"])
+        kernels_ref.SCAN_UNROLL = over.get("unroll_chunks", True)
+        if nb > 1:
+            corrections.append((nb - 1, lower_layer_module(
+                model, cfg, rules, mode="decode", batch=shape.global_batch,
+                seq=1, cache_size=clen, enc_len=enc_len)))
+        extra = {"cache_len": clen}
+
+    # analytic persistent per-device bytes from the actual sharded shapes
+    # (exact; immune to XLA:CPU's bf16-via-f32 emulation, which inflates
+    # temp_bytes ~2x relative to a real TPU lowering)
+    def _per_device(shapes_tree, shard_tree):
+        total = 0
+        for s, sh in zip(jax.tree.leaves(shapes_tree),
+                         jax.tree.leaves(shard_tree)):
+            n = 1
+            for d in sh.shard_shape(s.shape):
+                n *= d
+            total += n * s.dtype.itemsize
+        return total
+
+    persistent = _per_device(pshapes, pshard)
+    if shape.kind == "train":
+        persistent += _per_device(oshapes, oshard)
+        # accumulated grads live across the microbatch scan
+        gmul = 1 if cfg.param_count() >= 1e11 else 2
+        persistent += gmul * _per_device(pshapes, pshard)
+    elif shape.kind == "decode":
+        persistent += _per_device(cshapes, cshard)
+
+    return {"arch": arch_id, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "lowered", "lowered": lowered, "cfg": cfg,
+            "shape_cfg": shape, "n_chips": n_chips, "extra": extra,
+            "persistent_bytes_per_device": persistent,
+            "corrections": corrections}
+
+
+def compile_and_analyze(cell: dict, verbose: bool = True) -> dict:
+    if cell["status"] == "skipped":
+        return cell
+    lowered = cell.pop("lowered")
+    corrections = cell.pop("corrections")
+    cfg, shape = cell.pop("cfg"), cell.pop("shape_cfg")
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+        "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+    }
+    mem["peak_bytes"] = (mem["argument_bytes"] + mem["output_bytes"]
+                         + mem["temp_bytes"] - mem["alias_bytes"])
+    # XLA:CPU emulates bf16 through f32 (converts inserted around every
+    # bf16 op), roughly doubling transients vs a TPU lowering. Adjusted
+    # peak = exact persistent bytes + temps discounted by that factor.
+    persistent = cell.pop("persistent_bytes_per_device", 0)
+    transient = max(mem["peak_bytes"] - persistent, 0)
+    mem["persistent_bytes"] = persistent
+    mem["tpu_adjusted_peak_bytes"] = int(persistent + transient * 0.5)
+    ca = compiled.cost_analysis() or {}
+    base = {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+    coll0 = collective_bytes(compiled.as_text())
+    del compiled
+    gc.collect()
+
+    flops = base["flops"]
+    hbytes = base["bytes"]
+    cbytes = coll0["total_per_device"]
+    coll_by_op = dict(coll0["per_device_bytes"])
+    coll_counts = dict(coll0["counts"])
+    for mult, low in corrections:
+        c = _cost_of(low)
+        flops += mult * c["flops"]
+        hbytes += mult * c["bytes"]
+        cbytes += mult * c["coll"]
+        for k, v in c["coll_by_op"].items():
+            coll_by_op[k] = coll_by_op.get(k, 0.0) + mult * v
+        for k, v in c["coll_counts"].items():
+            coll_counts[k] = coll_counts.get(k, 0) + v
+
+    n = cell["n_chips"]
+    mf = model_flops(cfg, shape)
+    terms = {
+        "compute_s": flops / HW["peak_flops"],
+        "memory_s": hbytes / HW["hbm_bw"],
+        "collective_s": cbytes / HW["link_bw"],
+    }
+    dominant = max(terms, key=terms.get)
+    result = {
+        **cell,
+        "status": "ok",
+        "compile_seconds": round(compile_s, 1),
+        "memory": mem,
+        "fits_hbm": mem["tpu_adjusted_peak_bytes"] <= HW["hbm_bytes"],
+        "fits_hbm_raw_cpu_lowering": mem["peak_bytes"] <= HW["hbm_bytes"],
+        "flops_per_device": flops,
+        "hlo_bytes_per_device": hbytes,
+        "collective_bytes_per_device": cbytes,
+        "collectives_by_op": coll_by_op,
+        "collective_counts": coll_counts,
+        "roofline": {**terms, "dominant": dominant},
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (flops * n) if flops else 0.0),
+    }
+    if verbose:
+        print(f"[{cell['mesh']}] {cell['arch']} x {cell['shape']}: "
+              f"compile {compile_s:.0f}s, peak/dev "
+              f"{mem['peak_bytes']/1e9:.2f} GB "
+              f"(tpu-adj {mem['tpu_adjusted_peak_bytes']/1e9:.2f}, "
+              f"persist {mem['persistent_bytes']/1e9:.2f}), "
+              f"compute {terms['compute_s']*1e3:.2f} ms, "
+              f"memory {terms['memory_s']*1e3:.2f} ms, "
+              f"collective {terms['collective_s']*1e3:.2f} ms "
+              f"-> {dominant}; useful-flops "
+              f"{result['useful_flops_ratio']:.2f}", flush=True)
+    del lowered
+    gc.collect()
+    return result
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             reduced: bool = False, save: bool = True,
+             overrides: Optional[dict] = None, tag: str = "") -> dict:
+    cell = lower_cell(arch_id, shape_name, multi_pod=multi_pod,
+                      reduced=reduced, overrides=overrides)
+    result = compile_and_analyze(cell)
+    if result["status"] == "skipped":
+        print(f"[{result['mesh']}] {arch_id} x {shape_name}: SKIP "
+              f"({result['reason']})", flush=True)
+    if save:
+        os.makedirs(ARTIFACTS, exist_ok=True)
+        mesh_tag = result["mesh"].replace("x", "_")
+        suffix = f"-{tag}" if tag else ""
+        fn = os.path.join(
+            ARTIFACTS, f"{arch_id}--{shape_name}--{mesh_tag}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="use reduced configs (CI smoke)")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_arch_ids()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, multi_pod=mp, reduced=args.reduced,
+                             save=not args.no_save)
+                except Exception as e:  # a failed cell is a bug to fix
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"FAILED {arch} x {shape} multi_pod={mp}: {e}",
+                          flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: "
+                         + "; ".join(f"{a}x{s}" for a, s, _, _ in failures))
+    print("dry-run complete: all cells lowered + compiled.")
+
+
+if __name__ == "__main__":
+    main()

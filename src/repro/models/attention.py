@@ -1,0 +1,120 @@
+"""GQA attention layer (RoPE, qk-norm, sliding window, cross-attention)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.common import apply_rope, rms_head_norm
+from repro.models.param import Spec
+
+
+def attn_spec(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, KVH = cfg.n_heads, cfg.n_kv_heads
+    spec = {
+        "wq": Spec((D, H * hd), ("embed", "q_dim"), "scaled"),
+        "wk": Spec((D, KVH * hd), ("embed", "kv_dim"), "scaled"),
+        "wv": Spec((D, KVH * hd), ("embed", "kv_dim"), "scaled"),
+        "wo": Spec((H * hd, D), ("q_dim", "embed"), "scaled"),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = Spec((hd,), (None,), "ones", "float32")
+        spec["k_norm"] = Spec((hd,), (None,), "ones", "float32")
+    return spec
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array,
+                 kv_x: Optional[jax.Array] = None):
+    """Returns q (B,S,H,hd), k/v (B,Skv,KVH,hd)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    kv_src = x if kv_x is None else kv_x
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (kv_src @ p["wk"]).reshape(B, kv_src.shape[1], cfg.n_kv_heads, hd)
+    v = (kv_src @ p["wv"]).reshape(B, kv_src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def attn_apply(p: dict, cfg: ModelConfig, x: jax.Array, *,
+               positions: Optional[jax.Array] = None, causal: bool = True,
+               use_rope: bool = True, return_kv: bool = False):
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _project_qkv(p, cfg, x)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    o = ops.flash_attention(q, k, v, causal=causal,
+                            window=cfg.sliding_window)
+    out = o.reshape(B, S, -1) @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attn_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+                     enc_kv: tuple[jax.Array, jax.Array]):
+    """Encoder-decoder cross attention; enc_kv precomputed (k, v)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+    k, v = enc_kv
+    o = ops.flash_attention(q, k, v, causal=False, window=0)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_kv(p: dict, cfg: ModelConfig, enc_out: jax.Array):
+    """Precompute cross-attention k/v from encoder output."""
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        k = rms_head_norm(p["k_norm"], k)
+    return k, v
+
+
+def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                pos: jax.Array, *, use_rope: bool = True,
+                cross: bool = False):
+    """One-token decode. x: (B, 1, D). cache: {"k","v"} (B, Sc, KVH, hd).
+
+    Self-attention writes the new k/v at `pos` (rolling for sliding window);
+    cross-attention reads a static cache. Returns (out, new_cache).
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    if cross:
+        q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        if cfg.qk_norm:
+            q = rms_head_norm(p["q_norm"], q)
+        o = ops.decode_attention(q, cache["k"], cache["v"],
+                                 cache["k"].shape[1])
+        return (o.reshape(B, 1, -1) @ p["wo"]), cache
+
+    q, k, v = _project_qkv(p, cfg, x)
+    if use_rope:
+        q = apply_rope(q, pos[None] if pos.ndim == 0 else pos,
+                       cfg.rope_theta)
+        k = apply_rope(k, pos[None] if pos.ndim == 0 else pos,
+                       cfg.rope_theta)
+    Sc = cache["k"].shape[1]
+    slot = jnp.mod(pos, Sc) if cfg.sliding_window else jnp.minimum(pos, Sc - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    cache_len = jnp.minimum(pos + 1, Sc)
+    o = ops.decode_attention(q, k_cache, v_cache, cache_len)
+    out = o.reshape(B, 1, -1) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,187 @@
+"""Residual block assembly: norm -> mixer (attn | ssd) -> norm -> ffn
+(dense | moe | none), signature chosen per layer index. Hybrid archs scan over
+a repeating period of heterogeneous blocks."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import AxisRules
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.common import norm_spec, apply_norm
+from repro.models.mlp import mlp_spec, mlp_apply
+from repro.models.moe import moe_spec, moe_apply
+from repro.models.param import Spec
+
+
+def layer_signature(cfg: ModelConfig, i: int) -> tuple[str, str]:
+    """(mixer, ffn) for absolute layer index i."""
+    mixer = "attn" if cfg.is_attn_layer(i) else "ssm"
+    if cfg.is_moe_layer(i):
+        ffn = "moe"
+    elif mixer == "ssm" and cfg.family == "ssm":
+        ffn = "none"                       # pure Mamba blocks: mixer only
+    elif cfg.d_ff or (cfg.moe and cfg.moe.first_k_dense and i < cfg.moe.first_k_dense):
+        ffn = "dense"
+    else:
+        ffn = "none"
+    return mixer, ffn
+
+
+def layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(prefix_len, period, n_blocks) for scan-over-layers."""
+    prefix = cfg.moe.first_k_dense if cfg.moe else 0
+    p = 1
+    if cfg.family == "hybrid" and cfg.attn_every:
+        p = cfg.attn_every
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.every)
+    n = cfg.n_layers - prefix
+    assert n % p == 0, (cfg.name, n, p)
+    return prefix, p, n // p
+
+
+def block_spec(cfg: ModelConfig, i: int, *, cross: bool = False) -> dict:
+    mixer, ffn = layer_signature(cfg, i)
+    spec: dict = {"norm1": norm_spec(cfg, cfg.d_model)}
+    if mixer == "attn":
+        spec["attn"] = attn.attn_spec(cfg)
+    else:
+        spec["ssm"] = ssm_mod.ssm_spec(cfg)
+    if cross:
+        spec["norm_x"] = norm_spec(cfg, cfg.d_model)
+        spec["cross"] = attn.attn_spec(cfg)
+    if ffn != "none":
+        spec["norm2"] = norm_spec(cfg, cfg.d_model)
+    if ffn == "moe":
+        spec["moe"] = moe_spec(cfg)
+    elif ffn == "dense":
+        d_ff = cfg.d_ff
+        if cfg.moe and cfg.moe.first_k_dense and i < cfg.moe.first_k_dense:
+            d_ff = cfg.moe.dense_d_ff or cfg.d_ff
+        spec["mlp"] = mlp_spec(cfg, d_ff)
+    return spec
+
+
+_UNBOUND = AxisRules()
+
+
+def block_apply(p: dict, cfg: ModelConfig, i: int, x: jax.Array, *,
+                positions: Optional[jax.Array] = None, causal: bool = True,
+                use_rope: bool = True, rules: AxisRules = _UNBOUND,
+                enc_kv: Optional[tuple] = None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence block. Returns (x, aux_loss)."""
+    mixer, ffn = layer_signature(cfg, i)
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x)
+    if mixer == "attn":
+        h = attn.attn_apply(p["attn"], cfg, h, positions=positions,
+                            causal=causal, use_rope=use_rope)
+    else:
+        h = ssm_mod.ssm_apply(p["ssm"], cfg, h, rules=rules)
+    x = x + h
+    if enc_kv is not None:
+        h = apply_norm(p["norm_x"], x)
+        x = x + attn.cross_attn_apply(p["cross"], cfg, h, enc_kv)
+    if ffn != "none":
+        h = apply_norm(p["norm2"], x)
+        if ffn == "moe":
+            h, aux = moe_apply(p["moe"], cfg, h, rules=rules)
+        else:
+            h = mlp_apply(p["mlp"], cfg, h)
+        x = x + h
+    return x, aux
+
+
+def block_prefill(p: dict, cfg: ModelConfig, i: int, x: jax.Array,
+                  cache_size: int, *, positions=None,
+                  rules: AxisRules = _UNBOUND,
+                  enc_kv: Optional[tuple] = None):
+    """Full-sequence pass that also returns this layer's decode cache."""
+    mixer, ffn = layer_signature(cfg, i)
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x)
+    if mixer == "attn":
+        S = x.shape[1]
+        h, (k, v) = attn.attn_apply(p["attn"], cfg, h, positions=positions,
+                                    causal=True, return_kv=True)
+        if cache_size <= S:
+            k, v = k[:, S - cache_size:], v[:, S - cache_size:]
+            if cfg.sliding_window:
+                # rolling buffer: absolute position p lives at slot p % size
+                shift = (S - cache_size) % cache_size
+                k = jnp.roll(k, shift, axis=1)
+                v = jnp.roll(v, shift, axis=1)
+        else:
+            pad = cache_size - S
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {"k": k, "v": v}
+    else:
+        h, cache = ssm_mod.ssm_apply(p["ssm"], cfg, h, return_state=True,
+                                     rules=rules)
+    x = x + h
+    if enc_kv is not None:
+        hh = apply_norm(p["norm_x"], x)
+        x = x + attn.cross_attn_apply(p["cross"], cfg, hh, enc_kv)
+    if ffn != "none":
+        hh = apply_norm(p["norm2"], x)
+        if ffn == "moe":
+            hh, aux = moe_apply(p["moe"], cfg, hh, rules=rules)
+        else:
+            hh = mlp_apply(p["mlp"], cfg, hh)
+        x = x + hh
+    return x, cache, aux
+
+
+def block_decode(p: dict, cfg: ModelConfig, i: int, x: jax.Array, cache,
+                 pos: jax.Array, *, rules: AxisRules = _UNBOUND,
+                 enc_kv: Optional[tuple] = None):
+    """One-token decode. x: (B, 1, D). Returns (x, new_cache)."""
+    mixer, ffn = layer_signature(cfg, i)
+    h = apply_norm(p["norm1"], x)
+    if mixer == "attn":
+        h, cache = attn.attn_decode(p["attn"], cfg, h, cache, pos)
+    else:
+        h, cache = ssm_mod.ssm_decode(p["ssm"], cfg, h, cache)
+    x = x + h
+    if enc_kv is not None:
+        hh = apply_norm(p["norm_x"], x)
+        out, _ = attn.attn_decode(p["cross"], cfg, hh,
+                                  {"k": enc_kv[0], "v": enc_kv[1]}, pos,
+                                  cross=True)
+        x = x + out
+    if ffn != "none":
+        hh = apply_norm(p["norm2"], x)
+        if ffn == "moe":
+            hh, _ = moe_apply(p["moe"], cfg, hh, rules=rules)
+        else:
+            hh = mlp_apply(p["mlp"], cfg, hh)
+        x = x + hh
+    return x, cache
+
+
+def block_cache_shapes(cfg: ModelConfig, i: int, batch: int, cache_size: int):
+    mixer, _ = layer_signature(cfg, i)
+    if mixer == "attn":
+        hd = cfg.resolved_head_dim
+        kv = jax.ShapeDtypeStruct((batch, cache_size, cfg.n_kv_heads, hd),
+                                  jnp.bfloat16)
+        return {"k": kv, "v": kv}
+    return ssm_mod.ssm_state_shapes(cfg, batch)
+
+
+def block_cache_axes(cfg: ModelConfig, i: int):
+    mixer, _ = layer_signature(cfg, i)
+    if mixer == "attn":
+        # both kv-head and head-dim carry the "cache_kv" name: the rule
+        # engine assigns the model axis to whichever dim divides first
+        # (kv_heads < axis size falls through to head_dim)
+        ax = ("cache_batch", "cache_seq", "cache_kv", "cache_kv")
+        return {"k": ax, "v": ax}
+    return ssm_mod.ssm_state_axes(cfg)

@@ -1,0 +1,338 @@
+"""The language model: embedding, scanned block stack, head, loss, prefill,
+decode. One class serves all ten assigned architectures (dense / MoE / SSM /
+hybrid / encoder-decoder / multimodal-stub)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import AxisRules
+from repro.models import attention as attn
+from repro.models import blocks as blk
+from repro.models.common import norm_spec, apply_norm
+from repro.models.param import (Spec, init_params, param_shapes, param_axes,
+                                stack_specs)
+
+UNBOUND = AxisRules()
+
+
+def _maybe_remat(fn, policy: Optional[str]):
+    if policy is None:
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if policy == "dots_no_batch":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(f"unknown remat policy {policy}")
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.prefix_len, self.period, self.n_blocks = blk.layout(cfg)
+        self.is_encdec = cfg.family == "encdec"
+        # scan-over-layers unroll factor. 1 = rolled (fast compile; XLA's
+        # cost_analysis counts the body once). The dry-run sets this to
+        # n_blocks so HLO FLOPs/bytes/collectives reflect the whole stack.
+        self.unroll = 1
+
+    def _unroll(self) -> int:
+        return max(1, min(self.unroll, self.n_blocks))
+
+    # ------------------------------------------------------------- params
+    @property
+    def padded_vocab(self) -> int:
+        # round up so the vocab dim divides the model axis (TP sharding);
+        # pad logits are masked to -inf in _logits
+        return -(-self.cfg.vocab_size // 128) * 128
+
+    def param_spec(self) -> dict:
+        cfg = self.cfg
+        D, V = cfg.d_model, self.padded_vocab
+        spec: dict = {
+            "embed": Spec((V, D), ("vocab", "lm_embed"), "normal"),
+            "final_norm": norm_spec(cfg, D),
+        }
+        if not cfg.tie_embeddings:
+            spec["lm_head"] = Spec((D, V), ("lm_embed", "vocab"), "scaled")
+        if cfg.frontend != "none":
+            spec["frontend_proj"] = Spec((cfg.frontend_dim, D),
+                                         ("frontend", "embed"), "scaled")
+        if self.prefix_len:
+            spec["prefix"] = [blk.block_spec(cfg, i)
+                              for i in range(self.prefix_len)]
+        period_spec = {
+            f"l{j}": blk.block_spec(cfg, self.prefix_len + j,
+                                    cross=self.is_encdec)
+            for j in range(self.period)
+        }
+        spec["blocks"] = stack_specs(period_spec, self.n_blocks, "layers")
+        if self.is_encdec:
+            enc_spec = {"l0": blk.block_spec(cfg, 0)}
+            spec["enc_blocks"] = stack_specs(enc_spec, cfg.enc_layers, "layers")
+            spec["enc_norm"] = norm_spec(cfg, D)
+        return spec
+
+    def init(self, key: jax.Array):
+        return init_params(key, self.param_spec(), self.cfg.dtype)
+
+    def param_shapes(self):
+        return param_shapes(self.param_spec(), self.cfg.dtype)
+
+    def param_logical_axes(self):
+        return param_axes(self.param_spec())
+
+    # -------------------------------------------------------------- embed
+    def _embed_inputs(self, params, tokens, frames, rules: AxisRules):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.frontend != "none" and frames is not None and not self.is_encdec:
+            fx = frames.astype(x.dtype) @ params["frontend_proj"]
+            x = jnp.concatenate([fx, x], axis=1)
+        x = rules.constrain(x, "batch", "seq", "act_embed")
+        return x
+
+    def _encode(self, params, frames, rules: AxisRules):
+        """Encoder stack over projected frontend frames (encdec only)."""
+        cfg = self.cfg
+        x = frames.astype(jnp.bfloat16) @ params["frontend_proj"]
+        x = rules.constrain(x, "batch", "seq", "act_embed")
+
+        def body(carry, layer_params):
+            h, _ = blk.block_apply(layer_params["l0"], cfg, 0, carry,
+                                   causal=False)
+            h = rules.constrain(h, "batch", "seq", "act_embed")
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                            unroll=min(self._unroll(), self.cfg.enc_layers) or 1)
+        return apply_norm(params["enc_norm"], x)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x @ head
+        if self.padded_vocab != cfg.vocab_size:
+            pad_id = jax.lax.broadcasted_iota(
+                jnp.int32, logits.shape, logits.ndim - 1)
+            logits = jnp.where(pad_id < cfg.vocab_size, logits, -1e30)
+        return logits
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params, tokens, frames=None, *,
+                rules: AxisRules = UNBOUND,
+                remat: Optional[str] = None,
+                return_hidden: bool = False):
+        """Full-sequence logits (training / prefill-without-cache).
+
+        Returns (logits, aux_loss) or (logits, aux_loss, hidden)."""
+        cfg = self.cfg
+        enc_out = None
+        if self.is_encdec:
+            enc_out = self._encode(params, frames, rules)
+        x = self._embed_inputs(params, tokens, frames, rules)
+        aux = jnp.zeros((), jnp.float32)
+
+        for i, p in enumerate(params.get("prefix", [])):
+            x, a = blk.block_apply(p, cfg, i, x, rules=rules)
+            aux = aux + a
+
+        def body(carry, layer_params):
+            h, acc = carry
+            a_total = jnp.zeros((), jnp.float32)
+            for j in range(self.period):
+                i = self.prefix_len + j
+                enc_kv = None
+                if self.is_encdec:
+                    enc_kv = attn.cross_kv(layer_params[f"l{j}"]["cross"],
+                                           cfg, enc_out)
+                h, a = blk.block_apply(layer_params[f"l{j}"], cfg, i, h,
+                                       rules=rules, enc_kv=enc_kv)
+                a_total = a_total + a
+            h = rules.constrain(h, "batch", "seq", "act_embed")
+            return (h, acc + a_total), None
+
+        body = _maybe_remat(body, remat)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"],
+                                   unroll=self._unroll())
+        x = apply_norm(params["final_norm"], x)
+        logits = self._logits(params, x)
+        logits = rules.constrain(logits, "batch", "seq", "vocab")
+        if return_hidden:
+            return logits, aux, x
+        return logits, aux
+
+    def loss(self, params, batch: dict, *, rules: AxisRules = UNBOUND,
+             remat: Optional[str] = None):
+        """Masked softmax cross-entropy (+ MoE aux)."""
+        logits, aux = self.forward(params, batch["tokens"],
+                                   batch.get("frames"), rules=rules,
+                                   remat=remat)
+        logits = logits.astype(jnp.float32)
+        targets, mask = batch["targets"], batch["mask"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # target logit via masked reduction (NOT take_along_axis: gathering
+        # along the vocab-sharded dim makes GSPMD replicate the logits)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        tgt = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0),
+                      axis=-1)
+        nll = (logz - tgt) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum(nll) / denom + aux
+
+    # ------------------------------------------------------------ serving
+    def cache_shapes(self, batch: int, cache_size: int, enc_len: int = 0):
+        cfg = self.cfg
+        if cfg.sliding_window:
+            cache_size = min(cache_size, cfg.sliding_window)
+        shapes: dict = {"pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        if self.prefix_len:
+            shapes["prefix"] = [
+                blk.block_cache_shapes(cfg, i, batch, cache_size)
+                for i in range(self.prefix_len)]
+        period = {
+            f"l{j}": blk.block_cache_shapes(cfg, self.prefix_len + j, batch,
+                                            cache_size)
+            for j in range(self.period)
+        }
+        shapes["blocks"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.n_blocks,) + s.shape, s.dtype),
+            period)
+        if self.is_encdec:
+            hd = cfg.resolved_head_dim
+            kv = jax.ShapeDtypeStruct(
+                (self.n_blocks, batch, enc_len, cfg.n_kv_heads, hd),
+                jnp.bfloat16)
+            shapes["enc_kv"] = {"k": kv, "v": kv}
+        return shapes
+
+    def cache_logical_axes(self):
+        cfg = self.cfg
+        axes: dict = {"pos": ()}
+        if self.prefix_len:
+            axes["prefix"] = [blk.block_cache_axes(cfg, i)
+                              for i in range(self.prefix_len)]
+        period = {f"l{j}": blk.block_cache_axes(cfg, self.prefix_len + j)
+                  for j in range(self.period)}
+
+        def add_layer_dim(t):
+            return jax.tree.map(lambda ax: (None,) + ax, t,
+                                is_leaf=lambda x: isinstance(x, tuple))
+
+        axes["blocks"] = add_layer_dim(period)
+        if self.is_encdec:
+            ax = (None, "cache_batch", "cache_seq", "cache_kv", "cache_kv")
+            axes["enc_kv"] = {"k": ax, "v": ax}
+        return axes
+
+    def prefill(self, params, tokens, frames=None, *, cache_size: int,
+                rules: AxisRules = UNBOUND):
+        """Run the full prompt, return (last_logits, cache)."""
+        cfg = self.cfg
+        if cfg.sliding_window:
+            # SWA caches are rolling buffers of exactly `window` positions
+            cache_size = min(cache_size, cfg.sliding_window)
+        enc_out = None
+        if self.is_encdec:
+            enc_out = self._encode(params, frames, rules)
+        x = self._embed_inputs(params, tokens, frames, rules)
+        S = x.shape[1]
+
+        cache: dict = {"pos": jnp.asarray(S, jnp.int32)}
+        if self.prefix_len:
+            cache["prefix"] = []
+            for i, p in enumerate(params.get("prefix", [])):
+                x, c, _ = blk.block_prefill(p, cfg, i, x,
+                                            cache_size, rules=rules)
+                cache["prefix"].append(c)
+
+        def body(h, layer_params):
+            caches = {}
+            for j in range(self.period):
+                i = self.prefix_len + j
+                enc_kv = None
+                if self.is_encdec:
+                    enc_kv = attn.cross_kv(layer_params[f"l{j}"]["cross"],
+                                           cfg, enc_out)
+                    caches[f"enc_l{j}"] = enc_kv
+                h, c, _ = blk.block_prefill(layer_params[f"l{j}"], cfg, i, h,
+                                            cache_size, rules=rules,
+                                            enc_kv=enc_kv)
+                caches[f"l{j}"] = c
+            h = rules.constrain(h, "batch", "seq", "act_embed")
+            return h, caches
+
+        x, layer_caches = jax.lax.scan(body, x, params["blocks"],
+                                       unroll=self._unroll())
+        if self.is_encdec:
+            # all periods share the same enc_kv stacking layout
+            ekv = layer_caches.pop("enc_l0")
+            cache["enc_kv"] = {"k": ekv[0], "v": ekv[1]}
+        cache["blocks"] = {k: v for k, v in layer_caches.items()
+                           if not k.startswith("enc_")}
+        x = apply_norm(params["final_norm"], x)
+        logits = self._logits(params, x[:, -1:])
+        return logits, cache
+
+    def decode_step(self, params, cache, token, *,
+                    rules: AxisRules = UNBOUND):
+        """One decode step. token: (B, 1) int32. Returns (logits, cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], token, axis=0)
+        x = rules.constrain(x, "batch", "seq", "act_embed")
+
+        new_cache: dict = {"pos": pos + 1}
+        if self.prefix_len:
+            new_cache["prefix"] = []
+            for i, p in enumerate(params.get("prefix", [])):
+                x, c = blk.block_decode(p, cfg, i, x, cache["prefix"][i],
+                                        pos, rules=rules)
+                new_cache["prefix"].append(c)
+
+        def body(h, xs):
+            layer_params, layer_cache, enc_kv = xs
+            new_layer_cache = {}
+            for j in range(self.period):
+                i = self.prefix_len + j
+                ekv = (enc_kv["k"], enc_kv["v"]) if enc_kv is not None else None
+                h, c = blk.block_decode(layer_params[f"l{j}"], cfg, i, h,
+                                        layer_cache[f"l{j}"], pos,
+                                        rules=rules, enc_kv=ekv)
+                new_layer_cache[f"l{j}"] = c
+            h = rules.constrain(h, "batch", "seq", "act_embed")
+            return h, new_layer_cache
+
+        enc_kv_stack = cache.get("enc_kv")
+        xs = (params["blocks"], cache["blocks"], enc_kv_stack)
+        if enc_kv_stack is None:
+            xs = (params["blocks"], cache["blocks"],
+                  jax.tree.map(lambda _: None, params["blocks"]))
+            x, blocks_cache = jax.lax.scan(
+                lambda h, z: body(h, (z[0], z[1], None)),
+                x, (params["blocks"], cache["blocks"]),
+                unroll=self._unroll())
+        else:
+            x, blocks_cache = jax.lax.scan(body, x, xs,
+                                           unroll=self._unroll())
+            new_cache["enc_kv"] = enc_kv_stack
+        new_cache["blocks"] = blocks_cache
+
+        x = apply_norm(params["final_norm"], x)
+        logits = self._logits(params, x)
+        logits = rules.constrain(logits, "batch", "seq", "vocab")
+        return logits, new_cache
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,27 @@
+"""Dense MLP block (gated SwiGLU-style or plain, configurable activation)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation
+from repro.models.param import Spec
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: int) -> dict:
+    D = cfg.d_model
+    spec = {
+        "w_in": Spec((D, d_ff), ("embed", "mlp"), "scaled"),
+        "w_out": Spec((d_ff, D), ("mlp", "embed"), "scaled"),
+    }
+    if cfg.gated_mlp:
+        spec["w_gate"] = Spec((D, d_ff), ("embed", "mlp"), "scaled")
+    return spec
+
+
+def mlp_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    act = activation(cfg.act)
+    h = act(x @ p["w_in"])
+    if cfg.gated_mlp:
+        h = h * (x @ p["w_gate"])
+    return h @ p["w_out"]

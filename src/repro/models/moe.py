@@ -1,0 +1,161 @@
+"""Mixture-of-Experts with GShard-style grouped one-hot dispatch.
+
+Tokens are split into small groups (default 256); per group a capacity-bounded
+one-hot dispatch tensor routes tokens to experts via einsums — no scatters, so
+GSPMD partitions everything cleanly at 512 devices. The (token, expert,
+capacity) dispatch/combine tensors are built by contracting over the k routing
+choices, so nothing 5-D is ever materialized. Supports top-k routing, shared
+experts (DeepSeekMoE) and the Switch load-balance auxiliary loss.
+
+A shard_map all-to-all expert-parallel variant lives in
+``repro.distributed.ep_moe`` (used by the perf hillclimb).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import AxisRules
+from repro.models.common import activation
+from repro.models.mlp import mlp_spec, mlp_apply
+from repro.models.param import Spec
+
+GROUP_SIZE = 256
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    D = cfg.d_model
+    F = m.expert_d_ff or cfg.d_ff
+    E = m.n_experts
+    fs = m.ep_fsplit
+    # EP layout splits each expert's hidden dim across fs storage rows so
+    # the (expert, slice) dim divides the data axis (grok: 8e -> 16 rows)
+    spec = {
+        "router": Spec((D, E), ("embed", None), "small", "float32"),
+        "w_in": Spec((E * fs, D, F // fs),
+                     ("expert", "embed", "expert_mlp"), "scaled"),
+        "w_out": Spec((E * fs, F // fs, D),
+                      ("expert", "expert_mlp", "embed"), "scaled"),
+    }
+    if cfg.gated_mlp:
+        spec["w_gate"] = Spec((E * fs, D, F // fs),
+                              ("expert", "embed", "expert_mlp"), "scaled")
+    if m.n_shared:
+        spec["shared"] = mlp_spec(cfg, m.n_shared * F)
+    return spec
+
+
+def capacity(group_size: int, top_k: int, n_experts: int, factor: float) -> int:
+    return max(int(math.ceil(factor * top_k * group_size / n_experts)), top_k)
+
+
+def route(logits: jax.Array, E: int, k: int, C: int):
+    """Top-k capacity routing within a group.
+
+    logits: (..., g, E) float32. Returns (gate_vals (...,g,k), dispatch
+    one-hots de (...,g,k,E) and dc (...,g,k,C) with capacity-overflow dropped).
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (...,g,k)
+    if k > 1:
+        gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    oh = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)          # (...,g,k,E)
+    g = oh.shape[-3]
+    lead = oh.shape[:-3]
+    # capacity slots assigned choice-major (all 1st choices first)
+    ohf = jnp.swapaxes(oh, -2, -3).reshape(lead + (k * g, E))
+    pos = jnp.cumsum(ohf, axis=-2) - ohf                       # 0-based slot
+    keep = (pos < C) & (ohf > 0)
+    pos = jnp.swapaxes(pos.reshape(lead + (k, g, E)), -2, -3)
+    keep = jnp.swapaxes(keep.reshape(lead + (k, g, E)), -2, -3)
+
+    slot = jnp.sum(pos * oh, axis=-1)                          # (...,g,k)
+    kept = jnp.any(keep & (oh > 0), axis=-1)                   # (...,g,k)
+    dc = jax.nn.one_hot(slot, C) * kept[..., None]             # (...,g,k,C)
+    return probs, gate_vals, oh, dc
+
+
+_UNBOUND = AxisRules()
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array, *,
+              group_size: int = GROUP_SIZE,
+              rules: AxisRules = _UNBOUND):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Sharding intent (GShard): dispatch/combine tensors ride the token (data)
+    sharding; expert_in/out are expert-sharded over data (the dp<->ep
+    transition lowers to all-to-all) with the expert FFN hidden dim on the
+    tensor-parallel axis."""
+    m = cfg.moe
+    E, k = m.n_experts, m.top_k
+    B, S, D = x.shape
+    T = B * S
+    g = min(group_size, T)
+    while T % g:
+        g -= 1
+    G = T // g
+    C = capacity(g, k, E, m.capacity_factor)
+
+    if rules.mapping.get("moe_impl") == ("ep",) and rules.mesh is not None:
+        from repro.distributed.ep_moe import moe_apply_ep
+        return moe_apply_ep(p, cfg, x, rules)
+
+    fs = m.ep_fsplit
+    if fs > 1:   # reconstruct (E, D, F) from the EP storage layout
+        F = p["w_in"].shape[2] * fs
+        D_ = p["w_in"].shape[1]
+        def unsplit_in(w):
+            return (w.reshape(E, fs, D_, F // fs)
+                    .transpose(0, 2, 1, 3).reshape(E, D_, F))
+        p = dict(p, w_in=unsplit_in(p["w_in"]),
+                 w_out=p["w_out"].reshape(E, F, D_),
+                 **({"w_gate": unsplit_in(p["w_gate"])}
+                    if "w_gate" in p else {}))
+
+    xt = x.reshape(G, g, D)
+    xt = rules.constrain(xt, "groups", None, "act_embed")
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (G,g,E)
+    logits = rules.constrain(logits, "groups", None, None)
+    probs, gate_vals, de, dc = route(logits, E, k, C)
+    de = rules.constrain(de.astype(x.dtype), "groups", None, None, None)
+    dc = rules.constrain(dc.astype(x.dtype), "groups", None, None, None)
+
+    # 4-D dispatch/combine built by contracting over k (no 5-D tensor)
+    disp = jnp.einsum("gtke,gtkc->gtec", de, dc)               # (G,g,E,C)
+    comb = jnp.einsum("gtke,gtkc->gtec", de * gate_vals.astype(x.dtype)[..., None], dc)
+    disp = rules.constrain(disp, "groups", None, None, None)
+    comb = rules.constrain(comb, "groups", None, None, None)
+
+    # Activations keep the group(data) sharding; the expert dim rides the
+    # same axis as the expert weights (configure_moe) so the expert FFN is
+    # fully local. The shard_map all-to-all EP variant (tokens move instead)
+    # is the §Perf alternative.
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp, xt)         # (G,E,C,D)
+    expert_in = rules.constrain(expert_in, "groups", "expert", None,
+                                "act_embed")
+    act = activation(cfg.act)
+    h = act(jnp.einsum("gecd,edf->gecf", expert_in, p["w_in"]))
+    h = rules.constrain(h, "groups", "expert", None, None)
+    if cfg.gated_mlp:
+        h = h * jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_out"])   # (G,E,C,D)
+    expert_out = rules.constrain(expert_out, "groups", "expert", None,
+                                 "act_embed")
+    y = jnp.einsum("gtec,gecd->gtd", comb, expert_out)
+    y = y.reshape(B, S, D)
+    y = rules.constrain(y, "batch", None, "act_embed")
+
+    if m.n_shared:
+        y = y + mlp_apply(p["shared"], cfg, x)
+
+    # Switch load-balance aux: E * sum_e frac_tokens_e * frac_prob_e
+    frac_tokens = jnp.mean(jnp.sum(disp, axis=-1), axis=(0, 1))    # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens.astype(jnp.float32) * frac_probs)
+    return y, (aux * m.router_aux_weight).astype(jnp.float32)

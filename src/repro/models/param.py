@@ -1,0 +1,81 @@
+"""Parameter-spec machinery.
+
+A model's parameters are declared as a pytree of ``Spec`` leaves (shape +
+logical axis names + init kind). From one spec tree we derive: real params
+(smoke tests / examples), ShapeDtypeStructs (dry-run lowering), and the
+logical-axes tree consumed by the sharding rule engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    axes: tuple                 # logical axis name (or None) per dim
+    init: str = "normal"        # normal | zeros | ones | scaled | small
+    dtype: Optional[str] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_params(key: jax.Array, spec_tree, default_dtype: str = "bfloat16"):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for k, s in zip(keys, leaves):
+        dt = jnp.dtype(s.dtype or default_dtype)
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, dt)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, dt)
+        elif s.init == "scaled":
+            fan_in = s.shape[0] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            v = (jax.random.normal(k, s.shape, jnp.float32)
+                 / np.sqrt(fan_in)).astype(dt)
+        elif s.init == "small":
+            v = (0.02 * jax.random.normal(k, s.shape, jnp.float32)).astype(dt)
+        else:  # normal
+            v = (0.02 * jax.random.normal(k, s.shape, jnp.float32)).astype(dt)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_shapes(spec_tree, default_dtype: str = "bfloat16"):
+    """ShapeDtypeStructs for dry-run lowering (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype)),
+        spec_tree, is_leaf=_is_spec)
+
+
+def param_axes(spec_tree):
+    """Logical-axes tree (tuple leaves) for the sharding rule engine."""
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=_is_spec)
+
+
+def param_bytes(spec_tree, default_dtype: str = "bfloat16") -> int:
+    total = 0
+    for s in jax.tree.leaves(spec_tree, is_leaf=_is_spec):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n * jnp.dtype(s.dtype or default_dtype).itemsize
+    return total
+
+
+def stack_specs(spec_tree, n: int, axis_name: Optional[str] = None):
+    """Add a leading stacking dim (for scan-over-layers parameter stacks)."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.dtype),
+        spec_tree, is_leaf=_is_spec)

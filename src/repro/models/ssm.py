@@ -1,0 +1,154 @@
+"""Mamba2 (SSD) mixer layer: in_proj -> causal conv -> SSD scan -> gated out.
+
+Full-sequence path uses the chunked SSD scan (Pallas kernel on TPU, jnp
+oracle elsewhere); the decode path carries an O(1) recurrent state
+(conv tail + SSD state) instead of a KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import AxisRules
+from repro.kernels import ops
+from repro.models.common import rms_head_norm
+from repro.models.param import Spec
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = cfg.d_inner
+    nh = cfg.n_ssm_heads
+    conv_dim = di + 2 * s.ngroups * s.d_state
+    return s, di, nh, conv_dim
+
+
+def ssm_spec(cfg: ModelConfig) -> dict:
+    s, di, nh, conv_dim = _dims(cfg)
+    D = cfg.d_model
+    # in_proj emits [z(di), xBC(conv_dim), dt(nh)]
+    return {
+        "w_in": Spec((D, 2 * di + 2 * s.ngroups * s.d_state + nh),
+                     ("embed", "ssm_inner"), "scaled"),
+        "conv_w": Spec((s.d_conv, conv_dim), (None, "ssm_inner"), "scaled"),
+        "conv_b": Spec((conv_dim,), ("ssm_inner",), "zeros", "float32"),
+        "A_log": Spec((nh,), (None,), "zeros", "float32"),
+        "dt_bias": Spec((nh,), (None,), "zeros", "float32"),
+        "D": Spec((nh,), (None,), "ones", "float32"),
+        "norm": Spec((di,), (None,), "ones", "float32"),
+        "w_out": Spec((di, D), ("ssm_inner", "embed"), "scaled"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s, di, nh, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + conv_dim]
+    dt = zxbcdt[..., di + conv_dim:]
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ModelConfig, xBC: jax.Array):
+    s, di, nh, _ = _dims(cfg)
+    x = xBC[..., :di]
+    B_in = xBC[..., di:di + s.ngroups * s.d_state]
+    C_in = xBC[..., di + s.ngroups * s.d_state:]
+    return x, B_in, C_in
+
+
+_UNBOUND = AxisRules()
+
+
+def ssm_apply(p: dict, cfg: ModelConfig, u: jax.Array, *,
+              initial_state: Optional[dict] = None,
+              return_state: bool = False,
+              rules: AxisRules = _UNBOUND):
+    """Full-sequence SSD. u: (B, S, D)."""
+    s, di, nh, conv_dim = _dims(cfg)
+    B, S, _ = u.shape
+    zxbcdt = u @ p["w_in"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    z = rules.constrain(z, "batch", None, "ssm_inner")
+    xBC = rules.constrain(xBC, "batch", None, "ssm_inner")
+    xBC = ops.causal_conv1d(xBC, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xBC = rules.constrain(xBC, "batch", None, "ssm_inner")
+    x, B_in, C_in = _split_xbc(cfg, xBC)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                       # (H,)
+    xh = x.reshape(B, S, nh, s.head_dim)
+    Bm = B_in.reshape(B, S, s.ngroups, s.d_state)
+    Cm = C_in.reshape(B, S, s.ngroups, s.d_state)
+
+    out = ops.ssd_scan(xh, dtf, A, Bm, Cm, p["D"], chunk=s.chunk,
+                       initial_state=(initial_state or {}).get("ssd"),
+                       return_state=return_state)
+    if return_state:
+        y, ssd_state = out
+    else:
+        y = out
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z)
+    y = ops.rmsnorm(y, p["norm"])
+    res = y @ p["w_out"]
+    if return_state:
+        conv_state = xBC_tail(u, p, cfg)
+        return res, {"ssd": ssd_state, "conv": conv_state}
+    return res
+
+
+def xBC_tail(u: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Last (d_conv-1) pre-conv xBC inputs — the decode conv state."""
+    s, di, nh, conv_dim = _dims(cfg)
+    zxbcdt = u[:, -(s.d_conv - 1):] @ p["w_in"]
+    _, xBC, _ = _split_proj(cfg, zxbcdt)
+    return xBC  # (B, d_conv-1, conv_dim)
+
+
+def ssm_state_shapes(cfg: ModelConfig, batch: int) -> dict:
+    s, di, nh, conv_dim = _dims(cfg)
+    return {
+        "ssd": jax.ShapeDtypeStruct((batch, nh, s.d_state, s.head_dim),
+                                    jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_dim),
+                                     jnp.bfloat16),
+    }
+
+
+def ssm_state_axes(cfg: ModelConfig) -> dict:
+    return {"ssd": ("cache_batch", "heads", None, None),
+            "conv": ("cache_batch", None, "ssm_inner")}
+
+
+def ssm_decode(p: dict, cfg: ModelConfig, u: jax.Array, state: dict):
+    """One-token SSD update. u: (B, 1, D); state {"ssd","conv"}."""
+    s, di, nh, conv_dim = _dims(cfg)
+    B = u.shape[0]
+    zxbcdt = u[:, 0] @ p["w_in"]
+    z, xBC_new, dt = _split_proj(cfg, zxbcdt)
+
+    # causal conv over [conv_state, new]
+    window = jnp.concatenate([state["conv"],
+                              xBC_new[:, None, :].astype(state["conv"].dtype)],
+                             axis=1)                            # (B, d_conv, C)
+    conv_out = (jnp.sum(window.astype(jnp.float32)
+                        * p["conv_w"].astype(jnp.float32)[None], axis=1)
+                + p["conv_b"])
+    xBC = jax.nn.silu(conv_out).astype(u.dtype)
+    x, B_in, C_in = _split_xbc(cfg, xBC)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B, nh, s.head_dim)
+    Bm = B_in.reshape(B, s.ngroups, s.d_state)
+    Cm = C_in.reshape(B, s.ngroups, s.d_state)
+    y, ssd_state = ops.ssd_decode(xh, dtf, A, Bm, Cm, p["D"], state["ssd"])
+    y = y.reshape(B, di) * jax.nn.silu(z)
+    y = ops.rmsnorm(y, p["norm"])
+    res = (y @ p["w_out"])[:, None, :]
+    new_conv = window[:, 1:]
+    return res, {"ssd": ssd_state, "conv": new_conv}

@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill + decode with continuous slot reuse.
+
+Mirrors the DataServer design on the model side: a single entry point
+(`generate`) over a fixed pool of decode slots; finished sequences free their
+slot for the next request (continuous batching). Drives the same
+prefill/decode_step artifacts the dry-run lowers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import AxisRules
+from repro.models.lm import LM
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 = greedy
+    cache_margin: int = 64
+
+
+class ServeEngine:
+    def __init__(self, model: LM, params, *,
+                 rules: Optional[AxisRules] = None, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.rules = rules or AxisRules()
+        self._rng = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, t, f, cs: model.prefill(p, t, f, cache_size=cs,
+                                              rules=self.rules),
+            static_argnums=(3,))
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, rules=self.rules))
+
+    def generate(self, tokens: np.ndarray, frames=None, *,
+                 cfg: Optional[ServeConfig] = None,
+                 eos_id: Optional[int] = None) -> dict:
+        """tokens: (B, S_prompt) int32 -> dict with sequences (B, S+new)."""
+        cfg = cfg or ServeConfig()
+        tokens = jnp.asarray(tokens, jnp.int32)
+        B, S = tokens.shape
+        cache_size = S + cfg.max_new_tokens + cfg.cache_margin
+        logits, cache = self._prefill(self.params, tokens, frames,
+                                      cache_size)
+        out = [tokens]
+        finished = jnp.zeros((B,), bool)
+        steps = 0
+        for i in range(cfg.max_new_tokens):
+            nxt = self._sample(logits[:, -1], cfg)
+            if eos_id is not None:
+                finished = finished | (nxt[:, 0] == eos_id)
+                nxt = jnp.where(finished[:, None], eos_id, nxt)
+            out.append(nxt)
+            steps += 1
+            if eos_id is not None and bool(jnp.all(finished)):
+                break
+            logits, cache = self._decode(self.params, cache, nxt)
+        seqs = jnp.concatenate(out, axis=1)
+        return {"sequences": np.asarray(seqs), "decode_steps": steps,
+                "prompt_len": S}
+
+    def _sample(self, logits: jax.Array, cfg: ServeConfig) -> jax.Array:
+        if cfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        self._rng, k = jax.random.split(self._rng)
+        g = jax.random.categorical(k, logits / cfg.temperature, axis=-1)
+        return g[:, None].astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.train.optimizer import Optimizer, OptimizerConfig
+from repro.train.train_step import TrainConfig, make_train_step, make_grad_fn
+from repro.train.sft import SFTTrainer

@@ -1,0 +1,176 @@
+"""Optimizers with sharded state: AdamW (configurable moment dtype — bf16
+moments for the 300-400B configs) and Adafactor (factored second moments).
+State trees mirror the parameter tree, so the same logical-axis sharding
+rules apply to optimizer state; no external deps (optax is not available).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor | sgd
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"  # bfloat16 for >=100B models
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+class Optimizer:
+    """Functional optimizer: init(params) -> state; update(...)."""
+
+    def __init__(self, cfg: OptimizerConfig):
+        self.cfg = cfg
+
+    # --------------------------------------------------------------- init
+    def init(self, params):
+        c = self.cfg
+        mdt = jnp.dtype(c.moment_dtype)
+        if c.name == "sgd":
+            return {"step": jnp.zeros((), jnp.int32)}
+        if c.name == "adamw":
+            zeros = lambda p: jnp.zeros(p.shape, mdt)
+            return {
+                "step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+            }
+        if c.name == "adafactor":
+            def vrow(p):
+                if p.ndim < 2:
+                    return jnp.zeros(p.shape, jnp.float32)
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+
+            def vcol(p):
+                if p.ndim < 2:
+                    return jnp.zeros((), jnp.float32)
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+            return {
+                "step": jnp.zeros((), jnp.int32),
+                "vr": jax.tree.map(vrow, params),
+                "vc": jax.tree.map(vcol, params),
+            }
+        raise ValueError(self.cfg.name)
+
+    def state_logical_axes(self, param_axes):
+        """Sharding axes for optimizer state (mirror the params)."""
+        c = self.cfg
+        if c.name == "sgd":
+            return {"step": ()}
+        if c.name == "adamw":
+            return {"step": (), "m": param_axes, "v": param_axes}
+        drop_last = lambda ax: ax[:-1] if len(ax) >= 2 else ax
+        drop_2nd = lambda ax: (ax[:-2] + ax[-1:]) if len(ax) >= 2 else ()
+        mapt = lambda f: jax.tree.map(f, param_axes,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return {"step": (), "vr": mapt(drop_last), "vc": mapt(drop_2nd)}
+
+    # ------------------------------------------------------------- update
+    def update(self, grads, state, params):
+        c = self.cfg
+        step = state["step"] + 1
+        lr = schedule(c, step)
+        if c.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, c.grad_clip)
+        else:
+            gnorm = global_norm(grads)
+
+        if c.name == "sgd":
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, {"step": step}, {"lr": lr, "grad_norm": gnorm}
+
+        if c.name == "adamw":
+            bc1 = 1 - c.b1 ** step.astype(jnp.float32)
+            bc2 = 1 - c.b2 ** step.astype(jnp.float32)
+
+            def upd(p, g, m, v):
+                gf = g.astype(jnp.float32)
+                mf = c.b1 * m.astype(jnp.float32) + (1 - c.b1) * gf
+                vf = c.b2 * v.astype(jnp.float32) + (1 - c.b2) * gf * gf
+                upd_ = (mf / bc1) / (jnp.sqrt(vf / bc2) + c.eps)
+                pf = p.astype(jnp.float32)
+                pf = pf - lr * (upd_ + c.weight_decay * pf)
+                return pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+            flat_p, tdef = jax.tree.flatten(params)
+            flat_g = jax.tree.leaves(grads)
+            flat_m = jax.tree.leaves(state["m"])
+            flat_v = jax.tree.leaves(state["v"])
+            out = [upd(p, g, m, v) for p, g, m, v
+                   in zip(flat_p, flat_g, flat_m, flat_v)]
+            new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+            new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+            new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+            return (new_params, {"step": step, "m": new_m, "v": new_v},
+                    {"lr": lr, "grad_norm": gnorm})
+
+        if c.name == "adafactor":
+            def upd(p, g, vr, vc):
+                gf = g.astype(jnp.float32)
+                g2 = gf * gf + 1e-30
+                if p.ndim < 2:
+                    nvr = c.b2 * vr + (1 - c.b2) * g2
+                    upd_ = gf / (jnp.sqrt(nvr) + c.eps)
+                    nvc = vc
+                else:
+                    nvr = c.b2 * vr + (1 - c.b2) * jnp.mean(g2, axis=-1)
+                    nvc = c.b2 * vc + (1 - c.b2) * jnp.mean(g2, axis=-2)
+                    r = nvr / jnp.maximum(
+                        jnp.mean(nvr, axis=-1, keepdims=True), 1e-30)
+                    denom = jnp.sqrt(r[..., None] * nvc[..., None, :]) + c.eps
+                    upd_ = gf / denom
+                pf = p.astype(jnp.float32) - lr * (
+                    upd_ + c.weight_decay * p.astype(jnp.float32))
+                return pf.astype(p.dtype), nvr, nvc
+
+            flat_p, tdef = jax.tree.flatten(params)
+            out = [upd(p, g, vr, vc) for p, g, vr, vc in zip(
+                flat_p, jax.tree.leaves(grads),
+                jax.tree.leaves(state["vr"]), jax.tree.leaves(state["vc"]))]
+            new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+            new_vr = jax.tree.unflatten(tdef, [o[1] for o in out])
+            new_vc = jax.tree.unflatten(tdef, [o[2] for o in out])
+            return (new_params, {"step": step, "vr": new_vr, "vc": new_vc},
+                    {"lr": lr, "grad_norm": gnorm})
+
+        raise ValueError(c.name)

@@ -1,0 +1,136 @@
+"""PPO for the semi-online asynchronous RL stage (§4.2 stage 3).
+
+The policy is the LM (actions are token sequences); a linear value head reads
+the final hidden state. Rollouts arrive through the DataServer's async
+batched interface into the replay buffer; the learner samples independently
+— rollouts and updates are decoupled exactly as in the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.replay_buffer import ReplayBuffer
+from repro.distributed.sharding import AxisRules
+from repro.models.lm import LM
+from repro.models.param import Spec, init_params
+from repro.train.optimizer import Optimizer, OptimizerConfig
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    clip_eps: float = 0.2
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    lr: float = 1e-6             # paper: 1e-6 Adam
+    batch_size: int = 64         # paper: 64
+    epochs_per_batch: int = 1
+
+
+def compute_gae(rewards: np.ndarray, values: np.ndarray, gamma: float,
+                lam: float) -> tuple[np.ndarray, np.ndarray]:
+    """rewards/values: (T,). Returns (advantages, returns)."""
+    T = len(rewards)
+    adv = np.zeros(T, np.float32)
+    last = 0.0
+    for t in reversed(range(T)):
+        next_v = values[t + 1] if t + 1 < T else 0.0
+        delta = rewards[t] + gamma * next_v - values[t]
+        last = delta + gamma * lam * last
+        adv[t] = last
+    return adv, adv + values[:T]
+
+
+class PPOTrainer:
+    """Clipped-objective PPO over (tokens, action_mask, old_logp, adv, ret)."""
+
+    def __init__(self, model: LM, params, *,
+                 cfg: Optional[PPOConfig] = None,
+                 rules: Optional[AxisRules] = None, seed: int = 0):
+        self.model = model
+        self.cfg = cfg or PPOConfig()
+        self.rules = rules or AxisRules()
+        vh_spec = {"w": Spec((model.cfg.d_model, 1), ("embed", None),
+                             "scaled", "float32")}
+        self.params = {"lm": params,
+                       "value_head": init_params(jax.random.PRNGKey(seed + 1),
+                                                 vh_spec, "float32")}
+        self.opt = Optimizer(OptimizerConfig(
+            name="adamw", lr=self.cfg.lr, warmup_steps=0, grad_clip=1.0))
+        self.opt_state = self.opt.init(self.params)
+        self._step = jax.jit(self._make_step())
+
+    def policy_value(self, params, tokens):
+        logits, _, hidden = self.model.forward(
+            params["lm"], tokens, rules=self.rules, return_hidden=True)
+        values = (hidden.astype(jnp.float32)
+                  @ params["value_head"]["w"])[..., 0]
+        return logits.astype(jnp.float32), values
+
+    def _make_step(self):
+        cfg = self.cfg
+
+        def loss_fn(params, batch):
+            logits, values = self.policy_value(params, batch["tokens"])
+            logp_all = jax.nn.log_softmax(logits, axis=-1)
+            logp = jnp.take_along_axis(
+                logp_all, batch["actions"][..., None], axis=-1)[..., 0]
+            mask = batch["action_mask"]
+            ratio = jnp.exp(logp - batch["old_logp"])
+            adv = batch["advantages"]
+            unclipped = ratio * adv
+            clipped = jnp.clip(ratio, 1 - cfg.clip_eps,
+                               1 + cfg.clip_eps) * adv
+            pg = -jnp.sum(jnp.minimum(unclipped, clipped) * mask)
+            v_loss = jnp.sum(jnp.square(values - batch["returns"]) * mask)
+            ent = -jnp.sum(jnp.sum(jnp.exp(logp_all) * logp_all, -1) * mask)
+            denom = jnp.maximum(jnp.sum(mask), 1.0)
+            total = (pg + cfg.value_coef * v_loss
+                     - cfg.entropy_coef * ent) / denom
+            return total, {"pg": pg / denom, "v": v_loss / denom,
+                           "entropy": ent / denom}
+
+        def step(params, opt_state, batch):
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            params, opt_state, info = self.opt.update(grads, opt_state,
+                                                      params)
+            return params, opt_state, {"loss": loss, **aux, **info}
+
+        return step
+
+    def update(self, batch: dict) -> dict:
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        for _ in range(self.cfg.epochs_per_batch):
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch)
+        return {k: float(v) for k, v in metrics.items()}
+
+    # ------------------------------------------------------ rollout -> batch
+    def make_batch(self, samples: list[dict], seq_len: int) -> dict:
+        """samples: dicts with tokens (S,), actions (S,), action_mask (S,),
+        rewards (S,) — padded/truncated to seq_len with GAE computed here."""
+        B = len(samples)
+        out = {k: np.zeros((B, seq_len), np.float32) for k in
+               ("action_mask", "old_logp", "advantages", "returns")}
+        out["tokens"] = np.zeros((B, seq_len), np.int32)
+        out["actions"] = np.zeros((B, seq_len), np.int32)
+        for i, s in enumerate(samples):
+            T = min(len(s["tokens"]), seq_len)
+            out["tokens"][i, :T] = s["tokens"][:T]
+            out["actions"][i, :T] = s["actions"][:T]
+            out["action_mask"][i, :T] = s["action_mask"][:T]
+            out["old_logp"][i, :T] = s["old_logp"][:T]
+            adv, ret = compute_gae(np.asarray(s["rewards"][:T], np.float32),
+                                   np.asarray(s["values"][:T], np.float32),
+                                   self.cfg.gamma, self.cfg.gae_lambda)
+            std = adv.std() + 1e-8
+            out["advantages"][i, :T] = (adv - adv.mean()) / std
+            out["returns"][i, :T] = ret
+        return out

@@ -1,0 +1,50 @@
+"""Supervised finetuning on demonstration trajectories (§4.2 stage 2)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import AxisRules
+from repro.models.lm import LM
+from repro.train.optimizer import Optimizer, OptimizerConfig
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+@dataclass
+class SFTResult:
+    losses: list
+    final_loss: float
+    steps: int
+
+
+class SFTTrainer:
+    def __init__(self, model: LM, *, opt_cfg: Optional[OptimizerConfig] = None,
+                 train_cfg: Optional[TrainConfig] = None,
+                 rules: Optional[AxisRules] = None, seed: int = 0):
+        self.model = model
+        self.opt = Optimizer(opt_cfg or OptimizerConfig(lr=1e-3,
+                                                        warmup_steps=20))
+        self.rules = rules or AxisRules()
+        tc = train_cfg or TrainConfig(microbatches=1, remat=None)
+        self._step = jax.jit(make_train_step(model, self.opt, self.rules, tc))
+        self.params = model.init(jax.random.PRNGKey(seed))
+        self.opt_state = self.opt.init(self.params)
+
+    def fit(self, batches: Iterable[dict], *, log_every: int = 20,
+            verbose: bool = True) -> SFTResult:
+        losses = []
+        step = 0
+        for batch in batches:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch)
+            step += 1
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if verbose and step % log_every == 0:
+                print(f"  sft step {step:5d} loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e}")
+        return SFTResult(losses, losses[-1] if losses else float("nan"), step)

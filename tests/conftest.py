@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see the real (single) device — only the
+# dry-run (its own subprocess) forces 512 placeholder devices.
+assert "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", "")
+
+from hypothesis import settings, HealthCheck
+
+settings.register_profile(
+    "ci", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("ci")

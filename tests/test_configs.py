@@ -1,0 +1,63 @@
+"""Config registry: advertised sizes, shape applicability, reduced configs."""
+import pytest
+
+from repro.configs import (get_config, get_reduced, list_arch_ids, SHAPES,
+                           shape_applicable)
+
+# advertised parameter counts (tolerance: 5%)
+ADVERTISED = {
+    "grok-1-314b": 314e9,
+    "deepseek-moe-16b": 16.4e9,
+    "nemotron-4-15b": 15e9,
+    "h2o-danube-1.8b": 1.8e9,
+    "qwen3-1.7b": 1.7e9,
+    "starcoder2-15b": 15.5e9,   # hf reports 15.5B
+    "llava-next-mistral-7b": 7.2e9,
+    "mamba2-2.7b": 2.7e9,
+    "jamba-1.5-large-398b": 398e9,
+}
+
+
+def test_all_archs_registered():
+    assert len(list_arch_ids()) == 10
+
+
+@pytest.mark.parametrize("arch", list(ADVERTISED))
+def test_param_counts_match_advertised(arch):
+    n = get_config(arch).param_count()
+    assert abs(n - ADVERTISED[arch]) / ADVERTISED[arch] < 0.06, n
+
+
+def test_moe_active_counts():
+    grok = get_config("grok-1-314b")
+    assert grok.active_param_count() < 0.3 * grok.param_count()
+    ds = get_config("deepseek-moe-16b")
+    assert 2e9 < ds.active_param_count() < 4e9
+
+
+def test_long_context_applicability():
+    long = SHAPES["long_500k"]
+    runs = [a for a in list_arch_ids()
+            if shape_applicable(get_config(a), long)[0]]
+    assert sorted(runs) == sorted(
+        ["mamba2-2.7b", "jamba-1.5-large-398b", "h2o-danube-1.8b"])
+
+
+def test_total_cells():
+    """40 assigned cells: 33 runnable + 7 documented long-context skips."""
+    n_run = n_skip = 0
+    for a in list_arch_ids():
+        for s in SHAPES.values():
+            ok, why = shape_applicable(get_config(a), s)
+            n_run += ok
+            n_skip += not ok
+            if not ok:
+                assert "sub-quadratic" in why
+    assert n_run + n_skip == 40 and n_skip == 7
+
+
+@pytest.mark.parametrize("arch", list_arch_ids())
+def test_reduced_configs_small(arch):
+    r = get_reduced(arch)
+    assert r.param_count() < 5e6
+    assert r.family == get_config(arch).family

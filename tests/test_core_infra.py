@@ -1,0 +1,246 @@
+"""OSGym core infrastructure: CoW store, runner pool, state managers,
+gateway, data server — unit + integration + hypothesis property tests."""
+import threading
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (CowStore, DiskImage, BlobStore, DataServer,
+                        FaultInjector, FaultType, Gateway, RunnerPool,
+                        SimOSReplica, ReplicaStateManager, TaskAborted,
+                        RetryPolicy)
+from repro.core.faults import ReplicaError
+from repro.core.runner_pool import SimHost, HostSpec, ResourceGuard
+from repro.core.tasks import TaskSuite, TABLE3_ROWS
+
+
+# ------------------------------------------------------------------ CoW
+def test_reflink_clone_is_instant_and_shares_blocks():
+    store = CowStore()
+    base = DiskImage.create_base(store, "ubuntu", 24 * 10**9)
+    phys0 = store.physical_bytes()
+    clones = [base.clone(f"vm{i}")[0] for i in range(16)]
+    assert store.physical_bytes() == phys0          # zero new physical bytes
+    _, t_reflink = base.clone()
+    _, t_full = base.full_copy("naive")
+    assert t_full / t_reflink > 30                  # paper: 37x faster
+    for c in clones:
+        c.close()
+
+
+def test_cow_write_allocates_only_dirty_blocks():
+    store = CowStore(block_size=1024)
+    base = DiskImage.create_base(store, "img", 1024 * 100)
+    vm, _ = base.clone("vm")
+    phys0 = store.physical_bytes()
+    vm.write_block(0, "x")
+    vm.write_block(1, "y")
+    assert store.physical_bytes() == phys0 + 2 * 1024
+    assert vm.logical_bytes() == base.logical_bytes()
+
+
+def test_cow_refcount_release():
+    store = CowStore(block_size=64)
+    base = DiskImage.create_base(store, "img", 64 * 10)
+    vm, _ = base.clone("vm")
+    vm.write_block(3, "dirty")
+    vm.close()
+    base.close()
+    assert store.physical_bytes() == 0
+    assert store.n_blocks() == 0
+
+
+@given(st.lists(st.tuples(st.sampled_from(["clone", "write", "close"]),
+                          st.integers(0, 9)), max_size=40))
+def test_property_cow_invariants(ops):
+    """Random op sequences: physical <= sum of logical; refcounts never leak."""
+    store = CowStore(block_size=32)
+    base = DiskImage.create_base(store, "b", 32 * 10)
+    vms = []
+    for op, arg in ops:
+        if op == "clone":
+            vms.append(base.clone(f"v{len(vms)}")[0])
+        elif op == "write" and vms:
+            vms[arg % len(vms)].write_block(arg % 10, f"w{arg}")
+        elif op == "close" and vms:
+            vms.pop(arg % len(vms)).close()
+    live = [base] + vms
+    logical = sum(v.logical_bytes() for v in live)
+    assert store.physical_bytes() <= logical
+    for v in live:
+        v.close()
+    assert store.physical_bytes() == 0
+
+
+def test_blob_store_dedup_across_keys():
+    bs = BlobStore(chunk=128)
+    data = b"A" * 1000
+    bs.put("k1", data)
+    p1 = bs.store.physical_bytes()
+    bs.put("k2", data)                  # identical content
+    assert bs.store.physical_bytes() == p1
+    assert bs.get("k2") == data
+    bs.delete("k1")
+    assert bs.get("k2") == data         # refcount protects shared chunks
+
+
+# --------------------------------------------------------------- replicas
+def _base(store=None):
+    store = store or CowStore(block_size=1 << 20)
+    return DiskImage.create_base(store, "ubuntu", 64 << 20)
+
+
+def test_state_manager_lifecycle():
+    rep = SimOSReplica("r0", _base(), seed=0)
+    mgr = ReplicaStateManager(rep)
+    mgr.configure({"task_id": "t", "horizon": 3})
+    obs, _ = mgr.reset()
+    assert obs.shape == (48, 64, 3)
+    done = False
+    while not done:
+        obs, rew, done, info, dur = mgr.step({"a": 1})
+    score, _ = mgr.evaluate()
+    assert 0.0 <= score <= 1.0
+    assert mgr.stats.steps == 3
+
+
+def test_step_retry_then_abort():
+    # 100% runtime faults: retries exhaust, task aborts, replica survives
+    inj = FaultInjector(rates={FaultType.RUNTIME: 1.0}, seed=1)
+    rep = SimOSReplica("r1", _base(), faults=inj, seed=1)
+    mgr = ReplicaStateManager(rep, retry=RetryPolicy(max_retries=3))
+    mgr.configure({"task_id": "t", "horizon": 5})
+    mgr.reset()
+    with pytest.raises(TaskAborted):
+        mgr.step({})
+    assert mgr.stats.retries == 3
+    assert rep.alive                    # runtime faults don't kill the VM
+
+
+def test_crash_triggers_autonomous_recovery():
+    inj = FaultInjector(rates={FaultType.CRASH: 1.0}, seed=2)
+    rep = SimOSReplica("r2", _base(), faults=inj, seed=2)
+    mgr = ReplicaStateManager(rep)
+    mgr.configure({"task_id": "t", "horizon": 5})
+    mgr.reset()
+    with pytest.raises(TaskAborted):
+        mgr.step({})
+    assert mgr.stats.recoveries == 1
+    assert rep.alive                    # manager re-cloned + rebooted it
+
+
+# ------------------------------------------------------------------ pool
+def test_pool_prewarm_and_recycle():
+    pool = RunnerPool("n0", _base(), size=4)
+    assert pool.size == 4 and pool.n_free == 4
+    r = pool.acquire("task-1")
+    assert r is not None and pool.n_free == 3
+    pool.release(r)
+    assert pool.n_free == 4
+
+
+def test_resource_guard_blocks_overcommit():
+    host = SimHost(HostSpec(cores=8, ram_gb=40.0))   # fits ~4 replicas
+    pool = RunnerPool("n1", _base(), size=16, host=host)
+    assert pool.size < 16
+    assert pool.blocked_creations >= 1
+    h = pool.health()
+    assert h["ram_used_gb"] <= 40.0
+
+
+def test_untuned_kernel_limits_cause_silent_failures():
+    host = SimHost(HostSpec(cores=96, ram_gb=768.0,
+                            limits={"fs.aio-max-nr": 4096,
+                                    "fs.inotify.max_user_instances": 128,
+                                    "fs.file-max": 65536,
+                                    "net.netfilter.nf_conntrack_max": 65536}))
+    pool = RunnerPool("n2", _base(), size=8, host=host, tune_limits=False)
+    broken = [r for r in pool._all.values() if r.silent_broken]
+    assert broken, "exhausted aio-max-nr must silently break runners"
+    tuned = SimHost(HostSpec(cores=96, ram_gb=768.0))
+    tuned_pool = RunnerPool("n3", _base(), size=8, host=tuned,
+                            tune_limits=True)
+    assert not any(r.silent_broken for r in tuned_pool._all.values())
+
+
+def test_leaked_task_reclamation():
+    pool = RunnerPool("n4", _base(), size=2, task_timeout_vs=10.0)
+    r = pool.acquire("leaky")
+    assert pool.n_free == 1
+    pool.advance_time(11.0)
+    reclaimed = pool.reclaim_leaked()
+    assert reclaimed == ["leaky"]
+    assert pool.n_free == 2
+
+
+# --------------------------------------------------------------- gateway
+def test_gateway_affinity_and_failover():
+    base = _base()
+    pools = [RunnerPool(f"n{i}", base, size=2) for i in range(3)]
+    gw = Gateway(pools)
+    node1, r1 = gw.acquire("task-A")
+    node2, r2 = gw.acquire("task-A")    # same affinity, pool has room
+    assert node1 == node2
+    gw.mark_unreachable(node1)
+    node3, r3 = gw.acquire("task-A")
+    assert node3 != node1               # failover
+    assert gw.failovers >= 1
+    for n, r in ((node1, r1), (node2, r2), (node3, r3)):
+        gw.release(n, r)
+
+
+def test_gateway_health_check_recovers_node():
+    base = _base()
+    pools = [RunnerPool("n0", base, size=2)]
+    gw = Gateway(pools)
+    gw.mark_unreachable("n0")
+    assert gw.healthy_nodes() == []
+    report = gw.check_now()             # pool is actually fine
+    assert report["n0"]["healthy"]
+    assert gw.healthy_nodes() == ["n0"]
+
+
+# ------------------------------------------------------------ data server
+def test_data_server_end_to_end_with_faults():
+    base = _base()
+    inj = FaultInjector(seed=3)         # default stochastic rates
+    pools = [RunnerPool(f"n{i}", base, size=8, faults=inj, seed=i)
+             for i in range(2)]
+    gw = Gateway(pools)
+    ds = DataServer(gw, max_workers=8)
+    tasks = [t.to_dict() for t in TaskSuite(seed=0).sample(8)]
+    obs = ds.reset(tasks)
+    assert len(obs) == 8
+    for _ in range(30):
+        live = ds.live_slots()
+        if not live:
+            break
+        res = ds.step({s: {"click": (1, 2)} for s in live})
+        assert set(res) == set(live)
+    assert not ds.live_slots(), "all episodes must finish despite faults"
+    scores = ds.evaluate()
+    assert all(0 <= v <= 1 for v in scores.values())
+    assert ds.telemetry.counter("steps") >= 8 * 10
+    ds.close()
+
+
+def test_data_server_async_non_blocking():
+    base = _base()
+    pools = [RunnerPool("n0", base, size=4)]
+    ds = DataServer(Gateway(pools), max_workers=4)
+    ds.reset([t.to_dict() for t in TaskSuite(seed=1).sample(4)])
+    futs = ds.step_async({s: {} for s in ds.live_slots()})
+    # futures resolve; the caller was never blocked on submission
+    for f in futs.values():
+        obs, rew, done, info = f.result(timeout=10)
+        assert obs is not None
+    ds.close()
+
+
+def test_table3_task_suite_domains():
+    suite = TaskSuite(seed=0)
+    tasks = suite.sample(200)
+    domains = {t.domain for t in tasks}
+    assert domains <= set(suite.domains())
+    assert all(10 <= t.horizon <= 25 for t in tasks)
+    assert len(TABLE3_ROWS) == 10

@@ -1,0 +1,117 @@
+"""Data pipeline (packing invariants), MoE routing properties, serving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs import get_reduced
+from repro.data import (ByteTokenizer, encode_trajectory, pack_batches,
+                        synthetic_trajectories, ReplayBuffer)
+from repro.models import build_model
+from repro.models.moe import route, capacity
+from repro.serve import ServeEngine, ServeConfig
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    s = "click(120, 80) then type('héllo')"
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_encode_trajectory_mask_covers_thoughts_and_actions():
+    tok = ByteTokenizer()
+    traj = synthetic_trajectories(1, seed=0, steps_range=(3, 4))[0]
+    ids, mask = encode_trajectory(traj, tok, vocab_size=264)
+    assert len(ids) == len(mask)
+    assert 0.2 < mask.mean() < 0.9          # both masked & unmasked content
+    # instruction prefix is never a training target
+    assert mask[:len(tok.encode(traj.instruction)) + 1].sum() == 0
+
+
+def test_pack_batches_shapes_and_shift():
+    tok = ByteTokenizer()
+    trajs = synthetic_trajectories(8, seed=1, steps_range=(3, 5))
+    enc = [encode_trajectory(t, tok, 264) for t in trajs]
+    batches = list(pack_batches(enc, batch=2, seq_len=64, seed=0))
+    assert batches, "must yield at least one packed batch"
+    for b in batches:
+        assert b["tokens"].shape == (2, 64)
+        assert b["targets"].shape == (2, 64)
+        assert b["mask"].shape == (2, 64)
+    # next-token alignment: targets are tokens shifted by one in the stream
+    stream = list(batches[0]["tokens"][0]) + [0]
+    assert list(batches[0]["targets"][0][:-1]) == stream[1:64]
+
+
+def test_replay_buffer_capacity_and_sampling():
+    rb = ReplayBuffer(capacity=8, seed=0)
+    rb.extend(range(20))
+    assert len(rb) == 8
+    assert rb.total_added == 20
+    s = rb.sample(16)
+    assert len(s) == 16 and all(12 <= x < 20 for x in s)
+
+
+# ------------------------------------------------------------- MoE routing
+@given(seed=st.integers(0, 100), E=st.sampled_from([4, 8]),
+       k=st.sampled_from([1, 2]))
+def test_property_moe_capacity_never_exceeded(seed, E, k):
+    g = 32
+    C = capacity(g, k, E, 1.25)
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (1, g, E))
+    probs, gate_vals, de, dc = route(logits, E, k, C)
+    # tokens per (expert, slot) <= 1 and per-expert load <= C
+    disp = jnp.einsum("gtke,gtkc->gtec", de.astype(jnp.float32), dc)
+    per_slot = disp.sum(axis=1)             # (1, E, C)
+    assert float(per_slot.max()) <= 1.0 + 1e-6
+    load = disp.sum(axis=(1, 3))            # (1, E)
+    assert float(load.max()) <= C + 1e-6
+    if k > 1:
+        # top-k gates renormalize to a convex combination
+        assert float(jnp.abs(gate_vals.sum(-1) - 1.0).max()) < 1e-5
+    else:
+        # top-1 keeps the raw router prob as the gate (Switch convention)
+        assert 0.0 < float(gate_vals.min()) and float(gate_vals.max()) <= 1.0
+
+
+def test_moe_dropped_tokens_contribute_zero():
+    cfg = get_reduced("deepseek-moe-16b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.01))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    logits, aux = model.forward(params, tokens)   # must stay finite
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+# ----------------------------------------------------------------- serving
+def test_serve_greedy_is_deterministic():
+    cfg = get_reduced("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params)
+    prompts = np.random.default_rng(0).integers(8, cfg.vocab_size, (2, 12))
+    o1 = eng.generate(prompts, cfg=ServeConfig(max_new_tokens=6))
+    o2 = eng.generate(prompts, cfg=ServeConfig(max_new_tokens=6))
+    np.testing.assert_array_equal(o1["sequences"], o2["sequences"])
+    assert o1["sequences"].shape == (2, 18)
+
+
+def test_serve_eos_early_stop():
+    cfg = get_reduced("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params)
+    prompts = np.random.default_rng(1).integers(8, cfg.vocab_size, (1, 8))
+    greedy_first = eng.generate(prompts,
+                                cfg=ServeConfig(max_new_tokens=1))
+    eos = int(greedy_first["sequences"][0, -1])
+    out = eng.generate(prompts, cfg=ServeConfig(max_new_tokens=10),
+                       eos_id=eos)
+    assert out["decode_steps"] <= 10
+    assert (out["sequences"][:, 8:] == eos).any()

@@ -1,0 +1,43 @@
+"""Expert-parallel shard_map MoE == dense GShard MoE (multi-device)."""
+import subprocess, sys, os
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CODE = '''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs import get_reduced
+from repro.distributed.sharding import train_rules
+from repro.models.moe import moe_spec, moe_apply
+from repro.models.param import init_params
+
+meshes = {1: jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2),
+          2: jax.make_mesh((8, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)}
+for arch, fs in [("deepseek-moe-16b", 1), ("grok-1-314b", 2)]:
+    mesh = meshes[fs]
+    cfg = get_reduced(arch)
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, ep_fsplit=fs, capacity_factor=8.0), d_model=32, d_ff=64,
+        n_heads=2, n_kv_heads=2, head_dim=16)
+    params = init_params(jax.random.PRNGKey(0), moe_spec(cfg), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32), jnp.float32)
+    y_dense, _ = moe_apply(params, cfg, x, rules=train_rules(mesh))
+    rules_ep = train_rules(mesh).with_overrides(moe_impl=("ep",))
+    y_ep, _ = jax.jit(lambda p, xx: moe_apply(p, cfg, xx, rules=rules_ep))(params, x)
+    err = float(jnp.max(jnp.abs(y_dense - y_ep)))
+    assert err < 1e-3, (arch, err)
+print("EP-OK")
+'''
+
+@pytest.mark.slow
+def test_ep_moe_matches_dense_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
+                          text=True, timeout=420, env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout[-1500:] + proc.stderr[-1500:]
+    assert "EP-OK" in proc.stdout

@@ -1,0 +1,218 @@
+"""Pallas kernels vs the pure-jnp oracles: shape/dtype sweeps in interpret
+mode, plus oracle-vs-naive cross checks."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st, settings
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def naive_attention(q, k, v, causal, window, scale=None):
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    scale = scale or 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bihd,bjhd->bhij", q, kr).astype(jnp.float32) * scale
+    i = jnp.arange(Sq)[:, None]
+    j = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= j > i - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhij,bjhd->bihd", p.astype(v.dtype), vr)
+
+
+@pytest.mark.parametrize("S,H,KVH,hd,window", [
+    (128, 4, 4, 32, 0),      # MHA
+    (256, 8, 2, 64, 0),      # GQA
+    (256, 8, 2, 64, 64),     # GQA + sliding window
+    (512, 4, 1, 80, 0),      # MQA, non-pow2 head dim
+])
+def test_flash_attention_vs_ref(S, H, KVH, hd, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (2, S, KVH, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (2, S, KVH, hd), jnp.float32)
+    o_ref = ref.attention_ref(q, k, v, causal=True, window=window,
+                              q_chunk=128)
+    o_pal = flash_attention(q, k, v, causal=True, window=window,
+                            block_q=128, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ref_attention_vs_naive():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 192, 8, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 192, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 192, 2, 32), jnp.float32)
+    for window in (0, 48):
+        o_naive = naive_attention(q, k, v, True, window)
+        o_ref = ref.attention_ref(q, k, v, causal=True, window=window,
+                                  q_chunk=64)
+        np.testing.assert_allclose(np.asarray(o_naive), np.asarray(o_ref),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), dtype)
+    k = jax.random.normal(ks[1], (1, 256, 4, 64), dtype)
+    v = jax.random.normal(ks[2], (1, 256, 4, 64), dtype)
+    o_ref = ref.attention_ref(q, k, v, causal=True)
+    o_pal = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                            interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pal, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("S,KVH,G,block", [(512, 2, 4, 128), (1024, 1, 8, 256)])
+def test_decode_attention_vs_ref(S, KVH, G, block):
+    B, hd = 3, 64
+    H = KVH * G
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32)
+    cl = jnp.array([S // 2, S, 7][:B], jnp.int32)
+    o_ref = ref.decode_attention_ref(q, kc, vc, cl)
+    o_pal = decode_attention(q, kc, vc, cl, block_s=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal),
+                               rtol=1e-4, atol=1e-5)
+
+
+def _ssd_inputs(key, B, S, H, P, N, G=1):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    D = jnp.ones((H,))
+    return x, dt, A, Bm, Cm, D
+
+
+def ssd_sequential(x, dt, A, Bm, Cm, D):
+    """O(S) reference recurrence (the ground truth both impls must match)."""
+    B_, S_, H_, P_ = x.shape
+    N_ = Bm.shape[-1]
+    h = np.zeros((B_, H_, N_, P_), np.float32)
+    ys = []
+    xn, dtn, An = map(np.asarray, (x, dt, A))
+    Bn, Cn, Dn = map(np.asarray, (Bm, Cm, D))
+    for t in range(S_):
+        dA = np.exp(dtn[:, t] * An)
+        h = (h * dA[:, :, None, None]
+             + np.einsum("bn,bhp->bhnp", Bn[:, t, 0],
+                         xn[:, t] * dtn[:, t][:, :, None]))
+        ys.append(np.einsum("bn,bhnp->bhp", Cn[:, t, 0], h)
+                  + Dn[None, :, None] * xn[:, t])
+    return np.stack(ys, 1)
+
+
+@pytest.mark.parametrize("S,H,P,N,chunk,bh", [
+    (128, 4, 32, 16, 32, 2),
+    (256, 8, 64, 32, 64, 4),
+    (64, 2, 16, 8, 64, 2),     # single chunk
+])
+def test_ssd_kernel_vs_ref_vs_sequential(S, H, P, N, chunk, bh):
+    x, dt, A, Bm, Cm, D = _ssd_inputs(jax.random.PRNGKey(4), 2, S, H, P, N)
+    y_ref, st_ref = ref.ssd_ref(x, dt, A, Bm, Cm, D, chunk=chunk,
+                                return_state=True)
+    y_pal, st_pal = ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk, block_h=bh,
+                             return_state=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_ref), np.asarray(st_pal),
+                               rtol=1e-4, atol=1e-4)
+    y_seq = ssd_sequential(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(y_seq, np.asarray(y_ref), rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_initial_state_continuation():
+    """Splitting a sequence in half with state carry == one full pass."""
+    x, dt, A, Bm, Cm, D = _ssd_inputs(jax.random.PRNGKey(5), 1, 128, 4, 16, 8)
+    y_full = ref.ssd_ref(x, dt, A, Bm, Cm, D, chunk=32)
+    y1, st = ref.ssd_ref(x[:, :64], dt[:, :64], A, Bm[:, :64], Cm[:, :64], D,
+                         chunk=32, return_state=True)
+    y2 = ref.ssd_ref(x[:, 64:], dt[:, 64:], A, Bm[:, 64:], Cm[:, 64:], D,
+                     chunk=32, initial_state=st)
+    y_split = jnp.concatenate([y1, y2], axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_split),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_matches_scan():
+    x, dt, A, Bm, Cm, D = _ssd_inputs(jax.random.PRNGKey(6), 2, 8, 4, 16, 8)
+    y_ref, st = ref.ssd_ref(x, dt, A, Bm, Cm, D, chunk=8, return_state=True)
+    h = jnp.zeros_like(st)
+    ys = []
+    for t in range(8):
+        y, h = ref.ssd_decode_ref(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t],
+                                  D, h)
+        ys.append(y)
+    y_dec = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_dec),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(h),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(S=st.sampled_from([64, 128]), KVH=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2]), seed=st.integers(0, 50))
+def test_property_flash_attention_random_shapes(S, KVH, g, seed):
+    H = KVH * g
+    hd = 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (1, S, KVH, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (1, S, KVH, hd), jnp.float32)
+    o_ref = ref.attention_ref(q, k, v, causal=True, q_chunk=64)
+    o_pal = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_causal_conv1d():
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 32, 8))
+    w = jax.random.normal(jax.random.PRNGKey(8), (4, 8))
+    y = ref.causal_conv1d_ref(x, w)
+    # manual check at position t: sum_k w[k] * x[t - 3 + k]
+    t = 10
+    manual = sum(np.asarray(w)[k] * np.asarray(x)[:, t - 3 + k]
+                 for k in range(4))
+    np.testing.assert_allclose(np.asarray(y)[:, t], manual, rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((4, 96, 128), jnp.float32),
+    ((2, 300, 64), jnp.bfloat16),     # rows not divisible by block
+])
+def test_rmsnorm_kernel_vs_ref(shape, dtype):
+    from repro.kernels.rmsnorm import rmsnorm as rn
+    x = jax.random.normal(jax.random.PRNGKey(9), shape, dtype)
+    scale = jax.random.normal(jax.random.PRNGKey(10), shape[-1:],
+                              jnp.float32)
+    y_ref = ref.rmsnorm_ref(x, scale)
+    y_pal = rn(x, scale, block_rows=128, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_pal, np.float32),
+                               rtol=tol, atol=tol)

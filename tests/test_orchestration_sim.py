@@ -1,0 +1,60 @@
+"""Hardware-aware orchestration (Fig. 3, Table 1) and the Fig. 6 fleet sims."""
+import pytest
+
+from repro.core.orchestrator import (table1, fig3_sweep, bottleneck,
+                                     overload_fraction, ReplicaDemand,
+                                     MachineSpec, server_for_group)
+from repro.core.simulation import (run_throughput, sweep_throughput,
+                                   run_recovery, recovery_stats)
+
+
+def test_table1_reproduces_paper_costs():
+    rows = {r["cpu"]: r for r in table1()}
+    assert rows["8275CL"]["replicas"] == 36
+    assert rows["8275CL"]["usd_per_replica_day"] == pytest.approx(2.10, abs=0.02)
+    assert rows["8259CL"]["usd_per_replica_day"] == pytest.approx(0.78, abs=0.02)
+    assert rows["E5-2699"]["usd_per_replica_day"] == pytest.approx(0.23, abs=0.02)
+    assert rows["E5-2699"]["replicas"] == 128
+
+
+def test_fig3_cpu_to_ram_crossover():
+    rows = fig3_sweep(128, seeds=3)
+    by_k = {r["K"]: r for r in rows}
+    assert by_k[1]["overload_frac_mean"] > 0.9       # small K: CPU-bound
+    assert by_k[64]["overload_frac_mean"] < 0.05     # large K: bursts multiplex
+    assert by_k[1]["bottleneck"] == "cpu"
+    assert by_k[64]["bottleneck"] == "ram"
+    # cost collapses roughly 10x (paper: ~300 -> ~30 USD/day)
+    assert by_k[1]["usd_per_day"] > 250
+    assert by_k[64]["usd_per_day"] < 40
+
+
+def test_overload_monotone_in_cores():
+    d = ReplicaDemand()
+    lo = overload_fraction(8, 8.0, d)
+    hi = overload_fraction(8, 64.0, d)
+    assert lo > hi
+
+
+def test_fig6_throughput_scaling():
+    rows = sweep_throughput(designs=("centralized", "decentralized"),
+                            sizes=(64, 1024), seeds=3)
+    get = lambda d, n: next(r for r in rows
+                            if r["design"] == d and r["replicas"] == n)
+    dec64, dec1024 = get("decentralized", 64), get("decentralized", 1024)
+    cen1024 = get("centralized", 1024)
+    # near-linear decentralized scaling (>=85% of ideal 16x)
+    assert dec1024["steps_per_s_mean"] / dec64["steps_per_s_mean"] > 13.5
+    # centralized saturates at 1024 replicas
+    assert cen1024["steps_per_s_mean"] < 0.5 * dec1024["steps_per_s_mean"]
+    # decentralized latency stays near the 2.5 s step time
+    assert dec1024["latency_mean_s"] < 3.0
+
+
+def test_fig6_recovery_from_full_crash():
+    r = run_recovery(256, seed=0)
+    assert r["timeline"][0][1] == 0.0
+    assert r["timeline"][-1][1] == 1.0
+    assert r["full_recovery_s"] < 300
+    stats = recovery_stats(256, seeds=3)
+    assert stats["full_recovery_std_s"] >= 0.0

@@ -1,0 +1,69 @@
+"""The logical-axis rule engine: divisibility fallback, duplicate-axis drop,
+and hypothesis invariants (these run unbound — no mesh required)."""
+import pytest
+from hypothesis import given, strategies as st
+
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import pspec_for
+
+
+class FakeMesh:
+    """Duck-typed mesh: only axis_names / devices.shape are consulted."""
+
+    class _Dev:
+        def __init__(self, shape):
+            self.shape = shape
+
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        self.devices = self._Dev(tuple(sizes.values()))
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MAP = {"batch": ("data",), "embed": ("data",), "mlp": ("model",),
+       "wide": ("data", "model")}
+
+
+def test_basic_assignment():
+    assert pspec_for((64, 32), ("embed", "mlp"), MAP, MESH) == \
+        P("data", "model")
+
+
+def test_divisibility_fallback_replicates():
+    assert pspec_for((10, 32), ("embed", "mlp"), MAP, MESH) == \
+        P(None, "model")
+
+
+def test_duplicate_axis_first_dim_wins():
+    assert pspec_for((32, 32), ("embed", "embed"), MAP, MESH) == P("data")
+
+
+def test_multi_axis_mapping_degrades():
+    # 256 divisible by 16*16 -> both axes; 32 only by 16 -> first axis only
+    assert pspec_for((256,), ("wide",), MAP, MESH) == P(("data", "model"))
+    assert pspec_for((32,), ("wide",), MAP, MESH) == P("data")
+
+
+def test_unknown_logical_name_replicates():
+    assert pspec_for((32,), ("nope",), MAP, MESH) == P()
+
+
+@given(dims=st.lists(st.sampled_from([1, 3, 16, 32, 48, 256]), min_size=1,
+                     max_size=4),
+       names=st.lists(st.sampled_from(["batch", "embed", "mlp", "wide",
+                                       None]), min_size=4, max_size=4))
+def test_property_no_axis_reuse_and_divisibility(dims, names):
+    spec = pspec_for(dims, names[:len(dims)], MAP, MESH)
+    used = []
+    sizes = {"data": 16, "model": 16}
+    for dim, entry in zip(dims, tuple(spec)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            assert a not in used, "mesh axis assigned twice"
+            used.append(a)
+            prod *= sizes[a]
+        assert dim % prod == 0, "non-divisible sharding emitted"

@@ -1,0 +1,85 @@
+"""End-to-end behaviour of the whole system: the paper's pipeline (datagen
+through the data server -> SFT -> RL) at smoke scale, plus the dry-run path
+on reduced configs (spawned as a subprocess so the 512-device XLA flag never
+leaks into this process)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CowStore, DiskImage, DataServer, FaultInjector,
+                        Gateway, RunnerPool)
+from repro.core.tasks import TaskSuite
+from repro.configs import get_reduced
+from repro.data import (ByteTokenizer, Trajectory, TrajectoryStep,
+                        encode_trajectory, pack_batches)
+from repro.models import build_model
+from repro.train.sft import SFTTrainer
+from repro.serve import ServeEngine, ServeConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def collect_trajectories(n_tasks=6, seed=0):
+    store = CowStore(block_size=1 << 20)
+    base = DiskImage.create_base(store, "ubuntu", 64 << 20)
+    pools = [RunnerPool(f"n{i}", base, size=4,
+                        faults=FaultInjector(seed=seed + i), seed=i)
+             for i in range(2)]
+    ds = DataServer(Gateway(pools), max_workers=8)
+    tasks = [t.to_dict() for t in TaskSuite(seed=seed).sample(n_tasks)]
+    ds.reset(tasks)
+    trajs = {s: [] for s in ds.live_slots()}
+    actions = ["click(10,20)", "type('x')", "scroll(-1)"]
+    for it in range(30):
+        live = ds.live_slots()
+        if not live:
+            break
+        res = ds.step({s: actions[it % 3] for s in live})
+        for s, (obs, rew, done, info) in res.items():
+            trajs[s].append(TrajectoryStep(obs, f"thought {it}",
+                                           actions[it % 3]))
+    scores = ds.evaluate()
+    out = [Trajectory(f"t{s}", f"task {s}", steps, scores.get(s, 0.0))
+           for s, steps in trajs.items() if steps]
+    ds.close()
+    return out
+
+
+def test_end_to_end_datagen_sft_serve():
+    """The paper's §4.2 pipeline at smoke scale."""
+    trajs = collect_trajectories()
+    assert len(trajs) >= 4
+    cfg = get_reduced("qwen3-1.7b")
+    tok = ByteTokenizer()
+    enc = [encode_trajectory(t, tok, cfg.vocab_size) for t in trajs]
+    batches = list(pack_batches(enc, batch=2, seq_len=48))
+    assert batches
+    model = build_model(cfg)
+    trainer = SFTTrainer(model, seed=0)
+    res = trainer.fit(batches[:25], verbose=False)
+    assert res.steps > 5
+    assert res.final_loss < res.losses[0]          # it learns
+    eng = ServeEngine(model, trainer.params)
+    out = eng.generate(np.asarray(batches[0]["tokens"][:1, :16]),
+                       cfg=ServeConfig(max_new_tokens=4))
+    assert out["sequences"].shape == (1, 20)
+
+
+@pytest.mark.slow
+def test_dryrun_reduced_subprocess():
+    """The dry-run path itself (512 fake devices) on a reduced config."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen3-1.7b",
+         "--shape", "decode_32k", "--mesh", "single", "--reduced",
+         "--no-save"],
+        capture_output=True, text=True, timeout=540, env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "dry-run complete" in proc.stdout
