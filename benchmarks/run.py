@@ -11,7 +11,7 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks import paper_tables, roofline
+from benchmarks import paper_tables, roofline, throughput
 
 OUTDIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
@@ -25,6 +25,8 @@ def main() -> None:
         ("table1_cost", paper_tables.table1_cost),
         ("table2_cow", paper_tables.table2_cow),
         ("table3_datagen", paper_tables.table3_datagen),
+        ("rollout_throughput",
+         lambda: throughput.throughput_table(seeds=2, sim_seconds=120.0)),
         ("roofline_single_pod", lambda: roofline.report("16_16")),
         ("roofline_multi_pod", lambda: roofline.report("2_16_16")),
     ]

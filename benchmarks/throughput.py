@@ -1,0 +1,194 @@
+"""Trajectory-generation throughput in virtual time (§4, Figure 6 left).
+
+Measures **trajectories per minute** versus replica count for the three
+state-management designs. Episodes are structured by the scenario
+registry's per-family profiles (configure/reset/evaluate overhead, horizon
+range, step latency), so the workload mix matches Table 3 rather than one
+synthetic task. Dispatcher queueing for the centralized / semi baselines
+reuses the M/M/1 model calibrated in ``core/simulation.py``; the run is
+entirely in virtual time, so 1024 replicas simulate in seconds on one CPU.
+
+Designs are compared with common random numbers: the same workload stream
+(scenario draws, horizons, per-step base latencies) is priced under each
+design, so the measured difference is exactly the dispatch overhead, not
+sampling noise.
+
+    PYTHONPATH=src python benchmarks/throughput.py --sizes 64 256 1024
+
+The module asserts the paper's headline ordering: the decentralized design
+strictly outperforms the centralized baseline at every fleet size.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import statistics
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core.simulation import SimConfig, dispatch_extra
+from repro.rollout.scenarios import ScenarioRegistry, get_default_registry
+
+DESIGNS = ("centralized", "semi", "decentralized")
+DEFAULT_SIZES = (64, 256, 1024)
+
+
+def _lane_workload(wl: random.Random, registry: ScenarioRegistry,
+                   sim_seconds: float) -> list[tuple[float, list[float], str]]:
+    """One replica's episode stream: (overhead_s, per-step base latencies,
+    scenario family). Design-independent — dispatch extras are priced later.
+    Generates enough episodes to cover the window even with zero overhead."""
+    scenarios = list(registry)
+    weights = [s.weight for s in scenarios]
+    episodes = []
+    floor = 0.0                   # minimum possible time consumed so far
+    while floor < sim_seconds:
+        s = wl.choices(scenarios, weights=weights, k=1)[0]
+        p = s.profile
+        overhead = ((p.configure_s + p.reset_s + p.evaluate_s)
+                    * wl.lognormvariate(0, p.step_sigma))
+        steps = [p.step_mean_s * wl.lognormvariate(0, p.step_sigma)
+                 for _ in range(wl.randint(*p.horizon))]
+        episodes.append((overhead, steps, s.family))
+        floor += overhead + sum(steps)
+    return episodes
+
+
+def _price(episodes, design: str, *, n_replicas: int,
+           per_replica_rate: float, cfg: SimConfig, dx: random.Random,
+           sim_seconds: float) -> tuple[int, list[float]]:
+    """Walk one lane's workload under a design; return (completed within the
+    window, all episode durations)."""
+    completed = 0
+    durations = []
+    t = 0.0
+    for overhead, steps, _family in episodes:
+        dur = overhead
+        for base in steps:
+            dur += base + dispatch_extra(design, n_replicas,
+                                         per_replica_rate, cfg, dx)
+        durations.append(dur)
+        t += dur
+        if t < sim_seconds:
+            completed += 1
+    return completed, durations
+
+
+def run_throughput_matrix(n_replicas: int, *, sim_seconds: float = 300.0,
+                          seed: int = 0,
+                          registry: ScenarioRegistry = None,
+                          cfg: SimConfig = None,
+                          designs=DESIGNS) -> dict[str, dict]:
+    """Price one common workload under every design. Returns design -> row."""
+    registry = registry or get_default_registry()
+    cfg = cfg or SimConfig()
+    wl = random.Random((seed, n_replicas).__hash__() & 0x7FFFFFFF)
+    lanes = [_lane_workload(wl, registry, sim_seconds)
+             for _ in range(n_replicas)]
+    # each replica issues one op per (mean episode seconds / mean steps
+    # per episode); dispatch_extra scales this to the fleet or group
+    per_replica_rate = (registry.mean_steps_per_trajectory()
+                        / registry.mean_trajectory_s())
+    out = {}
+    for design in designs:
+        dx = random.Random((seed, n_replicas, design).__hash__() & 0x7FFFFFFF)
+        total_completed = 0
+        all_durations = []
+        for lane in lanes:
+            done, durs = _price(lane, design, n_replicas=n_replicas,
+                                per_replica_rate=per_replica_rate, cfg=cfg,
+                                dx=dx, sim_seconds=sim_seconds)
+            total_completed += done
+            all_durations.extend(durs)
+        mean_ep = statistics.fmean(all_durations)
+        out[design] = {
+            "design": design, "replicas": n_replicas,
+            # steady-state rate: every lane completes one episode per mean_ep
+            "traj_per_min": n_replicas * 60.0 / mean_ep,
+            "completed_in_window": total_completed,
+            "episode_mean_s": mean_ep,
+        }
+    return out
+
+
+def sweep(sizes=DEFAULT_SIZES, designs=DESIGNS, *, seeds: int = 3,
+          sim_seconds: float = 300.0,
+          registry: ScenarioRegistry = None) -> list[dict]:
+    registry = registry or get_default_registry()
+    rows = []
+    for n in sizes:
+        runs = [run_throughput_matrix(n, seed=s, sim_seconds=sim_seconds,
+                                      registry=registry, designs=designs)
+                for s in range(seeds)]
+        for design in designs:
+            per = [r[design] for r in runs]
+            rows.append({
+                "design": design, "replicas": n,
+                "traj_per_min_mean": statistics.fmean(
+                    r["traj_per_min"] for r in per),
+                "traj_per_min_std": statistics.pstdev(
+                    [r["traj_per_min"] for r in per]),
+                "episode_mean_s": statistics.fmean(
+                    r["episode_mean_s"] for r in per),
+                "completed_in_window": sum(
+                    r["completed_in_window"] for r in per),
+            })
+    return rows
+
+
+def assert_decentralized_wins(rows: list[dict]) -> None:
+    """The paper's headline claim, checked at every fleet size."""
+    by = {(r["design"], r["replicas"]): r["traj_per_min_mean"] for r in rows}
+    sizes = sorted({r["replicas"] for r in rows})
+    for n in sizes:
+        dec, cen = by[("decentralized", n)], by[("centralized", n)]
+        assert dec > cen, (
+            f"decentralized ({dec:.1f} traj/min) must beat centralized "
+            f"({cen:.1f}) at {n} replicas")
+        semi = by.get(("semi", n))
+        if semi is not None:
+            assert dec > semi, (
+                f"decentralized ({dec:.1f}) must beat semi ({semi:.1f}) "
+                f"at {n} replicas")
+
+
+def throughput_table(sizes=DEFAULT_SIZES, seeds: int = 3,
+                     sim_seconds: float = 300.0):
+    """(rows, derived) in the paper_tables convention for benchmarks/run.py."""
+    rows = sweep(sizes, seeds=seeds, sim_seconds=sim_seconds)
+    assert_decentralized_wins(rows)
+    by = {(r["design"], r["replicas"]): r for r in rows}
+    top = by[("decentralized", max(sizes))]
+    cen = by[("centralized", max(sizes))]
+    derived = (f"decentralized {top['traj_per_min_mean']:,.0f} traj/min at "
+               f"{top['replicas']} replicas (paper: ~1420) — "
+               f"{top['traj_per_min_mean'] / cen['traj_per_min_mean']:.1f}x "
+               f"the centralized baseline")
+    return rows, derived
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sizes", type=int, nargs="+", default=list(DEFAULT_SIZES))
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--sim-seconds", type=float, default=300.0)
+    args = ap.parse_args()
+    assert len(args.sizes) >= 3, "report at least 3 replica-count settings"
+
+    rows, derived = throughput_table(tuple(args.sizes), seeds=args.seeds,
+                                     sim_seconds=args.sim_seconds)
+    print(f"{'design':>14} {'replicas':>9} {'traj/min':>10} "
+          f"{'±std':>7} {'episode_s':>10}")
+    for r in rows:
+        print(f"{r['design']:>14} {r['replicas']:>9} "
+              f"{r['traj_per_min_mean']:>10.1f} "
+              f"{r['traj_per_min_std']:>7.1f} "
+              f"{r['episode_mean_s']:>10.1f}")
+    print(derived)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,33 +1,34 @@
-"""Parallel demonstration collection (§4.2 stage 1): agents drive OS replicas
-through the data server; trajectories (screenshot/thought/action) are encoded
-for SFT. Real threaded execution at laptop scale + the 1024-replica
-virtual-time projection the paper reports.
+"""Parallel demonstration collection (§4.2 stage 1) on the rollout engine.
 
-    PYTHONPATH=src python examples/collect_trajectories.py --tasks 12
+Scenario-diverse multi-turn episodes run concurrently through
+``RolloutEngine`` (bounded in-flight scheduling, failover on faults) over
+the gateway/runner-pool stack; the ``TrajectoryWriter`` streams every
+completed episode — encoded for SFT — into the replay buffer, and the
+example finishes by packing a training batch from it, proving the full
+collect → encode → buffer → batch path. Real threaded execution at laptop
+scale + the 1024-replica virtual-time projection the paper reports.
+
+    PYTHONPATH=src python examples/collect_trajectories.py --tasks 16
 """
 import argparse
-import time
+from collections import Counter
 
-from repro.core import (CowStore, DiskImage, DataServer, FaultInjector,
-                        Gateway, RunnerPool)
-from repro.core.replica import LatencyModel
-from repro.core.tasks import TaskSuite, TABLE3_ROWS
-from repro.data import Trajectory, TrajectoryStep, ByteTokenizer, \
-    encode_trajectory
+from repro.core import (CowStore, DiskImage, FaultInjector, Gateway,
+                        RunnerPool)
+from repro.data import ByteTokenizer
+from repro.data.pipeline import pack_batches
+from repro.data.replay_buffer import ReplayBuffer
+from repro.rollout import (RolloutConfig, RolloutEngine, TrajectoryWriter,
+                           get_default_registry)
 
-
-def scripted_agent(obs, step_idx):
-    """Stand-in for UI-TARS / Agent-S: deterministic scripted policy."""
-    actions = ["click(120, 84)", "type('quarterly report')", "scroll(-2)",
-               "key('ctrl+s')", "drag(40, 40, 200, 90)"]
-    thought = f"The screen shows state {obs.sum() % 997}; next I will act."
-    return thought, actions[step_idx % len(actions)]
+VOCAB = 151936
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tasks", type=int, default=12)
+    ap.add_argument("--tasks", type=int, default=16)
     ap.add_argument("--replicas", type=int, default=16)
+    ap.add_argument("--max-inflight", type=int, default=12)
     args = ap.parse_args()
 
     store = CowStore()
@@ -35,47 +36,53 @@ def main():
     pools = [RunnerPool(f"node{i}", base, size=args.replicas // 2,
                         faults=FaultInjector(enabled=True, seed=i), seed=i)
              for i in range(2)]
-    server = DataServer(Gateway(pools), max_workers=args.replicas)
-    tasks = [t.to_dict() for t in TaskSuite(seed=0).sample(args.tasks)]
+    gateway = Gateway(pools)
 
-    t0 = time.time()
-    obs0 = server.reset(tasks)
-    trajs: dict[int, list] = {o["slot"]: [] for o in obs0}
-    last_obs = {o["slot"]: o["obs"] for o in obs0}
-    virtual_s = 0.0
-    it = 0
-    while server.live_slots():
-        pending = {}
-        for s in server.live_slots():
-            pending[s] = scripted_agent(last_obs[s], it)
-        results = server.step({s: a for s, (_, a) in pending.items()})
-        for s, (obs, rew, done, info) in results.items():
-            thought, action = pending[s]
-            trajs[s].append(TrajectoryStep(obs, thought, action))
-            last_obs[s] = obs
-        it += 1
-    scores = server.evaluate()
-    wall = time.time() - t0
-    for ep in list(trajs):
-        virtual_s += server.episode(ep).virtual_seconds
+    registry = get_default_registry()
+    replay = ReplayBuffer(capacity=4096)
+    writer = TrajectoryWriter(replay=replay, tokenizer=ByteTokenizer(),
+                              vocab_size=VOCAB, capacity=128)
+    engine = RolloutEngine(
+        gateway, writer, registry=registry,
+        config=RolloutConfig(max_inflight=args.max_inflight))
 
-    out = [Trajectory(t["task_id"], t["description"], steps,
-                      scores.get(slot, 0.0))
-           for (slot, steps), t in zip(trajs.items(), tasks)]
-    tok = ByteTokenizer()
-    enc = [encode_trajectory(t, tok, 151936) for t in out]
-    n_steps = sum(len(t.steps) for t in out)
-    n_tokens = sum(len(ids) for ids, _ in enc)
+    tasks = registry.sample(args.tasks, seed=0)
+    report = engine.run(tasks)
+    writer.drain()
 
-    print(f"collected {len(out)} trajectories / {n_steps} steps / "
-          f"{n_tokens} tokens in {wall:.1f}s wall")
-    print(f"virtual env time: {virtual_s:,.0f}s "
-          f"({virtual_s / max(n_steps,1):.1f}s/step — paper: ~2s/step)")
-    rate_1024 = 1024 * 60 / (virtual_s / max(len(out), 1))
-    print(f"projected 1024-replica rate: {rate_1024:,.0f} trajectories/min "
+    families = Counter(registry.resolve(r.task).family
+                       for r in report.results if r.ok)
+    print(f"collected {report.completed} trajectories "
+          f"({report.failed} failed) / {report.total_steps} steps / "
+          f"{writer.stats.encoded_tokens} tokens "
+          f"in {report.wall_seconds:.1f}s wall")
+    print(f"scenario mix: {dict(families)}")
+    print(f"fault recovery: {report.reassignments} reassignments, "
+          f"peak in-flight {report.peak_inflight} "
+          f"(bound {args.max_inflight}), "
+          f"{report.backpressure_waits} backpressure waits")
+    vs = report.virtual_seconds
+    print(f"virtual env time: {vs:,.0f}s "
+          f"({vs / max(report.total_steps, 1):.1f}s/step — paper: ~2s/step)")
+    print(f"projected 1024-replica rate: "
+          f"{report.trajectories_per_min(1024):,.0f} trajectories/min "
           f"(paper: ~1420)")
-    print("telemetry:", server.telemetry.snapshot()["counters"])
-    server.close()
+
+    # prove the SFT/PPO consumption path: replay buffer -> packed batch
+    sample = replay.sample(min(8, len(replay)))
+    encoded = [(item["tokens"], item["loss_mask"]) for item in sample]
+    batch = next(pack_batches(encoded, batch=2, seq_len=512), None)
+    if batch is not None:
+        print(f"packed training batch: tokens {batch['tokens'].shape}, "
+              f"loss on {batch['mask'].mean():.0%} of targets")
+    print(f"replay buffer: {len(replay)} items "
+          f"({replay.total_added} added total)")
+    print("telemetry:", engine.telemetry.snapshot()["counters"])
+
+    writer.close()
+    gateway.stop()
+    for p in pools:
+        p.close()
 
 
 if __name__ == "__main__":

@@ -5,7 +5,7 @@ single-entry data server."""
 from repro.core.cow_store import CowStore, DiskImage, BlobStore
 from repro.core.data_server import DataServer
 from repro.core.faults import FaultInjector, FaultType, ReplicaError, RetryPolicy
-from repro.core.gateway import Gateway
+from repro.core.gateway import Gateway, NoRunnerAvailable
 from repro.core.replica import SimOSReplica, LatencyModel
 from repro.core.runner_pool import RunnerPool, SimHost, HostSpec, ResourceGuard
 from repro.core.state_manager import (ReplicaStateManager, TaskAborted,

@@ -1,15 +1,21 @@
 """Gateway layer (§3.4): task-affinity routing across executor nodes,
 periodic background health checks, automatic failover when a node becomes
-unreachable."""
+unreachable, and a non-blocking submit API for asynchronous rollout.
+"""
 from __future__ import annotations
 
 import hashlib
 import threading
 import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Collection, Optional
 
 from repro.core.runner_pool import Runner, RunnerPool
+
+
+class NoRunnerAvailable(RuntimeError):
+    """No healthy node could supply a free runner within the timeout."""
 
 
 @dataclass
@@ -34,6 +40,8 @@ class Gateway:
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._pool_executor: Optional[ThreadPoolExecutor] = None
+        self._stopped = False
         self.failovers = 0
         if start_background:
             self.start()
@@ -48,11 +56,18 @@ class Gateway:
         start = h % len(nodes)
         return nodes[start:] + nodes[:start]
 
-    def acquire(self, task_id: str, timeout: Optional[float] = 1.0
+    def acquire(self, task_id: str, timeout: Optional[float] = 1.0,
+                exclude: Collection[str] = ()
                 ) -> Optional[tuple[str, Runner]]:
-        """Acquire a runner, honoring affinity and skipping unhealthy nodes."""
+        """Acquire a runner, honoring affinity and skipping unhealthy nodes.
+
+        ``exclude`` removes specific nodes from consideration — used by the
+        rollout engine to fail an aborted episode over to a *different* node
+        even when the faulty one still reports healthy."""
         order = self._affinity_order(task_id)
         for attempt, node in enumerate(order):
+            if node in exclude:
+                continue
             with self._lock:
                 healthy = self.status[node].healthy
             if not healthy:
@@ -60,12 +75,59 @@ class Gateway:
             r = self.pools[node].acquire(task_id, timeout=timeout)
             if r is not None:
                 if attempt > 0:
-                    self.failovers += 1
+                    with self._lock:
+                        self.failovers += 1
                 return node, r
         return None
 
+    def try_acquire(self, task_id: str, exclude: Collection[str] = ()
+                    ) -> Optional[tuple[str, Runner]]:
+        """Non-blocking acquire: returns immediately, None if nothing free."""
+        return self.acquire(task_id, timeout=0.0, exclude=exclude)
+
     def release(self, node: str, runner: Runner, **kw) -> float:
         return self.pools[node].release(runner, **kw)
+
+    # ----------------------------------------------------- async submission
+    def _executor(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError("gateway stopped; no new submissions")
+            if self._pool_executor is None:
+                workers = max(sum(p.size for p in self.pools.values()), 1)
+                self._pool_executor = ThreadPoolExecutor(
+                    max_workers=workers, thread_name_prefix="gateway")
+            return self._pool_executor
+
+    def submit(self, task_id: str,
+               fn: Callable[[str, Runner], object], *,
+               acquire_timeout: Optional[float] = 5.0,
+               exclude: Collection[str] = ()) -> Future:
+        """Non-blocking task submission.
+
+        Acquires a runner asynchronously (affinity + failover as in
+        ``acquire``) and runs ``fn(node, runner)`` on it, releasing the
+        runner afterwards regardless of outcome. Returns a ``Future`` that
+        resolves to ``fn``'s result, or raises ``NoRunnerAvailable`` if no
+        node could supply a runner within ``acquire_timeout``. The caller
+        never blocks on submission. This is the general-purpose async entry
+        point for external callers; ``RolloutEngine`` manages runner
+        lifetimes itself via ``acquire(exclude=...)``/``release`` because
+        its failover retries and release-before-write ordering need finer
+        control than the acquire-run-release wrapper offers."""
+
+        def job():
+            got = self.acquire(task_id, timeout=acquire_timeout,
+                               exclude=exclude)
+            if got is None:
+                raise NoRunnerAvailable(task_id)
+            node, runner = got
+            try:
+                return fn(node, runner)
+            finally:
+                self.release(node, runner)
+
+        return self._executor().submit(job)
 
     # ------------------------------------------------------- health checks
     def check_now(self) -> dict:
@@ -102,6 +164,8 @@ class Gateway:
         if self._thread is not None:
             return
         self._stop.clear()
+        with self._lock:
+            self._stopped = False
 
         def loop():
             while not self._stop.wait(self.health_interval_s):
@@ -116,6 +180,11 @@ class Gateway:
         if self._thread is not None:
             self._thread.join(timeout=2.0)
             self._thread = None
+        with self._lock:
+            self._stopped = True
+            ex, self._pool_executor = self._pool_executor, None
+        if ex is not None:
+            ex.shutdown(wait=True)
 
     def healthy_nodes(self) -> list[str]:
         with self._lock:

@@ -39,12 +39,32 @@ def _mm1_wait(arrival_rate: float, service_s: float,
     return max(rng.gauss(wait, 0.1 * wait), 0.0) + service_s
 
 
+def dispatch_extra(design: str, n_replicas: int, per_replica_rate: float,
+                   cfg: SimConfig, rng: random.Random) -> float:
+    """Per-op dispatcher overhead for one manager design.
+
+    ``per_replica_rate`` is each replica's op issue rate (ops/s); the
+    centralized dispatcher sees the whole fleet's arrivals, the semi
+    variant one group's plus an inter-group sync term, the decentralized
+    design pays only the service time. Shared by the Fig-6 step-throughput
+    sweep and the trajectory-throughput benchmark so the pricing model
+    cannot drift between them."""
+    if design == "centralized":
+        return _mm1_wait(n_replicas * per_replica_rate,
+                         cfg.dispatch_service_s, rng)
+    if design == "semi":
+        group_rate = (min(cfg.semi_group_size, n_replicas)
+                      * per_replica_rate)
+        return (_mm1_wait(group_rate, cfg.dispatch_service_s, rng)
+                + cfg.inter_group_sync_s)
+    return cfg.dispatch_service_s
+
+
 def run_throughput(n_replicas: int, design: str, *, sim_seconds: float = 120.0,
                    seed: int = 0, cfg: Optional[SimConfig] = None) -> dict:
     """Simulate `sim_seconds` of fleet operation; return throughput/latency."""
     cfg = cfg or SimConfig()
     rng = random.Random((seed, n_replicas, design).__hash__() & 0x7FFFFFFF)
-    step_rate = n_replicas / cfg.step_mean_s     # fleet-wide op arrival rate
 
     total_steps = 0
     latencies = []
@@ -52,15 +72,8 @@ def run_throughput(n_replicas: int, design: str, *, sim_seconds: float = 120.0,
         t = rng.uniform(0, cfg.step_mean_s)      # desynchronized start
         while t < sim_seconds:
             step = cfg.step_mean_s * rng.lognormvariate(0, cfg.step_sigma)
-            if design == "centralized":
-                extra = _mm1_wait(step_rate, cfg.dispatch_service_s, rng)
-            elif design == "semi":
-                group_rate = (min(cfg.semi_group_size, n_replicas)
-                              / cfg.step_mean_s)
-                extra = (_mm1_wait(group_rate, cfg.dispatch_service_s, rng)
-                         + cfg.inter_group_sync_s)
-            else:                               # decentralized
-                extra = cfg.dispatch_service_s
+            extra = dispatch_extra(design, n_replicas, 1.0 / cfg.step_mean_s,
+                                   cfg, rng)
             lat = step + extra
             t += lat
             if t < sim_seconds:

@@ -1,9 +1,13 @@
-"""Universally diverse tasks with a unified flow (§3.5, Table 3).
+"""Task specs with a unified four-phase flow (§3.5, Table 3).
 
-Every task follows the four-phase flow the paper defines — configure, reset,
-operate, evaluate — regardless of domain. The suite mirrors Table 3's ten
-application domains with the paper's trajectory statistics (10-25 steps per
-trajectory), so the datagen benchmark can reproduce the table.
+Every task follows the flow the paper defines — configure, reset, operate,
+evaluate — regardless of domain. This module holds the low-level
+``TaskSpec`` record and the Table-3 statistics; the scenario *families*
+that generate specs (with per-family latency profiles and scripted
+policies) live in ``repro.rollout.scenarios.ScenarioRegistry``.
+``TaskSuite`` is kept as a thin compatibility shim over the default
+registry so existing callers and the Table-3 datagen benchmark keep
+working unchanged.
 """
 from __future__ import annotations
 
@@ -34,38 +38,42 @@ class TaskSpec:
     description: str
     horizon: int                      # steps per trajectory (10-25)
     setup_software: tuple = ()
+    scenario: str = ""                # registry name; "" for legacy tasks
 
     def to_dict(self) -> dict:
         return {"task_id": self.task_id, "task_type": self.task_type,
                 "domain": self.domain, "description": self.description,
-                "horizon": self.horizon}
+                "horizon": self.horizon, "scenario": self.scenario}
 
 
 class TaskSuite:
-    """Generates task specs matching Table 3's domain mix."""
+    """Generates task specs matching Table 3's domain mix.
+
+    Compatibility shim: sampling is delegated to the default
+    ``ScenarioRegistry`` (imported lazily — ``repro.rollout`` depends on
+    this module at import time, not vice versa)."""
 
     def __init__(self, seed: int = 0):
-        self._rng = random.Random(seed)
+        self._seed = seed
+        self._calls = 0
+
+    @staticmethod
+    def _registry():
+        from repro.rollout.scenarios import get_default_registry
+        return get_default_registry()
 
     def sample(self, n: int) -> list[TaskSpec]:
-        weights = [r[3] for r in TABLE3_ROWS]   # trajectory counts
-        rows = self._rng.choices(TABLE3_ROWS, weights=weights, k=n)
-        out = []
-        for i, (ttype, domain, desc, _t, _s) in enumerate(rows):
-            horizon = self._rng.randint(10, 25)
-            out.append(TaskSpec(
-                task_id=f"{domain.replace(' ', '_').lower()}-{i}",
-                task_type=ttype, domain=domain, description=desc,
-                horizon=horizon, setup_software=(domain,)))
-        return out
+        self._calls += 1
+        return self._registry().sample(
+            n, seed=(self._seed, self._calls).__hash__() & 0x7FFFFFFF)
 
     def by_domain(self, domain: str, n: int) -> list[TaskSpec]:
-        row = next(r for r in TABLE3_ROWS if r[1] == domain)
-        return [TaskSpec(
-            task_id=f"{domain.replace(' ', '_').lower()}-{i}",
-            task_type=row[0], domain=domain, description=row[2],
-            horizon=self._rng.randint(10, 25), setup_software=(domain,))
-            for i in range(n)]
+        reg = self._registry()
+        scenario = next(s for s in reg if s.domain == domain)
+        self._calls += 1
+        return reg.tasks_for(
+            scenario.name, n,
+            seed=(self._seed, self._calls).__hash__() & 0x7FFFFFFF)
 
     @staticmethod
     def domains() -> list[str]:

@@ -1,0 +1,12 @@
+"""Asynchronous trajectory-generation subsystem (§4 pipeline).
+
+``RolloutEngine`` schedules bounded concurrent multi-turn episodes over the
+gateway/runner-pool stack, ``ScenarioRegistry`` supplies diverse registered
+workload families, and ``TrajectoryWriter`` streams completed episodes into
+the SFT/PPO data pipeline."""
+from repro.rollout.engine import (EpisodeResult, RolloutConfig, RolloutEngine,
+                                  RolloutReport)
+from repro.rollout.scenarios import (Scenario, ScenarioProfile,
+                                     ScenarioRegistry, default_registry,
+                                     get_default_registry)
+from repro.rollout.writer import TrajectoryWriter, WriterStats

@@ -1,0 +1,262 @@
+"""Asynchronous trajectory-generation engine (§4, Figure 6 pipeline).
+
+Drives many concurrent multi-turn episodes over the ``Gateway`` /
+``RunnerPool`` stack:
+
+- **bounded in-flight scheduler** — at most ``max_inflight`` episodes hold
+  worker slots at once; submission beyond that blocks the feeder, never
+  the workers;
+- **backpressure** — before launching an episode the scheduler waits while
+  the ``TrajectoryWriter`` backlog is at its high-water mark, so a slow
+  consumer (encoder / replay buffer / learner) throttles generation
+  instead of ballooning memory;
+- **retry-with-failover** — an episode aborted by the fault machinery
+  (``TaskAborted``: crash/hang, or retry exhaustion) is re-dispatched to a
+  *different* node (the aborting node is excluded from the next attempt's
+  affinity order) up to ``max_attempts`` times; the broken runner goes back
+  to its pool, which recovers it autonomously.
+
+Episodes follow the paper's unified four-phase task flow: configure →
+reset → operate (policy loop) → evaluate.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.core.gateway import Gateway
+from repro.core.state_manager import TaskAborted
+from repro.core.tasks import TaskSpec
+from repro.core.telemetry import Telemetry
+from repro.data.pipeline import Trajectory, TrajectoryStep
+from repro.rollout.scenarios import Scenario, ScenarioRegistry, \
+    get_default_registry
+from repro.rollout.writer import TrajectoryWriter
+
+
+@dataclass
+class RolloutConfig:
+    max_inflight: int = 16          # bounded worker slots
+    max_attempts: int = 4           # episode tries incl. first (failover)
+    acquire_timeout_s: float = 5.0  # wait for a free runner per attempt
+    backpressure_poll_s: float = 0.01
+    max_steps: Optional[int] = None  # safety cap above task horizon
+
+
+@dataclass
+class EpisodeResult:
+    task: dict
+    ok: bool
+    steps: int = 0
+    score: float = 0.0
+    attempts: int = 1
+    nodes: tuple = ()
+    virtual_seconds: float = 0.0
+    error: str = ""
+
+
+@dataclass
+class RolloutReport:
+    completed: int = 0
+    failed: int = 0
+    total_steps: int = 0
+    reassignments: int = 0
+    peak_inflight: int = 0
+    backpressure_waits: int = 0
+    virtual_seconds: float = 0.0    # summed per-episode env time
+    wall_seconds: float = 0.0
+    results: list[EpisodeResult] = field(default_factory=list)
+
+    def trajectories_per_min(self, n_replicas: int) -> float:
+        """Virtual-time throughput projection: ``n_replicas`` lanes running
+        episodes back-to-back yield completed trajectories at the observed
+        completions-per-lane-second rate (failed episodes consume time but
+        produce nothing)."""
+        if not self.completed or self.virtual_seconds <= 0:
+            return 0.0
+        return n_replicas * 60.0 * self.completed / self.virtual_seconds
+
+
+class RolloutEngine:
+    """Bounded asynchronous scheduler for multi-turn episode generation."""
+
+    def __init__(self, gateway: Gateway, writer: TrajectoryWriter, *,
+                 registry: Optional[ScenarioRegistry] = None,
+                 config: Optional[RolloutConfig] = None,
+                 telemetry: Optional[Telemetry] = None):
+        self.gateway = gateway
+        self.writer = writer
+        self.registry = registry or get_default_registry()
+        self.config = config or RolloutConfig()
+        self.telemetry = telemetry or Telemetry()
+        self._inflight = 0
+        self._lock = threading.Lock()
+        self._report = RolloutReport()
+        self._stop = threading.Event()
+
+    # ---------------------------------------------------------------- public
+    def run(self, tasks: Sequence) -> RolloutReport:
+        """Generate one trajectory per task; returns when all are settled.
+
+        ``tasks`` may be ``TaskSpec`` objects or plain dicts
+        (``TaskSpec.to_dict`` shape)."""
+        cfg = self.config
+        self._report = RolloutReport()
+        self._stop.clear()
+        t0 = time.monotonic()
+        task_dicts = [t.to_dict() if isinstance(t, TaskSpec) else dict(t)
+                      for t in tasks]
+        with ThreadPoolExecutor(max_workers=cfg.max_inflight,
+                                thread_name_prefix="rollout") as ex:
+            futs = []
+            for task in task_dicts:
+                self._throttle()
+                if self._stop.is_set():
+                    break
+                # claim the slot feeder-side so the in-flight bound and the
+                # writer-saturation gate apply to *launches*, not to whenever
+                # the executor happens to start the episode
+                self._enter()
+                futs.append(ex.submit(self._episode_with_failover, task))
+            for f in futs:
+                f.result()      # episode errors are captured, not raised
+        self._report.wall_seconds = time.monotonic() - t0
+        return self._report
+
+    def stop(self) -> None:
+        """Ask the feeder to stop launching new episodes."""
+        self._stop.set()
+
+    @property
+    def stats(self) -> RolloutReport:
+        return self._report
+
+    # ------------------------------------------------------------- scheduling
+    def _throttle(self) -> None:
+        """Backpressure: hold the feeder while the writer backlog is high
+        or every worker slot is busy."""
+        cfg = self.config
+        waited = False
+        while not self._stop.is_set():
+            with self._lock:
+                slots_free = self._inflight < cfg.max_inflight
+            if slots_free and not self.writer.saturated():
+                break
+            if not waited:
+                waited = True
+                with self._lock:
+                    self._report.backpressure_waits += 1
+                self.telemetry.count("backpressure_waits")
+            time.sleep(cfg.backpressure_poll_s)
+
+    def _enter(self) -> None:
+        with self._lock:
+            self._inflight += 1
+            self._report.peak_inflight = max(self._report.peak_inflight,
+                                             self._inflight)
+
+    def _exit(self) -> None:
+        with self._lock:
+            self._inflight -= 1
+
+    # --------------------------------------------------------------- episodes
+    def _episode_with_failover(self, task: dict) -> EpisodeResult:
+        cfg = self.config
+        # the feeder already claimed this episode's slot via _enter()
+        result = EpisodeResult(task=task, ok=False)
+        excluded: set[str] = set()
+        traj = None
+        try:
+            scenario = self.registry.resolve(task)
+            for attempt in range(cfg.max_attempts):
+                result.attempts = attempt + 1
+                got = self.gateway.acquire(
+                    task["task_id"], timeout=cfg.acquire_timeout_s,
+                    exclude=excluded)
+                if got is None and excluded:
+                    # every other node is busy/unhealthy: fall back to the
+                    # full fleet rather than deadlocking on exclusions
+                    excluded.clear()
+                    got = self.gateway.acquire(
+                        task["task_id"], timeout=cfg.acquire_timeout_s)
+                if got is None:
+                    result.error = f"no runner available ({task['task_id']})"
+                    break
+                node, runner = got
+                result.nodes += (node,)
+                try:
+                    traj, steps, score, vs = self._attempt(
+                        task, scenario, runner)
+                    result.ok = True
+                    result.steps = steps
+                    result.score = score
+                    result.virtual_seconds += vs
+                    break
+                except TaskAborted as e:
+                    result.virtual_seconds += e.virtual_seconds
+                    result.error = str(e)
+                    excluded.add(node)
+                    with self._lock:
+                        self._report.reassignments += 1
+                    self.telemetry.count("task_reassignments")
+                finally:
+                    # pool recycles (and autonomously recovers) the runner
+                    self.gateway.release(node, runner)
+            if traj is not None:
+                # runner already released: a blocking write under
+                # backpressure must not idle fleet capacity
+                self.writer.write(traj)
+                self.telemetry.count("episodes_completed")
+            return result
+        except Exception as e:   # keep one bad episode from sinking the run
+            result.error = f"{type(e).__name__}: {e}"
+            return result
+        finally:
+            self._exit()
+            self._settle(result)
+
+    def _attempt(self, task: dict, scenario: Scenario, runner
+                 ) -> tuple[Trajectory, int, float, float]:
+        """One full configure → reset → operate → evaluate pass."""
+        cfg = self.config
+        mgr = runner.manager
+        vs = 0.0
+        try:
+            vs = mgr.configure(task)
+            obs, dur = mgr.reset()
+            vs += dur
+            steps: list[TrajectoryStep] = []
+            horizon = int(task.get("horizon", 15))
+            cap = cfg.max_steps or horizon * 2
+            done = False
+            while not done and len(steps) < cap:
+                thought, action = scenario.policy(obs, len(steps))
+                obs, _rew, done, _info, dur = mgr.step(action)
+                vs += dur
+                steps.append(TrajectoryStep(obs, thought, action))
+                self.telemetry.count("steps")
+                self.telemetry.observe("step_latency_vs", dur)
+            score, dur = mgr.evaluate()
+            vs += dur
+        except TaskAborted as e:
+            # charge the attempt's configure/reset and completed steps, not
+            # just the aborting step — the throughput projection depends on
+            # honest per-episode virtual time under faults
+            e.virtual_seconds += vs
+            raise
+        traj = Trajectory(task["task_id"], task["description"], steps, score)
+        return traj, len(steps), score, vs
+
+    def _settle(self, result: EpisodeResult) -> None:
+        with self._lock:
+            rep = self._report
+            rep.results.append(result)
+            rep.virtual_seconds += result.virtual_seconds
+            if result.ok:
+                rep.completed += 1
+                rep.total_steps += result.steps
+            else:
+                rep.failed += 1

@@ -1,0 +1,268 @@
+"""Scenario registry: registered families of computer-use workloads.
+
+Generalizes the ad-hoc Table-3 task list in ``core/tasks.py`` into a
+uniform env/task interface (cf. Gym-Anything): every scenario declares its
+family (office / browser / terminal / coding / media / email / system /
+multi_app), its per-step latency profile (driving both the real threaded
+engine and the virtual-time throughput benchmark), its horizon range, its
+Table-3 sampling weight, and a scripted policy that stands in for the
+agent (UI-TARS / Agent-S in the paper's pipeline).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field, replace
+from typing import Callable, Iterator, Optional
+
+from repro.core.tasks import TaskSpec, TABLE3_ROWS
+
+# (obs, step_idx) -> (thought, action)
+Policy = Callable[[object, int], tuple[str, str]]
+
+
+@dataclass(frozen=True)
+class ScenarioProfile:
+    """Per-scenario latency/length profile in virtual seconds.
+
+    ``step_mean_s`` feeds the virtual-time throughput simulation; the real
+    engine inherits step latency from the replica's ``LatencyModel``, so the
+    profile is the calibration target, not a second clock."""
+
+    step_mean_s: float = 2.0
+    step_sigma: float = 0.35
+    configure_s: float = 3.0
+    reset_s: float = 4.0
+    evaluate_s: float = 1.0
+    horizon: tuple[int, int] = (10, 25)
+
+    def mean_horizon(self) -> float:
+        lo, hi = self.horizon
+        return (lo + hi) / 2.0
+
+    def mean_trajectory_s(self) -> float:
+        """Expected virtual seconds for one full episode."""
+        return (self.configure_s + self.reset_s + self.evaluate_s
+                + self.step_mean_s * self.mean_horizon())
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    family: str
+    domain: str                    # Table-3 application domain
+    description: str
+    policy: Policy
+    profile: ScenarioProfile = field(default_factory=ScenarioProfile)
+    weight: float = 1.0            # sampling weight (Table-3 trajectory mix)
+
+    def make_task(self, index: int, rng: random.Random) -> TaskSpec:
+        return TaskSpec(
+            task_id=f"{self.name}-{index}",
+            task_type=self.family,
+            domain=self.domain,
+            description=self.description,
+            horizon=rng.randint(*self.profile.horizon),
+            setup_software=(self.domain,),
+            scenario=self.name)
+
+
+class ScenarioRegistry:
+    """Named scenario families with weighted sampling and dict round-trip."""
+
+    def __init__(self):
+        self._scenarios: dict[str, Scenario] = {}
+
+    # -------------------------------------------------------- registration
+    def register(self, scenario: Scenario) -> Scenario:
+        if scenario.name in self._scenarios:
+            raise ValueError(f"scenario {scenario.name!r} already registered")
+        self._scenarios[scenario.name] = scenario
+        return scenario
+
+    def scenario(self, name: str, family: str, domain: str,
+                 description: str, *, profile: Optional[ScenarioProfile] = None,
+                 weight: float = 1.0) -> Callable[[Policy], Scenario]:
+        """Decorator form: the decorated function is the scripted policy."""
+        def deco(policy: Policy) -> Scenario:
+            return self.register(Scenario(
+                name=name, family=family, domain=domain,
+                description=description, policy=policy,
+                profile=profile or ScenarioProfile(), weight=weight))
+        return deco
+
+    # --------------------------------------------------------------- lookup
+    def get(self, name: str) -> Scenario:
+        return self._scenarios[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._scenarios
+
+    def __len__(self) -> int:
+        return len(self._scenarios)
+
+    def __iter__(self) -> Iterator[Scenario]:
+        return iter(self._scenarios.values())
+
+    def names(self) -> list[str]:
+        return list(self._scenarios)
+
+    def families(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for s in self._scenarios.values():
+            seen.setdefault(s.family)
+        return list(seen)
+
+    def by_family(self, family: str) -> list[Scenario]:
+        return [s for s in self._scenarios.values() if s.family == family]
+
+    def domains(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for s in self._scenarios.values():
+            seen.setdefault(s.domain)
+        return list(seen)
+
+    # ------------------------------------------------------------- sampling
+    def sample(self, n: int, *, seed: int = 0,
+               families: Optional[list[str]] = None) -> list[TaskSpec]:
+        """Weighted sample of task specs across (a subset of) scenarios."""
+        rng = random.Random(seed)
+        pool = [s for s in self._scenarios.values()
+                if families is None or s.family in families]
+        assert pool, "no scenarios match the requested families"
+        weights = [s.weight for s in pool]
+        picks = rng.choices(pool, weights=weights, k=n)
+        return [s.make_task(i, rng) for i, s in enumerate(picks)]
+
+    def tasks_for(self, name: str, n: int, *, seed: int = 0) -> list[TaskSpec]:
+        rng = random.Random(seed)
+        s = self.get(name)
+        return [s.make_task(i, rng) for i in range(n)]
+
+    def resolve(self, task: dict) -> Scenario:
+        """Round-trip a task dict (``TaskSpec.to_dict``) back to its scenario.
+
+        Falls back to domain matching for legacy tasks produced before the
+        registry existed (no ``scenario`` key)."""
+        name = task.get("scenario")
+        if name and name in self._scenarios:
+            return self._scenarios[name]
+        domain = task.get("domain")
+        for s in self._scenarios.values():
+            if s.domain == domain:
+                return s
+        raise KeyError(f"no scenario for task {task.get('task_id')!r} "
+                       f"(scenario={name!r}, domain={domain!r})")
+
+    def mean_trajectory_s(self) -> float:
+        """Weight-averaged expected episode duration (virtual seconds)."""
+        total_w = sum(s.weight for s in self._scenarios.values())
+        return sum(s.weight * s.profile.mean_trajectory_s()
+                   for s in self._scenarios.values()) / total_w
+
+    def mean_steps_per_trajectory(self) -> float:
+        total_w = sum(s.weight for s in self._scenarios.values())
+        return sum(s.weight * s.profile.mean_horizon()
+                   for s in self._scenarios.values()) / total_w
+
+
+# --------------------------------------------------------- scripted policies
+def _cycle_policy(thoughts_and_actions: list[tuple[str, str]]) -> Policy:
+    def policy(obs, step_idx: int) -> tuple[str, str]:
+        import numpy as np
+        salt = int(np.asarray(obs).sum()) % 997 if obs is not None else 0
+        thought, action = thoughts_and_actions[
+            step_idx % len(thoughts_and_actions)]
+        return f"{thought} (screen state {salt})", action
+    return policy
+
+
+OFFICE_ACTIONS = [
+    ("The document is open; I should add the heading",
+     "type('Quarterly Report')"),
+    ("Formatting the title next", "key('ctrl+b')"),
+    ("Moving to the body paragraph", "click(120, 184)"),
+    ("Saving progress", "key('ctrl+s')"),
+]
+BROWSER_ACTIONS = [
+    ("I need the search page first", "navigate('https://example.org')"),
+    ("Entering the query", "type('osgym scalable os infra')"),
+    ("Submitting the search", "key('enter')"),
+    ("Opening the top result", "click(96, 240)"),
+    ("Scrolling for the relevant section", "scroll(-4)"),
+]
+TERMINAL_ACTIONS = [
+    ("Listing the working directory", "exec('ls -la')"),
+    ("Inspecting system state", "exec('systemctl status cron')"),
+    ("Editing the config", "exec('sed -i s/old/new/ app.conf')"),
+    ("Verifying the change took effect", "exec('grep new app.conf')"),
+]
+CODING_ACTIONS = [
+    ("Opening the failing module", "click(40, 96)"),
+    ("Fixing the off-by-one", "type('range(n - 1)')"),
+    ("Running the tests", "exec('pytest -x -q')"),
+    ("Committing the fix", "exec('git commit -am fix')"),
+]
+MEDIA_ACTIONS = [
+    ("Loading the playlist", "click(64, 300)"),
+    ("Adjusting the volume", "drag(420, 40, 460, 40)"),
+    ("Skipping the intro", "key('right')"),
+]
+EMAIL_ACTIONS = [
+    ("Opening the compose window", "click(24, 60)"),
+    ("Addressing the message", "type('team@example.org')"),
+    ("Writing the update", "type('Status: replicas healthy')"),
+    ("Sending it", "key('ctrl+enter')"),
+]
+SYSTEM_ACTIONS = [
+    ("Opening system settings", "click(580, 12)"),
+    ("Raising the file-descriptor limit", "exec('sysctl fs.file-max=4194304')"),
+    ("Confirming the new value", "exec('sysctl fs.file-max')"),
+]
+MULTI_APP_ACTIONS = (OFFICE_ACTIONS[:2] + BROWSER_ACTIONS[:2]
+                     + TERMINAL_ACTIONS[:1] + EMAIL_ACTIONS[:2])
+
+
+def default_registry() -> ScenarioRegistry:
+    """The built-in scenario families.
+
+    Weights are Table 3's trajectory counts so the sampled mix reproduces
+    the paper's dataset composition; horizons stay within the paper's
+    10-25 steps/trajectory band, with per-family latency spreads (browser
+    steps are network-bound and slower; terminal steps are fast)."""
+    reg = ScenarioRegistry()
+    fast = ScenarioProfile(step_mean_s=1.4, horizon=(10, 18))
+    slow = ScenarioProfile(step_mean_s=2.6, horizon=(12, 25))
+    mid = ScenarioProfile(step_mean_s=2.0, horizon=(10, 25))
+    long = ScenarioProfile(step_mean_s=2.2, horizon=(18, 25), configure_s=5.0)
+
+    rows = {domain: (ttype, desc, weight)
+            for ttype, domain, desc, weight, _steps in TABLE3_ROWS}
+
+    def add(name, family, domain, actions, profile):
+        ttype, desc, weight = rows[domain]
+        reg.register(Scenario(
+            name=name, family=family, domain=domain, description=desc,
+            policy=_cycle_policy(actions), profile=profile,
+            weight=float(weight)))
+
+    add("office_writer", "office", "LibreOffice Writer", OFFICE_ACTIONS, mid)
+    add("office_calc", "office", "LibreOffice Calc", OFFICE_ACTIONS, mid)
+    add("office_impress", "office", "LibreOffice Impress", OFFICE_ACTIONS, mid)
+    add("browser_chrome", "browser", "Chrome", BROWSER_ACTIONS, slow)
+    add("email_thunderbird", "email", "ThunderBird", EMAIL_ACTIONS, mid)
+    add("media_vlc", "media", "VLC", MEDIA_ACTIONS, fast)
+    add("coding_vscode", "coding", "VS Code", CODING_ACTIONS, mid)
+    add("image_gimp", "image", "GIMP", OFFICE_ACTIONS, slow)
+    add("terminal_os", "terminal", "OS", TERMINAL_ACTIONS, fast)
+    add("multi_app", "multi_app", "Multi-Apps", MULTI_APP_ACTIONS, long)
+    return reg
+
+
+_DEFAULT: Optional[ScenarioRegistry] = None
+
+
+def get_default_registry() -> ScenarioRegistry:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = default_registry()
+    return _DEFAULT

@@ -1,0 +1,133 @@
+"""Trajectory writer: streams completed episodes into the data pipeline.
+
+A bounded queue decouples rollout workers (producers) from the consumer
+thread that encodes trajectories and appends them to the replay buffer —
+the same producer/consumer decoupling as the paper's §4.2 semi-online
+pipeline. The bounded queue is the engine's backpressure signal: when
+downstream (encoding / replay buffer) cannot keep up, ``saturated()``
+turns true and the scheduler stops launching new episodes until the
+backlog drains.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.data.pipeline import Trajectory, encode_trajectory
+from repro.data.replay_buffer import ReplayBuffer
+from repro.data.tokenizer import ByteTokenizer
+
+
+@dataclass
+class WriterStats:
+    written: int = 0          # trajectories accepted into the queue
+    consumed: int = 0         # trajectories drained by the consumer
+    encoded_tokens: int = 0
+    steps: int = 0
+
+
+class TrajectoryWriter:
+    """Bounded, threaded sink from rollout workers to SFT/PPO consumers."""
+
+    def __init__(self, *, replay: Optional[ReplayBuffer] = None,
+                 tokenizer: Optional[ByteTokenizer] = None,
+                 vocab_size: int = 151936,
+                 capacity: int = 256,
+                 on_trajectory: Optional[Callable[[Trajectory], None]] = None):
+        self.replay = replay
+        self.tokenizer = tokenizer
+        self.vocab_size = vocab_size
+        self.capacity = capacity
+        self.on_trajectory = on_trajectory
+        self.stats = WriterStats()
+        self.errors: list[str] = []
+        self.trajectories: list[Trajectory] = []
+        self._q: queue.Queue = queue.Queue(maxsize=capacity)
+        self._done = object()
+        self._resumed = threading.Event()
+        self._resumed.set()
+        self._closed = False
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._consume, daemon=True,
+                                        name="trajectory-writer")
+        self._thread.start()
+
+    # -------------------------------------------------------------- produce
+    def write(self, traj: Trajectory, timeout: Optional[float] = None) -> None:
+        """Blocking put — callers feel backpressure when the queue is full."""
+        assert not self._closed, "writer already closed"
+        self._q.put(traj, timeout=timeout)
+        with self._lock:
+            self.stats.written += 1
+
+    def saturated(self, high_water: float = 0.75) -> bool:
+        """True when the backlog is at/above the high-water mark — the
+        rollout scheduler polls this before launching new episodes."""
+        return self._q.qsize() >= max(1, int(self.capacity * high_water))
+
+    def backlog(self) -> int:
+        return self._q.qsize()
+
+    # -------------------------------------------------------------- consume
+    def _consume(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is self._done:
+                return
+            self._resumed.wait()          # honor pause() deterministically
+            try:
+                self._handle(item)
+            except Exception as e:
+                # a bad trajectory (or a raising on_trajectory callback) must
+                # not kill the consumer: producers would deadlock on a full
+                # queue. Record the error and keep draining.
+                with self._lock:
+                    self.errors.append(f"{type(e).__name__}: {e}")
+                    self.stats.consumed += 1
+
+    def _handle(self, traj: Trajectory) -> None:
+        if self.tokenizer is not None:
+            ids, mask = encode_trajectory(traj, self.tokenizer,
+                                          self.vocab_size)
+            if self.replay is not None:
+                self.replay.add({"trajectory": traj, "tokens": ids,
+                                 "loss_mask": mask})
+            with self._lock:
+                self.stats.encoded_tokens += len(ids)
+        elif self.replay is not None:
+            self.replay.add(traj)
+        if self.on_trajectory is not None:
+            self.on_trajectory(traj)
+        with self._lock:
+            self.trajectories.append(traj)
+            self.stats.consumed += 1
+            self.stats.steps += len(traj.steps)
+
+    # -------------------------------------------------------------- control
+    def pause(self) -> None:
+        """Stop draining (testing hook: forces saturation deterministically)."""
+        self._resumed.clear()
+
+    def resume(self) -> None:
+        self._resumed.set()
+
+    def drain(self, timeout: float = 30.0) -> bool:
+        """Block until every accepted trajectory has been consumed."""
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            with self._lock:
+                if self.stats.consumed >= self.stats.written:
+                    return True
+            time.sleep(0.01)
+        return False
+
+    def close(self, timeout: float = 30.0) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.resume()
+        self._q.put(self._done)
+        self._thread.join(timeout=timeout)

@@ -1,13 +1,71 @@
 import os
+import sys
+import types
 
 # Smoke tests and benches must see the real (single) device — only the
 # dry-run (its own subprocess) forces 512 placeholder devices.
 assert "xla_force_host_platform_device_count" not in os.environ.get(
     "XLA_FLAGS", "")
 
-from hypothesis import settings, HealthCheck
+try:
+    from hypothesis import settings, HealthCheck
+except ModuleNotFoundError:
+    # Degrade gracefully: install a minimal shim so modules that do
+    # `from hypothesis import given, strategies as st` still import, with
+    # every property-based test collected as an explicit skip instead of
+    # killing the whole run at collection time.
+    import pytest
 
-settings.register_profile(
-    "ci", max_examples=25, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow])
-settings.load_profile("ci")
+    class _Permissive:
+        """Stands in for strategies/settings objects: any attribute access,
+        call, or chain (`st.lists(st.integers(0, 9)).map(...)`) resolves to
+        another permissive object."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            # Zero-arg replacement so pytest never tries to resolve the
+            # strategy-injected parameters as fixtures.
+            def skipper():
+                pytest.skip("hypothesis not installed (property-based test)")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    class _Settings:
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass
+
+    shim = types.ModuleType("hypothesis")
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.__getattr__ = lambda name: _Permissive()
+    shim.given = _given
+    shim.settings = _Settings
+    shim.HealthCheck = _Permissive()
+    shim.strategies = strategies
+    shim.assume = lambda *a, **k: True
+    shim.note = lambda *a, **k: None
+    sys.modules["hypothesis"] = shim
+    sys.modules["hypothesis.strategies"] = strategies
+else:
+    settings.register_profile(
+        "ci", max_examples=25, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile("ci")

@@ -1,0 +1,272 @@
+"""Rollout subsystem: concurrent episode completion, bounded in-flight
+scheduling with writer backpressure, failover-on-fault retry, scenario
+registry round-trip, and the gateway's non-blocking submit API."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (CowStore, DiskImage, FaultInjector, FaultType,
+                        Gateway, RunnerPool)
+from repro.core.gateway import NoRunnerAvailable
+from repro.core.tasks import TaskSuite
+from repro.data.replay_buffer import ReplayBuffer
+from repro.data.tokenizer import ByteTokenizer
+from repro.rollout import (RolloutConfig, RolloutEngine, Scenario,
+                           ScenarioProfile, ScenarioRegistry,
+                           TrajectoryWriter, default_registry,
+                           get_default_registry)
+
+
+def _base(store=None):
+    store = store or CowStore(block_size=1 << 20)
+    return DiskImage.create_base(store, "ubuntu", 64 << 20)
+
+
+def _gateway(n_nodes=2, size=4, faults=None, base=None):
+    base = base or _base()
+    pools = [RunnerPool(f"n{i}", base, size=size,
+                        faults=faults[i] if faults else None, seed=i)
+             for i in range(n_nodes)]
+    return Gateway(pools), pools
+
+
+# ------------------------------------------------------- concurrent episodes
+def test_concurrent_episodes_complete_into_replay_buffer():
+    gw, _ = _gateway(n_nodes=2, size=4)
+    replay = ReplayBuffer()
+    writer = TrajectoryWriter(replay=replay, tokenizer=ByteTokenizer(),
+                              capacity=64)
+    engine = RolloutEngine(gw, writer,
+                           config=RolloutConfig(max_inflight=8))
+    tasks = get_default_registry().sample(10, seed=0)
+    report = engine.run(tasks)
+    assert report.completed == 10 and report.failed == 0
+    assert writer.drain(timeout=10.0)
+    assert len(replay) == 10                   # streamed into the buffer
+    assert writer.stats.encoded_tokens > 0     # SFT-encoded on the way
+    for r in report.results:
+        assert r.ok and 10 <= r.steps <= 25    # paper's horizon band
+        assert r.virtual_seconds > 0
+    # trajectories carry the scripted thought/action steps
+    traj = writer.trajectories[0]
+    assert traj.steps and traj.steps[0].thought and traj.steps[0].action
+    writer.close()
+
+
+# ------------------------------------------------ bounded in-flight + waits
+def test_bounded_inflight_and_writer_backpressure():
+    gw, _ = _gateway(n_nodes=1, size=4)
+    writer = TrajectoryWriter(capacity=1)
+    writer.pause()                     # consumer stalls -> queue saturates
+    engine = RolloutEngine(
+        gw, writer,
+        config=RolloutConfig(max_inflight=2, backpressure_poll_s=0.005))
+    tasks = get_default_registry().sample(6, seed=1)
+
+    done = {}
+
+    def run():
+        done["report"] = engine.run(tasks)
+
+    t = threading.Thread(target=run)
+    t.start()
+    deadline = time.monotonic() + 15.0
+    while time.monotonic() < deadline:
+        if engine.stats.backpressure_waits > 0:
+            break
+        time.sleep(0.01)
+    assert engine.stats.backpressure_waits > 0, \
+        "feeder must throttle while the writer backlog is saturated"
+    writer.resume()
+    t.join(timeout=30.0)
+    assert not t.is_alive()
+    report = done["report"]
+    assert report.completed == 6
+    assert report.peak_inflight <= 2           # bounded worker slots
+    assert writer.drain(timeout=10.0)
+    writer.close()
+
+
+# ---------------------------------------------------- failover-on-fault retry
+def test_failover_retries_on_faulty_node():
+    base = _base()
+    crash_always = FaultInjector(rates={FaultType.CRASH: 1.0}, seed=0)
+    clean = FaultInjector(enabled=False)
+    gw, pools = _gateway(n_nodes=2, size=4, base=base,
+                         faults={0: crash_always, 1: clean})
+    writer = TrajectoryWriter(capacity=64)
+    engine = RolloutEngine(gw, writer,
+                           config=RolloutConfig(max_inflight=4,
+                                                max_attempts=3))
+    # craft tasks whose affinity prefers the crashing node, guaranteeing at
+    # least one abort -> failover to the clean node
+    tasks = []
+    suite_tasks = get_default_registry().sample(50, seed=2)
+    for t in suite_tasks:
+        if gw._affinity_order(t.task_id)[0] == "n0":
+            tasks.append(t)
+        if len(tasks) == 4:
+            break
+    assert len(tasks) == 4, "need tasks with affinity to the faulty node"
+
+    report = engine.run(tasks)
+    assert report.completed == 4 and report.failed == 0
+    assert report.reassignments >= 4          # every episode aborted on n0
+    for r in report.results:
+        assert r.nodes[0] == "n0" and r.nodes[-1] == "n1"
+    # the pool recovered the crashed runners autonomously on release
+    assert all(r.manager.replica.alive for r in pools[0]._all.values())
+    writer.close()
+
+
+def test_episode_fails_gracefully_when_retries_exhausted():
+    crash_always = FaultInjector(rates={FaultType.CRASH: 1.0}, seed=0)
+    gw, _ = _gateway(n_nodes=1, size=2, faults={0: crash_always})
+    writer = TrajectoryWriter(capacity=8)
+    engine = RolloutEngine(gw, writer,
+                           config=RolloutConfig(max_inflight=2,
+                                                max_attempts=2))
+    report = engine.run(get_default_registry().sample(3, seed=3))
+    assert report.completed == 0 and report.failed == 3
+    for r in report.results:
+        assert not r.ok and r.attempts == 2 and r.error
+    assert writer.stats.written == 0
+    writer.close()
+
+
+def test_unresolvable_task_fails_gracefully():
+    gw, _ = _gateway(n_nodes=1, size=2)
+    writer = TrajectoryWriter(capacity=8)
+    engine = RolloutEngine(gw, writer, config=RolloutConfig(max_inflight=2))
+    good = get_default_registry().sample(2, seed=0)
+    bad = {"task_id": "legacy-x", "domain": "NoSuchApp",
+           "description": "legacy dict with unknown domain", "horizon": 5}
+    report = engine.run(list(good) + [bad])
+    assert report.completed == 2 and report.failed == 1
+    assert any("KeyError" in r.error for r in report.results if not r.ok)
+    writer.close()
+
+
+def test_gateway_submit_after_stop_raises():
+    gw, _ = _gateway(n_nodes=1, size=2)
+    gw.stop()
+    with pytest.raises(RuntimeError):
+        gw.submit("t", lambda node, runner: node)
+
+
+def test_writer_survives_consumer_errors():
+    from repro.data.pipeline import Trajectory
+
+    def boom(traj):
+        raise RuntimeError("downstream exploded")
+
+    writer = TrajectoryWriter(capacity=2, on_trajectory=boom)
+    for i in range(5):                 # > capacity: would deadlock if the
+        writer.write(Trajectory(f"t{i}", "instr", []),  # consumer died
+                     timeout=5.0)
+    assert writer.drain(timeout=10.0)
+    assert len(writer.errors) == 5
+    assert all("downstream exploded" in e for e in writer.errors)
+    writer.close()
+
+
+# ------------------------------------------------------- scenario registry
+def test_scenario_registry_roundtrip():
+    reg = ScenarioRegistry()
+
+    @reg.scenario("custom_term", "terminal", "OS", "Custom terminal flow",
+                  profile=ScenarioProfile(step_mean_s=1.0, horizon=(3, 5)),
+                  weight=2.0)
+    def policy(obs, step_idx):
+        return f"thinking at {step_idx}", f"exec('step {step_idx}')"
+
+    assert isinstance(policy, Scenario)
+    assert "custom_term" in reg and len(reg) == 1
+    tasks = reg.sample(5, seed=0)
+    for t in tasks:
+        assert t.scenario == "custom_term"
+        assert 3 <= t.horizon <= 5
+        # dict round-trip resolves back to the registered scenario
+        assert reg.resolve(t.to_dict()) is reg.get("custom_term")
+    # legacy dicts (no scenario key) fall back to domain matching
+    assert reg.resolve({"task_id": "x", "domain": "OS"}).name == "custom_term"
+    with pytest.raises(KeyError):
+        reg.resolve({"task_id": "y", "domain": "Unknown"})
+    with pytest.raises(ValueError):
+        reg.register(reg.get("custom_term"))   # duplicate name
+
+
+def test_default_registry_covers_required_families_and_table3():
+    reg = default_registry()
+    fams = set(reg.families())
+    assert {"office", "browser", "terminal", "coding", "multi_app"} <= fams
+    assert set(reg.domains()) == set(TaskSuite.domains())
+    # weighted stats drive the virtual-time throughput benchmark
+    assert reg.mean_trajectory_s() > 0
+    assert 10 <= reg.mean_steps_per_trajectory() <= 25
+    # each scenario's policy produces (thought, action) strings
+    for s in reg:
+        thought, action = s.policy(None, 0)
+        assert isinstance(thought, str) and isinstance(action, str)
+
+
+def test_task_suite_delegates_to_registry():
+    suite = TaskSuite(seed=0)
+    tasks = suite.sample(40)
+    assert all(t.scenario in get_default_registry() for t in tasks)
+    assert {t.domain for t in tasks} <= set(suite.domains())
+    assert all(10 <= t.horizon <= 25 for t in tasks)
+    by_dom = suite.by_domain("Chrome", 3)
+    assert len(by_dom) == 3 and all(t.domain == "Chrome" for t in by_dom)
+
+
+# ------------------------------------------------------ gateway submit API
+def test_gateway_nonblocking_submit_and_try_acquire():
+    gw, _ = _gateway(n_nodes=2, size=2)
+
+    def episode(node, runner):
+        dur = runner.manager.configure({"task_id": "t", "horizon": 2})
+        runner.manager.reset()
+        return node
+
+    futs = [gw.submit(f"task-{i}", episode) for i in range(6)]
+    nodes = [f.result(timeout=30.0) for f in futs]
+    assert len(nodes) == 6 and set(nodes) <= {"n0", "n1"}
+    # all runners were released by the submit wrapper
+    assert all(p.n_free == p.size for p in gw.pools.values())
+
+    # try_acquire never blocks; exhausting the fleet yields None
+    held = []
+    while True:
+        got = gw.try_acquire("drain")
+        if got is None:
+            break
+        held.append(got)
+    assert len(held) == 4
+    t0 = time.monotonic()
+    assert gw.try_acquire("drain") is None
+    assert time.monotonic() - t0 < 1.0
+    for node, r in held:
+        gw.release(node, r)
+
+    # submit surfaces NoRunnerAvailable when nothing frees up in time
+    held = [gw.try_acquire("x") for _ in range(4)]
+    fut = gw.submit("task-starved", episode, acquire_timeout=0.05)
+    with pytest.raises(NoRunnerAvailable):
+        fut.result(timeout=10.0)
+    for node, r in held:
+        gw.release(node, r)
+    gw.stop()
+
+
+def test_gateway_acquire_exclude_forces_other_node():
+    gw, _ = _gateway(n_nodes=2, size=2)
+    task = "task-affinity"
+    preferred = gw._affinity_order(task)[0]
+    node, r = gw.acquire(task)
+    assert node == preferred
+    gw.release(node, r)
+    node2, r2 = gw.acquire(task, exclude={preferred})
+    assert node2 != preferred
+    gw.release(node2, r2)
