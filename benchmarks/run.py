@@ -26,7 +26,7 @@ def main() -> None:
         ("table2_cow", paper_tables.table2_cow),
         ("table3_datagen", paper_tables.table3_datagen),
         ("rollout_throughput",
-         lambda: throughput.throughput_table(seeds=2, sim_seconds=120.0)),
+         lambda: throughput.throughput_table(seeds=1)),
         ("roofline_single_pod", lambda: roofline.report("16_16")),
         ("roofline_multi_pod", lambda: roofline.report("2_16_16")),
     ]

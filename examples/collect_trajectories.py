@@ -9,6 +9,10 @@ collect → encode → buffer → batch path. Real threaded execution at laptop
 scale + the 1024-replica virtual-time projection the paper reports.
 
     PYTHONPATH=src python examples/collect_trajectories.py --tasks 16
+
+``--event-driven`` runs the same episodes as cooperative tasks on the
+virtual-time event loop instead of threads — the mode that scales to
+paper-size fleets (see benchmarks/throughput.py).
 """
 import argparse
 from collections import Counter
@@ -29,6 +33,9 @@ def main():
     ap.add_argument("--tasks", type=int, default=16)
     ap.add_argument("--replicas", type=int, default=16)
     ap.add_argument("--max-inflight", type=int, default=12)
+    ap.add_argument("--event-driven", action="store_true",
+                    help="run episodes on the virtual-time event loop "
+                         "instead of threads (the paper-scale mode)")
     args = ap.parse_args()
 
     store = CowStore()
@@ -47,7 +54,8 @@ def main():
         config=RolloutConfig(max_inflight=args.max_inflight))
 
     tasks = registry.sample(args.tasks, seed=0)
-    report = engine.run(tasks)
+    report = (engine.run_event_driven(tasks) if args.event_driven
+              else engine.run(tasks))
     writer.drain()
 
     families = Counter(registry.resolve(r.task).family

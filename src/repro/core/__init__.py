@@ -4,13 +4,16 @@ CoW disk management, robust runner pools, gateway, and the centralized
 single-entry data server."""
 from repro.core.cow_store import CowStore, DiskImage, BlobStore
 from repro.core.data_server import DataServer
+from repro.core.event_loop import Condition, EventLoop, Sleep, Task, Timer
 from repro.core.faults import FaultInjector, FaultType, ReplicaError, RetryPolicy
 from repro.core.gateway import Gateway, NoRunnerAvailable
 from repro.core.replica import SimOSReplica, LatencyModel
 from repro.core.runner_pool import RunnerPool, SimHost, HostSpec, ResourceGuard
+from repro.core.seeding import lognorm_jitter, stable_seed
 from repro.core.state_manager import (ReplicaStateManager, TaskAborted,
                                       CentralizedManager,
                                       SemiDecentralizedManager,
-                                      DecentralizedManager)
+                                      DecentralizedManager,
+                                      design_dispatch_overhead)
 from repro.core.tasks import TaskSuite, TaskSpec, TABLE3_ROWS
 from repro.core.telemetry import Telemetry

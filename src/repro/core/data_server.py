@@ -85,14 +85,16 @@ class DataServer:
         with self._lock:
             ep = self._episodes.pop(slot, None)
         if ep is not None:
-            self.gateway.release(ep.node, ep.runner)
+            self.gateway.release(ep.node, ep.runner,
+                                 task_id=ep.task["task_id"])
 
     def close(self) -> None:
         with self._lock:
             eps = list(self._episodes.values())
             self._episodes.clear()
         for ep in eps:
-            self.gateway.release(ep.node, ep.runner)
+            self.gateway.release(ep.node, ep.runner,
+                                 task_id=ep.task["task_id"])
         self.pool.shutdown(wait=True)
 
     def live_slots(self) -> list[int]:
@@ -137,7 +139,8 @@ class DataServer:
                 ep.virtual_seconds += e.virtual_seconds
                 self.telemetry.count("task_reassignments")
                 # return the broken runner (pool recycles/recovers it)
-                self.gateway.release(ep.node, ep.runner)
+                self.gateway.release(ep.node, ep.runner,
+                                     task_id=ep.task["task_id"])
                 ep.node, ep.runner = self._assign(ep.task)
                 ep.reassignments += 1
                 d = ep.runner.manager.configure(ep.task)

@@ -1,0 +1,247 @@
+"""Deterministic discrete-event virtual-time kernel (the fleet's scale core).
+
+Real threads cap the live rollout stack at ``max_inflight``≈16 on one CPU:
+every concurrent episode needs a stack, and backpressure is polled with
+``time.sleep``. This module replaces threads with cooperative tasks on a
+virtual clock so *thousands* of episodes run concurrently — the paper's
+1000+ replica fleets execute end-to-end on one core, in seconds.
+
+Design:
+
+- ``EventLoop`` — a heap-ordered event queue keyed by ``(virtual_time,
+  sequence)``. The sequence number breaks ties deterministically, so one
+  program produces the identical event order on every run and in every
+  process (no hash randomization, no thread scheduling).
+- ``Task`` — a cooperative coroutine driven by the loop. A task is a plain
+  Python generator that yields scheduling directives:
+
+  - ``yield Sleep(dt)`` — resume ``dt`` virtual seconds later;
+  - ``yield other_task`` — join: resume when ``other_task`` finishes;
+  - ``ok = yield from cond.wait(timeout)`` — block on a ``Condition``.
+
+  Subroutines compose with ``yield from``, so call trees (gateway acquire
+  inside an episode inside a feeder) read like ordinary code.
+- ``Condition`` — a virtual-time condition variable with ``notify`` /
+  ``notify_all`` and timeouts; the event-loop citizen replacing
+  ``threading.Condition`` in the runner pool and gateway.
+- **daemon timers** — recurring background work (gateway health sweeps,
+  leaked-runner reclamation) that must not keep the loop alive: ``run()``
+  returns once every live task has finished and only daemon events remain.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Any, Callable, Generator, Optional
+
+
+@dataclass(frozen=True)
+class Sleep:
+    """Directive: resume the yielding task after ``delay`` virtual seconds."""
+
+    delay: float
+
+
+class Timer:
+    """Handle for one scheduled callback. ``cancel()`` is O(1): the entry
+    stays in the heap and is skipped when popped (lazy deletion)."""
+
+    __slots__ = ("at", "seq", "fn", "args", "daemon", "cancelled", "fired",
+                 "_loop")
+
+    def __init__(self, loop: "EventLoop", at: float, seq: int,
+                 fn: Callable, args: tuple, daemon: bool):
+        self._loop = loop
+        self.at = at
+        self.seq = seq
+        self.fn = fn
+        self.args = args
+        self.daemon = daemon
+        self.cancelled = False
+        self.fired = False
+
+    def cancel(self) -> None:
+        if self.cancelled or self.fired:
+            return
+        self.cancelled = True
+        if not self.daemon:
+            self._loop._pending -= 1
+
+
+class Task:
+    """A generator-backed cooperative task; yield other tasks to join them."""
+
+    __slots__ = ("loop", "gen", "name", "done", "value", "error", "_joiners")
+
+    def __init__(self, loop: "EventLoop", gen: Generator, name: str = ""):
+        self.loop = loop
+        self.gen = gen
+        self.name = name or getattr(gen, "__name__", "task")
+        self.done = False
+        self.value: Any = None
+        self.error: Optional[BaseException] = None
+        self._joiners: list[Task] = []
+
+    def result(self) -> Any:
+        assert self.done, f"task {self.name!r} still running"
+        if self.error is not None:
+            raise self.error
+        return self.value
+
+    # ------------------------------------------------------------ internals
+    def _resume(self, payload: Any = None) -> None:
+        if self.done:
+            return
+        try:
+            directive = self.gen.send(payload)
+        except StopIteration as s:
+            self._finish(s.value, None)
+            return
+        except BaseException as e:  # noqa: BLE001 — task errors are captured
+            self._finish(None, e)
+            return
+        self._dispatch(directive)
+
+    def _dispatch(self, directive: Any) -> None:
+        if isinstance(directive, Sleep):
+            self.loop.call_later(directive.delay, self._resume, None)
+        elif isinstance(directive, Task):
+            if directive.done:
+                self.loop.call_later(0.0, self._resume, directive)
+            else:
+                directive._joiners.append(self)
+        elif isinstance(directive, _Waiter):
+            directive.task = self
+        else:
+            self._finish(None, TypeError(
+                f"task {self.name!r} yielded {directive!r}; expected Sleep, "
+                f"Task, or Condition.wait()"))
+
+    def _finish(self, value: Any, error: Optional[BaseException]) -> None:
+        self.done = True
+        self.value = value
+        self.error = error
+        self.loop._live -= 1
+        for joiner in self._joiners:
+            self.loop.call_later(0.0, joiner._resume, self)
+        self._joiners.clear()
+        if error is not None:
+            self.loop.errors.append((self.name, error))
+
+
+class _Waiter:
+    """One parked task on a Condition (plus its optional timeout timer)."""
+
+    __slots__ = ("task", "timer")
+
+    def __init__(self):
+        self.task: Optional[Task] = None
+        self.timer: Optional[Timer] = None
+
+
+class Condition:
+    """Virtual-time condition variable. FIFO wakeups, deterministic order."""
+
+    def __init__(self, loop: "EventLoop"):
+        self._loop = loop
+        self._waiters: list[_Waiter] = []
+
+    def wait(self, timeout: Optional[float] = None):
+        """``ok = yield from cond.wait(timeout)`` — True if notified, False
+        on timeout. Re-check the guarded predicate after waking: another
+        waiter may have consumed the resource (classic condvar contract)."""
+        w = _Waiter()
+        self._waiters.append(w)
+        if timeout is not None:
+            w.timer = self._loop.call_later(timeout, self._on_timeout, w)
+        ok = yield w
+        return ok
+
+    def _on_timeout(self, w: _Waiter) -> None:
+        if w in self._waiters:
+            self._waiters.remove(w)
+            w.task._resume(False)
+
+    def notify(self, n: int = 1) -> None:
+        while n > 0 and self._waiters:
+            w = self._waiters.pop(0)
+            if w.timer is not None:
+                w.timer.cancel()
+            self._loop.call_later(0.0, w.task._resume, True)
+            n -= 1
+
+    def notify_all(self) -> None:
+        self.notify(len(self._waiters))
+
+    @property
+    def n_waiters(self) -> int:
+        return len(self._waiters)
+
+
+class EventLoop:
+    """Deterministic single-threaded discrete-event scheduler."""
+
+    def __init__(self):
+        self.now = 0.0
+        self.errors: list[tuple[str, BaseException]] = []
+        self._heap: list[tuple[float, int, Timer]] = []
+        self._seq = 0
+        self._pending = 0      # scheduled, non-daemon, not cancelled/fired
+        self._live = 0         # spawned tasks not yet finished
+
+    # ------------------------------------------------------------ scheduling
+    def call_at(self, at: float, fn: Callable, *args,
+                daemon: bool = False) -> Timer:
+        self._seq += 1
+        t = Timer(self, max(at, self.now), self._seq, fn, args, daemon)
+        heapq.heappush(self._heap, (t.at, t.seq, t))
+        if not daemon:
+            self._pending += 1
+        return t
+
+    def call_later(self, delay: float, fn: Callable, *args,
+                   daemon: bool = False) -> Timer:
+        return self.call_at(self.now + delay, fn, *args, daemon=daemon)
+
+    def spawn(self, gen: Generator, name: str = "") -> Task:
+        """Start a cooperative task; its first resume runs at ``now``."""
+        task = Task(self, gen, name)
+        self._live += 1
+        self.call_later(0.0, task._resume, None)
+        return task
+
+    def condition(self) -> Condition:
+        return Condition(self)
+
+    # --------------------------------------------------------------- driving
+    def run(self, until: Optional[float] = None) -> float:
+        """Process events in virtual-time order.
+
+        Returns when every live task has finished and no non-daemon event
+        remains (daemon timers — health sweeps, reclamation — never keep
+        the loop alive), or when the clock would pass ``until``. Returns
+        the final virtual time."""
+        while self._heap:
+            if self._pending == 0 and self._live == 0:
+                break
+            at, _seq, timer = self._heap[0]
+            if until is not None and at > until:
+                self.now = until
+                return self.now
+            heapq.heappop(self._heap)
+            if timer.cancelled:
+                continue
+            self.now = at
+            timer.fired = True
+            if not timer.daemon:
+                self._pending -= 1
+            timer.fn(*timer.args)
+        return self.now
+
+    @property
+    def n_scheduled(self) -> int:
+        return len(self._heap)
+
+    @property
+    def n_live_tasks(self) -> int:
+        return self._live

@@ -11,7 +11,15 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Collection, Optional
 
+from repro.core.event_loop import Condition as VirtualCondition
+from repro.core.event_loop import EventLoop, Timer
 from repro.core.runner_pool import Runner, RunnerPool
+
+# A thread pool sized to the fleet would spawn thousands of OS threads at
+# paper-scale (1024+ runners); the executor is for modest external async
+# use — the scale route is the event-driven path (attach_loop +
+# RolloutEngine.run_event_driven), which needs no threads at all.
+MAX_EXECUTOR_WORKERS = 64
 
 
 class NoRunnerAvailable(RuntimeError):
@@ -43,8 +51,53 @@ class Gateway:
         self._pool_executor: Optional[ThreadPoolExecutor] = None
         self._stopped = False
         self.failovers = 0
+        self._loop: Optional[EventLoop] = None
+        self._release_cv: Optional[VirtualCondition] = None
+        self._health_timer: Optional[Timer] = None
         if start_background:
             self.start()
+
+    # ---------------------------------------------------------- event mode
+    def attach_loop(self, loop: EventLoop, *,
+                    health_checks: bool = True) -> None:
+        """Make the gateway (and its pools) event-loop citizens.
+
+        All pools share one virtual release-condition so a gateway-level
+        acquire can wait for *any* node to free a runner; the periodic
+        health sweep becomes a recurring daemon timer on the virtual clock
+        instead of a background thread. Idempotent per loop; attaching a
+        *different* loop (a fresh engine run) re-arms everything there."""
+        if self._loop is loop:
+            return
+        if self._health_timer is not None:
+            # the old timer belongs to the previous loop; drop it so the
+            # sweep is re-armed on the new clock below
+            self._health_timer.cancel()
+            self._health_timer = None
+        self._loop = loop
+        self._release_cv = VirtualCondition(loop)
+        for p in self.pools.values():
+            p.attach_loop(loop, release_cv=self._release_cv)
+        if health_checks and self._health_timer is None:
+            self._health_timer = loop.call_later(
+                self.health_interval_s, self._health_tick, daemon=True)
+
+    def detach_loop(self) -> None:
+        """Unbind the gateway and its pools from the event loop, restoring
+        thread-mode behavior (wall-clock health stamps, pool-local virtual
+        time). The engine calls this when an event-driven run finishes."""
+        if self._health_timer is not None:
+            self._health_timer.cancel()
+            self._health_timer = None
+        for p in self.pools.values():
+            p.detach_loop()
+        self._loop = None
+        self._release_cv = None
+
+    def _health_tick(self) -> None:
+        self.check_now()
+        self._health_timer = self._loop.call_later(
+            self.health_interval_s, self._health_tick, daemon=True)
 
     # ------------------------------------------------------------ routing
     def _affinity_order(self, task_id: str) -> list[str]:
@@ -85,6 +138,40 @@ class Gateway:
         """Non-blocking acquire: returns immediately, None if nothing free."""
         return self.acquire(task_id, timeout=0.0, exclude=exclude)
 
+    def acquire_ev(self, task_id: str, timeout: Optional[float] = 1.0,
+                   exclude: Collection[str] = ()):
+        """Event-loop acquire: ``got = yield from gw.acquire_ev(...)``.
+
+        Same affinity/health/exclusion semantics as ``acquire``, but the
+        calling task parks on the shared virtual release-condition until
+        any pool frees a runner or ``timeout`` virtual seconds elapse —
+        no thread ever blocks. Returns ``(node, runner)`` or ``None``."""
+        assert self._loop is not None, "attach_loop() before acquire_ev()"
+        deadline = (None if timeout is None
+                    else self._loop.now + timeout)
+        order = self._affinity_order(task_id)
+        while True:
+            candidates = 0
+            for attempt, node in enumerate(order):
+                if node in exclude or not self.status[node].healthy:
+                    continue
+                candidates += 1
+                r = self.pools[node].acquire_nowait(task_id)
+                if r is not None:
+                    if attempt > 0:
+                        self.failovers += 1
+                    return node, r
+            if candidates == 0:
+                # nothing a release could fix: every node is excluded or
+                # unhealthy — report immediately so the caller can clear
+                # its exclusions instead of parking for the full timeout
+                return None
+            remaining = (None if deadline is None
+                         else deadline - self._loop.now)
+            if remaining is not None and remaining <= 0:
+                return None
+            yield from self._release_cv.wait(remaining)
+
     def release(self, node: str, runner: Runner, **kw) -> float:
         return self.pools[node].release(runner, **kw)
 
@@ -94,7 +181,11 @@ class Gateway:
             if self._stopped:
                 raise RuntimeError("gateway stopped; no new submissions")
             if self._pool_executor is None:
-                workers = max(sum(p.size for p in self.pools.values()), 1)
+                # bounded: sizing to the fleet spawned thousands of threads
+                # at 1024+ replicas (see MAX_EXECUTOR_WORKERS above)
+                workers = min(
+                    max(sum(p.size for p in self.pools.values()), 1),
+                    MAX_EXECUTOR_WORKERS)
                 self._pool_executor = ThreadPoolExecutor(
                     max_workers=workers, thread_name_prefix="gateway")
             return self._pool_executor
@@ -125,7 +216,7 @@ class Gateway:
             try:
                 return fn(node, runner)
             finally:
-                self.release(node, runner)
+                self.release(node, runner, task_id=task_id)
 
         return self._executor().submit(job)
 
@@ -138,7 +229,8 @@ class Gateway:
             ok = h["alive"] > 0
             st = self.status[node]
             with self._lock:
-                st.last_check = time.time()
+                st.last_check = (self._loop.now if self._loop is not None
+                                 else time.time())
                 if ok:
                     st.consecutive_failures = 0
                     st.healthy = True

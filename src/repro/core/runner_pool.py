@@ -18,6 +18,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from repro.core.cow_store import CowStore, DiskImage
+from repro.core.event_loop import Condition as VirtualCondition
+from repro.core.event_loop import EventLoop, Timer
 from repro.core.faults import FaultInjector, FaultType
 from repro.core.replica import SimOSReplica, ReplicaResources, LatencyModel
 from repro.core.state_manager import ReplicaStateManager, TaskAborted
@@ -137,6 +139,7 @@ class Runner:
     task_id: Optional[str] = None
     deadline_vt: float = float("inf")   # leaked-task reclamation
     silent_broken: bool = False
+    reclaim_timer: Optional[Timer] = field(default=None, repr=False)
 
 
 class RunnerPool:
@@ -165,6 +168,8 @@ class RunnerPool:
         self.prewarm_seconds = 0.0
         self.blocked_creations = 0
         self._vt = 0.0                   # pool-local virtual clock
+        self._loop: Optional[EventLoop] = None
+        self._ev_cv: Optional[VirtualCondition] = None
         self._prewarm(size)
 
     # ------------------------------------------------------------ prewarm
@@ -195,31 +200,133 @@ class RunnerPool:
             self._all[r.runner_id] = r
             self._free.append(r)
 
+    # --------------------------------------------------------- event mode
+    def attach_loop(self, loop: EventLoop,
+                    release_cv: Optional[VirtualCondition] = None) -> None:
+        """Make the pool an event-loop citizen.
+
+        The pool's virtual clock becomes the loop's clock, acquisition
+        waits park on a virtual condition variable instead of a real
+        thread, and every acquire arms a daemon timer that reclaims the
+        runner if its task leaks past ``task_timeout_vs`` — reclamation
+        fires from virtual-time advancement, no polling sweep required.
+        ``release_cv`` lets the gateway share one wakeup channel across
+        its pools. Event mode is single-threaded by construction: do not
+        mix it with the blocking ``acquire`` path on other threads."""
+        self._loop = loop
+        self._ev_cv = release_cv or VirtualCondition(loop)
+
+    def detach_loop(self) -> None:
+        """Unbind from the event loop so threaded mode works again.
+
+        The loop's final time folds into the pool-local clock (virtual
+        time is monotone), so a later ``advance_time`` + ``reclaim_leaked``
+        sweep sees a moving clock instead of the dead loop's frozen one."""
+        if self._loop is not None:
+            self._vt = max(self._vt, self._loop.now)
+        self._loop = None
+        self._ev_cv = None
+
+    @property
+    def vt(self) -> float:
+        """Pool virtual time: the event loop's clock when attached."""
+        return self._loop.now if self._loop is not None else self._vt
+
     # ------------------------------------------------------------ acquire
+    def _take_locked(self, task_id: str) -> Runner:
+        r = self._free.popleft()
+        r.busy = True
+        r.task_id = task_id
+        r.deadline_vt = self.vt + self.task_timeout_vs
+        if self._loop is not None:
+            # leak guard: fires only if the task never releases the runner
+            r.reclaim_timer = self._loop.call_later(
+                self.task_timeout_vs * (1 + 1e-9), self.reclaim_leaked,
+                daemon=True)
+        return r
+
     def acquire(self, task_id: str, timeout: Optional[float] = None
                 ) -> Optional[Runner]:
+        """Blocking acquire (thread mode) with a deadline loop.
+
+        A single ``Condition.wait`` is not enough: a spurious wakeup, or a
+        competing waiter stealing the runner freed between ``notify`` and
+        re-acquiring the lock, would return ``None`` long before the
+        timeout elapsed. Loop until a runner is actually free or the
+        deadline passes."""
         with self._cv:
-            if not self._free:
-                self._cv.wait(timeout=timeout)
+            if timeout is None:
+                while not self._free:
+                    self._cv.wait()
+            else:
+                deadline = time.monotonic() + timeout
+                while not self._free:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                    self._cv.wait(timeout=remaining)
+            return self._take_locked(task_id)
+
+    def acquire_nowait(self, task_id: str) -> Optional[Runner]:
+        """Non-blocking take — the event-driven acquire primitive."""
+        with self._lock:
             if not self._free:
                 return None
-            r = self._free.popleft()
-            r.busy = True
-            r.task_id = task_id
-            r.deadline_vt = self._vt + self.task_timeout_vs
-            return r
+            return self._take_locked(task_id)
 
-    def release(self, runner: Runner, *, recycle: bool = True) -> float:
-        """Return a runner to the pool; recycle = reset to a clean state."""
-        dur = 0.0
-        if recycle and not runner.manager.replica.alive:
-            dur += runner.manager.recover_if_needed()
+    def acquire_ev(self, task_id: str, timeout: Optional[float] = None):
+        """Event-loop acquire: ``runner = yield from pool.acquire_ev(...)``.
+
+        Parks the calling task on the virtual condition until a runner
+        frees (release or reclamation) or ``timeout`` virtual seconds
+        elapse; returns ``None`` on timeout, like ``acquire``."""
+        assert self._loop is not None, "attach_loop() before acquire_ev()"
+        deadline = (None if timeout is None
+                    else self._loop.now + timeout)
+        while True:
+            r = self.acquire_nowait(task_id)
+            if r is not None:
+                return r
+            remaining = (None if deadline is None
+                         else deadline - self._loop.now)
+            if remaining is not None and remaining <= 0:
+                return None
+            yield from self._ev_cv.wait(remaining)
+            # re-check: another waiter may have taken the freed runner
+
+    def release(self, runner: Runner, *, recycle: bool = True,
+                task_id: Optional[str] = None) -> float:
+        """Return a runner to the pool; recycle = reset to a clean state.
+
+        Stale handles are ignored: if the runner leaked past its timeout,
+        reclamation already freed it (and may have re-issued it to another
+        task), so the original holder's late release must not append it a
+        second time — that would hand one replica to two episodes. Pass
+        ``task_id`` to make the staleness check exact; without it, a
+        runner that is no longer busy is treated as stale."""
         with self._cv:
+            if not runner.busy or (task_id is not None
+                                   and runner.task_id != task_id):
+                return 0.0
+            dur = 0.0
+            if recycle and not runner.manager.replica.alive:
+                # under the pool lock so reclamation cannot observe the
+                # runner mid-recovery
+                dur += runner.manager.recover_if_needed()
             runner.busy = False
             runner.task_id = None
             runner.deadline_vt = float("inf")
+            if runner.reclaim_timer is not None:
+                runner.reclaim_timer.cancel()
+                runner.reclaim_timer = None
             self._free.append(runner)
             self._cv.notify()
+        if self._ev_cv is not None:
+            # wake every virtual waiter: waiters carry per-episode node
+            # exclusions, so the frontmost one may refuse this runner and a
+            # single notify would strand it (lost wakeup); refused waiters
+            # just re-check and re-park, which is cheap on the loop
+            self._ev_cv.notify_all()
         return dur
 
     def advance_time(self, dt: float) -> None:
@@ -231,14 +338,19 @@ class RunnerPool:
         reclaimed = []
         with self._cv:
             for r in self._all.values():
-                if r.busy and self._vt > r.deadline_vt:
+                if r.busy and self.vt > r.deadline_vt:
                     r.busy = False
                     tid, r.task_id = r.task_id, None
                     r.deadline_vt = float("inf")
+                    if r.reclaim_timer is not None:
+                        r.reclaim_timer.cancel()
+                        r.reclaim_timer = None
                     self._free.append(r)
                     reclaimed.append(tid)
             if reclaimed:
                 self._cv.notify_all()
+        if reclaimed and self._ev_cv is not None:
+            self._ev_cv.notify_all()    # see release(): exclusion-aware wake
         return reclaimed
 
     # ------------------------------------------------------------ metrics

@@ -14,12 +14,13 @@ import statistics
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro.core.seeding import lognorm_jitter, stable_seed
 from repro.core.state_manager import ManagerOverheadModel
 
 
 @dataclass
 class SimConfig:
-    step_mean_s: float = 2.0
+    step_mean_s: float = 2.15           # matches replica.LatencyModel
     step_sigma: float = 0.35
     dispatch_service_s: float = 0.005   # centralized dispatcher service time
     semi_group_size: int = 64
@@ -64,14 +65,14 @@ def run_throughput(n_replicas: int, design: str, *, sim_seconds: float = 120.0,
                    seed: int = 0, cfg: Optional[SimConfig] = None) -> dict:
     """Simulate `sim_seconds` of fleet operation; return throughput/latency."""
     cfg = cfg or SimConfig()
-    rng = random.Random((seed, n_replicas, design).__hash__() & 0x7FFFFFFF)
+    rng = random.Random(stable_seed(seed, n_replicas, design))
 
     total_steps = 0
     latencies = []
     for _ in range(n_replicas):
         t = rng.uniform(0, cfg.step_mean_s)      # desynchronized start
         while t < sim_seconds:
-            step = cfg.step_mean_s * rng.lognormvariate(0, cfg.step_sigma)
+            step = cfg.step_mean_s * lognorm_jitter(rng, cfg.step_sigma)
             extra = dispatch_extra(design, n_replicas, 1.0 / cfg.step_mean_s,
                                    cfg, rng)
             lat = step + extra
@@ -120,7 +121,7 @@ def run_recovery(n_replicas: int, *, seed: int = 0,
     boot concurrency bounded by disk bandwidth. Returns the healthy-fraction
     timeline and the full-recovery time."""
     cfg = cfg or SimConfig()
-    rng = random.Random((seed, n_replicas).__hash__() & 0x7FFFFFFF)
+    rng = random.Random(stable_seed(seed, n_replicas))
     n_nodes = max(1, math.ceil(n_replicas / cfg.replicas_per_node))
     finish = []
     for node in range(n_nodes):
@@ -130,7 +131,7 @@ def run_recovery(n_replicas: int, *, seed: int = 0,
         for i in range(k):
             lane = min(range(len(lanes)), key=lanes.__getitem__)
             dur = (0.8 + (cfg.boot_s + cfg.configure_s)
-                   * rng.lognormvariate(0, cfg.boot_jitter_sigma))
+                   * lognorm_jitter(rng, cfg.boot_jitter_sigma))
             lanes[lane] += dur
             finish.append(lanes[lane])
     finish.sort()

@@ -173,6 +173,27 @@ class ManagerOverheadModel:
     inter_group_sync_s: float = 0.05  # semi-decentralized coordination
 
 
+def design_dispatch_overhead(design: str, n_replicas: int, *,
+                             group_size: int = 16,
+                             overhead: Optional[ManagerOverheadModel] = None
+                             ) -> float:
+    """Per-op dispatcher cost (virtual seconds) of a manager design.
+
+    The single calibration the manager baseline classes and the live-engine
+    throughput benchmark share: centralized pays queueing that grows with
+    the whole fleet, semi pays one group's queueing plus the inter-group
+    sync, decentralized pays only the constant local dispatch."""
+    m = overhead or ManagerOverheadModel()
+    if design == "centralized":
+        return m.base_s + m.per_replica_s * n_replicas
+    if design == "semi":
+        return (m.base_s + m.per_replica_s * min(group_size, n_replicas)
+                + m.inter_group_sync_s)
+    if design == "decentralized":
+        return m.base_s
+    raise ValueError(f"unknown manager design {design!r}")
+
+
 class CentralizedManager:
     """One dispatcher in front of every replica (anti-pattern baseline)."""
 
@@ -185,8 +206,8 @@ class CentralizedManager:
         self._global_lock = threading.Lock()
 
     def dispatch_overhead(self) -> float:
-        return (self.overhead.base_s
-                + self.overhead.per_replica_s * len(self.managers))
+        return design_dispatch_overhead(self.kind, len(self.managers),
+                                        overhead=self.overhead)
 
     def step(self, idx: int, action: Any):
         with self._global_lock:       # the bottleneck, made explicit
@@ -208,9 +229,9 @@ class SemiDecentralizedManager:
         self._locks = [threading.Lock() for _ in range(n_groups)]
 
     def dispatch_overhead(self) -> float:
-        return (self.overhead.base_s
-                + self.overhead.per_replica_s * self.group_size
-                + self.overhead.inter_group_sync_s)
+        return design_dispatch_overhead(self.kind, len(self.managers),
+                                        group_size=self.group_size,
+                                        overhead=self.overhead)
 
     def step(self, idx: int, action: Any):
         with self._locks[idx // self.group_size]:
@@ -229,7 +250,8 @@ class DecentralizedManager:
         self.overhead = overhead or ManagerOverheadModel()
 
     def dispatch_overhead(self) -> float:
-        return self.overhead.base_s
+        return design_dispatch_overhead(self.kind, len(self.managers),
+                                        overhead=self.overhead)
 
     def step(self, idx: int, action: Any):
         out = self.managers[idx].step(action)

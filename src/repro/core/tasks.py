@@ -15,6 +15,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from repro.core.seeding import stable_seed
+
 # (task_type, domain, description, trajectories, steps) — Table 3 rows
 TABLE3_ROWS = [
     ("Office", "LibreOffice Writer", "Document Editing", 493, 5028),
@@ -65,7 +67,7 @@ class TaskSuite:
     def sample(self, n: int) -> list[TaskSpec]:
         self._calls += 1
         return self._registry().sample(
-            n, seed=(self._seed, self._calls).__hash__() & 0x7FFFFFFF)
+            n, seed=stable_seed(self._seed, self._calls))
 
     def by_domain(self, domain: str, n: int) -> list[TaskSpec]:
         reg = self._registry()
@@ -73,7 +75,7 @@ class TaskSuite:
         self._calls += 1
         return reg.tasks_for(
             scenario.name, n,
-            seed=(self._seed, self._calls).__hash__() & 0x7FFFFFFF)
+            seed=stable_seed(self._seed, self._calls))
 
     @staticmethod
     def domains() -> list[str]:

@@ -9,4 +9,5 @@ from repro.rollout.engine import (EpisodeResult, RolloutConfig, RolloutEngine,
 from repro.rollout.scenarios import (Scenario, ScenarioProfile,
                                      ScenarioRegistry, default_registry,
                                      get_default_registry)
-from repro.rollout.writer import TrajectoryWriter, WriterStats
+from repro.rollout.writer import (TrajectoryWriter, VirtualWriterGate,
+                                  WriterStats)

@@ -18,6 +18,17 @@ Drives many concurrent multi-turn episodes over the ``Gateway`` /
 
 Episodes follow the paper's unified four-phase task flow: configure →
 reset → operate (policy loop) → evaluate.
+
+Two execution modes share these semantics:
+
+- ``run`` — thread-per-episode. Real concurrency, bounded by what one
+  machine can thread (``max_inflight`` ≈ 16-64).
+- ``run_event_driven`` — episodes are cooperative tasks on a
+  ``repro.core.event_loop.EventLoop``; latencies advance a virtual clock
+  instead of blocking threads, so *thousands* of episodes run concurrently
+  on one core with identical semantics (bounded in-flight, writer
+  backpressure via ``VirtualWriterGate``, failover-with-exclusion). This
+  is how the paper-scale 1024-replica fleets execute end-to-end.
 """
 from __future__ import annotations
 
@@ -25,8 +36,10 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
+from repro.core.event_loop import Condition as VirtualCondition
+from repro.core.event_loop import EventLoop, Sleep
 from repro.core.gateway import Gateway
 from repro.core.state_manager import TaskAborted
 from repro.core.tasks import TaskSpec
@@ -34,7 +47,7 @@ from repro.core.telemetry import Telemetry
 from repro.data.pipeline import Trajectory, TrajectoryStep
 from repro.rollout.scenarios import Scenario, ScenarioRegistry, \
     get_default_registry
-from repro.rollout.writer import TrajectoryWriter
+from repro.rollout.writer import TrajectoryWriter, VirtualWriterGate
 
 
 @dataclass
@@ -42,8 +55,20 @@ class RolloutConfig:
     max_inflight: int = 16          # bounded worker slots
     max_attempts: int = 4           # episode tries incl. first (failover)
     acquire_timeout_s: float = 5.0  # wait for a free runner per attempt
+    # event mode's acquire deadline is *virtual* seconds: episodes hold
+    # runners for whole virtual episodes (~40 vs), and waiting is free on a
+    # virtual clock, so the guard is generous — it only exists to surface a
+    # genuinely dead fleet instead of wedging the loop
+    acquire_timeout_vs: float = 600.0
     backpressure_poll_s: float = 0.01
     max_steps: Optional[int] = None  # safety cap above task horizon
+    # per-operation dispatch cost in virtual seconds — prices a manager
+    # design (see state_manager.design_dispatch_overhead) into the live
+    # engine without touching the replica latency model
+    op_overhead: Optional[Callable[[], float]] = None
+    # event mode: virtual seconds the modeled consumer spends per
+    # trajectory (see VirtualWriterGate)
+    writer_consume_vs: float = 0.02
 
 
 @dataclass
@@ -67,6 +92,7 @@ class RolloutReport:
     peak_inflight: int = 0
     backpressure_waits: int = 0
     virtual_seconds: float = 0.0    # summed per-episode env time
+    virtual_makespan: float = 0.0   # event mode: fleet clock at completion
     wall_seconds: float = 0.0
     results: list[EpisodeResult] = field(default_factory=list)
 
@@ -203,8 +229,11 @@ class RolloutEngine:
                         self._report.reassignments += 1
                     self.telemetry.count("task_reassignments")
                 finally:
-                    # pool recycles (and autonomously recovers) the runner
-                    self.gateway.release(node, runner)
+                    # pool recycles (and autonomously recovers) the runner;
+                    # task_id guards against releasing a runner that leak
+                    # reclamation already took back and re-issued
+                    self.gateway.release(node, runner,
+                                         task_id=task["task_id"])
             if traj is not None:
                 # runner already released: a blocking write under
                 # backpressure must not idle fleet capacity
@@ -222,12 +251,13 @@ class RolloutEngine:
                  ) -> tuple[Trajectory, int, float, float]:
         """One full configure → reset → operate → evaluate pass."""
         cfg = self.config
+        oh = cfg.op_overhead or _zero_overhead
         mgr = runner.manager
         vs = 0.0
         try:
-            vs = mgr.configure(task)
+            vs = mgr.configure(task) + oh()
             obs, dur = mgr.reset()
-            vs += dur
+            vs += dur + oh()
             steps: list[TrajectoryStep] = []
             horizon = int(task.get("horizon", 15))
             cap = cfg.max_steps or horizon * 2
@@ -235,12 +265,13 @@ class RolloutEngine:
             while not done and len(steps) < cap:
                 thought, action = scenario.policy(obs, len(steps))
                 obs, _rew, done, _info, dur = mgr.step(action)
+                dur += oh()
                 vs += dur
                 steps.append(TrajectoryStep(obs, thought, action))
                 self.telemetry.count("steps")
                 self.telemetry.observe("step_latency_vs", dur)
             score, dur = mgr.evaluate()
-            vs += dur
+            vs += dur + oh()
         except TaskAborted as e:
             # charge the attempt's configure/reset and completed steps, not
             # just the aborting step — the throughput projection depends on
@@ -260,3 +291,172 @@ class RolloutEngine:
                 rep.total_steps += result.steps
             else:
                 rep.failed += 1
+
+    # ------------------------------------------------------------ event mode
+    def run_event_driven(self, tasks: Sequence, *,
+                         loop: Optional[EventLoop] = None) -> RolloutReport:
+        """Generate one trajectory per task on a virtual-time event loop.
+
+        Identical semantics to ``run`` — bounded in-flight launches, writer
+        backpressure, failover-with-exclusion — but episodes are cooperative
+        tasks instead of threads, so ``max_inflight`` can equal the fleet
+        size: 1024+ episodes run concurrently on one core and the whole run
+        is deterministic for a fixed fleet/seed (same event order, same
+        report, in any process)."""
+        cfg = self.config
+        loop = loop or EventLoop()
+        self._report = RolloutReport()
+        self._stop.clear()
+        t0 = time.monotonic()
+        task_dicts = [t.to_dict() if isinstance(t, TaskSpec) else dict(t)
+                      for t in tasks]
+        self.gateway.attach_loop(loop)
+        # notified on every episode settle and every virtual consume — the
+        # feeder's wakeup channel for both gating conditions
+        wake = VirtualCondition(loop)
+        gate = VirtualWriterGate(loop, self.writer,
+                                 consume_vs=cfg.writer_consume_vs,
+                                 on_drain=wake.notify_all)
+
+        def feeder():
+            for i, task in enumerate(task_dicts):
+                stalled = False
+                while not self._stop.is_set() and (
+                        self._inflight >= cfg.max_inflight
+                        or gate.saturated()):
+                    if not stalled:
+                        stalled = True
+                        self._report.backpressure_waits += 1
+                        self.telemetry.count("backpressure_waits")
+                    yield from wake.wait()
+                if self._stop.is_set():
+                    break
+                # claim the slot feeder-side, mirroring the threaded path;
+                # malformed task dicts must fail inside the episode (as a
+                # failed EpisodeResult, like the threaded path), not here
+                self._enter()
+                loop.spawn(self._episode_ev(task, gate, wake),
+                           name=f"episode:{task.get('task_id', i)}")
+
+        loop.spawn(feeder(), name="rollout-feeder")
+        try:
+            loop.run()
+            if loop.errors:
+                # episodes capture their own exceptions, so anything here
+                # is a feeder or kernel failure that silently dropped
+                # episodes — surface it like the threaded path would
+                name, err = loop.errors[0]
+                raise RuntimeError(
+                    f"event-loop task {name!r} crashed; "
+                    f"{len(loop.errors)} task error(s) total") from err
+        finally:
+            # restore thread-mode semantics (wall-clock health stamps,
+            # pool-local virtual time) for any subsequent run()
+            self.gateway.detach_loop()
+        self._report.virtual_makespan = loop.now
+        self._report.wall_seconds = time.monotonic() - t0
+        return self._report
+
+    def _episode_ev(self, task: dict, gate: VirtualWriterGate,
+                    wake: VirtualCondition):
+        """Cooperative-task twin of ``_episode_with_failover``."""
+        cfg = self.config
+        result = EpisodeResult(task=task, ok=False)
+        excluded: set[str] = set()
+        traj = None
+        try:
+            scenario = self.registry.resolve(task)
+            for attempt in range(cfg.max_attempts):
+                result.attempts = attempt + 1
+                got = yield from self.gateway.acquire_ev(
+                    task["task_id"], timeout=cfg.acquire_timeout_vs,
+                    exclude=excluded)
+                if got is None and excluded:
+                    # every other node is busy/unhealthy: fall back to the
+                    # full fleet rather than deadlocking on exclusions
+                    excluded.clear()
+                    got = yield from self.gateway.acquire_ev(
+                        task["task_id"], timeout=cfg.acquire_timeout_vs)
+                if got is None:
+                    result.error = f"no runner available ({task['task_id']})"
+                    break
+                node, runner = got
+                result.nodes += (node,)
+                try:
+                    traj, steps, score, vs = yield from self._attempt_ev(
+                        task, scenario, runner)
+                    result.ok = True
+                    result.steps = steps
+                    result.score = score
+                    result.virtual_seconds += vs
+                    break
+                except TaskAborted as e:
+                    result.virtual_seconds += e.virtual_seconds
+                    result.error = str(e)
+                    excluded.add(node)
+                    self._report.reassignments += 1
+                    self.telemetry.count("task_reassignments")
+                finally:
+                    # pool recycles (and autonomously recovers) the runner;
+                    # task_id guards against releasing a runner that leak
+                    # reclamation already took back and re-issued
+                    self.gateway.release(node, runner,
+                                         task_id=task["task_id"])
+            if traj is not None:
+                # runner already released; the gate applies backpressure in
+                # virtual time via the feeder's saturated() check
+                gate.write(traj)
+                self.telemetry.count("episodes_completed")
+        except Exception as e:   # keep one bad episode from sinking the run
+            result.error = f"{type(e).__name__}: {e}"
+        finally:
+            self._exit()
+            self._settle(result)
+            wake.notify_all()
+
+    def _attempt_ev(self, task: dict, scenario: Scenario, runner):
+        """Cooperative twin of ``_attempt``: each operation's virtual cost
+        is slept on the loop, so concurrent episodes interleave exactly as
+        a real fleet's latencies would."""
+        cfg = self.config
+        oh = cfg.op_overhead or _zero_overhead
+        mgr = runner.manager
+        vs = 0.0
+        try:
+            dur = mgr.configure(task) + oh()
+            vs += dur
+            yield Sleep(dur)
+            obs, dur = mgr.reset()
+            dur += oh()
+            vs += dur
+            yield Sleep(dur)
+            steps: list[TrajectoryStep] = []
+            horizon = int(task.get("horizon", 15))
+            cap = cfg.max_steps or horizon * 2
+            done = False
+            while not done and len(steps) < cap:
+                thought, action = scenario.policy(obs, len(steps))
+                obs, _rew, done, _info, dur = mgr.step(action)
+                dur += oh()
+                vs += dur
+                yield Sleep(dur)
+                steps.append(TrajectoryStep(obs, thought, action))
+                self.telemetry.count("steps")
+                self.telemetry.observe("step_latency_vs", dur)
+            score, dur = mgr.evaluate()
+            dur += oh()
+            vs += dur
+            yield Sleep(dur)
+        except TaskAborted as e:
+            # the failed attempts + autonomous recovery occupied the runner
+            # in virtual time; sleep it before the failover re-dispatch so
+            # the fleet clock stays honest under faults
+            yield Sleep(e.virtual_seconds)
+            e.virtual_seconds += vs
+            raise
+        traj = Trajectory(task["task_id"], task["description"], steps, score)
+        return traj, len(steps), score, vs
+
+
+def _zero_overhead() -> float:
+    return 0.0

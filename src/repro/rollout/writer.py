@@ -7,15 +7,20 @@ pipeline. The bounded queue is the engine's backpressure signal: when
 downstream (encoding / replay buffer) cannot keep up, ``saturated()``
 turns true and the scheduler stops launching new episodes until the
 backlog drains.
+
+``VirtualWriterGate`` is the event-driven engine's view of the same
+mechanism: the real consumer drains in wall time, which the virtual clock
+cannot see, so the gate models consumer throughput in virtual seconds and
+makes saturation a deterministic function of virtual time.
 """
 from __future__ import annotations
 
 import queue
 import threading
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
+from repro.core.event_loop import EventLoop
 from repro.data.pipeline import Trajectory, encode_trajectory
 from repro.data.replay_buffer import ReplayBuffer
 from repro.data.tokenizer import ByteTokenizer
@@ -36,11 +41,16 @@ class TrajectoryWriter:
                  tokenizer: Optional[ByteTokenizer] = None,
                  vocab_size: int = 151936,
                  capacity: int = 256,
+                 retain: bool = True,
                  on_trajectory: Optional[Callable[[Trajectory], None]] = None):
         self.replay = replay
         self.tokenizer = tokenizer
         self.vocab_size = vocab_size
         self.capacity = capacity
+        self.retain = retain     # keep consumed trajectories in memory;
+        #                          False for benchmark-scale fleets where
+        #                          thousands of observation arrays would
+        #                          otherwise accumulate
         self.on_trajectory = on_trajectory
         self.stats = WriterStats()
         self.errors: list[str] = []
@@ -51,6 +61,9 @@ class TrajectoryWriter:
         self._resumed.set()
         self._closed = False
         self._lock = threading.Lock()
+        # notified after every consumed trajectory, so drain() wakes on the
+        # last consume instead of busy-polling the stats counters
+        self._consumed_cv = threading.Condition(self._lock)
         self._thread = threading.Thread(target=self._consume, daemon=True,
                                         name="trajectory-writer")
         self._thread.start()
@@ -84,9 +97,10 @@ class TrajectoryWriter:
                 # a bad trajectory (or a raising on_trajectory callback) must
                 # not kill the consumer: producers would deadlock on a full
                 # queue. Record the error and keep draining.
-                with self._lock:
+                with self._consumed_cv:
                     self.errors.append(f"{type(e).__name__}: {e}")
                     self.stats.consumed += 1
+                    self._consumed_cv.notify_all()
 
     def _handle(self, traj: Trajectory) -> None:
         if self.tokenizer is not None:
@@ -101,10 +115,12 @@ class TrajectoryWriter:
             self.replay.add(traj)
         if self.on_trajectory is not None:
             self.on_trajectory(traj)
-        with self._lock:
-            self.trajectories.append(traj)
+        with self._consumed_cv:
+            if self.retain:
+                self.trajectories.append(traj)
             self.stats.consumed += 1
             self.stats.steps += len(traj.steps)
+            self._consumed_cv.notify_all()
 
     # -------------------------------------------------------------- control
     def pause(self) -> None:
@@ -115,14 +131,14 @@ class TrajectoryWriter:
         self._resumed.set()
 
     def drain(self, timeout: float = 30.0) -> bool:
-        """Block until every accepted trajectory has been consumed."""
-        t0 = time.monotonic()
-        while time.monotonic() - t0 < timeout:
-            with self._lock:
-                if self.stats.consumed >= self.stats.written:
-                    return True
-            time.sleep(0.01)
-        return False
+        """Block until every accepted trajectory has been consumed.
+
+        Waits on the consumer's condition variable, so it returns promptly
+        after the final consume rather than on the next poll tick."""
+        with self._consumed_cv:
+            return self._consumed_cv.wait_for(
+                lambda: self.stats.consumed >= self.stats.written,
+                timeout=timeout)
 
     def close(self, timeout: float = 30.0) -> None:
         if self._closed:
@@ -131,3 +147,51 @@ class TrajectoryWriter:
         self.resume()
         self._q.put(self._done)
         self._thread.join(timeout=timeout)
+
+
+class VirtualWriterGate:
+    """Virtual-time mirror of ``TrajectoryWriter`` backpressure.
+
+    The event-driven engine runs thousands of episodes on a virtual clock;
+    the writer's real consumer thread drains in *wall* time, invisible to
+    that clock, so gating on the real queue would make backpressure depend
+    on host speed and break determinism. The gate forwards every
+    trajectory to the real writer (data still flows to the replay buffer)
+    while modeling the consumer as draining one trajectory per
+    ``consume_vs`` virtual seconds; ``saturated()`` is then a
+    deterministic function of virtual time, with the same capacity and
+    high-water semantics as the threaded path."""
+
+    def __init__(self, loop: EventLoop, writer: TrajectoryWriter, *,
+                 consume_vs: float = 0.02, high_water: float = 0.75,
+                 on_drain: Optional[Callable[[], None]] = None):
+        self._loop = loop
+        self.writer = writer
+        self.capacity = writer.capacity
+        self.consume_vs = consume_vs
+        self.high_water = high_water
+        self.on_drain = on_drain
+        self._backlog = 0
+        self._draining = False
+
+    def write(self, traj: Trajectory) -> None:
+        self.writer.write(traj)
+        self._backlog += 1
+        if not self._draining:
+            self._draining = True
+            self._loop.call_later(self.consume_vs, self._drain_one)
+
+    def _drain_one(self) -> None:
+        self._backlog -= 1
+        if self._backlog > 0:
+            self._loop.call_later(self.consume_vs, self._drain_one)
+        else:
+            self._draining = False
+        if self.on_drain is not None:
+            self.on_drain()
+
+    def saturated(self) -> bool:
+        return self._backlog >= max(1, int(self.capacity * self.high_water))
+
+    def backlog(self) -> int:
+        return self._backlog

@@ -211,7 +211,9 @@ def test_data_server_end_to_end_with_faults():
     tasks = [t.to_dict() for t in TaskSuite(seed=0).sample(8)]
     obs = ds.reset(tasks)
     assert len(obs) == 8
-    for _ in range(30):
+    # enough rounds for a max-horizon (25-step) episode to crash late and
+    # replay in full on a fresh runner after reassignment
+    for _ in range(60):
         live = ds.live_slots()
         if not live:
             break

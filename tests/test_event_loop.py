@@ -1,0 +1,487 @@
+"""Event-driven virtual-time core: kernel determinism, timer cancellation,
+condition timeouts, virtual-time leak reclamation, and threaded-vs-event
+parity of the full rollout stack."""
+import time
+
+import pytest
+
+from repro.core import (CowStore, DiskImage, EventLoop, FaultInjector,
+                        FaultType, Gateway, RunnerPool, Sleep)
+from repro.core.event_loop import Condition
+from repro.core.seeding import stable_seed
+from repro.rollout import (RolloutConfig, RolloutEngine, TrajectoryWriter,
+                           VirtualWriterGate, get_default_registry)
+
+
+# ------------------------------------------------------------------ kernel
+def test_virtual_clock_orders_events_and_joins_tasks():
+    loop = EventLoop()
+    trace = []
+
+    def worker():
+        trace.append(("worker-start", loop.now))
+        yield Sleep(2.0)
+        trace.append(("worker-end", loop.now))
+        return "payload"
+
+    def joiner(target):
+        done = yield target
+        trace.append(("joined", loop.now, done.result()))
+
+    t = loop.spawn(worker())
+    loop.spawn(joiner(t))
+    loop.call_later(1.0, lambda: trace.append(("timer", loop.now)))
+    end = loop.run()
+    assert trace == [("worker-start", 0.0), ("timer", 1.0),
+                     ("worker-end", 2.0), ("joined", 2.0, "payload")]
+    assert end == 2.0 and t.result() == "payload"
+
+
+def test_kernel_event_order_is_deterministic_across_runs():
+    def run_once():
+        loop = EventLoop()
+        trace = []
+
+        def task(name, delays):
+            for d in delays:
+                yield Sleep(d)
+                trace.append((name, round(loop.now, 6)))
+
+        # deliberate ties: tasks b and c land on the same instants
+        loop.spawn(task("a", [0.5, 0.5, 1.0]))
+        loop.spawn(task("b", [1.0, 1.0]))
+        loop.spawn(task("c", [1.0, 1.0]))
+        loop.run()
+        return trace
+
+    assert run_once() == run_once()
+
+
+def test_timer_cancellation_and_daemon_timers():
+    loop = EventLoop()
+    fired = []
+    kept = loop.call_later(1.0, lambda: fired.append("kept"))
+    dropped = loop.call_later(0.5, lambda: fired.append("dropped"))
+    dropped.cancel()
+    # recurring daemon work must not keep the loop alive once real work ends
+    def heartbeat():
+        fired.append("beat")
+        loop.call_later(10.0, heartbeat, daemon=True)
+    loop.call_later(10.0, heartbeat, daemon=True)
+    loop.run()
+    assert fired == ["kept"]
+    assert not dropped.fired and dropped.cancelled
+    assert loop.now == 1.0          # never advanced to the daemon tick
+
+
+def test_condition_wait_timeout_and_notify():
+    loop = EventLoop()
+    cond = Condition(loop)
+    got = []
+
+    def waiter(name, timeout):
+        ok = yield from cond.wait(timeout)
+        got.append((name, ok, loop.now))
+
+    loop.spawn(waiter("timed-out", 1.0))
+    loop.spawn(waiter("notified", 10.0))
+    loop.call_later(2.0, cond.notify)
+    loop.run()
+    assert ("timed-out", False, 1.0) in got
+    assert ("notified", True, 2.0) in got
+
+
+# --------------------------------------------------- pool/gateway citizens
+def _base():
+    store = CowStore(block_size=1 << 20)
+    return DiskImage.create_base(store, "ubuntu", 64 << 20)
+
+
+def test_reclaim_leaked_fires_from_virtual_time_advancement():
+    loop = EventLoop()
+    pool = RunnerPool("n0", _base(), size=1, task_timeout_vs=50.0)
+    pool.attach_loop(loop)
+    outcome = {}
+
+    def leaker():
+        r = yield from pool.acquire_ev("leaky")
+        assert r is not None
+        outcome["leaked_at"] = loop.now
+        # never releases: the daemon reclaim timer must recover the runner
+
+    def waiter():
+        r = yield from pool.acquire_ev("patient")
+        outcome["acquired_at"] = loop.now
+        outcome["runner"] = r
+        pool.release(r)
+
+    loop.spawn(leaker())
+    loop.spawn(waiter())
+    loop.run()
+    # reclamation fired when the virtual clock passed the leak deadline —
+    # no polling sweep, no advance_time() call
+    assert outcome["acquired_at"] == pytest.approx(50.0, abs=1e-6)
+    assert pool.n_free == 1
+
+
+def test_stale_release_after_reclaim_does_not_double_free():
+    """A leaked runner that reclamation re-issued to task B must not be
+    freed again when task A's zombie episode finally releases it."""
+    loop = EventLoop()
+    pool = RunnerPool("n0", _base(), size=1, task_timeout_vs=20.0)
+    pool.attach_loop(loop)
+    trace = []
+
+    def zombie():
+        r = yield from pool.acquire_ev("task-A")
+        yield Sleep(30.0)               # leaks: deadline passes at vt=20
+        # stale handle: reclamation freed it and B holds it now
+        pool.release(r, task_id="task-A")
+        trace.append(("zombie-release", pool.n_free, r.task_id))
+
+    def successor():
+        yield Sleep(5.0)
+        # parks until reclamation frees the leaked runner at vt=20
+        r = yield from pool.acquire_ev("task-B", timeout=None)
+        trace.append(("B-acquired", loop.now, r.task_id))
+        yield Sleep(15.0)               # still holding at vt=30 (A releases)
+        pool.release(r, task_id="task-B")
+        trace.append(("B-release", pool.n_free))
+
+    loop.spawn(zombie())
+    loop.spawn(successor())
+    loop.run()
+    assert ("B-acquired", pytest.approx(20.0), "task-B") in trace
+    # the stale release was a no-op: B still held the runner (n_free 0)
+    assert ("zombie-release", 0, "task-B") in trace
+    assert ("B-release", 1) in trace
+    assert pool.n_free == 1             # exactly one copy in the pool
+
+
+def test_gateway_health_sweep_runs_on_virtual_clock():
+    loop = EventLoop()
+    pool = RunnerPool("n0", _base(), size=1)
+    gw = Gateway([pool], health_interval_s=10.0)
+    gw.attach_loop(loop)
+    gw.mark_unreachable("n0")
+    assert gw.healthy_nodes() == []
+
+    def prober():
+        # all nodes unhealthy: immediate None (matches the threaded path)
+        got = yield from gw.acquire_ev("t", timeout=5.0)
+        assert got is None
+        yield Sleep(11.0)   # one virtual health sweep runs at t=10
+        got = yield from gw.acquire_ev("t", timeout=5.0)
+        assert got is not None
+        node, r = got
+        gw.release(node, r)
+        return loop.now
+
+    t = loop.spawn(prober())
+    loop.run()
+    assert gw.healthy_nodes() == ["n0"]
+    assert t.result() == pytest.approx(11.0)
+    assert gw.status["n0"].last_check == pytest.approx(10.0)
+
+
+def test_pool_acquire_deadline_loop_survives_steals():
+    """Threaded-path regression: a waiter whose wakeup is stolen by another
+    thread must keep waiting until its own timeout, not return None at the
+    first spurious wakeup."""
+    import threading
+
+    pool = RunnerPool("n0", _base(), size=1)
+    held = pool.acquire("holder")
+    results = {}
+
+    def slow_waiter():
+        results["slow"] = pool.acquire("slow", timeout=5.0)
+
+    t = threading.Thread(target=slow_waiter)
+    t.start()
+    time.sleep(0.1)
+    # release and instantly steal from this thread: the waiter's notify
+    # races with the steal, and before the deadline-loop fix it returned
+    # None here instead of waiting for the second release
+    pool.release(held)
+    stolen = pool.acquire("thief", timeout=1.0)
+    assert stolen is not None
+    time.sleep(0.1)
+    pool.release(stolen)
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert results["slow"] is not None
+
+
+def test_release_wakes_excluded_and_unexcluded_waiters():
+    """Lost-wakeup regression: the frontmost waiter may refuse a freed
+    runner (node exclusion), so a release must wake every waiter — a
+    single notify would strand the one that could have taken it."""
+    loop = EventLoop()
+    base = _base()
+    pools = [RunnerPool(f"n{i}", base, size=1, seed=i) for i in range(2)]
+    gw = Gateway(pools)
+    gw.attach_loop(loop)
+    held = {}
+
+    def holder():
+        for node in ("n0", "n1"):
+            got = yield from gw.acquire_ev(f"warm-{node}", timeout=None)
+            held[got[0]] = got
+        # free n0 after both waiters have parked
+        yield Sleep(5.0)
+        gw.release(*held["n0"])
+
+    def excluded_waiter():
+        # parks first (FIFO front) but refuses n0
+        got = yield from gw.acquire_ev("picky", timeout=30.0,
+                                       exclude={"n0"})
+        return (got, loop.now)
+
+    def plain_waiter():
+        got = yield from gw.acquire_ev("easy", timeout=30.0)
+        return (got, loop.now)
+
+    loop.spawn(holder())
+    a = loop.spawn(excluded_waiter())
+    b = loop.spawn(plain_waiter())
+    loop.run()
+    got_b, when_b = b.result()
+    assert got_b is not None and got_b[0] == "n0"
+    assert when_b == pytest.approx(5.0)     # immediately on release
+    got_a, _ = a.result()
+    assert got_a is None                    # n1 never freed; times out
+
+
+def test_attach_loop_rearms_health_sweep_on_new_loop():
+    """Back-to-back event runs each bring a fresh loop: the health sweep
+    must be re-armed on the new clock, not left on the dead old one."""
+    def sleeper(dt):
+        yield Sleep(dt)
+
+    pool = RunnerPool("n0", _base(), size=1)
+    gw = Gateway([pool], health_interval_s=10.0)
+    loop1 = EventLoop()
+    gw.attach_loop(loop1)
+    loop1.spawn(sleeper(15.0))
+    loop1.run()
+    assert gw.status["n0"].last_check == pytest.approx(10.0)
+    loop2 = EventLoop()
+    gw.attach_loop(loop2)
+    loop2.spawn(sleeper(25.0))
+    loop2.run()
+    # sweeps ran on loop2's clock (t=10 and t=20 of the new loop); without
+    # the re-arm the stale loop1 timer leaves last_check stuck at 10.0
+    assert gw.status["n0"].last_check == pytest.approx(20.0)
+
+
+# ------------------------------------------------------- engine parity
+def _stack(n_nodes=2, size=2, faults=True, **cfg_kw):
+    store = CowStore(block_size=1 << 20)
+    base = DiskImage.create_base(store, "ubuntu", 64 << 20)
+    pools = [RunnerPool(f"n{i}", base, size=size,
+                        faults=FaultInjector(seed=i) if faults else None,
+                        seed=i) for i in range(n_nodes)]
+    gw = Gateway(pools)
+    writer = TrajectoryWriter(capacity=64)
+    engine = RolloutEngine(gw, writer, config=RolloutConfig(**cfg_kw))
+    return engine, writer
+
+
+def test_event_engine_matches_threaded_engine_serially():
+    """max_inflight=1 serializes both paths, so reports must be identical
+    episode-for-episode — faults, failover, and scores included."""
+    tasks = get_default_registry().sample(8, seed=7)
+    reports = []
+    for mode in ("threaded", "event"):
+        engine, writer = _stack(max_inflight=1)
+        rep = (engine.run(tasks) if mode == "threaded"
+               else engine.run_event_driven(tasks))
+        writer.close()
+        reports.append(rep)
+    a, b = reports
+    assert (a.completed, a.failed, a.total_steps) == \
+           (b.completed, b.failed, b.total_steps)
+    assert a.virtual_seconds == pytest.approx(b.virtual_seconds)
+    for ra, rb in zip(a.results, b.results):
+        assert (ra.ok, ra.steps, ra.attempts, ra.nodes) == \
+               (rb.ok, rb.steps, rb.attempts, rb.nodes)
+        assert ra.score == pytest.approx(rb.score)
+
+
+def test_event_engine_semantic_parity_when_concurrent():
+    """With faults off, outcomes (completions, per-task step counts) are
+    schedule-independent: the concurrent event run must agree with the
+    threaded run even though interleavings differ."""
+    tasks = get_default_registry().sample(12, seed=3)
+    outcomes = []
+    for mode in ("threaded", "event"):
+        engine, writer = _stack(faults=False, max_inflight=6)
+        rep = (engine.run(tasks) if mode == "threaded"
+               else engine.run_event_driven(tasks))
+        writer.close()
+        assert rep.peak_inflight <= 6
+        outcomes.append(sorted((r.task["task_id"], r.ok, r.steps)
+                               for r in rep.results))
+    assert outcomes[0] == outcomes[1]
+
+
+def test_threaded_mode_works_after_event_run_on_same_stack():
+    """run_event_driven detaches the loop on exit, so a later threaded
+    run — and pool-local virtual time / reclamation — behaves normally."""
+    tasks = get_default_registry().sample(4, seed=9)
+    engine, writer = _stack(faults=False, max_inflight=2)
+    rep_ev = engine.run_event_driven(tasks)
+    assert rep_ev.completed == 4
+    rep_th = engine.run(tasks)
+    assert rep_th.completed == 4
+    # pool-local clock moves again: leaked-runner reclamation works
+    pool = next(iter(engine.gateway.pools.values()))
+    r = pool.acquire("leaky", timeout=1.0)
+    assert r is not None
+    pool.advance_time(pool.task_timeout_vs + 1.0)
+    assert pool.reclaim_leaked() == ["leaky"]
+    writer.close()
+
+
+def test_event_engine_report_is_deterministic():
+    tasks = get_default_registry().sample(10, seed=11)
+    runs = []
+    for _ in range(2):
+        engine, writer = _stack(max_inflight=8)
+        rep = engine.run_event_driven(tasks)
+        writer.close()
+        runs.append((rep.completed, rep.failed, rep.total_steps,
+                     rep.reassignments, round(rep.virtual_seconds, 9),
+                     round(rep.virtual_makespan, 9),
+                     [(r.task["task_id"], r.ok, r.steps, r.nodes)
+                      for r in rep.results]))
+    assert runs[0] == runs[1]
+
+
+def test_event_engine_failover_excludes_faulty_node():
+    store = CowStore(block_size=1 << 20)
+    base = DiskImage.create_base(store, "ubuntu", 64 << 20)
+    crash_always = FaultInjector(rates={FaultType.CRASH: 1.0}, seed=0)
+    pools = [RunnerPool("n0", base, size=4, faults=crash_always, seed=0),
+             RunnerPool("n1", base, size=4, seed=1)]
+    gw = Gateway(pools)
+    writer = TrajectoryWriter(capacity=64)
+    engine = RolloutEngine(gw, writer, config=RolloutConfig(
+        max_inflight=4, max_attempts=3))
+    tasks = [t for t in get_default_registry().sample(50, seed=2)
+             if gw._affinity_order(t.task_id)[0] == "n0"][:4]
+    assert len(tasks) == 4
+    rep = engine.run_event_driven(tasks)
+    assert rep.completed == 4 and rep.failed == 0
+    assert rep.reassignments >= 4
+    for r in rep.results:
+        assert r.nodes[0] == "n0" and r.nodes[-1] == "n1"
+    assert all(r.manager.replica.alive for r in pools[0]._all.values())
+    writer.close()
+
+
+def test_event_engine_writer_backpressure_throttles_feeder():
+    # capacity 2 with a glacial virtual consumer: the gate saturates after
+    # the second completed episode and the feeder must stall on it
+    store = CowStore(block_size=1 << 20)
+    base = DiskImage.create_base(store, "ubuntu", 64 << 20)
+    gw = Gateway([RunnerPool("n0", base, size=4, seed=0)])
+    writer = TrajectoryWriter(capacity=2)
+    engine = RolloutEngine(gw, writer, config=RolloutConfig(
+        max_inflight=4, writer_consume_vs=500.0))
+    tasks = get_default_registry().sample(8, seed=5)
+    rep = engine.run_event_driven(tasks)
+    assert rep.completed == 8
+    assert rep.backpressure_waits > 0, \
+        "feeder must throttle while the virtual writer backlog is saturated"
+    # the run still drains: every completed trajectory reached the writer
+    assert writer.drain(timeout=10.0)
+    assert writer.stats.consumed == 8
+    writer.close()
+
+
+def test_event_engine_records_malformed_task_as_failed():
+    """Parity with the threaded path: a bad task dict becomes a failed
+    EpisodeResult, never a silently dropped episode."""
+    engine, writer = _stack(faults=False, max_inflight=2)
+    good = get_default_registry().sample(2, seed=0)
+    bad = {"task_id": "legacy-x", "domain": "NoSuchApp",
+           "description": "unknown domain", "horizon": 5}
+    no_id = {"domain": "NoSuchApp", "description": "missing task_id"}
+    rep = engine.run_event_driven(list(good) + [bad, no_id])
+    assert rep.completed == 2 and rep.failed == 2
+    assert sum("KeyError" in r.error for r in rep.results if not r.ok) == 2
+    writer.close()
+
+
+def test_event_engine_surfaces_kernel_task_crashes():
+    """A crashed non-episode task (feeder/kernel level) must raise, not
+    return a normal-looking report with episodes missing."""
+    engine, writer = _stack(faults=False, max_inflight=2)
+    loop = EventLoop()
+
+    def saboteur():
+        yield Sleep(1.0)
+        raise ValueError("boom")
+
+    loop.spawn(saboteur(), name="saboteur")
+    with pytest.raises(RuntimeError, match="saboteur"):
+        engine.run_event_driven(get_default_registry().sample(2, seed=0),
+                                loop=loop)
+    writer.close()
+
+
+def test_virtual_writer_gate_drains_on_schedule():
+    loop = EventLoop()
+    writer = TrajectoryWriter(capacity=4)
+    gate = VirtualWriterGate(loop, writer, consume_vs=2.0)
+    from repro.data.pipeline import Trajectory
+    for i in range(4):
+        gate.write(Trajectory(f"t{i}", "d", []))
+    assert gate.saturated() and gate.backlog() == 4
+    loop.run(until=5.0)       # 2 virtual consumes at t=2 and t=4
+    assert gate.backlog() == 2
+    loop.run()
+    assert gate.backlog() == 0 and not gate.saturated()
+    assert writer.drain(timeout=5.0) and writer.stats.consumed == 4
+    writer.close()
+
+
+# ----------------------------------------------------- writer drain (CV)
+def test_writer_drain_returns_promptly_after_last_consume():
+    import threading
+
+    from repro.data.pipeline import Trajectory
+
+    writer = TrajectoryWriter(capacity=8)
+    writer.pause()
+    for i in range(3):
+        writer.write(Trajectory(f"t{i}", "d", []))
+    threading.Timer(0.3, writer.resume).start()
+    t0 = time.monotonic()
+    assert writer.drain(timeout=10.0)
+    elapsed = time.monotonic() - t0
+    # condition-variable wakeup: returns right after the final consume,
+    # not after another poll interval (the old busy-poll burned 10 ms
+    # ticks; allow generous CI scheduling slack)
+    assert 0.2 <= elapsed < 2.0
+    assert writer.stats.consumed == 3
+    writer.close()
+
+
+# ----------------------------------------------------------- determinism
+def test_stable_seed_is_process_stable_and_distinct():
+    import subprocess
+    import sys
+
+    assert stable_seed(0, 1024, "decentralized") != \
+        stable_seed(0, 1024, "centralized")
+    assert stable_seed("ab", "c") != stable_seed("a", "bc")
+    code = ("import sys; sys.path.insert(0, 'src'); "
+            "from repro.core.seeding import stable_seed; "
+            "print(stable_seed(0, 1024, 'decentralized'))")
+    outs = {subprocess.run([sys.executable, "-c", code], cwd=".",
+                           capture_output=True, text=True).stdout.strip()
+            for _ in range(2)}
+    assert outs == {str(stable_seed(0, 1024, "decentralized"))}
