@@ -1,0 +1,187 @@
+"""End-to-end online RL pipeline benchmark: rollouts → replay → learner.
+
+Runs the full closed loop on CPU — the event-driven ``RolloutEngine``
+generating scenario episodes over a faulted fleet, the
+``TrajectoryIngestor`` shaping scenario outcomes into rewards, and the
+``LearnerLoop`` running real jitted PPO (or SFT) update steps on the
+reduced ``qwen3-1.7b`` config — and reports the three paper-facing rates
+side by side:
+
+- trajectories/min (virtual-time, fleet-projected — the §5 data-plane
+  number),
+- learner update steps/min (wall-clock — the training-plane number),
+- rollout→learner latency (wall seconds from episode ingest to the update
+  that consumed it),
+
+plus staleness accounting (samples reweighted/dropped by the off-policy
+bound) and the learner's loss trend, which must decrease over the run.
+
+    PYTHONPATH=src python benchmarks/e2e_pipeline.py --updates-per-round 4
+
+Emits ``artifacts/bench/BENCH_e2e.json``; ``scripts/check_bench.py``
+gates CI on the machine-independent metrics in its ``gate`` block.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "bench", "BENCH_e2e.json")
+
+
+def run_pipeline(*, algo: str = "ppo", replicas: int = 16, rounds: int = 4,
+                 tasks_per_round: int = 16, updates_per_round: int = 4,
+                 seed: int = 0, lr: float = 3e-4):
+    """One deterministic interleaved run; returns the PipelineReport."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.pipeline import (IngestConfig, LearnerConfig, OnlinePipeline,
+                                PipelineConfig, build_fleet)
+    from repro.train.ppo import PPOConfig, PPOTrainer
+    from repro.train.sft import SFTTrainer
+
+    cfg = get_reduced("qwen3-1.7b", vocab_size=264)
+    model = build_model(cfg)
+    if algo == "ppo":
+        params = model.init(jax.random.PRNGKey(seed))
+        trainer = PPOTrainer(model, params, cfg=PPOConfig(lr=lr), seed=seed)
+    else:
+        trainer = SFTTrainer(model, seed=seed)
+    gateway, pools = build_fleet(replicas, seed=seed)
+    pipe = OnlinePipeline(
+        gateway, replicas, trainer,
+        pipe_cfg=PipelineConfig(rounds=rounds,
+                                tasks_per_round=tasks_per_round,
+                                updates_per_round=updates_per_round,
+                                max_inflight=replicas, seed=seed),
+        learner_cfg=LearnerConfig(algo=algo, batch_size=8, seq_len=192,
+                                  staleness_bound=4,
+                                  staleness_policy="reweight"),
+        ingest_cfg=IngestConfig(seq_len=192))
+    try:
+        report = pipe.run_interleaved()
+    finally:
+        pipe.close()
+        gateway.stop()
+        for p in pools:
+            p.close()
+    return report
+
+
+def check_report(report, *, rounds: int, tasks_per_round: int) -> None:
+    total = rounds * tasks_per_round
+    assert report.rollout_completed >= 0.8 * total, (
+        f"only {report.rollout_completed}/{total} episodes completed — "
+        f"fault recovery is not keeping the pipeline fed")
+    assert report.updates > 0, "learner never ran an update"
+    assert report.loss_decreased, (
+        f"learner loss did not decrease: first third "
+        f"{report.loss_first_third:.4f} -> last third "
+        f"{report.loss_last_third:.4f}")
+    assert report.rollout_to_learner_s.get("n", 0) > 0, (
+        "no rollout->learner latency was measured")
+
+
+def pipeline_table():
+    """(rows, derived) in the paper_tables convention for benchmarks/run.py."""
+    report = run_pipeline(algo="ppo", replicas=8, rounds=2,
+                          tasks_per_round=8, updates_per_round=2)
+    rows = [report.to_dict()]
+    derived = (f"online pipeline: {report.rollout_completed} traj -> "
+               f"{report.updates} PPO updates, loss "
+               f"{report.loss_first_third:.3f}->{report.loss_last_third:.3f}, "
+               f"{report.stale_reweighted + report.stale_dropped} stale "
+               f"samples handled")
+    return rows, derived
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--algo", choices=("ppo", "sft"), default="ppo")
+    ap.add_argument("--replicas", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--tasks-per-round", type=int, default=16)
+    ap.add_argument("--updates-per-round", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="assert the whole run stays under this wall "
+                         "budget (CI guard)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    t0 = time.monotonic()
+    report = run_pipeline(
+        algo=args.algo, replicas=args.replicas, rounds=args.rounds,
+        tasks_per_round=args.tasks_per_round,
+        updates_per_round=args.updates_per_round, seed=args.seed)
+    wall = time.monotonic() - t0
+
+    check_report(report, rounds=args.rounds,
+                 tasks_per_round=args.tasks_per_round)
+    if args.budget_s is not None:
+        assert wall <= args.budget_s, (
+            f"e2e pipeline took {wall:.1f}s wall > budget {args.budget_s}s")
+
+    lat = report.rollout_to_learner_s
+    print(f"e2e pipeline ({args.algo}, {args.replicas} replicas): "
+          f"{report.rollout_completed} trajectories "
+          f"({report.rollout_failed} failed, "
+          f"{report.reassignments} reassignments), "
+          f"{report.updates} learner updates")
+    print(f"  rollout: {report.rollout_traj_per_min:.1f} traj/min "
+          f"(virtual, fleet-projected)")
+    print(f"  learner: {report.learner_steps_per_min:.1f} update steps/min "
+          f"(wall)")
+    print(f"  rollout->learner latency: p50 {lat.get('p50', 0):.2f}s "
+          f"p95 {lat.get('p95', 0):.2f}s (wall)")
+    print(f"  loss: {report.loss_first_third:.4f} -> "
+          f"{report.loss_last_third:.4f} "
+          f"(decreased={report.loss_decreased})")
+    print(f"  staleness: {report.stale_reweighted} reweighted, "
+          f"{report.stale_dropped} dropped "
+          f"(mean {report.staleness.get('mean', 0):.1f} versions)")
+    print(f"  success rate: {report.success_rate:.0%}; wall {wall:.1f}s")
+
+    payload = {
+        "benchmark": "end-to-end online RL pipeline "
+                     "(event-driven rollouts -> replay -> learner)",
+        "algo": args.algo,
+        "config": {
+            "replicas": args.replicas, "rounds": args.rounds,
+            "tasks_per_round": args.tasks_per_round,
+            "updates_per_round": args.updates_per_round,
+            "seed": args.seed, "model": "qwen3-1.7b (reduced)",
+        },
+        # machine-independent metrics the CI regression gate compares
+        "gate": {
+            "rollout_completed": report.rollout_completed,
+            "rollout_traj_per_min": report.rollout_traj_per_min,
+            "success_rate": report.success_rate,
+            "updates": report.updates,
+            "loss_decreased": report.loss_decreased,
+        },
+        # wall-clock metrics — informational (machine-dependent)
+        "info": {
+            "learner_steps_per_min": report.learner_steps_per_min,
+            "rollout_to_learner_s": lat,
+            "wall_seconds": round(wall, 2),
+        },
+        "report": report.to_dict(),
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"baseline -> {os.path.relpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

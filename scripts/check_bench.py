@@ -1,0 +1,136 @@
+"""Bench-regression gate: compare fresh benchmark results to baselines.
+
+CI regenerates the benchmark artifacts on every run; this script compares
+them against the committed baselines and fails the job when a
+machine-independent metric drifts outside the tolerance band (default
+±10%). Virtual-time metrics are deterministic per seed, so drift in
+either direction is a signal: a drop is a throughput regression, a rise
+means the committed baseline is stale and must be regenerated
+(`python benchmarks/throughput.py`, `python benchmarks/e2e_pipeline.py`)
+and committed with the change that moved it.
+
+    python scripts/check_bench.py \
+        --baseline artifacts/bench/BENCH_throughput.json \
+        --fresh /tmp/BENCH_throughput.json
+
+The benchmark kind is auto-detected from the payload shape: throughput
+baselines carry per-(design, fleet-size) `engine` rows, e2e baselines
+carry a `gate` block.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def rel_dev(base: float, fresh: float) -> float:
+    """Signed relative deviation of fresh vs base (0.0 when both zero)."""
+    if base == 0.0:
+        return 0.0 if fresh == 0.0 else float("inf")
+    return (fresh - base) / abs(base)
+
+
+def compare_value(name: str, base: float, fresh: float, tol: float) -> list[str]:
+    dev = rel_dev(base, fresh)
+    if dev < -tol:
+        msg = (
+            f"REGRESSION {name}: {fresh:.3f} is {-dev:.1%} below "
+            f"baseline {base:.3f} (tolerance {tol:.0%})"
+        )
+        return [msg]
+    if dev > tol:
+        msg = (
+            f"STALE BASELINE {name}: {fresh:.3f} is {dev:.1%} above "
+            f"baseline {base:.3f} — regenerate and commit the baseline"
+        )
+        return [msg]
+    return []
+
+
+def check_throughput(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Per-(design, fleet size) traj/min comparison of the engine rows."""
+    problems: list[str] = []
+    fresh_rows = {}
+    for row in fresh.get("engine", []):
+        fresh_rows[(row["design"], row["replicas"])] = row
+    for row in base.get("engine", []):
+        key = (row["design"], row["replicas"])
+        other = fresh_rows.get(key)
+        name = f"traj/min[{key[0]}@{key[1]}]"
+        if other is None:
+            problems.append(f"MISSING {name}: not in fresh results")
+            continue
+        problems += compare_value(
+            name, row["traj_per_min"], other["traj_per_min"], tol
+        )
+    if not base.get("engine"):
+        problems.append("MALFORMED baseline: no engine rows")
+    return problems
+
+
+def check_e2e(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Gate-block comparison: booleans must hold, numbers stay in band."""
+    problems: list[str] = []
+    base_gate = base.get("gate", {})
+    fresh_gate = fresh.get("gate", {})
+    if not base_gate:
+        return ["MALFORMED baseline: no gate block"]
+    for name, expected in base_gate.items():
+        if name not in fresh_gate:
+            problems.append(f"MISSING gate.{name}: not in fresh results")
+            continue
+        got = fresh_gate[name]
+        if isinstance(expected, bool):
+            if got != expected:
+                problems.append(
+                    f"REGRESSION gate.{name}: expected {expected}, got {got}"
+                )
+        else:
+            problems += compare_value(
+                f"gate.{name}", float(expected), float(got), tol
+            )
+    return problems
+
+
+def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
+    if "engine" in baseline:
+        return check_throughput(baseline, fresh, tol)
+    if "gate" in baseline:
+        return check_e2e(baseline, fresh, tol)
+    return ["MALFORMED baseline: neither engine rows nor a gate block"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--fresh", required=True, help="freshly generated JSON")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.10,
+        help="allowed relative deviation per metric (default 0.10 = ±10%%)",
+    )
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    problems = check(baseline, fresh, args.tolerance)
+    if problems:
+        print(f"bench check FAILED against {args.baseline}:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(
+        f"bench check OK: {args.fresh} within ±{args.tolerance:.0%} "
+        f"of {args.baseline}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

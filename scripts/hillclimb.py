@@ -38,8 +38,7 @@ def main():
     overrides = {}
     if args.no_tp or args.tp_only or args.cache_seq_tp:
         from repro.launch.mesh import make_production_mesh
-        from repro.distributed.sharding import (train_rules, serve_rules,
-                                                configure_moe)
+        from repro.distributed.sharding import train_rules, serve_rules
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
         if args.no_tp:
             dp = ("pod", "data", "model") if args.mesh == "multi" else                  ("data", "model")

@@ -7,7 +7,7 @@ feed the roofline's MODEL_FLOPS = 6*N*D term.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 

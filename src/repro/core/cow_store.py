@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import hashlib
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 DEFAULT_BLOCK = 4 * 1024 * 1024  # 4 MiB

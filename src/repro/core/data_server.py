@@ -9,13 +9,12 @@ from __future__ import annotations
 
 import threading
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from dataclasses import dataclass
+from typing import Any, Optional
 
-import numpy as np
 
 from repro.core.gateway import Gateway
-from repro.core.runner_pool import Runner, RunnerPool
+from repro.core.runner_pool import Runner
 from repro.core.state_manager import TaskAborted
 from repro.core.telemetry import Telemetry
 

@@ -8,7 +8,7 @@ import hashlib
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Collection, Optional
 
 from repro.core.event_loop import Condition as VirtualCondition

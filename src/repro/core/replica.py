@@ -12,12 +12,12 @@ from __future__ import annotations
 import enum
 import hashlib
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.cow_store import CowStore, DiskImage
+from repro.core.cow_store import DiskImage
 from repro.core.faults import FaultInjector, FaultType, ReplicaError
 from repro.core.seeding import lognorm_jitter, stable_seed
 

@@ -15,14 +15,14 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
-from repro.core.cow_store import CowStore, DiskImage
+from repro.core.cow_store import DiskImage
 from repro.core.event_loop import Condition as VirtualCondition
 from repro.core.event_loop import EventLoop, Timer
-from repro.core.faults import FaultInjector, FaultType
-from repro.core.replica import SimOSReplica, ReplicaResources, LatencyModel
-from repro.core.state_manager import ReplicaStateManager, TaskAborted
+from repro.core.faults import FaultInjector
+from repro.core.replica import SimOSReplica, LatencyModel
+from repro.core.state_manager import ReplicaStateManager
 
 
 # ------------------------------------------------------------- host model

@@ -11,11 +11,10 @@ from __future__ import annotations
 import math
 import random
 import statistics
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.seeding import lognorm_jitter, stable_seed
-from repro.core.state_manager import ManagerOverheadModel
 
 
 @dataclass

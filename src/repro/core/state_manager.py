@@ -18,11 +18,11 @@ from __future__ import annotations
 
 import enum
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
-from repro.core.faults import FaultInjector, FaultType, ReplicaError, RetryPolicy
-from repro.core.replica import SimOSReplica, ReplicaState
+from repro.core.faults import FaultType, ReplicaError, RetryPolicy
+from repro.core.replica import SimOSReplica
 
 
 class ManagerState(enum.Enum):

@@ -11,9 +11,7 @@ working unchanged.
 """
 from __future__ import annotations
 
-import random
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
 
 from repro.core.seeding import stable_seed
 

@@ -1,16 +1,29 @@
-"""Counters / histograms / timelines for throughput, latency and recovery."""
+"""Counters / histograms / gauges / timers for throughput, latency,
+recovery, and the online actor-learner pipeline (staleness accounting)."""
 from __future__ import annotations
 
 import statistics
 import threading
+import time
 from collections import defaultdict
-from dataclasses import dataclass, field
+from contextlib import contextmanager
 
 
 class Telemetry:
+    """Thread-safe metric sink shared across the fleet and the learner.
+
+    - ``count``    — monotonic counters (episodes, reassignments, drops);
+    - ``observe``  — value series summarized as mean/p50/p95/max
+      (latencies, staleness, losses);
+    - ``gauge``    — last-write-wins instantaneous values (buffer depth,
+      policy version);
+    - ``timer``    — context manager observing wall seconds into a series.
+    """
+
     def __init__(self):
         self._counters: dict[str, int] = defaultdict(int)
         self._series: dict[str, list[float]] = defaultdict(list)
+        self._gauges: dict[str, float] = {}
         self._lock = threading.Lock()
 
     def count(self, name: str, n: int = 1) -> None:
@@ -21,11 +34,37 @@ class Telemetry:
         with self._lock:
             self._series[name].append(value)
 
+    def gauge(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = value
+
+    @contextmanager
+    def timer(self, name: str):
+        t0 = time.monotonic()
+        try:
+            yield
+        finally:
+            self.observe(name, time.monotonic() - t0)
+
     def counter(self, name: str) -> int:
-        return self._counters.get(name, 0)
+        with self._lock:
+            return self._counters.get(name, 0)
+
+    def gauge_value(self, name: str, default: float = 0.0) -> float:
+        with self._lock:
+            return self._gauges.get(name, default)
+
+    def series(self, name: str) -> list[float]:
+        with self._lock:
+            return list(self._series.get(name, []))
 
     def summary(self, name: str) -> dict:
-        xs = self._series.get(name, [])
+        with self._lock:
+            xs = list(self._series.get(name, []))
+        return self._summarize(xs)
+
+    @staticmethod
+    def _summarize(xs: list[float]) -> dict:
         if not xs:
             return {"n": 0}
         return {
@@ -38,7 +77,11 @@ class Telemetry:
 
     def snapshot(self) -> dict:
         with self._lock:
-            return {
-                "counters": dict(self._counters),
-                "series": {k: self.summary(k) for k in self._series},
-            }
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            series = {k: list(v) for k, v in self._series.items()}
+        return {
+            "counters": counters,
+            "gauges": gauges,
+            "series": {k: self._summarize(v) for k, v in series.items()},
+        }

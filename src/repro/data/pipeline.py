@@ -9,13 +9,13 @@ from __future__ import annotations
 
 import queue
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Iterator, Optional
 
 import numpy as np
 
 from repro.data.tokenizer import (ByteTokenizer, screenshot_tokens,
-                                  BOS, EOS, SEP, IMG, PAD)
+                                  BOS, EOS, SEP, IMG)
 
 
 @dataclass
@@ -31,14 +31,23 @@ class Trajectory:
     instruction: str
     steps: list[TrajectoryStep]
     score: float = 0.0
+    # originating task dict (TaskSpec.to_dict shape): carries the scenario
+    # name and horizon downstream so the online pipeline can shape rewards
+    # per family without re-deriving the task from the id
+    task: Optional[dict] = None
 
 
 def encode_trajectory(traj: Trajectory, tok: ByteTokenizer,
-                      vocab_size: int, obs_tokens: int = 16
-                      ) -> tuple[np.ndarray, np.ndarray]:
-    """Returns (token_ids, loss_mask)."""
+                      vocab_size: int, obs_tokens: int = 16,
+                      return_step_ends: bool = False):
+    """Returns (token_ids, loss_mask)[, step_ends].
+
+    ``step_ends`` (opt-in) holds, per environment step, the index of the
+    token that completes that step's action — the position the online RL
+    ingest credits step rewards to."""
     ids: list[int] = [BOS] + tok.encode(traj.instruction)
     mask: list[int] = [0] * len(ids)
+    step_ends: list[int] = []
     for st in traj.steps:
         img = [IMG] + screenshot_tokens(st.observation, obs_tokens,
                                         vocab_size)
@@ -48,10 +57,12 @@ def encode_trajectory(traj: Trajectory, tok: ByteTokenizer,
             seg = [SEP] + tok.encode(text)
             ids += seg
             mask += [0] + [1] * (len(seg) - 1)
+        step_ends.append(len(ids) - 1)
     ids.append(EOS)
     mask.append(1)
     ids = [min(i, vocab_size - 1) for i in ids]
-    return np.asarray(ids, np.int32), np.asarray(mask, np.float32)
+    out = (np.asarray(ids, np.int32), np.asarray(mask, np.float32))
+    return out + (step_ends,) if return_step_ends else out
 
 
 def pack_batches(encoded: list[tuple[np.ndarray, np.ndarray]], *,

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import threading
 from collections import deque
-from typing import Any, Optional
+from typing import Any, Callable
 
 import numpy as np
 
@@ -16,6 +16,7 @@ class ReplayBuffer:
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
         self.total_added = 0
+        self.total_pruned = 0
 
     def add(self, item: Any) -> None:
         with self._lock:
@@ -34,6 +35,19 @@ class ReplayBuffer:
                 return []
             idx = self._rng.integers(0, len(self._buf), size=n)
             return [self._buf[i] for i in idx]
+
+    def prune(self, pred: Callable[[Any], bool]) -> int:
+        """Drop every item for which ``pred`` is true; returns the count.
+
+        The online learner uses this to evict samples whose policy version
+        fell outside the staleness bound — leaving them in place would
+        starve the batch sampler with unusable experience."""
+        with self._lock:
+            kept = [it for it in self._buf if not pred(it)]
+            dropped = len(self._buf) - len(kept)
+            self._buf = deque(kept, maxlen=self._buf.maxlen)
+            self.total_pruned += dropped
+            return dropped
 
     def __len__(self) -> int:
         with self._lock:

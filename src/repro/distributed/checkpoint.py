@@ -13,11 +13,9 @@ raw little-endian numpy bytes.
 """
 from __future__ import annotations
 
-import io
 import json
 import os
 import threading
-from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax

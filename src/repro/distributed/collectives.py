@@ -9,12 +9,9 @@ Karimireddy et al., arXiv:1901.09847). Inside a pod gradients stay exact.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 BLOCK = 2048  # quantization block (per-block scales)
 

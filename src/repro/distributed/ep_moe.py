@@ -17,8 +17,6 @@ The expert hidden dim additionally rides the tensor-parallel (model) axis.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -46,14 +44,10 @@ def moe_apply_ep(p: dict, cfg: ModelConfig, x: jax.Array, rules,
     B, S, D = x.shape
     act = activation(cfg.act)
 
-    # per-row token count and capacity
-    dp_axes = rules.mapping.get("batch", (data_axis,))
-    # only the data axis shards tokens inside this shard_map
+    # per-row token count and capacity (only the data axis shards
+    # tokens inside this shard_map)
     T_loc = (B // R) * S
     C = capacity(T_loc, k, E, m.capacity_factor)
-
-    w_axes = ("w_in", "w_gate", "w_out") if cfg.gated_mlp else \
-             ("w_in", "w_out")
 
     def fn(x_loc, router, w_in, w_out, *w_gate):
         # x_loc: (B/R, S, D) — replicated over the model axis

@@ -9,11 +9,9 @@ arrays are re-placed with the new mesh's shardings.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
-import jax
 
 from repro.distributed.checkpoint import CheckpointManager
 

@@ -7,7 +7,6 @@ scan is chunked with an O(1) carried state.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 

@@ -21,14 +21,12 @@ import argparse
 import dataclasses
 import gc
 import json
-import math
 import re
 import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (get_config, get_reduced, get_shape, list_arch_ids,
                            SHAPES, shape_applicable)

@@ -19,8 +19,6 @@ from repro.configs import get_config, get_reduced, list_arch_ids
 from repro.data import (ByteTokenizer, encode_trajectory, pack_batches,
                         synthetic_trajectories, PrefetchIterator)
 from repro.distributed.checkpoint import CheckpointManager
-from repro.distributed.fault_tolerance import (FaultToleranceConfig,
-                                               ResilientTrainLoop)
 from repro.distributed.sharding import train_rules
 from repro.models import build_model
 from repro.train.optimizer import Optimizer, OptimizerConfig

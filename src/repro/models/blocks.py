@@ -16,7 +16,6 @@ from repro.models import ssm as ssm_mod
 from repro.models.common import norm_spec, apply_norm
 from repro.models.mlp import mlp_spec, mlp_apply
 from repro.models.moe import moe_spec, moe_apply
-from repro.models.param import Spec
 
 
 def layer_signature(cfg: ModelConfig, i: int) -> tuple[str, str]:

@@ -3,7 +3,6 @@ decode. One class serves all ten assigned architectures (dense / MoE / SSM /
 hybrid / encoder-decoder / multimodal-stub)."""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -14,7 +14,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import AxisRules
 from repro.kernels import ops
-from repro.models.common import rms_head_norm
 from repro.models.param import Spec
 
 

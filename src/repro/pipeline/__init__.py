@@ -1,0 +1,27 @@
+"""End-to-end online RL pipeline: event-driven rollouts → replay → learner.
+
+The asynchronous actor/learner split the paper trains with (§5):
+
+- actors — ``RolloutEngine`` episodes on the virtual-time event loop,
+  streamed through ``TrajectoryWriter`` into the ``TrajectoryIngestor``;
+- ingest — scenario outcomes become shaped rewards (``RewardSpec``),
+  episodes are encoded and stamped with the behavior-policy version;
+- learner — ``LearnerLoop`` packs token batches and runs real
+  ``repro.train.ppo`` / ``repro.train.sft`` update steps, enforcing a
+  staleness bound on off-policy experience;
+- versions — ``PolicyVersionStore`` flows learner updates back to the
+  actor side.
+"""
+from repro.pipeline.ingest import IngestConfig, TrajectoryIngestor, \
+    encode_for_rl
+from repro.pipeline.learner import LearnerConfig, LearnerLoop
+from repro.pipeline.online import OnlinePipeline, PipelineConfig, \
+    PipelineReport, build_fleet
+from repro.pipeline.policy_store import PolicyVersionStore
+
+__all__ = [
+    "IngestConfig", "TrajectoryIngestor", "encode_for_rl",
+    "LearnerConfig", "LearnerLoop",
+    "OnlinePipeline", "PipelineConfig", "PipelineReport", "build_fleet",
+    "PolicyVersionStore",
+]

@@ -1,0 +1,138 @@
+"""Trajectory ingest: finished episodes → reward-shaped RL samples.
+
+The ingestor is the ``TrajectoryWriter``'s ``on_trajectory`` consumer. For
+every episode streamed out of the rollout engine it:
+
+1. encodes the trajectory into token ids with a loss mask and *per-step
+   boundaries* (``encode_for_rl``), so rewards can be credited to the
+   token that completes each environment step;
+2. shapes the scenario outcome into dense rewards via the task family's
+   ``RewardSpec`` (success criteria + step penalties + efficiency bonus);
+3. stamps the sample with the behavior-policy version pulled from the
+   ``PolicyVersionStore`` and — for PPO — computes ``old_logp`` / value
+   estimates under exactly those parameters (one jitted forward pass);
+4. appends the sample to the ``ReplayBuffer`` the learner drains.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.telemetry import Telemetry
+from repro.data.pipeline import Trajectory, encode_trajectory
+from repro.data.replay_buffer import ReplayBuffer
+from repro.data.tokenizer import ByteTokenizer
+from repro.pipeline.policy_store import PolicyVersionStore
+from repro.rollout.scenarios import ScenarioRegistry, get_default_registry
+
+
+def encode_for_rl(traj: Trajectory, tok: ByteTokenizer, vocab_size: int,
+                  obs_tokens: int = 4
+                  ) -> tuple[np.ndarray, np.ndarray, list[int]]:
+    """``data.pipeline.encode_trajectory`` with per-step boundaries: also
+    returns, per environment step, the index of the token that completes
+    that step's action — the position step rewards are credited to."""
+    return encode_trajectory(traj, tok, vocab_size, obs_tokens,
+                             return_step_ends=True)
+
+
+@dataclass
+class IngestConfig:
+    seq_len: int = 192        # samples are truncated to this many tokens
+    obs_tokens: int = 4       # screenshot placeholder tokens per step
+    vocab_size: int = 264     # ByteTokenizer vocab (256 bytes + specials)
+
+
+class TrajectoryIngestor:
+    """``on_trajectory`` consumer turning episodes into learner samples."""
+
+    def __init__(self, replay: ReplayBuffer, store: PolicyVersionStore, *,
+                 registry: Optional[ScenarioRegistry] = None,
+                 trainer=None,
+                 cfg: Optional[IngestConfig] = None,
+                 telemetry: Optional[Telemetry] = None):
+        self.replay = replay
+        self.store = store
+        self.registry = registry or get_default_registry()
+        self.trainer = trainer          # PPOTrainer; None -> SFT-only samples
+        self.cfg = cfg or IngestConfig()
+        self.telemetry = telemetry or Telemetry()
+        self.tok = ByteTokenizer()
+        self._pv = None
+        if trainer is not None:
+            import jax
+            self._pv = jax.jit(trainer.policy_value)
+
+    # ------------------------------------------------------------- consume
+    def __call__(self, traj: Trajectory) -> None:
+        cfg = self.cfg
+        task = traj.task or {"task_id": traj.task_id,
+                             "scenario": traj.task_id.rsplit("-", 1)[0]}
+        scenario = self.registry.resolve(task)
+        horizon = int(task.get("horizon", 15))
+        n_steps = len(traj.steps)
+        step_rewards = scenario.reward.step_rewards(traj.score, n_steps,
+                                                    horizon)
+        success = scenario.reward.success(traj.score)
+
+        ids, mask, step_ends = encode_for_rl(traj, self.tok, cfg.vocab_size,
+                                             cfg.obs_tokens)
+        T = min(len(ids) - 1, cfg.seq_len)
+        tokens = ids[:T]
+        actions = ids[1:T + 1]
+        action_mask = mask[1:T + 1]
+
+        # credit each step's shaped reward to the action position that
+        # completes it (position t predicts token t+1); rewards for steps
+        # truncated away pile onto the final kept position so the terminal
+        # signal survives truncation
+        rewards = np.zeros(T, np.float32)
+        for k, end in enumerate(step_ends):
+            pos = min(end - 1, T - 1)
+            rewards[pos] += step_rewards[k]
+
+        version, params = self.store.current()
+        sample = {
+            "tokens": tokens, "actions": actions,
+            "action_mask": action_mask, "rewards": rewards,
+            "tokens_full": ids, "loss_mask_full": mask,
+            "version": version, "ingest_wall": time.monotonic(),
+            "task_id": traj.task_id, "scenario": scenario.name,
+            "family": scenario.family, "score": traj.score,
+            "success": success, "n_steps": n_steps,
+            "episode_return": float(step_rewards.sum()),
+        }
+        if self._pv is not None and params is not None:
+            sample["old_logp"], sample["values"] = self._behavior_eval(
+                params, tokens, actions, T)
+        self.replay.add(sample)
+
+        self.telemetry.count("ingested")
+        self.telemetry.count(f"family_total:{scenario.family}")
+        if success:
+            self.telemetry.count("ingest_success")
+            self.telemetry.count(f"family_success:{scenario.family}")
+        self.telemetry.observe("episode_return", sample["episode_return"])
+        self.telemetry.observe("encoded_len", float(len(ids)))
+        self.telemetry.gauge("replay_depth", float(len(self.replay)))
+
+    # ------------------------------------------------------------ behavior
+    def _behavior_eval(self, params, tokens: np.ndarray,
+                       actions: np.ndarray, T: int
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """log pi_behavior(action) and value estimates under the params
+        that were current when the episode finished (one fixed-shape jitted
+        forward, so every trajectory reuses the same compilation)."""
+        import jax
+        import numpy as onp
+        cfg = self.cfg
+        padded = onp.zeros((1, cfg.seq_len), onp.int32)
+        padded[0, :T] = tokens
+        logits, values = self._pv(params, padded)
+        logp_all = jax.nn.log_softmax(logits[0, :T].astype("float32"))
+        logp = onp.asarray(logp_all)[onp.arange(T), actions]
+        return (logp.astype(onp.float32),
+                onp.asarray(values[0, :T], onp.float32))

@@ -1,0 +1,198 @@
+"""Learner loop: replay samples → packed token batches → real update steps.
+
+Runs either PPO (``repro.train.ppo.PPOTrainer``) or SFT
+(``repro.train.sft.SFTTrainer``) on samples produced by the
+``TrajectoryIngestor``. Every update publishes a new policy version to the
+``PolicyVersionStore``; every consumed sample is checked against the
+staleness bound:
+
+- within ``staleness_bound`` versions — used at full weight;
+- beyond the bound with ``staleness_policy="drop"`` — evicted from the
+  buffer and never trained on;
+- beyond the bound with ``staleness_policy="reweight"`` — kept, but its
+  advantages are discounted by ``staleness_decay**excess`` (an importance
+  proxy for how far off-policy the behavior was), and evicted once the
+  discount falls under ``min_weight``.
+
+Both outcomes are counted in ``Telemetry`` (``stale_dropped`` /
+``stale_reweighted``), alongside the rollout→learner latency of every
+sample that reaches an update.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.telemetry import Telemetry
+from repro.data.pipeline import pack_batches
+from repro.data.replay_buffer import ReplayBuffer
+from repro.pipeline.policy_store import PolicyVersionStore
+
+
+@dataclass
+class LearnerConfig:
+    algo: str = "ppo"                   # "ppo" | "sft"
+    batch_size: int = 8                 # trajectories per PPO update
+    seq_len: int = 192
+    staleness_bound: int = 8            # K: versions before off-policy acts
+    staleness_policy: str = "reweight"  # "reweight" | "drop"
+    staleness_decay: float = 0.8        # advantage discount per excess step
+    min_weight: float = 0.05            # evict below this discount
+    oversample: int = 2                 # sample this x batch_size, filter
+    sft_pack_rows: int = 2              # packed rows per SFT batch
+    sft_success_only: bool = True       # filtered behavior cloning
+
+
+class LearnerLoop:
+    """Drains the replay buffer into real PPO/SFT update steps."""
+
+    def __init__(self, trainer, replay: ReplayBuffer,
+                 store: PolicyVersionStore, *,
+                 cfg: Optional[LearnerConfig] = None,
+                 telemetry: Optional[Telemetry] = None):
+        self.trainer = trainer
+        self.replay = replay
+        self.store = store
+        self.cfg = cfg or LearnerConfig()
+        self.telemetry = telemetry or Telemetry()
+        assert self.cfg.algo in ("ppo", "sft"), self.cfg.algo
+        assert self.cfg.staleness_policy in ("reweight", "drop"), \
+            self.cfg.staleness_policy
+        self.updates = 0
+        self.losses: list[float] = []
+        self._learn_wall = 0.0
+
+    # ------------------------------------------------------------ staleness
+    def _weight(self, version: int, sample_version: int) -> Optional[float]:
+        """None -> unusable (drop); otherwise the advantage weight."""
+        cfg = self.cfg
+        excess = (version - sample_version) - cfg.staleness_bound
+        if excess <= 0:
+            return 1.0
+        if cfg.staleness_policy == "drop":
+            return None
+        w = cfg.staleness_decay ** excess
+        return w if w >= cfg.min_weight else None
+
+    def _evict_stale(self, version: int) -> int:
+        """Prune buffer items no future update could use."""
+        dropped = self.replay.prune(
+            lambda s: self._weight(version, s["version"]) is None)
+        if dropped:
+            self.telemetry.count("stale_dropped", dropped)
+        return dropped
+
+    # -------------------------------------------------------------- updates
+    def ready(self) -> bool:
+        need = (self.cfg.batch_size if self.cfg.algo == "ppo"
+                else self.cfg.sft_pack_rows)
+        return len(self.replay) >= need
+
+    def step(self) -> Optional[dict]:
+        """One learner update; returns metrics, or None when starved."""
+        cfg = self.cfg
+        t0 = time.monotonic()
+        version = self.store.version
+        self._evict_stale(version)
+        pulled = self.replay.sample(cfg.batch_size * cfg.oversample)
+        kept: list[dict] = []
+        weights: list[float] = []
+        for s in pulled:
+            w = self._weight(version, s["version"])
+            if w is None:
+                continue
+            if w < 1.0:
+                self.telemetry.count("stale_reweighted")
+            kept.append(s)
+            weights.append(w)
+            if len(kept) == cfg.batch_size:
+                break
+        if not kept:
+            self.telemetry.count("learner_starved")
+            return None
+        # fixed batch shape keeps the jitted step on one compilation:
+        # pad a starved batch by cycling the samples that did survive
+        n_kept = len(kept)
+        while len(kept) < cfg.batch_size:
+            kept.append(kept[len(kept) % n_kept])
+            weights.append(weights[len(weights) % n_kept])
+            self.telemetry.count("learner_batch_padded")
+
+        if cfg.algo == "ppo":
+            metrics = self._ppo_update(kept, np.asarray(weights, np.float32))
+        else:
+            metrics = self._sft_update(kept)
+        if metrics is None:
+            return None
+
+        new_version = self.store.publish(self.trainer.params)
+        self.updates += 1
+        self.losses.append(float(metrics["loss"]))
+        self._learn_wall += time.monotonic() - t0
+
+        now = time.monotonic()
+        for s in kept:
+            self.telemetry.observe("rollout_to_learner_s",
+                                   now - s["ingest_wall"])
+            self.telemetry.observe("staleness_versions",
+                                   float(version - s["version"]))
+        self.telemetry.count("learner_updates")
+        self.telemetry.observe("learner_loss", float(metrics["loss"]))
+        self.telemetry.gauge("policy_version", float(new_version))
+        metrics["version"] = new_version
+        return metrics
+
+    def _ppo_update(self, kept: list[dict],
+                    weights: np.ndarray) -> Optional[dict]:
+        batch = self.trainer.make_batch(kept, seq_len=self.cfg.seq_len)
+        batch["advantages"] = batch["advantages"] * weights[:, None]
+        return self.trainer.update(batch)
+
+    def _sft_update(self, kept: list[dict]) -> Optional[dict]:
+        cfg = self.cfg
+        chosen = kept
+        if cfg.sft_success_only:
+            successes = [s for s in kept if s.get("success")]
+            if successes:
+                chosen = successes
+            else:
+                self.telemetry.count("sft_fallback_unfiltered")
+        encoded = [(s["tokens_full"], s["loss_mask_full"]) for s in chosen]
+        # pack_batches only yields full batches; duplicate the stream until
+        # it covers one packed batch of sft_pack_rows x seq_len tokens
+        need = cfg.sft_pack_rows * (cfg.seq_len + 1)
+        have = sum(len(t) for t, _ in encoded)
+        if have == 0:
+            self.telemetry.count("learner_starved")
+            return None
+        encoded = encoded * (need // max(have, 1) + 1)
+        batch = next(pack_batches(encoded, batch=cfg.sft_pack_rows,
+                                  seq_len=cfg.seq_len,
+                                  seed=self.updates), None)
+        if batch is None:
+            self.telemetry.count("learner_starved")
+            return None
+        res = self.trainer.fit([batch], verbose=False)
+        return {"loss": res.final_loss}
+
+    # ----------------------------------------------------------- reporting
+    def steps_per_min(self) -> float:
+        if self._learn_wall <= 0:
+            return 0.0
+        return 60.0 * self.updates / self._learn_wall
+
+    def loss_trend(self) -> dict:
+        """Mean loss over the first vs last third of updates — the bench's
+        'is it learning' signal, robust to per-step PPO noise."""
+        n = len(self.losses)
+        if n < 3:
+            return {"first_third": float("nan"),
+                    "last_third": float("nan"), "decreased": False}
+        third = max(n // 3, 1)
+        first = float(np.mean(self.losses[:third]))
+        last = float(np.mean(self.losses[-third:]))
+        return {"first_third": first, "last_third": last,
+                "decreased": bool(last < first)}

@@ -1,0 +1,269 @@
+"""Online pipeline orchestrator: the actor/learner split, end to end.
+
+Wires the fleet (``Gateway``/``RunnerPool``), the event-driven
+``RolloutEngine``, the ``TrajectoryIngestor`` and the ``LearnerLoop``
+into one closed loop: scenario episodes stream into the replay buffer as
+reward-shaped samples, the learner runs real jitted update steps, and
+each update publishes a new policy version back toward the actors.
+
+Two execution modes:
+
+- ``run_interleaved`` — actor rounds and learner updates alternate.
+  Fully deterministic per seed (the CI/benchmark mode): every round is an
+  event-driven virtual-time run, drained before the learner takes its
+  updates. Staleness still occurs — the buffer carries samples from
+  earlier rounds, generated under policy versions the learner has since
+  advanced past.
+- ``run_concurrent`` — a real asynchronous split: the actor thread
+  generates rounds continuously while the learner updates from the
+  buffer as fast as experience arrives (the paper's semi-online mode).
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.cow_store import CowStore, DiskImage
+from repro.core.event_loop import EventLoop
+from repro.core.faults import FaultInjector
+from repro.core.gateway import Gateway
+from repro.core.runner_pool import RunnerPool
+from repro.core.seeding import stable_seed
+from repro.core.telemetry import Telemetry
+from repro.data.replay_buffer import ReplayBuffer
+from repro.pipeline.ingest import IngestConfig, TrajectoryIngestor
+from repro.pipeline.learner import LearnerConfig, LearnerLoop
+from repro.pipeline.policy_store import PolicyVersionStore
+from repro.rollout.engine import RolloutConfig, RolloutEngine
+from repro.rollout.scenarios import ScenarioRegistry, get_default_registry
+from repro.rollout.writer import TrajectoryWriter
+
+
+def build_fleet(n_replicas: int, *, runners_per_node: int = 32,
+                seed: int = 0) -> tuple[Gateway, list[RunnerPool]]:
+    """A small paper-shaped fleet for the online pipeline: ``n_replicas``
+    runners across ``runners_per_node``-runner executor nodes, stochastic
+    faults and autonomous recovery active."""
+    store = CowStore(block_size=1 << 20)
+    base = DiskImage.create_base(store, "ubuntu", 64 << 20)
+    n_nodes = max(math.ceil(n_replicas / runners_per_node), 1)
+    pools = []
+    for i in range(n_nodes):
+        size = min(runners_per_node, n_replicas - i * runners_per_node)
+        pools.append(RunnerPool(
+            f"node{i}", base, size=size,
+            faults=FaultInjector(seed=stable_seed(seed, "faults", i)),
+            seed=stable_seed(seed, "pool", i)))
+    return Gateway(pools), pools
+
+
+@dataclass
+class PipelineConfig:
+    rounds: int = 3                 # actor rounds (interleaved mode)
+    tasks_per_round: int = 16
+    updates_per_round: int = 4
+    max_inflight: int = 64
+    writer_capacity: int = 256
+    replay_capacity: int = 512
+    seed: int = 0
+    # optional virtual-time pacing: stop launching episodes in a round
+    # once the round's virtual clock passes this (see RolloutConfig)
+    virtual_deadline_s: Optional[float] = None
+
+
+@dataclass
+class PipelineReport:
+    rounds: int = 0
+    updates: int = 0
+    versions_published: int = 0
+    rollout_completed: int = 0
+    rollout_failed: int = 0
+    rollout_steps: int = 0
+    reassignments: int = 0
+    rollout_virtual_seconds: float = 0.0
+    rollout_traj_per_min: float = 0.0      # virtual-time, fleet-projected
+    rollout_wall_seconds: float = 0.0
+    learner_steps_per_min: float = 0.0     # wall-clock update rate
+    losses: list[float] = field(default_factory=list)
+    loss_first_third: float = float("nan")
+    loss_last_third: float = float("nan")
+    loss_decreased: bool = False
+    success_rate: float = 0.0
+    success_by_family: dict = field(default_factory=dict)
+    stale_dropped: int = 0
+    stale_reweighted: int = 0
+    staleness: dict = field(default_factory=dict)
+    rollout_to_learner_s: dict = field(default_factory=dict)
+    wall_seconds: float = 0.0
+
+    def to_dict(self) -> dict:
+        d = dict(self.__dict__)
+        d["losses"] = [round(float(x), 6) for x in self.losses]
+        return d
+
+
+class OnlinePipeline:
+    """Actor/learner pipeline over one fleet, one trainer, one registry."""
+
+    def __init__(self, gateway: Gateway, n_replicas: int, trainer, *,
+                 registry: Optional[ScenarioRegistry] = None,
+                 pipe_cfg: Optional[PipelineConfig] = None,
+                 learner_cfg: Optional[LearnerConfig] = None,
+                 ingest_cfg: Optional[IngestConfig] = None,
+                 telemetry: Optional[Telemetry] = None):
+        self.gateway = gateway
+        self.n_replicas = n_replicas
+        self.trainer = trainer
+        self.registry = registry or get_default_registry()
+        self.cfg = pipe_cfg or PipelineConfig()
+        self.telemetry = telemetry or Telemetry()
+        learner_cfg = learner_cfg or LearnerConfig()
+
+        self.replay = ReplayBuffer(capacity=self.cfg.replay_capacity,
+                                   seed=stable_seed(self.cfg.seed, "replay"))
+        self.store = PolicyVersionStore(trainer.params)
+        self.ingestor = TrajectoryIngestor(
+            self.replay, self.store, registry=self.registry,
+            trainer=trainer if learner_cfg.algo == "ppo" else None,
+            cfg=ingest_cfg, telemetry=self.telemetry)
+        self.writer = TrajectoryWriter(
+            on_trajectory=self.ingestor, retain=False,
+            capacity=self.cfg.writer_capacity)
+        self.engine = RolloutEngine(
+            gateway, self.writer, registry=self.registry,
+            config=RolloutConfig(
+                max_inflight=self.cfg.max_inflight,
+                virtual_deadline_s=self.cfg.virtual_deadline_s),
+            telemetry=self.telemetry)
+        self.learner = LearnerLoop(trainer, self.replay, self.store,
+                                   cfg=learner_cfg,
+                                   telemetry=self.telemetry)
+        self._rollout_totals = dict(completed=0, failed=0, steps=0,
+                                    reassignments=0, virtual_seconds=0.0,
+                                    wall_seconds=0.0)
+        self._rounds_run = 0
+
+    # --------------------------------------------------------------- actors
+    def _run_round(self, round_idx: int,
+                   abort: Optional[threading.Event] = None) -> None:
+        if abort is not None and abort.is_set():
+            # checked at round entry: run_event_driven re-arms the engine's
+            # own stop flag, so a stop that landed between rounds would
+            # otherwise be erased and the round would run to completion
+            return
+        tasks = self.registry.sample(
+            self.cfg.tasks_per_round,
+            seed=stable_seed(self.cfg.seed, "round", round_idx))
+        report = self.engine.run_event_driven(tasks, loop=EventLoop())
+        tot = self._rollout_totals
+        tot["completed"] += report.completed
+        tot["failed"] += report.failed
+        tot["steps"] += report.total_steps
+        tot["reassignments"] += report.reassignments
+        tot["virtual_seconds"] += report.virtual_seconds
+        tot["wall_seconds"] += report.wall_seconds
+        self._rounds_run += 1
+        self.telemetry.gauge("actor_rounds", float(self._rounds_run))
+
+    # ---------------------------------------------------------------- modes
+    def run_interleaved(self) -> PipelineReport:
+        """Alternate actor rounds and learner updates (deterministic)."""
+        t0 = time.monotonic()
+        for r in range(self.cfg.rounds):
+            self._run_round(r)
+            self.writer.drain()
+            for _ in range(self.cfg.updates_per_round):
+                self.learner.step()
+        return self._report(time.monotonic() - t0)
+
+    def run_concurrent(self, total_updates: int, *,
+                       max_rounds: int = 64,
+                       poll_s: float = 0.02) -> PipelineReport:
+        """True async actor/learner split: the actor thread streams rounds
+        while the learner updates from the buffer as experience lands."""
+        t0 = time.monotonic()
+        stop = threading.Event()
+
+        def actor():
+            for r in range(max_rounds):
+                if stop.is_set():
+                    break
+                self._run_round(r, abort=stop)
+
+        thread = threading.Thread(target=actor, name="pipeline-actor",
+                                  daemon=True)
+        thread.start()
+        try:
+            while self.learner.updates < total_updates:
+                if not thread.is_alive():
+                    # actor exhausted: wait out the writer's in-flight
+                    # trajectories before concluding there is no more
+                    # experience coming
+                    self.writer.drain()
+                    if not self.learner.ready():
+                        break
+                if self.learner.ready():
+                    self.learner.step()
+                else:
+                    time.sleep(poll_s)
+        finally:
+            stop.set()
+            self.engine.stop()
+            thread.join(timeout=300.0)
+            if thread.is_alive():
+                # surface the wedge instead of reading rollout totals a
+                # live actor thread is still mutating
+                raise RuntimeError("pipeline actor thread failed to stop")
+            self.writer.drain()
+        return self._report(time.monotonic() - t0)
+
+    def close(self) -> None:
+        self.writer.close()
+
+    # ------------------------------------------------------------ reporting
+    def _report(self, wall: float) -> PipelineReport:
+        snap = self.telemetry.snapshot()
+        counters = snap["counters"]
+        tot = self._rollout_totals
+        trend = self.learner.loss_trend()
+        families = {}
+        for name, n in counters.items():
+            if name.startswith("family_total:"):
+                fam = name.split(":", 1)[1]
+                ok = counters.get(f"family_success:{fam}", 0)
+                families[fam] = {"episodes": n, "successes": ok,
+                                 "rate": ok / n if n else 0.0}
+        ingested = counters.get("ingested", 0)
+        traj_per_min = 0.0
+        if tot["completed"] and tot["virtual_seconds"] > 0:
+            traj_per_min = (self.n_replicas * 60.0 * tot["completed"]
+                            / tot["virtual_seconds"])
+        return PipelineReport(
+            rounds=self._rounds_run,
+            updates=self.learner.updates,
+            versions_published=self.store.publishes,
+            rollout_completed=tot["completed"],
+            rollout_failed=tot["failed"],
+            rollout_steps=tot["steps"],
+            reassignments=tot["reassignments"],
+            rollout_virtual_seconds=tot["virtual_seconds"],
+            rollout_traj_per_min=traj_per_min,
+            rollout_wall_seconds=tot["wall_seconds"],
+            learner_steps_per_min=self.learner.steps_per_min(),
+            losses=list(self.learner.losses),
+            loss_first_third=trend["first_third"],
+            loss_last_third=trend["last_third"],
+            loss_decreased=trend["decreased"],
+            success_rate=(counters.get("ingest_success", 0) / ingested
+                          if ingested else 0.0),
+            success_by_family=families,
+            stale_dropped=counters.get("stale_dropped", 0),
+            stale_reweighted=counters.get("stale_reweighted", 0),
+            staleness=snap["series"].get("staleness_versions", {"n": 0}),
+            rollout_to_learner_s=snap["series"].get(
+                "rollout_to_learner_s", {"n": 0}),
+            wall_seconds=wall,
+        )

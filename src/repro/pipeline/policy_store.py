@@ -1,0 +1,54 @@
+"""Versioned policy publication: the learner publishes, actors pull.
+
+The store is the single synchronization point between the learner (which
+publishes a new parameter version after every update step) and the actor
+side (which pulls the latest version when it stamps a finished episode's
+behavior policy). Versions are how staleness is measured: an experience
+generated under version ``v`` is ``current - v`` updates off-policy by the
+time the learner consumes it.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any
+
+
+class PolicyVersionStore:
+    """Thread-safe latest-wins parameter store with a version counter."""
+
+    def __init__(self, params: Any = None):
+        self._lock = threading.Lock()
+        self._version = 0
+        self._params = params
+        self._published_wall = time.monotonic()
+        self.publishes = 0
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+    def current(self) -> tuple[int, Any]:
+        """(version, params) as one atomic read — actors stamp episodes
+        with exactly the version whose parameters they used."""
+        with self._lock:
+            return self._version, self._params
+
+    def publish(self, params: Any) -> int:
+        """Install a new parameter version; returns its version number."""
+        with self._lock:
+            self._version += 1
+            self._params = params
+            self._published_wall = time.monotonic()
+            self.publishes += 1
+            return self._version
+
+    def staleness(self, version: int) -> int:
+        """How many updates behind the current policy ``version`` is."""
+        with self._lock:
+            return max(self._version - version, 0)
+
+    def seconds_since_publish(self) -> float:
+        with self._lock:
+            return time.monotonic() - self._published_wall

@@ -6,7 +6,7 @@ workload families, and ``TrajectoryWriter`` streams completed episodes into
 the SFT/PPO data pipeline."""
 from repro.rollout.engine import (EpisodeResult, RolloutConfig, RolloutEngine,
                                   RolloutReport)
-from repro.rollout.scenarios import (Scenario, ScenarioProfile,
+from repro.rollout.scenarios import (RewardSpec, Scenario, ScenarioProfile,
                                      ScenarioRegistry, default_registry,
                                      get_default_registry)
 from repro.rollout.writer import (TrajectoryWriter, VirtualWriterGate,

@@ -69,6 +69,11 @@ class RolloutConfig:
     # event mode: virtual seconds the modeled consumer spends per
     # trajectory (see VirtualWriterGate)
     writer_consume_vs: float = 0.02
+    # event mode: stop *launching* new episodes once the virtual clock
+    # passes this deadline (in-flight episodes still finish). The online
+    # actor/learner pipeline uses it to pace actor rounds in virtual time
+    # instead of by a fixed task count.
+    virtual_deadline_s: Optional[float] = None
 
 
 @dataclass
@@ -278,7 +283,8 @@ class RolloutEngine:
             # honest per-episode virtual time under faults
             e.virtual_seconds += vs
             raise
-        traj = Trajectory(task["task_id"], task["description"], steps, score)
+        traj = Trajectory(task["task_id"], task["description"], steps, score,
+                          task=task)
         return traj, len(steps), score, vs
 
     def _settle(self, result: EpisodeResult) -> None:
@@ -337,6 +343,15 @@ class RolloutEngine:
                 self._enter()
                 loop.spawn(self._episode_ev(task, gate, wake),
                            name=f"episode:{task.get('task_id', i)}")
+
+        if cfg.virtual_deadline_s is not None:
+            # daemon: the deadline must not keep an otherwise-finished
+            # loop alive; notify the wake condition so a feeder parked on
+            # backpressure re-checks the stop flag immediately
+            def _deadline():
+                self._stop.set()
+                wake.notify_all()
+            loop.call_later(cfg.virtual_deadline_s, _deadline, daemon=True)
 
         loop.spawn(feeder(), name="rollout-feeder")
         try:
@@ -454,7 +469,8 @@ class RolloutEngine:
             yield Sleep(e.virtual_seconds)
             e.virtual_seconds += vs
             raise
-        traj = Trajectory(task["task_id"], task["description"], steps, score)
+        traj = Trajectory(task["task_id"], task["description"], steps, score,
+                          task=task)
         return traj, len(steps), score, vs
 
 

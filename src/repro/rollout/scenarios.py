@@ -14,10 +14,54 @@ import random
 from dataclasses import dataclass, field, replace
 from typing import Callable, Iterator, Optional
 
+import numpy as np
+
 from repro.core.tasks import TaskSpec, TABLE3_ROWS
 
 # (obs, step_idx) -> (thought, action)
 Policy = Callable[[object, int], tuple[str, str]]
+
+
+@dataclass(frozen=True)
+class RewardSpec:
+    """Per-family shaping of the scenario outcome into RL rewards.
+
+    ``evaluate()`` returns a raw score in [0, 1]; the spec turns it into
+    the learner's objective: a success criterion (``success_threshold``),
+    a terminal reward (success bonus + efficiency bonus for finishing
+    under the horizon, or partial credit for near-misses), and a per-step
+    penalty that prices each environment step so the policy is pushed
+    toward short successful episodes — the grounding that makes scenario
+    outcomes matter to training (cf. Gym-Anything)."""
+
+    success_threshold: float = 0.5
+    success_bonus: float = 1.0
+    efficiency_bonus: float = 0.25   # scaled by unused fraction of horizon
+    partial_weight: float = 0.25     # credit for sub-threshold scores
+    step_penalty: float = 0.01
+
+    def success(self, score: float) -> bool:
+        return score >= self.success_threshold
+
+    def terminal_reward(self, score: float, n_steps: int,
+                        horizon: int) -> float:
+        if self.success(score):
+            spare = max(horizon - n_steps, 0) / max(horizon, 1)
+            return self.success_bonus + self.efficiency_bonus * spare
+        return self.partial_weight * score
+
+    def step_rewards(self, score: float, n_steps: int,
+                     horizon: int) -> np.ndarray:
+        """Dense per-step reward vector: -step_penalty everywhere, with
+        the shaped terminal reward added on the final step."""
+        n = max(n_steps, 1)
+        r = np.full(n, -self.step_penalty, np.float32)
+        r[-1] += self.terminal_reward(score, n_steps, horizon)
+        return r
+
+    def episode_return(self, score: float, n_steps: int,
+                       horizon: int) -> float:
+        return float(self.step_rewards(score, n_steps, horizon).sum())
 
 
 @dataclass(frozen=True)
@@ -54,6 +98,7 @@ class Scenario:
     policy: Policy
     profile: ScenarioProfile = field(default_factory=ScenarioProfile)
     weight: float = 1.0            # sampling weight (Table-3 trajectory mix)
+    reward: RewardSpec = field(default_factory=RewardSpec)
 
     def make_task(self, index: int, rng: random.Random) -> TaskSpec:
         return TaskSpec(
@@ -153,6 +198,20 @@ class ScenarioRegistry:
         raise KeyError(f"no scenario for task {task.get('task_id')!r} "
                        f"(scenario={name!r}, domain={domain!r})")
 
+    # -------------------------------------------------------------- rewards
+    def reward_for(self, task: dict) -> RewardSpec:
+        """The reward shaping that applies to a task's scenario family."""
+        return self.resolve(task).reward
+
+    def shape_rewards(self, task: dict, score: float,
+                      n_steps: int) -> np.ndarray:
+        """Dense per-step rewards for one finished episode of ``task``."""
+        horizon = int(task.get("horizon", 15))
+        return self.reward_for(task).step_rewards(score, n_steps, horizon)
+
+    def is_success(self, task: dict, score: float) -> bool:
+        return self.reward_for(task).success(score)
+
     def mean_trajectory_s(self) -> float:
         """Weight-averaged expected episode duration (virtual seconds)."""
         total_w = sum(s.weight for s in self._scenarios.values())
@@ -240,6 +299,23 @@ def default_registry() -> ScenarioRegistry:
     mid = ScenarioProfile(step_mean_s=2.15)
     long = ScenarioProfile(step_mean_s=2.4, configure_s=5.0)
 
+    # Per-family reward shaping: step penalties track the family's step
+    # cost (slow browser/image steps are expensive; terminal steps are
+    # cheap), thresholds track how sharply the family's evaluator
+    # separates success from failure, and the multi-app workflows give
+    # more partial credit because partial completion is still useful.
+    rewards = {
+        "office": RewardSpec(success_threshold=0.50, step_penalty=0.010),
+        "browser": RewardSpec(success_threshold=0.45, step_penalty=0.020),
+        "email": RewardSpec(success_threshold=0.50, step_penalty=0.010),
+        "media": RewardSpec(success_threshold=0.40, step_penalty=0.008),
+        "coding": RewardSpec(success_threshold=0.55, step_penalty=0.012),
+        "image": RewardSpec(success_threshold=0.50, step_penalty=0.018),
+        "terminal": RewardSpec(success_threshold=0.60, step_penalty=0.005),
+        "multi_app": RewardSpec(success_threshold=0.35, step_penalty=0.008,
+                                partial_weight=0.40),
+    }
+
     rows = {domain: (ttype, desc, weight)
             for ttype, domain, desc, weight, _steps in TABLE3_ROWS}
     steps_per = {domain: steps / traj
@@ -253,7 +329,8 @@ def default_registry() -> ScenarioRegistry:
             name=name, family=family, domain=domain, description=desc,
             policy=_cycle_policy(actions),
             profile=replace(profile, horizon=horizon),
-            weight=float(weight)))
+            weight=float(weight),
+            reward=rewards[family]))
 
     add("office_writer", "office", "LibreOffice Writer", OFFICE_ACTIONS, mid)
     add("office_calc", "office", "LibreOffice Calc", OFFICE_ACTIONS, mid)

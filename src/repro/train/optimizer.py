@@ -5,8 +5,7 @@ rules apply to optimizer state; no external deps (optax is not available).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.replay_buffer import ReplayBuffer
 from repro.distributed.sharding import AxisRules
 from repro.models.lm import LM
 from repro.models.param import Spec, init_params

@@ -1,0 +1,100 @@
+"""The CI bench-regression gate (scripts/check_bench.py)."""
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", os.path.join(_ROOT, "scripts", "check_bench.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+cb = _load_check_bench()
+
+
+def _baseline(name):
+    path = os.path.join(_ROOT, "artifacts", "bench", name)
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_rel_dev_and_band():
+    assert cb.rel_dev(100.0, 100.0) == 0.0
+    assert cb.rel_dev(100.0, 85.0) == pytest.approx(-0.15)
+    assert cb.rel_dev(0.0, 0.0) == 0.0
+    assert cb.rel_dev(0.0, 1.0) == float("inf")
+    assert cb.compare_value("m", 100.0, 95.0, 0.10) == []
+    assert "REGRESSION" in cb.compare_value("m", 100.0, 85.0, 0.10)[0]
+    assert "STALE" in cb.compare_value("m", 100.0, 115.0, 0.10)[0]
+
+
+def test_committed_throughput_baseline_self_passes():
+    base = _baseline("BENCH_throughput.json")
+    assert cb.check(base, copy.deepcopy(base), 0.10) == []
+
+
+def test_throughput_minus_15_percent_fails():
+    base = _baseline("BENCH_throughput.json")
+    perturbed = copy.deepcopy(base)
+    for row in perturbed["engine"]:
+        row["traj_per_min"] *= 0.85
+    problems = cb.check(base, perturbed, 0.10)
+    assert problems, "a -15% regression must be caught at ±10% tolerance"
+    assert all("REGRESSION" in p for p in problems)
+    assert len(problems) == len(base["engine"])
+
+
+def test_throughput_missing_row_fails():
+    base = _baseline("BENCH_throughput.json")
+    perturbed = copy.deepcopy(base)
+    perturbed["engine"] = perturbed["engine"][1:]
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("MISSING" in p for p in problems)
+
+
+def test_committed_e2e_baseline_self_passes():
+    base = _baseline("BENCH_e2e.json")
+    assert cb.check(base, copy.deepcopy(base), 0.10) == []
+
+
+def test_e2e_minus_15_percent_fails():
+    base = _baseline("BENCH_e2e.json")
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["rollout_traj_per_min"] *= 0.85
+    problems = cb.check(base, perturbed, 0.10)
+    assert len(problems) == 1
+    assert "REGRESSION" in problems[0]
+
+
+def test_e2e_boolean_gate_must_hold():
+    base = _baseline("BENCH_e2e.json")
+    assert base["gate"]["loss_decreased"] is True
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["loss_decreased"] = False
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("loss_decreased" in p for p in problems)
+
+
+def test_stale_baseline_detected_on_improvement():
+    base = _baseline("BENCH_e2e.json")
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["rollout_traj_per_min"] *= 1.25
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("STALE BASELINE" in p for p in problems)
+
+
+def test_malformed_payloads_are_rejected():
+    assert cb.check({}, {}, 0.10) == [
+        "MALFORMED baseline: neither engine rows nor a gate block"
+    ]
+    assert "MALFORMED" in cb.check({"gate": {}}, {"gate": {}}, 0.10)[0]
+    assert any("MALFORMED" in p
+               for p in cb.check({"engine": []}, {"engine": []}, 0.10))

@@ -6,8 +6,7 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.distributed.checkpoint import CheckpointManager
-from repro.distributed.collectives import (compress_roundtrip,
-                                           make_error_feedback_compressor,
+from repro.distributed.collectives import (make_error_feedback_compressor,
                                            quantize_int8, dequantize_int8)
 from repro.distributed.diloco import (DiLoCoConfig, init_outer_state,
                                       outer_sync, cross_pod_bytes_per_cycle)
@@ -40,7 +39,7 @@ def test_checkpoint_roundtrip_exact():
 def test_checkpoint_dedup_unchanged_leaves():
     ckpt = CheckpointManager(keep=5)
     t = _tree()
-    s1 = ckpt.save(1, t)
+    ckpt.save(1, t)
     s2 = ckpt.save(2, t)                       # identical -> zero new bytes
     assert s2["new_physical_bytes"] == 0
     t2 = dict(t)

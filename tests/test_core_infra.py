@@ -1,7 +1,5 @@
 """OSGym core infrastructure: CoW store, runner pool, state managers,
 gateway, data server — unit + integration + hypothesis property tests."""
-import threading
-
 import pytest
 from hypothesis import given, strategies as st
 
@@ -9,8 +7,7 @@ from repro.core import (CowStore, DiskImage, BlobStore, DataServer,
                         FaultInjector, FaultType, Gateway, RunnerPool,
                         SimOSReplica, ReplicaStateManager, TaskAborted,
                         RetryPolicy)
-from repro.core.faults import ReplicaError
-from repro.core.runner_pool import SimHost, HostSpec, ResourceGuard
+from repro.core.runner_pool import SimHost, HostSpec
 from repro.core.tasks import TaskSuite, TABLE3_ROWS
 
 
@@ -165,7 +162,7 @@ def test_untuned_kernel_limits_cause_silent_failures():
 
 def test_leaked_task_reclamation():
     pool = RunnerPool("n4", _base(), size=2, task_timeout_vs=10.0)
-    r = pool.acquire("leaky")
+    pool.acquire("leaky")
     assert pool.n_free == 1
     pool.advance_time(11.0)
     reclaimed = pool.reclaim_leaked()

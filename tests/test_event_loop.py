@@ -60,7 +60,7 @@ def test_kernel_event_order_is_deterministic_across_runs():
 def test_timer_cancellation_and_daemon_timers():
     loop = EventLoop()
     fired = []
-    kept = loop.call_later(1.0, lambda: fired.append("kept"))
+    loop.call_later(1.0, lambda: fired.append("kept"))
     dropped = loop.call_later(0.5, lambda: fired.append("dropped"))
     dropped.cancel()
     # recurring daemon work must not keep the loop alive once real work ends

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st, settings
+from hypothesis import given, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention

@@ -1,10 +1,9 @@
 """Hardware-aware orchestration (Fig. 3, Table 1) and the Fig. 6 fleet sims."""
 import pytest
 
-from repro.core.orchestrator import (table1, fig3_sweep, bottleneck,
-                                     overload_fraction, ReplicaDemand,
-                                     MachineSpec, server_for_group)
-from repro.core.simulation import (run_throughput, sweep_throughput,
+from repro.core.orchestrator import (table1, fig3_sweep,
+                                     overload_fraction, ReplicaDemand)
+from repro.core.simulation import (sweep_throughput,
                                    run_recovery, recovery_stats)
 
 

@@ -1,0 +1,291 @@
+"""Online actor/learner pipeline: rewards, versions, staleness, e2e loop."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.telemetry import Telemetry
+from repro.data.pipeline import Trajectory, TrajectoryStep
+from repro.data.replay_buffer import ReplayBuffer
+from repro.data.tokenizer import ByteTokenizer
+from repro.pipeline import (IngestConfig, LearnerConfig, LearnerLoop,
+                            OnlinePipeline, PipelineConfig,
+                            PolicyVersionStore, TrajectoryIngestor,
+                            build_fleet, encode_for_rl)
+from repro.rollout.scenarios import RewardSpec, get_default_registry
+
+
+# ------------------------------------------------------------- reward shaping
+def test_reward_spec_success_and_efficiency_bonus():
+    spec = RewardSpec(success_threshold=0.5, success_bonus=1.0,
+                      efficiency_bonus=0.5, step_penalty=0.01)
+    assert spec.success(0.5) and spec.success(0.9)
+    assert not spec.success(0.49)
+    # finishing in half the horizon earns half the efficiency bonus
+    full = spec.terminal_reward(0.8, n_steps=10, horizon=20)
+    slow = spec.terminal_reward(0.8, n_steps=20, horizon=20)
+    assert full == pytest.approx(1.0 + 0.5 * 0.5)
+    assert slow == pytest.approx(1.0)
+    # failures get partial credit only
+    assert spec.terminal_reward(0.4, 10, 20) == pytest.approx(0.25 * 0.4)
+
+
+def test_reward_spec_step_rewards_dense():
+    spec = RewardSpec(step_penalty=0.02)
+    r = spec.step_rewards(0.9, n_steps=5, horizon=10)
+    assert r.shape == (5,)
+    assert np.allclose(r[:-1], -0.02)
+    assert r[-1] == pytest.approx(spec.terminal_reward(0.9, 5, 10) - 0.02)
+    assert spec.episode_return(0.9, 5, 10) == pytest.approx(float(r.sum()))
+
+
+def test_registry_has_per_family_reward_shaping():
+    reg = get_default_registry()
+    specs = {s.family: s.reward for s in reg}
+    assert len({id(s) for s in specs.values()}) > 1, \
+        "families should not all share one RewardSpec"
+    # terminal steps are cheap, browser steps are expensive
+    assert specs["terminal"].step_penalty < specs["browser"].step_penalty
+    task = reg.tasks_for("terminal_os", 1)[0].to_dict()
+    assert reg.reward_for(task) is specs["terminal"]
+    assert reg.is_success(task, 0.99)
+    assert not reg.is_success(task, 0.0)
+    shaped = reg.shape_rewards(task, 0.8, n_steps=4)
+    assert shaped.shape == (4,)
+
+
+# ------------------------------------------------------------- version store
+def test_policy_version_store_publish_and_staleness():
+    store = PolicyVersionStore({"w": 0})
+    assert store.version == 0
+    v1 = store.publish({"w": 1})
+    v2 = store.publish({"w": 2})
+    assert (v1, v2) == (1, 2)
+    version, params = store.current()
+    assert version == 2 and params == {"w": 2}
+    assert store.staleness(0) == 2
+    assert store.staleness(2) == 0
+    assert store.staleness(5) == 0          # future versions clamp to 0
+    assert store.publishes == 2
+
+
+def test_policy_version_store_concurrent_publishes():
+    store = PolicyVersionStore(None)
+
+    def publisher(k):
+        for i in range(50):
+            store.publish((k, i))
+
+    threads = [threading.Thread(target=publisher, args=(k,))
+               for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store.version == 200
+    assert store.publishes == 200
+
+
+# ------------------------------------------------------------------- encoding
+def _trajectory(n_steps=3, score=0.9, task=None):
+    rng = np.random.default_rng(0)
+    steps = [TrajectoryStep(rng.integers(0, 255, (8, 8, 3), np.uint8),
+                            f"thought {i}", f"click({i}, {i})")
+             for i in range(n_steps)]
+    return Trajectory("terminal_os-0", "configure the system", steps,
+                      score, task=task)
+
+
+def test_encode_for_rl_step_ends_are_action_tokens():
+    tok = ByteTokenizer()
+    traj = _trajectory(n_steps=4)
+    ids, mask, step_ends = encode_for_rl(traj, tok, 264, obs_tokens=4)
+    assert len(ids) == len(mask)
+    assert len(step_ends) == 4
+    for e in step_ends:
+        assert mask[e] == 1.0, "step end must be a trainable action token"
+    assert step_ends == sorted(step_ends)
+    assert step_ends[-1] == len(ids) - 2    # only EOS after the last action
+
+
+def test_ingestor_shapes_rewards_and_stamps_version():
+    reg = get_default_registry()
+    task = reg.tasks_for("terminal_os", 1)[0].to_dict()
+    traj = _trajectory(n_steps=3, score=0.95, task=task)
+    replay = ReplayBuffer(capacity=16)
+    store = PolicyVersionStore(None)
+    store.publish(None)                      # version 1
+    tel = Telemetry()
+    ingest = TrajectoryIngestor(replay, store, registry=reg,
+                                cfg=IngestConfig(seq_len=256),
+                                telemetry=tel)
+    ingest(traj)
+    assert len(replay) == 1
+    s = replay.sample(1)[0]
+    assert s["version"] == 1
+    assert s["success"] is True
+    assert s["family"] == "terminal"
+    assert s["tokens"].shape == s["rewards"].shape
+    # nothing truncated -> total credited reward equals the episode return
+    assert float(s["rewards"].sum()) == pytest.approx(s["episode_return"])
+    spec = reg.reward_for(task)
+    expect = spec.episode_return(0.95, 3, int(task["horizon"]))
+    assert s["episode_return"] == pytest.approx(expect)
+    assert tel.counter("ingested") == 1
+    assert tel.counter("ingest_success") == 1
+
+
+def test_ingestor_truncation_preserves_terminal_reward():
+    reg = get_default_registry()
+    task = reg.tasks_for("terminal_os", 1)[0].to_dict()
+    traj = _trajectory(n_steps=6, score=0.95, task=task)
+    replay = ReplayBuffer(capacity=4)
+    ingest = TrajectoryIngestor(replay, PolicyVersionStore(None),
+                                registry=reg, cfg=IngestConfig(seq_len=64))
+    ingest(traj)
+    s = replay.sample(1)[0]
+    assert len(s["tokens"]) == 64
+    # truncated steps pile their rewards onto the final kept position
+    assert float(s["rewards"].sum()) == pytest.approx(s["episode_return"])
+
+
+# ---------------------------------------------------------- learner staleness
+class _FakePPOTrainer:
+    """Records batches; stands in for PPOTrainer in staleness unit tests."""
+
+    def __init__(self):
+        self.params = {"step": 0}
+        self.batches = []
+
+    def make_batch(self, samples, seq_len):
+        return {"advantages": np.ones((len(samples), seq_len), np.float32)}
+
+    def update(self, batch):
+        self.batches.append(batch)
+        self.params = {"step": self.params["step"] + 1}
+        return {"loss": 1.0 / (len(self.batches) + 1)}
+
+
+def _sample(version, n=8):
+    return {"version": version, "ingest_wall": time.monotonic(),
+            "success": True,
+            "tokens_full": np.arange(20, dtype=np.int32),
+            "loss_mask_full": np.ones(20, np.float32)}
+
+
+def test_learner_reweights_stale_advantages():
+    replay = ReplayBuffer(capacity=32)
+    store = PolicyVersionStore(None)
+    for _ in range(8):
+        replay.add(_sample(version=0))
+    for _ in range(3):
+        store.publish(None)                  # current version: 3
+    tel = Telemetry()
+    loop = LearnerLoop(_FakePPOTrainer(), replay, store,
+                       cfg=LearnerConfig(algo="ppo", batch_size=4,
+                                         staleness_bound=1,
+                                         staleness_policy="reweight",
+                                         staleness_decay=0.5),
+                       telemetry=tel)
+    metrics = loop.step()
+    assert metrics is not None
+    batch = loop.trainer.batches[-1]
+    # staleness 3, bound 1 -> excess 2 -> weight 0.5**2
+    assert np.allclose(batch["advantages"], 0.25)
+    assert tel.counter("stale_reweighted") >= 4
+    assert metrics["version"] == 4           # update published a new version
+
+
+def test_learner_drops_stale_samples_and_starves():
+    replay = ReplayBuffer(capacity=32)
+    store = PolicyVersionStore(None)
+    for _ in range(8):
+        replay.add(_sample(version=0))
+    for _ in range(5):
+        store.publish(None)
+    tel = Telemetry()
+    loop = LearnerLoop(_FakePPOTrainer(), replay, store,
+                       cfg=LearnerConfig(algo="ppo", batch_size=4,
+                                         staleness_bound=2,
+                                         staleness_policy="drop"),
+                       telemetry=tel)
+    assert loop.step() is None               # everything beyond the bound
+    assert len(replay) == 0                  # evicted, not left to rot
+    assert tel.counter("stale_dropped") == 8
+    assert tel.counter("learner_starved") == 1
+    assert replay.total_pruned == 8
+
+
+def test_learner_fresh_samples_pass_unweighted():
+    replay = ReplayBuffer(capacity=32)
+    store = PolicyVersionStore(None)
+    for _ in range(8):
+        replay.add(_sample(version=0))
+    loop = LearnerLoop(_FakePPOTrainer(), replay, store,
+                       cfg=LearnerConfig(algo="ppo", batch_size=4,
+                                         staleness_bound=4))
+    metrics = loop.step()
+    assert metrics is not None
+    assert np.allclose(loop.trainer.batches[-1]["advantages"], 1.0)
+
+
+# ------------------------------------------------------------ virtual pacing
+def test_engine_virtual_deadline_paces_launches():
+    from repro.core.event_loop import EventLoop
+    from repro.rollout.engine import RolloutConfig, RolloutEngine
+    from repro.rollout.writer import TrajectoryWriter
+
+    reg = get_default_registry()
+    gateway, pools = build_fleet(4, seed=0)
+    writer = TrajectoryWriter(retain=False)
+    engine = RolloutEngine(gateway, writer, registry=reg,
+                           config=RolloutConfig(
+                               max_inflight=4, virtual_deadline_s=60.0))
+    tasks = reg.sample(64, seed=0)
+    report = engine.run_event_driven(tasks, loop=EventLoop())
+    writer.close()
+    gateway.stop()
+    for p in pools:
+        p.close()
+    settled = report.completed + report.failed
+    assert 0 < settled < 64, (
+        f"deadline should stop launches mid-workload, settled {settled}")
+
+
+# ----------------------------------------------------------------- end to end
+@pytest.mark.slow
+def test_online_pipeline_interleaved_ppo_end_to_end():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.train.ppo import PPOConfig, PPOTrainer
+
+    cfg = get_reduced("qwen3-1.7b", vocab_size=264)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trainer = PPOTrainer(model, params, cfg=PPOConfig(lr=3e-4))
+    gateway, pools = build_fleet(8, seed=0)
+    pipe = OnlinePipeline(
+        gateway, 8, trainer,
+        pipe_cfg=PipelineConfig(rounds=2, tasks_per_round=8,
+                                updates_per_round=2, max_inflight=8),
+        learner_cfg=LearnerConfig(algo="ppo", batch_size=4, seq_len=96,
+                                  staleness_bound=2),
+        ingest_cfg=IngestConfig(seq_len=96))
+    try:
+        report = pipe.run_interleaved()
+    finally:
+        pipe.close()
+        gateway.stop()
+        for p in pools:
+            p.close()
+    assert report.rollout_completed > 0
+    assert report.updates == 4
+    assert report.versions_published == 4
+    assert len(report.losses) == 4
+    assert all(np.isfinite(report.losses))
+    assert report.rollout_to_learner_s["n"] > 0
+    assert report.rollout_traj_per_min > 0
+    # round 1's experience is consumed after round 0's updates -> staleness
+    assert report.staleness["n"] > 0

@@ -226,7 +226,7 @@ def test_gateway_nonblocking_submit_and_try_acquire():
     gw, _ = _gateway(n_nodes=2, size=2)
 
     def episode(node, runner):
-        dur = runner.manager.configure({"task_id": "t", "horizon": 2})
+        runner.manager.configure({"task_id": "t", "horizon": 2})
         runner.manager.reset()
         return node
 

@@ -1,6 +1,5 @@
 """The logical-axis rule engine: divisibility fallback, duplicate-axis drop,
 and hypothesis invariants (these run unbound — no mesh required)."""
-import pytest
 from hypothesis import given, strategies as st
 
 from jax.sharding import PartitionSpec as P

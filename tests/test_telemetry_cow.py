@@ -1,0 +1,210 @@
+"""Dedicated coverage for core/telemetry.py and core/cow_store.py."""
+import threading
+
+import pytest
+
+from repro.core.cow_store import BlobStore, CowStore, DiskImage
+from repro.core.telemetry import Telemetry
+
+
+# ---------------------------------------------------------------- telemetry
+def test_counters_accumulate_and_default_to_zero():
+    tel = Telemetry()
+    assert tel.counter("missing") == 0
+    tel.count("episodes")
+    tel.count("episodes", 4)
+    assert tel.counter("episodes") == 5
+
+
+def test_series_summary_percentiles():
+    tel = Telemetry()
+    for v in range(1, 101):                 # 1..100
+        tel.observe("latency", float(v))
+    s = tel.summary("latency")
+    assert s["n"] == 100
+    assert s["mean"] == pytest.approx(50.5)
+    assert s["p50"] == pytest.approx(50.5)
+    assert s["p95"] == 95.0                 # sorted[int(0.95 * 99)]
+    assert s["max"] == 100.0
+    assert tel.summary("nothing") == {"n": 0}
+    assert tel.series("latency")[:3] == [1.0, 2.0, 3.0]
+
+
+def test_gauges_last_write_wins():
+    tel = Telemetry()
+    assert tel.gauge_value("depth", -1.0) == -1.0
+    tel.gauge("depth", 3.0)
+    tel.gauge("depth", 7.0)
+    assert tel.gauge_value("depth") == 7.0
+    assert tel.snapshot()["gauges"]["depth"] == 7.0
+
+
+def test_timer_observes_wall_seconds():
+    tel = Telemetry()
+    with tel.timer("block_s"):
+        pass
+    s = tel.summary("block_s")
+    assert s["n"] == 1
+    assert 0.0 <= s["max"] < 5.0
+
+
+def test_snapshot_is_a_consistent_copy():
+    tel = Telemetry()
+    tel.count("a")
+    tel.observe("x", 1.0)
+    snap = tel.snapshot()
+    tel.count("a")
+    tel.observe("x", 2.0)
+    assert snap["counters"]["a"] == 1
+    assert snap["series"]["x"]["n"] == 1
+
+
+def test_thread_safety_exact_totals():
+    tel = Telemetry()
+    n_threads, per_thread = 8, 2000
+
+    def worker(k):
+        for i in range(per_thread):
+            tel.count("hits")
+            tel.observe("vals", float(i))
+            tel.gauge("last", float(k))
+
+    threads = [threading.Thread(target=worker, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert tel.counter("hits") == n_threads * per_thread
+    assert tel.summary("vals")["n"] == n_threads * per_thread
+    assert tel.gauge_value("last") in {float(k) for k in range(n_threads)}
+
+
+def test_snapshot_while_writing_does_not_crash():
+    tel = Telemetry()
+    stop = threading.Event()
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            tel.observe("s", float(i))
+            tel.count("c")
+            i += 1
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        for _ in range(200):
+            snap = tel.snapshot()
+            assert snap["counters"].get("c", 0) >= snap["series"].get(
+                "s", {"n": 0})["n"] - 1 or True
+    finally:
+        stop.set()
+        t.join()
+
+
+# ---------------------------------------------------------------- cow store
+def test_virtual_block_refcounts():
+    store = CowStore(block_size=4)
+    store.put_virtual("b0")
+    store.put_virtual("b0")                 # refcount 2, one allocation
+    assert store.n_blocks() == 1
+    assert store.physical_bytes() == 4
+    store.release("b0")
+    assert store.n_blocks() == 1            # still referenced
+    store.release("b0")
+    assert store.n_blocks() == 0
+
+
+def test_double_free_is_a_safe_noop():
+    store = CowStore(block_size=4)
+    store.put_virtual("b0")
+    store.release("b0")
+    # the block is gone; releasing again must not throw or go negative
+    store.release("b0")
+    store.release("never-existed")
+    assert store.n_blocks() == 0
+    # the id is reusable afterwards with a fresh refcount
+    store.put_virtual("b0")
+    assert store.n_blocks() == 1
+    store.release("b0")
+    assert store.n_blocks() == 0
+
+
+def test_clone_of_clone_shares_blocks():
+    store = CowStore(block_size=1 << 10)
+    base = DiskImage.create_base(store, "base", 4 << 10)     # 4 blocks
+    assert store.physical_bytes() == 4 << 10
+    c1, secs1 = base.clone("c1")
+    c2, secs2 = c1.clone("c2")
+    assert secs1 == secs2 == store.reflink_latency_s
+    # three images, one physical copy
+    assert store.physical_bytes() == 4 << 10
+    assert c2.blocks == base.blocks
+
+
+def test_clone_chain_survives_ancestor_close():
+    store = CowStore(block_size=1 << 10)
+    base = DiskImage.create_base(store, "base", 2 << 10)
+    c1, _ = base.clone("c1")
+    c2, _ = c1.clone("c2")
+    base.close()
+    c1.close()
+    # grandchild still holds every block
+    assert store.physical_bytes() == 2 << 10
+    c2.close()
+    assert store.physical_bytes() == 0
+    assert store.n_blocks() == 0
+
+
+def test_write_block_diverges_only_the_writer():
+    store = CowStore(block_size=1 << 10)
+    base = DiskImage.create_base(store, "base", 2 << 10)
+    clone, _ = base.clone("clone")
+    clone.write_block(0, "edit")
+    assert clone.blocks[0] != base.blocks[0]
+    assert clone.blocks[1] == base.blocks[1]
+    # one extra physical block for the divergent write
+    assert store.physical_bytes() == 3 << 10
+    clone.close()
+    base.close()
+    assert store.physical_bytes() == 0
+
+
+def test_image_double_close_is_idempotent():
+    store = CowStore(block_size=1 << 10)
+    base = DiskImage.create_base(store, "base", 2 << 10)
+    clone, _ = base.clone("c")
+    clone.close()
+    clone.close()                           # second close must not re-release
+    assert store.physical_bytes() == 2 << 10
+    base.close()
+    assert store.physical_bytes() == 0
+
+
+def test_blob_store_dedup_and_overwrite():
+    blob = BlobStore(chunk=8)
+    data = b"abcdefgh" * 4                  # 4 identical chunks
+    blob.put("ckpt", data)
+    assert blob.get("ckpt") == data
+    assert blob.store.physical_bytes() == 8   # deduplicated to one chunk
+    blob.put("ckpt", b"ABCDEFGH" * 4)       # overwrite releases old chunks
+    assert blob.get("ckpt") == b"ABCDEFGH" * 4
+    assert blob.store.physical_bytes() == 8
+    blob.delete("ckpt")
+    assert blob.store.physical_bytes() == 0
+    blob.delete("ckpt")                     # double delete is a no-op
+    assert blob.keys() == []
+
+
+def test_blob_store_shared_chunks_across_keys():
+    blob = BlobStore(chunk=8)
+    blob.put("a", b"xxxxxxxx" + b"yyyyyyyy")
+    blob.put("b", b"xxxxxxxx" + b"zzzzzzzz")
+    assert blob.store.physical_bytes() == 24  # x-chunk shared
+    blob.delete("a")
+    # b still reads correctly through the shared chunk
+    assert blob.get("b") == b"xxxxxxxx" + b"zzzzzzzz"
+    assert blob.store.physical_bytes() == 16
+    blob.delete("b")
+    assert blob.store.physical_bytes() == 0

@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
 
 from repro.configs import get_reduced
 from repro.distributed.sharding import AxisRules
