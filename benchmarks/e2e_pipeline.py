@@ -55,9 +55,9 @@ def run_pipeline(*, algo: str = "ppo", replicas: int = 16, rounds: int = 4,
         trainer = PPOTrainer(model, params, cfg=PPOConfig(lr=lr), seed=seed)
     else:
         trainer = SFTTrainer(model, seed=seed)
-    gateway, pools = build_fleet(replicas, seed=seed)
+    cluster = build_fleet(replicas, seed=seed)
     pipe = OnlinePipeline(
-        gateway, replicas, trainer,
+        cluster, replicas, trainer,
         pipe_cfg=PipelineConfig(rounds=rounds,
                                 tasks_per_round=tasks_per_round,
                                 updates_per_round=updates_per_round,
@@ -70,9 +70,7 @@ def run_pipeline(*, algo: str = "ppo", replicas: int = 16, rounds: int = 4,
         report = pipe.run_interleaved()
     finally:
         pipe.close()
-        gateway.stop()
-        for p in pools:
-            p.close()
+        cluster.close()
     return report
 
 

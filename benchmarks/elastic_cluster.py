@@ -1,0 +1,280 @@
+"""Elastic cluster under a bursty arrival ramp: autoscaling vs static.
+
+The live §3.2 control plane (``repro.cluster``) measured end to end on
+the event-driven engine. One open-loop workload — a trickle, then a hard
+task burst, then a cool-down, with seeded Poisson arrivals — is replayed
+over three fleets:
+
+- **static** — a fixed fleet provisioned for the burst peak; it idles
+  (and bills) through the quiet phases.
+- **autoscaled** — starts at a fraction of peak; the ``Autoscaler``
+  daemon grows the fleet from gateway acquire-wait/queue pressure during
+  the burst (paying a virtual boot delay per scale-up) and drains it
+  afterwards. Capped at the static fleet's size, so the comparison is
+  peak-for-peak fair.
+- **overcommit** — the static fleet's replica count packed onto hosts
+  with far too few cores: the per-host contention tracker inflates every
+  operation in virtual time, demonstrating that CPU-bounded packing now
+  degrades trajectories/min *live* instead of only in the offline
+  cost model.
+
+Asserts (the paper-facing claims of the elastic control plane):
+
+1. the autoscaled cluster holds the same p95 acquire-wait bound the
+   static fleet meets,
+2. while spending >= 20% fewer replica-days (it spends ~55% fewer), and
+3. the overcommitted fleet loses >= 25% trajectories/min to live CPU
+   contention (it loses ~45%).
+
+    PYTHONPATH=src python benchmarks/elastic_cluster.py
+
+Emits ``artifacts/bench/BENCH_elastic.json``; ``scripts/check_bench.py``
+gates CI on its per-cluster rows and gate block (virtual-time metrics,
+deterministic per seed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.cluster import (AutoscalerConfig, Cluster, MachineSpec,
+                           default_specs)
+from repro.core.event_loop import EventLoop
+from repro.core.seeding import stable_seed
+from repro.rollout.engine import RolloutConfig, RolloutEngine
+from repro.rollout.scenarios import ScenarioRegistry, get_default_registry
+from repro.rollout.writer import TrajectoryWriter
+
+PEAK_REPLICAS = 128          # static provisioning for the burst
+MIN_REPLICAS = 16            # autoscaled floor (and starting size)
+RUNNERS_PER_NODE = 32
+P95_WAIT_BOUND_VS = 30.0     # acquire-wait p95 both fleets must hold
+REPLICA_DAY_SAVINGS = 0.20   # autoscaled must save at least this much
+OVERCOMMIT_SLOWDOWN = 0.25   # contention must cost at least this much
+OVERCOMMIT_CORES = 8         # cores per host in the overcommit config
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "bench", "BENCH_elastic.json")
+
+
+# ---------------------------------------------------------------- workload
+def burst_arrivals(seed: int = 0, *, trickle_rate: float = 0.2,
+                   burst_rate: float = 3.0, trickle_n: int = 40,
+                   burst_n: int = 600, burst_at_vs: float = 200.0,
+                   cooldown_at_vs: float = 500.0) -> list[float]:
+    """Seeded Poisson arrival ramp: trickle -> hard burst -> trickle."""
+    rng = random.Random(stable_seed(seed, "elastic-arrivals"))
+    arrivals: list[float] = []
+    t = 0.0
+    for _ in range(trickle_n):
+        t += rng.expovariate(trickle_rate)
+        arrivals.append(t)
+    t = max(t, burst_at_vs)
+    for _ in range(burst_n):
+        t += rng.expovariate(burst_rate)
+        arrivals.append(t)
+    t = max(t, cooldown_at_vs)
+    for _ in range(trickle_n):
+        t += rng.expovariate(trickle_rate)
+        arrivals.append(t)
+    return arrivals
+
+
+# ------------------------------------------------------------------- runs
+def run_cluster(name: str, cluster: Cluster, arrivals: list[float], *,
+                seed: int = 0,
+                registry: ScenarioRegistry = None) -> dict:
+    """Replay the arrival ramp over one cluster; returns its row."""
+    registry = registry or get_default_registry()
+    t0 = time.monotonic()
+    writer = TrajectoryWriter(retain=False, capacity=4096)
+    engine = RolloutEngine(cluster, writer, registry=registry,
+                           config=RolloutConfig(
+                               max_inflight=len(arrivals),
+                               acquire_timeout_vs=3000.0))
+    tasks = registry.sample(len(arrivals),
+                            seed=stable_seed(seed, "elastic-tasks"))
+    report = engine.run_event_driven(tasks, loop=EventLoop(),
+                                     arrivals=arrivals)
+    waits = cluster.telemetry.summary("acquire_wait_vs")
+    auto = cluster.autoscaler
+    peak = cluster.peak_placed
+    row = {
+        "name": name,
+        "replicas_start": None,      # filled by caller
+        "replicas_peak": peak,
+        "completed": report.completed,
+        "failed": report.failed,
+        "reassignments": report.reassignments,
+        "virtual_makespan_s": report.virtual_makespan,
+        "traj_per_min": report.trajectories_per_min(peak),
+        "acquire_wait_p95_vs": waits.get("p95", 0.0),
+        "acquire_wait_mean_vs": waits.get("mean", 0.0),
+        "replica_days": cluster.replica_days(),
+        "usd_per_day_peak": cluster.price_per_day(),
+        "scale_ups": auto.scale_ups if auto else 0,
+        "scale_downs": auto.scale_downs if auto else 0,
+        "scale_blocked": auto.blocked if auto else 0,
+        "wall_seconds": time.monotonic() - t0,
+    }
+    writer.drain(timeout=30.0)
+    writer.close()
+    cluster.close()
+    return row
+
+
+def elastic_matrix(seed: int = 0) -> list[dict]:
+    """The three-fleet comparison over one common arrival ramp."""
+    registry = get_default_registry()
+    arrivals = burst_arrivals(seed)
+    rows = []
+
+    static = Cluster(default_specs(PEAK_REPLICAS), PEAK_REPLICAS,
+                     runners_per_node=RUNNERS_PER_NODE, seed=seed)
+    row = run_cluster("static", static, arrivals, seed=seed,
+                      registry=registry)
+    row["replicas_start"] = PEAK_REPLICAS
+    rows.append(row)
+
+    scaler = AutoscalerConfig(min_replicas=MIN_REPLICAS,
+                              max_replicas=PEAK_REPLICAS,
+                              grow_step=32)
+    auto = Cluster(default_specs(PEAK_REPLICAS), MIN_REPLICAS,
+                   runners_per_node=RUNNERS_PER_NODE, seed=seed,
+                   autoscaler=scaler)
+    row = run_cluster("autoscaled", auto, arrivals, seed=seed,
+                      registry=registry)
+    row["replicas_start"] = MIN_REPLICAS
+    rows.append(row)
+
+    tiny = MachineSpec(OVERCOMMIT_CORES, 768, "E5-2699")
+    n_hosts = PEAK_REPLICAS // RUNNERS_PER_NODE
+    over = Cluster([tiny] * n_hosts, PEAK_REPLICAS,
+                   runners_per_node=RUNNERS_PER_NODE, seed=seed)
+    row = run_cluster("overcommit", over, arrivals, seed=seed,
+                      registry=registry)
+    row["replicas_start"] = PEAK_REPLICAS
+    rows.append(row)
+    return rows
+
+
+# ----------------------------------------------------------------- asserts
+def assert_elastic_claims(rows: list[dict]) -> dict:
+    """The benchmark's contract; returns the gate block for the baseline."""
+    by = {r["name"]: r for r in rows}
+    static, auto, over = by["static"], by["autoscaled"], by["overcommit"]
+    n_tasks = static["completed"] + static["failed"]
+    for r in rows:
+        assert r["completed"] >= 0.95 * n_tasks, (
+            f"{r['name']}: only {r['completed']}/{n_tasks} episodes "
+            f"completed — the fleet is not keeping up with recovery")
+
+    assert static["acquire_wait_p95_vs"] <= P95_WAIT_BOUND_VS, (
+        f"static fleet missed its own p95 bound: "
+        f"{static['acquire_wait_p95_vs']:.1f} > {P95_WAIT_BOUND_VS}")
+    assert auto["acquire_wait_p95_vs"] <= P95_WAIT_BOUND_VS, (
+        f"autoscaled fleet broke the p95 acquire-wait bound: "
+        f"{auto['acquire_wait_p95_vs']:.1f} > {P95_WAIT_BOUND_VS}")
+
+    savings = 1.0 - auto["replica_days"] / static["replica_days"]
+    assert savings >= REPLICA_DAY_SAVINGS, (
+        f"autoscaling saved only {savings:.1%} replica-days "
+        f"(static {static['replica_days']:.3f}, autoscaled "
+        f"{auto['replica_days']:.3f}); need >= {REPLICA_DAY_SAVINGS:.0%}")
+    assert auto["scale_ups"] > 0 and auto["scale_downs"] > 0, (
+        "the autoscaler never actually scaled — the ramp should force "
+        "both growth and drain")
+
+    slowdown = 1.0 - over["traj_per_min"] / static["traj_per_min"]
+    assert slowdown >= OVERCOMMIT_SLOWDOWN, (
+        f"overcommitted hosts only cost {slowdown:.1%} traj/min "
+        f"(static {static['traj_per_min']:.1f}, overcommit "
+        f"{over['traj_per_min']:.1f}); live contention should cost "
+        f">= {OVERCOMMIT_SLOWDOWN:.0%}")
+    return {
+        "autoscaled_meets_p95_bound": True,
+        "replica_day_savings_frac": round(savings, 4),
+        "overcommit_slowdown_frac": round(slowdown, 4),
+        "autoscaled_scale_ups": auto["scale_ups"],
+        "autoscaled_scale_downs": auto["scale_downs"],
+        "static_traj_per_min": round(static["traj_per_min"], 2),
+        "autoscaled_replica_days": round(auto["replica_days"], 4),
+    }
+
+
+# ----------------------------------------------------------------- harness
+def elastic_table(seed: int = 0):
+    """(rows, derived) in the paper_tables convention for benchmarks/run.py."""
+    rows = elastic_matrix(seed)
+    gate = assert_elastic_claims(rows)
+    derived = (f"elastic control plane: p95 wait bound held at "
+               f"{gate['replica_day_savings_frac']:.0%} fewer replica-days "
+               f"than static; overcommit costs "
+               f"{gate['overcommit_slowdown_frac']:.0%} traj/min live")
+    return rows, derived
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="assert the whole sweep stays under this "
+                         "wall-clock budget (CI guard)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="where to write BENCH_elastic.json")
+    args = ap.parse_args()
+
+    t0 = time.monotonic()
+    rows = elastic_matrix(args.seed)
+    wall = time.monotonic() - t0
+
+    print(f"{'cluster':>11} {'start':>6} {'peak':>5} {'done':>5} "
+          f"{'p95 wait':>9} {'traj/min':>9} {'replica-days':>13} "
+          f"{'scale +/-':>10}")
+    for r in rows:
+        print(f"{r['name']:>11} {r['replicas_start']:>6} "
+              f"{r['replicas_peak']:>5} {r['completed']:>5} "
+              f"{r['acquire_wait_p95_vs']:>9.2f} {r['traj_per_min']:>9.1f} "
+              f"{r['replica_days']:>13.4f} "
+              f"{r['scale_ups']:>5}/{r['scale_downs']}")
+
+    gate = assert_elastic_claims(rows)
+    if args.budget_s is not None:
+        assert wall <= args.budget_s, (
+            f"elastic sweep took {wall:.1f}s wall > budget "
+            f"{args.budget_s}s")
+
+    payload = {
+        "benchmark": "elastic cluster control plane under a bursty "
+                     "arrival ramp (autoscaled vs static vs overcommit)",
+        "metric": "p95 acquire-wait (vs), replica-days, traj/min "
+                  "(virtual time)",
+        "seed": args.seed,
+        "p95_wait_bound_vs": P95_WAIT_BOUND_VS,
+        "workload": {
+            "arrivals": "seeded Poisson trickle/burst/trickle ramp",
+            "n_tasks": len(burst_arrivals(args.seed)),
+        },
+        "sweep_wall_seconds": round(wall, 2),
+        "clusters": rows,
+        "gate": gate,
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"autoscaled: {gate['replica_day_savings_frac']:.0%} fewer "
+          f"replica-days at the same p95 bound; overcommit costs "
+          f"{gate['overcommit_slowdown_frac']:.0%} traj/min; "
+          f"sweep {wall:.1f}s wall; baseline -> "
+          f"{os.path.relpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,8 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks import e2e_pipeline, paper_tables, roofline, throughput
+from benchmarks import (e2e_pipeline, elastic_cluster, paper_tables,
+                        roofline, throughput)
 
 OUTDIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
@@ -27,6 +28,7 @@ def main() -> None:
         ("table3_datagen", paper_tables.table3_datagen),
         ("rollout_throughput",
          lambda: throughput.throughput_table(seeds=1)),
+        ("elastic_cluster", elastic_cluster.elastic_table),
         ("e2e_pipeline", e2e_pipeline.pipeline_table),
         ("roofline_single_pod", lambda: roofline.report("16_16")),
         ("roofline_multi_pod", lambda: roofline.report("2_16_16")),

@@ -49,10 +49,10 @@ def main():
         trainer = PPOTrainer(model, params, cfg=PPOConfig(lr=3e-4))
     else:
         trainer = SFTTrainer(model, seed=0)
-    gateway, pools = build_fleet(args.replicas, seed=0)
+    cluster = build_fleet(args.replicas, seed=0)
     rounds = max(args.updates // 4, 2)
     pipe = OnlinePipeline(
-        gateway, args.replicas, trainer,
+        cluster, args.replicas, trainer,
         pipe_cfg=PipelineConfig(rounds=rounds,
                                 tasks_per_round=args.tasks_per_round,
                                 updates_per_round=4,
@@ -72,9 +72,7 @@ def main():
             report = pipe.run_concurrent(total_updates=args.updates)
     finally:
         pipe.close()
-        gateway.stop()
-        for p in pools:
-            p.close()
+        cluster.close()
 
     lat = report.rollout_to_learner_s
     print(f"rollouts: {report.rollout_completed} trajectories "

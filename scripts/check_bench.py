@@ -14,8 +14,9 @@ and committed with the change that moved it.
         --fresh /tmp/BENCH_throughput.json
 
 The benchmark kind is auto-detected from the payload shape: throughput
-baselines carry per-(design, fleet-size) `engine` rows, e2e baselines
-carry a `gate` block.
+baselines carry per-(design, fleet-size) `engine` rows, elastic-cluster
+baselines carry per-cluster `clusters` rows, e2e baselines carry a
+`gate` block.
 """
 
 from __future__ import annotations
@@ -32,21 +33,29 @@ def rel_dev(base: float, fresh: float) -> float:
     return (fresh - base) / abs(base)
 
 
-def compare_value(name: str, base: float, fresh: float, tol: float) -> list[str]:
+def compare_value(
+    name: str, base: float, fresh: float, tol: float, *, lower_is_better: bool = False
+) -> list[str]:
+    """Band check with direction-aware labels: for a higher-is-better
+    metric a drop is the regression; for a lower-is-better one (cost,
+    latency) a rise is — the other direction means the committed
+    baseline is stale. Either way, out-of-band fails."""
     dev = rel_dev(base, fresh)
-    if dev < -tol:
+    if abs(dev) <= tol:
+        return []
+    worsened = dev > tol if lower_is_better else dev < -tol
+    direction = "above" if dev > 0 else "below"
+    if worsened:
         msg = (
-            f"REGRESSION {name}: {fresh:.3f} is {-dev:.1%} below "
+            f"REGRESSION {name}: {fresh:.3f} is {abs(dev):.1%} {direction} "
             f"baseline {base:.3f} (tolerance {tol:.0%})"
         )
-        return [msg]
-    if dev > tol:
+    else:
         msg = (
-            f"STALE BASELINE {name}: {fresh:.3f} is {dev:.1%} above "
+            f"STALE BASELINE {name}: {fresh:.3f} is {abs(dev):.1%} {direction} "
             f"baseline {base:.3f} — regenerate and commit the baseline"
         )
-        return [msg]
-    return []
+    return [msg]
 
 
 def check_throughput(base: dict, fresh: dict, tol: float) -> list[str]:
@@ -70,8 +79,41 @@ def check_throughput(base: dict, fresh: dict, tol: float) -> list[str]:
     return problems
 
 
+# (metric, lower_is_better): replica-days and acquire-wait are costs
+ELASTIC_METRICS = (
+    ("traj_per_min", False),
+    ("replica_days", True),
+    ("acquire_wait_p95_vs", True),
+)
+
+
+def check_elastic(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Per-cluster comparison of the elastic rows, plus the gate block."""
+    problems: list[str] = []
+    fresh_rows = {row["name"]: row for row in fresh.get("clusters", [])}
+    base_rows = base.get("clusters", [])
+    if not base_rows:
+        problems.append("MALFORMED baseline: no cluster rows")
+    for row in base_rows:
+        other = fresh_rows.get(row["name"])
+        if other is None:
+            problems.append(f"MISSING cluster[{row['name']}]: not in fresh results")
+            continue
+        for metric, lower_is_better in ELASTIC_METRICS:
+            name = f"{metric}[{row['name']}]"
+            problems += compare_value(
+                name, row[metric], other[metric], tol, lower_is_better=lower_is_better
+            )
+    problems += check_gate(base, fresh, tol)
+    return problems
+
+
 def check_e2e(base: dict, fresh: dict, tol: float) -> list[str]:
     """Gate-block comparison: booleans must hold, numbers stay in band."""
+    return check_gate(base, fresh, tol)
+
+
+def check_gate(base: dict, fresh: dict, tol: float) -> list[str]:
     problems: list[str] = []
     base_gate = base.get("gate", {})
     fresh_gate = fresh.get("gate", {})
@@ -97,6 +139,8 @@ def check_e2e(base: dict, fresh: dict, tol: float) -> list[str]:
 def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
     if "engine" in baseline:
         return check_throughput(baseline, fresh, tol)
+    if "clusters" in baseline:
+        return check_elastic(baseline, fresh, tol)
     if "gate" in baseline:
         return check_e2e(baseline, fresh, tol)
     return ["MALFORMED baseline: neither engine rows nor a gate block"]

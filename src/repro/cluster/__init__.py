@@ -1,0 +1,29 @@
+"""Live hardware-aware cluster control plane (§3.2, promoted from the
+offline cost model): hosts with RAM/CoW-disk budgets, bin-packed
+placement, live CPU-contention tracking, elastic autoscaling, and
+load-aware routing over the event-driven fleet."""
+
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.cluster import DEFAULT_MACHINE, Cluster, default_specs
+from repro.cluster.host import (
+    EST_COW_PER_REPLICA_BYTES,
+    Host,
+    HostDemand,
+)
+from repro.cluster.placement import Placement, PlacementError, Placer
+from repro.core.orchestrator import MachineSpec
+
+__all__ = [
+    "Autoscaler",
+    "AutoscalerConfig",
+    "Cluster",
+    "DEFAULT_MACHINE",
+    "EST_COW_PER_REPLICA_BYTES",
+    "Host",
+    "HostDemand",
+    "MachineSpec",
+    "Placement",
+    "PlacementError",
+    "Placer",
+    "default_specs",
+]

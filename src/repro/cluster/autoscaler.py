@@ -1,0 +1,113 @@
+"""Elastic autoscaler: an event-loop daemon that sizes the live fleet.
+
+Watches the gateway's virtual acquire-wait p95 and queue depth every
+``interval_vs`` virtual seconds and asks the cluster to grow when demand
+outruns capacity (waiters queueing, p95 above the high-water mark) or to
+drain when the fleet idles (no waiters, p95 under the low-water mark,
+most runners free). Growth is placed against host budgets — a fleet
+that is out of RAM or CoW disk refuses to scale and counts the refusal —
+and new capacity only serves after a boot delay in virtual time, so
+scaling decisions pay a realistic provisioning lag.
+
+Every decision reads deterministic fleet state on the deterministic
+event loop, so an autoscaled run is exactly reproducible per seed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.event_loop import EventLoop, Timer
+from repro.core.telemetry import Telemetry, p95
+
+
+@dataclass
+class AutoscalerConfig:
+    interval_vs: float = 5.0  # tick period on the virtual clock
+    wait_p95_high_vs: float = 10.0  # grow above this acquire-wait p95
+    wait_p95_low_vs: float = 1.0  # drain below this (and idle)
+    queue_high: int = 1  # grow when this many acquires are parked
+    grow_step: int = 16  # replicas added per scale-up
+    shrink_step: int = 8  # replicas retired per scale-down
+    idle_free_frac: float = 0.6  # drain only when this fraction is free
+    boot_delay_vs: float = 12.0  # provisioning lag for new replicas
+    cooldown_vs: float = 15.0  # minimum virtual time between scalings
+    min_replicas: int = 8
+    max_replicas: int = 2048
+
+
+class Autoscaler:
+    """Grow/drain daemon over one cluster's gateway signals."""
+
+    def __init__(
+        self,
+        cluster,
+        cfg: Optional[AutoscalerConfig] = None,
+        *,
+        telemetry: Optional[Telemetry] = None,
+    ):
+        self.cluster = cluster
+        self.cfg = cfg or AutoscalerConfig()
+        self.telemetry = telemetry or Telemetry()
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.blocked = 0  # scale-ups refused by host budgets
+        self._loop: Optional[EventLoop] = None
+        self._timer: Optional[Timer] = None
+        self._last_scale_vt = float("-inf")
+
+    # ------------------------------------------------------------ lifecycle
+    def attach_loop(self, loop: EventLoop) -> None:
+        self._loop = loop
+        self._last_scale_vt = float("-inf")
+        self._timer = loop.call_later(self.cfg.interval_vs, self._tick, daemon=True)
+
+    def detach_loop(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        self._loop = None
+
+    # ----------------------------------------------------------------- tick
+    def _tick(self) -> None:
+        cfg = self.cfg
+        gw = self.cluster.gateway
+        waits = gw.drain_wait_samples()
+        wait_p95 = p95(waits)
+        depth = gw.n_waiting
+        placed = self.cluster.placed_replicas
+        live = self.cluster.n_replicas
+        free = sum(p.n_free for p in gw.pools.values())
+        free_frac = free / live if live else 0.0
+        self.telemetry.gauge("autoscaler_wait_p95_vs", wait_p95)
+        self.telemetry.gauge("autoscaler_queue_depth", float(depth))
+
+        now = self._loop.now
+        cooled = now - self._last_scale_vt >= cfg.cooldown_vs
+        pressured = wait_p95 > cfg.wait_p95_high_vs or depth >= cfg.queue_high
+        idle = (
+            wait_p95 < cfg.wait_p95_low_vs
+            and depth == 0
+            and free_frac >= cfg.idle_free_frac
+        )
+        if pressured and cooled and placed < cfg.max_replicas:
+            want = min(cfg.grow_step, cfg.max_replicas - placed)
+            granted = self.cluster.request_grow(want, delay_vs=cfg.boot_delay_vs)
+            if granted > 0:
+                self.scale_ups += 1
+                self._last_scale_vt = now
+                self.telemetry.count("autoscaler_scale_ups")
+                self.telemetry.count("autoscaler_replicas_added", granted)
+            else:
+                self.blocked += 1
+                self.telemetry.count("autoscaler_blocked")
+        elif idle and cooled and placed > cfg.min_replicas:
+            want = min(cfg.shrink_step, placed - cfg.min_replicas)
+            removed = self.cluster.scale_down(want)
+            if removed > 0:
+                self.scale_downs += 1
+                self._last_scale_vt = now
+                self.telemetry.count("autoscaler_scale_downs")
+                self.telemetry.count("autoscaler_replicas_removed", removed)
+        self._timer = self._loop.call_later(cfg.interval_vs, self._tick, daemon=True)

@@ -1,0 +1,314 @@
+"""Cluster: the live §3.2 control plane over the event-driven fleet.
+
+Where ``core/orchestrator.py`` *prices* hardware-aware packing offline,
+a ``Cluster`` runs it: a list of `MachineSpec`s becomes `Host`s with RAM
+and CoW-disk budgets, a `Placer` bin-packs `RunnerPool` capacity onto
+them, the `Gateway` routes least-loaded over the live pools, per-host
+contention trackers inflate step latency when a machine is CPU
+overcommitted, and an optional `Autoscaler` grows and drains the fleet
+at runtime from gateway pressure signals. The cluster also keeps the
+books: a replica-seconds integral of provisioned capacity over virtual
+time and USD/replica-day gauges computed from the Table-1 price model.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.host import Host, HostDemand
+from repro.cluster.placement import Placer
+from repro.core.cow_store import CowStore, DiskImage
+from repro.core.event_loop import EventLoop, Timer
+from repro.core.faults import FaultInjector
+from repro.core.gateway import Gateway
+from repro.core.orchestrator import MachineSpec
+from repro.core.replica import LatencyModel
+from repro.core.runner_pool import RunnerPool
+from repro.core.seeding import stable_seed
+from repro.core.telemetry import Telemetry
+
+# The paper's cheap large-RAM pick (Table 1): 88-core / 768 GB E5-2699.
+DEFAULT_MACHINE = MachineSpec(88, 768, "E5-2699")
+
+SECONDS_PER_DAY = 86400.0
+
+
+def default_specs(n_replicas: int, *, runners_per_node: int = 32) -> list[MachineSpec]:
+    """Enough default machines to host ``n_replicas`` at the given pool
+    granularity (one pool per host)."""
+    n_hosts = max(math.ceil(n_replicas / runners_per_node), 1)
+    return [DEFAULT_MACHINE] * n_hosts
+
+
+class Cluster:
+    """Hosts + placement + routing + contention + elasticity, as one unit."""
+
+    def __init__(
+        self,
+        specs: Sequence[MachineSpec],
+        n_replicas: int,
+        *,
+        runners_per_node: int = 32,
+        seed: int = 0,
+        routing: str = "least_loaded",
+        node_prefix: str = "node",
+        faults: bool = True,
+        latency: Optional[LatencyModel] = None,
+        demand: Optional[HostDemand] = None,
+        autoscaler: Optional[AutoscalerConfig] = None,
+        telemetry: Optional[Telemetry] = None,
+        sample_interval_vs: float = 10.0,
+    ):
+        self.seed = seed
+        self.node_prefix = node_prefix
+        self.faults = faults
+        self.latency = latency
+        self.telemetry = telemetry or Telemetry()
+        self.sample_interval_vs = sample_interval_vs
+        self.store = CowStore(block_size=1 << 20)
+        self.base = DiskImage.create_base(self.store, "ubuntu", 64 << 20)
+        self.hosts = [
+            Host(f"host{i}", spec, self.store, demand=demand)
+            for i, spec in enumerate(specs)
+        ]
+        self._pool_seq = 0
+        plan = Placer(self.hosts).place(n_replicas, pool_size=runners_per_node)
+        pools = [self._build_pool(p.host, p.n) for p in plan]
+        self.gateway = Gateway(pools, routing=routing, telemetry=self.telemetry)
+        self.autoscaler: Optional[Autoscaler] = None
+        if autoscaler is not None:
+            self.autoscaler = Autoscaler(self, autoscaler, telemetry=self.telemetry)
+        self._loop: Optional[EventLoop] = None
+        self._sampler: Optional[Timer] = None
+        # boot-delayed grow timers in flight: (timer, host, n). Flushed on
+        # detach so a reservation whose boot the loop never ran is returned
+        # instead of leaking as phantom placed capacity.
+        self._pending_grows: list[tuple[Timer, Host, int]] = []
+        # replica-seconds integral of *provisioned* capacity (the cost
+        # the fleet is paying for, whether or not a runner is leased)
+        self._rs_integral = 0.0
+        self._rs_last_vt = 0.0
+        self._rs_size = self.placed_replicas
+        self.peak_placed = self._rs_size  # capacity high-water mark
+
+    # ---------------------------------------------------------------- build
+    def _build_pool(self, host: Host, n: int) -> RunnerPool:
+        """One pre-warmed pool on ``host`` (its placement already holds)."""
+        i = self._pool_seq
+        self._pool_seq += 1
+        injector = FaultInjector(seed=stable_seed(self.seed, "faults", i))
+        if not self.faults:
+            injector = FaultInjector(enabled=False)
+        pool = RunnerPool(
+            f"{self.node_prefix}{i}",
+            self.base,
+            size=n,
+            host=host.sim,
+            faults=injector,
+            seed=stable_seed(self.seed, "pool", i),
+            latency=self.latency,
+        )
+        if pool.size < n:  # resource guard refused part of the placement
+            host.release_placement(n - pool.size)
+        pool.latency_scale_fn = host.contention_factor
+        host.pool = pool
+        return pool
+
+    # ------------------------------------------------------------ lifecycle
+    def attach_loop(self, loop: EventLoop) -> None:
+        """Bind the whole control plane to an event loop: gateway + pools,
+        the autoscaler daemon, the telemetry sampler, and the
+        replica-seconds clock."""
+        if self._loop is loop:
+            return
+        if self._loop is not None:
+            self.detach_loop()
+        self._loop = loop
+        self.gateway.attach_loop(loop)
+        self._rs_last_vt = loop.now
+        self._rs_size = self.placed_replicas
+        if self.autoscaler is not None:
+            self.autoscaler.attach_loop(loop)
+        self._sampler = loop.call_later(
+            self.sample_interval_vs, self._sample_tick, daemon=True
+        )
+
+    def detach_loop(self) -> None:
+        """Unbind from the loop, folding the final capacity segment into
+        the replica-seconds integral first."""
+        if self._loop is None:
+            return
+        # cancel boot-delayed grows the loop will never run and hand their
+        # reservations back — the capacity never booted, so letting it
+        # linger would both bill forever and block future scale-ups
+        for timer, host, n in self._pending_grows:
+            timer.cancel()
+            host.release_placement(n)
+        self._pending_grows.clear()
+        self._note_capacity()
+        if self._sampler is not None:
+            self._sampler.cancel()
+            self._sampler = None
+        if self.autoscaler is not None:
+            self.autoscaler.detach_loop()
+        self.gateway.detach_loop()
+        self._loop = None
+
+    def close(self) -> None:
+        self.detach_loop()
+        self.gateway.stop()
+        for host in self.hosts:
+            if host.pool is not None:
+                host.pool.close()
+
+    # ----------------------------------------------------------- elasticity
+    def request_grow(self, n: int, *, delay_vs: float = 0.0) -> int:
+        """Reserve up to ``n`` replicas against host budgets; returns how
+        many were granted. Capacity is charged to the replica-seconds
+        integral immediately (provisioning costs money) but only serves
+        after ``delay_vs`` virtual seconds of boot lag."""
+        granted = 0
+        for host in self.hosts:
+            if granted >= n:
+                break
+            take = min(host.headroom(), n - granted)
+            if take <= 0:
+                continue
+            host.reserve(take)
+            if self._loop is not None and delay_vs > 0:
+                timer = self._loop.call_later(
+                    delay_vs, self._boot_grown, host, take, daemon=True
+                )
+                self._pending_grows.append((timer, host, take))
+            else:
+                self._grow_host(host, take)
+            granted += take
+        if granted:
+            self._note_capacity()
+        return granted
+
+    def _boot_grown(self, host: Host, n: int) -> None:
+        # timers fire in schedule order, so the first match is this one
+        for i, p in enumerate(self._pending_grows):
+            if p[1] is host and p[2] == n:
+                del self._pending_grows[i]
+                break
+        self._grow_host(host, n)
+
+    def _grow_host(self, host: Host, n: int) -> None:
+        if host.pool is None:
+            self.gateway.add_pool(self._build_pool(host, n))
+        else:
+            created = host.pool.grow(n)
+            if created < n:  # resource guard refused part of the grant
+                host.release_placement(n - created)
+                self._note_capacity()
+
+    def scale_down(self, n: int) -> int:
+        """Retire up to ``n`` *free* replicas (leases are never touched),
+        draining the newest hosts first; empty pools leave the gateway.
+        Returns how many replicas were actually retired."""
+        removed = 0
+        for host in reversed(self.hosts):
+            if removed >= n:
+                break
+            pool = host.pool
+            if pool is None:
+                continue
+            got = pool.shrink(min(pool.n_free, n - removed))
+            host.release_placement(got)
+            removed += got
+            if pool.size == 0 and len(self.gateway.pools) > 1:
+                self.gateway.remove_pool(pool.node_id)
+                host.pool = None
+        if removed:
+            self._note_capacity()
+        return removed
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def pools(self) -> list[RunnerPool]:
+        return [h.pool for h in self.hosts if h.pool is not None]
+
+    @property
+    def n_replicas(self) -> int:
+        """Live (booted) replicas across all hosts."""
+        return sum(p.size for p in self.pools)
+
+    @property
+    def placed_replicas(self) -> int:
+        """Provisioned replicas, including ones still booting."""
+        return sum(h.placed for h in self.hosts)
+
+    def _now(self) -> float:
+        return self._loop.now if self._loop is not None else self._rs_last_vt
+
+    def _note_capacity(self) -> None:
+        """Fold the elapsed segment into the integral at the old size,
+        then start a new segment at the current provisioned size."""
+        now = self._now()
+        self._rs_integral += self._rs_size * (now - self._rs_last_vt)
+        self._rs_last_vt = now
+        self._rs_size = self.placed_replicas
+        self.peak_placed = max(self.peak_placed, self._rs_size)
+        self.telemetry.gauge("cluster_replicas_placed", float(self._rs_size))
+        self.telemetry.gauge("cluster_replicas_live", float(self.n_replicas))
+
+    def replica_seconds(self) -> float:
+        """Integral of provisioned replicas over virtual time so far."""
+        tail = self._rs_size * (self._now() - self._rs_last_vt)
+        return self._rs_integral + tail
+
+    def replica_days(self) -> float:
+        return self.replica_seconds() / SECONDS_PER_DAY
+
+    def price_per_day(self) -> float:
+        """USD/day of the machines currently hosting capacity."""
+        return sum(h.price_per_day() for h in self.hosts if h.placed > 0)
+
+    def usd_per_replica_day(self) -> float:
+        placed = self.placed_replicas
+        return self.price_per_day() / placed if placed else 0.0
+
+    def disk_physical_frac(self) -> float:
+        """Physical bytes in the shared CoW store vs the fleet budget."""
+        budget = sum(h.disk_budget_bytes for h in self.hosts)
+        return self.store.physical_bytes() / budget if budget else 0.0
+
+    def _sample_tick(self) -> None:
+        self.sample_gauges()
+        self._sampler = self._loop.call_later(
+            self.sample_interval_vs, self._sample_tick, daemon=True
+        )
+
+    def sample_gauges(self) -> None:
+        """Publish host-utilization and pricing gauges to telemetry."""
+        active = sum(1 for h in self.hosts if h.pool is not None)
+        self.telemetry.gauge("cluster_hosts_active", float(active))
+        self.telemetry.gauge("cluster_replicas_live", float(self.n_replicas))
+        placed = float(self.placed_replicas)
+        self.telemetry.gauge("cluster_replicas_placed", placed)
+        self.telemetry.gauge("cluster_usd_per_day", self.price_per_day())
+        usd_rd = self.usd_per_replica_day()
+        self.telemetry.gauge("cluster_usd_per_replica_day", usd_rd)
+        self.telemetry.gauge("cluster_disk_frac", self.disk_physical_frac())
+        for h in self.hosts:
+            u = h.utilization()
+            self.telemetry.gauge(f"host_cpu_util:{h.host_id}", u["cpu_util"])
+            self.telemetry.gauge(f"host_ram_util:{h.host_id}", u["ram_util"])
+            name = f"host_contention:{h.host_id}"
+            self.telemetry.gauge(name, u["contention"])
+
+    def health(self) -> dict:
+        """One control-plane snapshot (hosts, capacity, pricing)."""
+        return {
+            "hosts": [h.utilization() for h in self.hosts],
+            "replicas_live": self.n_replicas,
+            "replicas_placed": self.placed_replicas,
+            "replica_days": self.replica_days(),
+            "usd_per_day": self.price_per_day(),
+            "usd_per_replica_day": self.usd_per_replica_day(),
+            "disk_frac": self.disk_physical_frac(),
+        }

@@ -1,0 +1,71 @@
+"""Placer: bin-pack replica capacity onto hosts under hard budgets.
+
+Placement is refused — loudly, with :class:`PlacementError` — when the
+requested capacity cannot fit the fleet's RAM or physical CoW-disk
+budgets; a failed placement rolls its partial reservations back, so the
+hosts are left exactly as found.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.cluster.host import Host
+
+
+class PlacementError(RuntimeError):
+    """The requested capacity exceeds the fleet's RAM/disk budgets."""
+
+
+@dataclass(frozen=True)
+class Placement:
+    host: Host
+    n: int
+
+
+class Placer:
+    """First-fit packer: deterministic, budget-respecting, rollback-safe."""
+
+    def __init__(self, hosts: Sequence[Host]):
+        self.hosts = list(hosts)
+
+    def place(self, n_replicas: int, *, pool_size: int = 32) -> list[Placement]:
+        """Reserve ``n_replicas`` across hosts; one plan entry per host.
+
+        Hosts are filled in their given order (first fit), which keeps
+        placement deterministic for a fixed host list. ``pool_size`` is
+        the *preferred* per-host granularity: a first pass spreads pools
+        of that size across the hosts, and only when the host list is
+        exhausted does a second pass pack hosts up to their full RAM/disk
+        capacity — so any request within the fleet's hard budgets
+        succeeds. Reservations are committed on the hosts as the plan is
+        built and fully rolled back if the request cannot be satisfied."""
+        assert n_replicas > 0, "place at least one replica"
+        counts: dict[int, int] = {}  # host index -> replicas placed
+        remaining = n_replicas
+        for cap_to_pool_size in (True, False):
+            for i, host in enumerate(self.hosts):
+                if remaining == 0:
+                    break
+                take = min(host.headroom(), remaining)
+                if cap_to_pool_size:
+                    take = min(take, pool_size - counts.get(i, 0))
+                if take <= 0:
+                    continue
+                host.reserve(take)
+                counts[i] = counts.get(i, 0) + take
+                remaining -= take
+        if remaining:
+            for i, n in counts.items():
+                self.hosts[i].release_placement(n)
+            total = sum(h.replica_capacity() for h in self.hosts)
+            raise PlacementError(
+                f"cannot place {n_replicas} replicas: {remaining} left "
+                f"over after exhausting RAM/CoW-disk budgets "
+                f"({len(self.hosts)} hosts, {total} total capacity)"
+            )
+        return [Placement(self.hosts[i], n) for i, n in counts.items()]
+
+    def spare_capacity(self) -> int:
+        return sum(h.headroom() for h in self.hosts)

@@ -1,12 +1,32 @@
-"""Gateway layer (§3.4): task-affinity routing across executor nodes,
-periodic background health checks, automatic failover when a node becomes
+"""Gateway layer (§3.4): task routing across executor nodes, periodic
+background health checks, automatic failover when a node becomes
 unreachable, and a non-blocking submit API for asynchronous rollout.
+
+Routing modes:
+
+- ``affinity`` (default) — stable blake2b hash ring per task id; the
+  failover order is the ring order. Deterministic and sticky, but blind
+  to load: a node can queue while its neighbor idles.
+- ``least_loaded`` — the cluster control plane's mode: nodes are ordered
+  by a live load score (busy fraction + CPU-contention penalty from the
+  host tracker), with the hash-ring position as a deterministic
+  tie-break. Under skewed or bursty arrivals this routes around hot and
+  overcommitted nodes instead of piling onto them.
+
+Pools are **dynamically attachable**: ``add_pool`` / ``remove_pool``
+work on a live event loop (the elastic autoscaler grows and drains the
+fleet at runtime), and in-flight virtual acquires recompute their
+candidate order on every wakeup so they see pools added after they
+parked. A removed pool that still has leased runners is retired rather
+than dropped: its leases release through the gateway as usual and the
+pool detaches once the last one comes back.
 """
 from __future__ import annotations
 
 import hashlib
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Collection, Optional
@@ -14,6 +34,7 @@ from typing import Callable, Collection, Optional
 from repro.core.event_loop import Condition as VirtualCondition
 from repro.core.event_loop import EventLoop, Timer
 from repro.core.runner_pool import Runner, RunnerPool
+from repro.core.telemetry import Telemetry
 
 # A thread pool sized to the fleet would spawn thousands of OS threads at
 # paper-scale (1024+ runners); the executor is for modest external async
@@ -39,18 +60,26 @@ class Gateway:
     def __init__(self, pools: list[RunnerPool], *,
                  health_interval_s: float = 10.0,
                  unhealthy_threshold: int = 3,
+                 routing: str = "affinity",
+                 telemetry: Optional[Telemetry] = None,
                  start_background: bool = False):
         assert pools, "need at least one executor node"
+        assert routing in ("affinity", "least_loaded"), routing
         self.pools = {p.node_id: p for p in pools}
         self.status = {p.node_id: NodeStatus() for p in pools}
         self.health_interval_s = health_interval_s
         self.unhealthy_threshold = unhealthy_threshold
+        self.routing = routing
+        self.telemetry = telemetry
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._pool_executor: Optional[ThreadPoolExecutor] = None
         self._stopped = False
         self.failovers = 0
+        self._retired: dict[str, RunnerPool] = {}
+        # recent virtual acquire-wait samples — the autoscaler's signal
+        self._wait_window: deque[float] = deque(maxlen=1024)
         self._loop: Optional[EventLoop] = None
         self._release_cv: Optional[VirtualCondition] = None
         self._health_timer: Optional[Timer] = None
@@ -91,6 +120,11 @@ class Gateway:
             self._health_timer = None
         for p in self.pools.values():
             p.detach_loop()
+        with self._lock:
+            retired = list(self._retired.values())
+            self._retired.clear()
+        for p in retired:
+            p.detach_loop()
         self._loop = None
         self._release_cv = None
 
@@ -98,6 +132,60 @@ class Gateway:
         self.check_now()
         self._health_timer = self._loop.call_later(
             self.health_interval_s, self._health_tick, daemon=True)
+
+    # ------------------------------------------------------- dynamic pools
+    def add_pool(self, pool: RunnerPool) -> None:
+        """Attach a new executor node at runtime.
+
+        Works mid-run: if the gateway is bound to an event loop, the pool
+        joins the shared release-condition immediately and every parked
+        acquire re-checks the (now larger) candidate set on its next
+        wakeup — which this call triggers, so waiters stranded on an
+        exhausted fleet see the new capacity at once."""
+        if pool.node_id in self.pools or pool.node_id in self._retired:
+            raise ValueError(f"node {pool.node_id!r} already attached")
+        with self._lock:
+            self.pools[pool.node_id] = pool
+            self.status[pool.node_id] = NodeStatus()
+        if self._loop is not None:
+            pool.attach_loop(self._loop, release_cv=self._release_cv)
+            self._release_cv.notify_all()
+
+    def remove_pool(self, node_id: str) -> RunnerPool:
+        """Detach an executor node at runtime; returns the pool.
+
+        The node leaves the routing tables immediately — no new leases.
+        If runners are still leased the pool is *retired*, not dropped:
+        in-flight episodes keep their runners and release them through
+        the gateway as usual; the pool unbinds from the loop once the
+        last lease returns. Free-only pools detach right away."""
+        with self._lock:
+            pool = self.pools.pop(node_id)
+            self.status.pop(node_id)
+            if pool.n_busy > 0:
+                self._retired[node_id] = pool
+                return pool
+        pool.detach_loop()
+        return pool
+
+    @property
+    def n_waiting(self) -> int:
+        """Virtual acquires currently parked for a runner (queue depth)."""
+        if self._release_cv is None:
+            return 0
+        return self._release_cv.n_waiters
+
+    def drain_wait_samples(self) -> list[float]:
+        """Hand the recent acquire-wait samples to the caller (autoscaler
+        tick) and reset the window."""
+        out = list(self._wait_window)
+        self._wait_window.clear()
+        return out
+
+    def _record_wait(self, waited_vs: float) -> None:
+        self._wait_window.append(waited_vs)
+        if self.telemetry is not None:
+            self.telemetry.observe("acquire_wait_vs", waited_vs)
 
     # ------------------------------------------------------------ routing
     def _affinity_order(self, task_id: str) -> list[str]:
@@ -109,6 +197,28 @@ class Gateway:
         start = h % len(nodes)
         return nodes[start:] + nodes[:start]
 
+    def _load_score(self, node: str) -> float:
+        """Live load: busy fraction plus the host's CPU-contention excess.
+
+        Both terms are deterministic functions of fleet state on the
+        event loop, so least-loaded routing stays reproducible."""
+        p = self.pools[node]
+        busy = 1.0 - (p.n_free / p.size) if p.size else 1.0
+        return busy + max(p.latency_scale() - 1.0, 0.0)
+
+    def _route_order(self, task_id: str) -> list[str]:
+        """Candidate order for one acquire attempt, per routing mode.
+
+        ``least_loaded`` sorts by the live load score and uses the hash
+        ring's order as a deterministic tie-break, so an idle fleet
+        routes exactly like affinity mode."""
+        order = self._affinity_order(task_id)
+        if self.routing == "affinity" or len(order) <= 1:
+            return order
+        rank = {n: i for i, n in enumerate(order)}
+        return sorted(order,
+                      key=lambda n: (round(self._load_score(n), 9), rank[n]))
+
     def acquire(self, task_id: str, timeout: Optional[float] = 1.0,
                 exclude: Collection[str] = ()
                 ) -> Optional[tuple[str, Runner]]:
@@ -117,7 +227,7 @@ class Gateway:
         ``exclude`` removes specific nodes from consideration — used by the
         rollout engine to fail an aborted episode over to a *different* node
         even when the faulty one still reports healthy."""
-        order = self._affinity_order(task_id)
+        order = self._route_order(task_id)
         for attempt, node in enumerate(order):
             if node in exclude:
                 continue
@@ -145,14 +255,19 @@ class Gateway:
         Same affinity/health/exclusion semantics as ``acquire``, but the
         calling task parks on the shared virtual release-condition until
         any pool frees a runner or ``timeout`` virtual seconds elapse —
-        no thread ever blocks. Returns ``(node, runner)`` or ``None``."""
+        no thread ever blocks. Returns ``(node, runner)`` or ``None``.
+
+        The candidate order is recomputed on every wakeup: pools added or
+        removed while this task was parked (elastic scaling) are seen on
+        the next pass, and least-loaded routing re-ranks against current
+        load rather than the load at park time."""
         assert self._loop is not None, "attach_loop() before acquire_ev()"
+        t0 = self._loop.now
         deadline = (None if timeout is None
                     else self._loop.now + timeout)
-        order = self._affinity_order(task_id)
         while True:
             candidates = 0
-            for attempt, node in enumerate(order):
+            for attempt, node in enumerate(self._route_order(task_id)):
                 if node in exclude or not self.status[node].healthy:
                     continue
                 candidates += 1
@@ -160,6 +275,7 @@ class Gateway:
                 if r is not None:
                     if attempt > 0:
                         self.failovers += 1
+                    self._record_wait(self._loop.now - t0)
                     return node, r
             if candidates == 0:
                 # nothing a release could fix: every node is excluded or
@@ -169,11 +285,34 @@ class Gateway:
             remaining = (None if deadline is None
                          else deadline - self._loop.now)
             if remaining is not None and remaining <= 0:
+                self._record_wait(self._loop.now - t0)
                 return None
             yield from self._release_cv.wait(remaining)
 
     def release(self, node: str, runner: Runner, **kw) -> float:
-        return self.pools[node].release(runner, **kw)
+        """Return a lease; routes to retired pools too (see remove_pool).
+
+        A retired pool whose last lease just came back is fully detached
+        here — its freed runners are unreachable by routing, so there is
+        nothing left for it to do on the loop. A node in neither table is
+        a stale handle (the lease was already reclaimed and its drained
+        pool dropped): ignore it, as ``RunnerPool.release`` does."""
+        pool = self.pools.get(node)
+        if pool is None:
+            with self._lock:
+                pool = self._retired.get(node)
+            if pool is None:
+                return 0.0
+        dur = pool.release(runner, **kw)
+        with self._lock:
+            retired = self._retired.get(node)
+            if retired is not None and retired.n_busy == 0:
+                del self._retired[node]
+            else:
+                retired = None
+        if retired is not None:
+            retired.detach_loop()
+        return dur
 
     # ----------------------------------------------------- async submission
     def _executor(self) -> ThreadPoolExecutor:
@@ -224,7 +363,9 @@ class Gateway:
     def check_now(self) -> dict:
         """One health sweep (the background loop calls this every 10 s)."""
         report = {}
-        for node, pool in self.pools.items():
+        for node, pool in list(self.pools.items()):
+            if node not in self.status:
+                continue            # removed between snapshot and sweep
             h = pool.health()
             ok = h["alive"] > 0
             st = self.status[node]

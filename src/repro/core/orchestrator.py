@@ -18,6 +18,8 @@ import statistics
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.core.seeding import stable_seed
+
 # ------------------------------------------------------------- price model
 CORE_USD_PER_DAY = {
     "8275CL": 0.727,   # modern Xeon (on-demand cloud)
@@ -37,6 +39,9 @@ class MachineSpec:
     ram_gb: int
     cpu_type: str
     ram_type: str = "DDR4"
+    # physical CoW disk budget this machine contributes to the shared
+    # reflink store (repro.cluster draws replica placements against it)
+    disk_gb: int = 240
 
     def price_per_day(self) -> float:
         return (CORE_USD_PER_DAY[self.cpu_type] * self.cores
@@ -82,8 +87,12 @@ def overload_fraction(K: int, cores: float, demand: ReplicaDemand,
                       rng: Optional[random.Random] = None) -> float:
     """Fraction of replicas that hit CPU starvation within a window.
 
-    A slot starves its bursting replicas when total demand exceeds cores."""
-    rng = rng or random.Random(0)
+    A slot starves its bursting replicas when total demand exceeds cores.
+    The default RNG is blake2b-seeded from the call's parameters (see
+    ``core.seeding.stable_seed``), so Fig. 3 / Table 1 artifacts are
+    bit-identical across processes, platforms, and Python versions."""
+    rng = rng or random.Random(
+        stable_seed("overload", K, cores, slots, trials))
     overloaded = 0
     total = 0
     for _ in range(trials):
@@ -140,7 +149,8 @@ def fig3_sweep(n_replicas: int = 128, seeds: int = 10) -> list[dict]:
         # total CPU, varying only the grouping)
         cores_fixed = 2 * K
         fracs = [overload_fraction(K, cores_fixed, ReplicaDemand(),
-                                   rng=random.Random(s))
+                                   rng=random.Random(
+                                       stable_seed("fig3", K, s)))
                  for s in range(seeds)]
         spec = server_for_group(K)
         cpu_util, ram_util = utilizations(K, spec)

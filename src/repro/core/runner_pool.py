@@ -15,7 +15,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.core.cow_store import DiskImage
 from repro.core.event_loop import Condition as VirtualCondition
@@ -55,15 +55,32 @@ PER_VM_USAGE = {
 }
 
 
+HOST_OS_BASELINE_GB = 4.0
+
+
 class SimHost:
-    """Simulated executor node: RAM accounting + kernel limit registry."""
+    """Simulated executor node: RAM accounting + kernel limit registry.
+
+    RAM is accounted as baseline + sum of live VM allocations, with
+    ``free_vm`` clamped to what was actually allocated: a double-free (or
+    a free of a VM that was never allocated) cannot drag the gauge below
+    the host-OS baseline or leak negative kernel-resource counts."""
 
     def __init__(self, spec: Optional[HostSpec] = None):
         self.spec = spec or HostSpec()
         self.limits = dict(self.spec.limits)
         self.used: dict[str, int] = {k: 0 for k in self.limits}
-        self.ram_used_gb = 4.0          # host OS baseline
+        self._vm_ram_gb = 0.0           # sum of live VM allocations
+        self._vm_count = 0
         self._lock = threading.Lock()
+
+    @property
+    def ram_used_gb(self) -> float:
+        return HOST_OS_BASELINE_GB + self._vm_ram_gb
+
+    @property
+    def vm_count(self) -> int:
+        return self._vm_count
 
     def tune_limits(self) -> None:
         self.limits.update(TUNED_LIMITS)
@@ -82,7 +99,8 @@ class SimHost:
         """Consume kernel resources for one VM. Returns False on silent
         exhaustion (untuned limits)."""
         with self._lock:
-            self.ram_used_gb += ram_gb
+            self._vm_ram_gb += ram_gb
+            self._vm_count += 1
             ok = True
             for k, v in PER_VM_USAGE.items():
                 self.used[k] += v
@@ -91,8 +109,16 @@ class SimHost:
             return ok
 
     def free_vm(self, ram_gb: float) -> None:
+        """Release one VM's resources; over-frees are clamped, not applied.
+
+        Freeing with no live VM allocation is a no-op, and the RAM release
+        never exceeds the outstanding allocated total — the gauge cannot
+        drift below the host-OS baseline however unbalanced the calls."""
         with self._lock:
-            self.ram_used_gb = max(self.ram_used_gb - ram_gb, 0.0)
+            if self._vm_count <= 0:
+                return
+            self._vm_count -= 1
+            self._vm_ram_gb -= min(ram_gb, self._vm_ram_gb)
             for k, v in PER_VM_USAGE.items():
                 self.used[k] = max(self.used[k] - v, 0)
 
@@ -167,9 +193,14 @@ class RunnerPool:
         self._cv = threading.Condition(self._lock)
         self.prewarm_seconds = 0.0
         self.blocked_creations = 0
+        self._next_idx = 0               # monotone runner-id counter
         self._vt = 0.0                   # pool-local virtual clock
         self._loop: Optional[EventLoop] = None
         self._ev_cv: Optional[VirtualCondition] = None
+        # cluster hook: a live per-host CPU-contention factor (>= 1.0)
+        # multiplying every replica operation's virtual latency — see
+        # repro.cluster.host.Host.contention_factor
+        self.latency_scale_fn: Optional[Callable[[], float]] = None
         self._prewarm(size)
 
     # ------------------------------------------------------------ prewarm
@@ -193,12 +224,53 @@ class RunnerPool:
             self.guard.end_creation()
 
     def _prewarm(self, size: int) -> None:
-        for i in range(size):
-            r = self._make_runner(i)
+        for _ in range(size):
+            r = self._make_runner(self._next_idx)
             if r is None:
                 break
+            self._next_idx += 1
             self._all[r.runner_id] = r
             self._free.append(r)
+
+    # -------------------------------------------------------------- elasticity
+    def grow(self, n: int) -> int:
+        """Add up to ``n`` freshly-booted runners; returns how many were
+        actually created (the resource guard may refuse some). Runner ids
+        continue the pool's monotone counter, so grown runners draw fresh,
+        stable per-replica random streams."""
+        created = 0
+        for _ in range(n):
+            r = self._make_runner(self._next_idx)
+            if r is None:
+                break
+            self._next_idx += 1
+            with self._cv:
+                self._all[r.runner_id] = r
+                self._free.append(r)
+                self._cv.notify()
+            created += 1
+        if created and self._ev_cv is not None:
+            self._ev_cv.notify_all()
+        return created
+
+    def shrink(self, n: int) -> int:
+        """Retire up to ``n`` *free* runners; returns how many were retired.
+
+        A leased (busy) runner is never reclaimed — shrink only ever takes
+        from the free deque, so an in-flight episode cannot lose its
+        replica out from under it. Retired runners release their VM's RAM
+        and kernel resources back to the host."""
+        retired: list[Runner] = []
+        with self._cv:
+            for _ in range(min(n, len(self._free))):
+                r = self._free.pop()    # back of the deque: farthest
+                #                         from being issued next
+                del self._all[r.runner_id]
+                retired.append(r)
+        for r in retired:
+            self.host.free_vm(r.manager.replica.resources.ram_limit_gb)
+            r.manager.close()
+        return len(retired)
 
     # --------------------------------------------------------- event mode
     def attach_loop(self, loop: EventLoop,
@@ -361,6 +433,17 @@ class RunnerPool:
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def n_busy(self) -> int:
+        return len(self._all) - len(self._free)
+
+    def latency_scale(self) -> float:
+        """Live CPU-contention multiplier for this pool's operations
+        (1.0 when no cluster contention tracker is installed)."""
+        if self.latency_scale_fn is None:
+            return 1.0
+        return max(self.latency_scale_fn(), 1.0)
 
     def health(self) -> dict:
         alive = sum(1 for r in self._all.values()

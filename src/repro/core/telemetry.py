@@ -9,6 +9,15 @@ from collections import defaultdict
 from contextlib import contextmanager
 
 
+def p95(xs: list[float]) -> float:
+    """The fleet's one p95 definition (nearest-rank on the sorted list);
+    shared by metric summaries and the autoscaler's pressure signal so
+    the two can never diverge. Returns 0.0 on an empty series."""
+    if not xs:
+        return 0.0
+    return sorted(xs)[int(0.95 * (len(xs) - 1))]
+
+
 class Telemetry:
     """Thread-safe metric sink shared across the fleet and the learner.
 
@@ -71,7 +80,7 @@ class Telemetry:
             "n": len(xs),
             "mean": statistics.fmean(xs),
             "p50": statistics.median(xs),
-            "p95": sorted(xs)[int(0.95 * (len(xs) - 1))],
+            "p95": p95(xs),
             "max": max(xs),
         }
 

@@ -1,8 +1,9 @@
 """Online pipeline orchestrator: the actor/learner split, end to end.
 
-Wires the fleet (``Gateway``/``RunnerPool``), the event-driven
-``RolloutEngine``, the ``TrajectoryIngestor`` and the ``LearnerLoop``
-into one closed loop: scenario episodes stream into the replay buffer as
+Wires the fleet (a live ``repro.cluster.Cluster`` — hosts, placement,
+least-loaded routing, optional autoscaling — or a bare ``Gateway``), the
+event-driven ``RolloutEngine``, the ``TrajectoryIngestor`` and the
+``LearnerLoop`` into one closed loop: scenario episodes stream into the replay buffer as
 reward-shaped samples, the learner runs real jitted update steps, and
 each update publishes a new policy version back toward the actors.
 
@@ -20,17 +21,15 @@ Two execution modes:
 """
 from __future__ import annotations
 
-import math
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Sequence
 
-from repro.core.cow_store import CowStore, DiskImage
+from repro.cluster import AutoscalerConfig, Cluster, MachineSpec, \
+    default_specs
 from repro.core.event_loop import EventLoop
-from repro.core.faults import FaultInjector
 from repro.core.gateway import Gateway
-from repro.core.runner_pool import RunnerPool
 from repro.core.seeding import stable_seed
 from repro.core.telemetry import Telemetry
 from repro.data.replay_buffer import ReplayBuffer
@@ -43,21 +42,28 @@ from repro.rollout.writer import TrajectoryWriter
 
 
 def build_fleet(n_replicas: int, *, runners_per_node: int = 32,
-                seed: int = 0) -> tuple[Gateway, list[RunnerPool]]:
-    """A small paper-shaped fleet for the online pipeline: ``n_replicas``
-    runners across ``runners_per_node``-runner executor nodes, stochastic
-    faults and autonomous recovery active."""
-    store = CowStore(block_size=1 << 20)
-    base = DiskImage.create_base(store, "ubuntu", 64 << 20)
-    n_nodes = max(math.ceil(n_replicas / runners_per_node), 1)
-    pools = []
-    for i in range(n_nodes):
-        size = min(runners_per_node, n_replicas - i * runners_per_node)
-        pools.append(RunnerPool(
-            f"node{i}", base, size=size,
-            faults=FaultInjector(seed=stable_seed(seed, "faults", i)),
-            seed=stable_seed(seed, "pool", i)))
-    return Gateway(pools), pools
+                seed: int = 0,
+                specs: Optional[Sequence[MachineSpec]] = None,
+                routing: str = "least_loaded",
+                autoscaler: Optional[AutoscalerConfig] = None,
+                telemetry: Optional[Telemetry] = None) -> Cluster:
+    """A paper-shaped **live cluster** for the online pipeline.
+
+    ``n_replicas`` runners are bin-packed onto hosts (default: enough
+    Table-1 E5-2699 machines at one ``runners_per_node``-runner pool
+    each), stochastic faults and autonomous recovery active, load-aware
+    routing on, per-host contention tracked live, and — when an
+    ``AutoscalerConfig`` is passed — elastic scaling armed.
+
+    Migration note: this used to return ``(gateway, pools)`` built from
+    a static pool list; it now returns a :class:`repro.cluster.Cluster`
+    (``cluster.gateway`` / ``cluster.pools`` are the old pieces, and
+    ``cluster.close()`` replaces the manual gateway/pool teardown)."""
+    specs = specs or default_specs(n_replicas,
+                                   runners_per_node=runners_per_node)
+    return Cluster(specs, n_replicas, runners_per_node=runners_per_node,
+                   seed=seed, routing=routing, autoscaler=autoscaler,
+                   telemetry=telemetry)
 
 
 @dataclass
@@ -108,13 +114,25 @@ class PipelineReport:
 class OnlinePipeline:
     """Actor/learner pipeline over one fleet, one trainer, one registry."""
 
-    def __init__(self, gateway: Gateway, n_replicas: int, trainer, *,
+    def __init__(self, fleet, n_replicas: Optional[int], trainer, *,
                  registry: Optional[ScenarioRegistry] = None,
                  pipe_cfg: Optional[PipelineConfig] = None,
                  learner_cfg: Optional[LearnerConfig] = None,
                  ingest_cfg: Optional[IngestConfig] = None,
                  telemetry: Optional[Telemetry] = None):
-        self.gateway = gateway
+        # ``fleet`` is a Cluster (the build_fleet product: the engine then
+        # binds the autoscaler/contention control plane to each round's
+        # loop) or a bare Gateway (legacy callers)
+        self.cluster: Optional[Cluster] = None
+        if not isinstance(fleet, Gateway):
+            self.cluster = fleet
+            self.gateway = fleet.gateway
+            if n_replicas is None:
+                n_replicas = fleet.n_replicas
+        else:
+            self.gateway = fleet
+            assert n_replicas is not None, \
+                "n_replicas is required with a bare Gateway"
         self.n_replicas = n_replicas
         self.trainer = trainer
         self.registry = registry or get_default_registry()
@@ -133,7 +151,8 @@ class OnlinePipeline:
             on_trajectory=self.ingestor, retain=False,
             capacity=self.cfg.writer_capacity)
         self.engine = RolloutEngine(
-            gateway, self.writer, registry=self.registry,
+            self.cluster if self.cluster is not None else self.gateway,
+            self.writer, registry=self.registry,
             config=RolloutConfig(
                 max_inflight=self.cfg.max_inflight,
                 virtual_deadline_s=self.cfg.virtual_deadline_s),

@@ -114,11 +114,19 @@ class RolloutReport:
 class RolloutEngine:
     """Bounded asynchronous scheduler for multi-turn episode generation."""
 
-    def __init__(self, gateway: Gateway, writer: TrajectoryWriter, *,
+    def __init__(self, gateway, writer: TrajectoryWriter, *,
                  registry: Optional[ScenarioRegistry] = None,
                  config: Optional[RolloutConfig] = None,
                  telemetry: Optional[Telemetry] = None):
-        self.gateway = gateway
+        # ``gateway`` may be a bare Gateway or a repro.cluster.Cluster —
+        # with a cluster, event-driven runs bind the whole control plane
+        # (autoscaler daemon, contention gauges, replica-day clock) to
+        # the loop, not just the gateway
+        self.cluster = None
+        if not isinstance(gateway, Gateway):
+            self.cluster = gateway
+            gateway = gateway.gateway
+        self.gateway: Gateway = gateway
         self.writer = writer
         self.registry = registry or get_default_registry()
         self.config = config or RolloutConfig()
@@ -220,7 +228,8 @@ class RolloutEngine:
                 result.nodes += (node,)
                 try:
                     traj, steps, score, vs = self._attempt(
-                        task, scenario, runner)
+                        task, scenario, runner,
+                        scale=self.gateway.pools[node].latency_scale)
                     result.ok = True
                     result.steps = steps
                     result.score = score
@@ -252,17 +261,23 @@ class RolloutEngine:
             self._exit()
             self._settle(result)
 
-    def _attempt(self, task: dict, scenario: Scenario, runner
+    def _attempt(self, task: dict, scenario: Scenario, runner, *,
+                 scale: Callable[[], float] = None
                  ) -> tuple[Trajectory, int, float, float]:
-        """One full configure → reset → operate → evaluate pass."""
+        """One full configure → reset → operate → evaluate pass.
+
+        ``scale`` is the pool's live CPU-contention factor (>= 1.0):
+        every replica operation's virtual latency is multiplied by it,
+        so overcommitted hosts stretch episodes in virtual time."""
         cfg = self.config
         oh = cfg.op_overhead or _zero_overhead
+        sc = scale or _unit_scale
         mgr = runner.manager
         vs = 0.0
         try:
-            vs = mgr.configure(task) + oh()
+            vs = mgr.configure(task) * sc() + oh()
             obs, dur = mgr.reset()
-            vs += dur + oh()
+            vs += dur * sc() + oh()
             steps: list[TrajectoryStep] = []
             horizon = int(task.get("horizon", 15))
             cap = cfg.max_steps or horizon * 2
@@ -270,13 +285,13 @@ class RolloutEngine:
             while not done and len(steps) < cap:
                 thought, action = scenario.policy(obs, len(steps))
                 obs, _rew, done, _info, dur = mgr.step(action)
-                dur += oh()
+                dur = dur * sc() + oh()
                 vs += dur
                 steps.append(TrajectoryStep(obs, thought, action))
                 self.telemetry.count("steps")
                 self.telemetry.observe("step_latency_vs", dur)
             score, dur = mgr.evaluate()
-            vs += dur + oh()
+            vs += dur * sc() + oh()
         except TaskAborted as e:
             # charge the attempt's configure/reset and completed steps, not
             # just the aborting step — the throughput projection depends on
@@ -300,7 +315,9 @@ class RolloutEngine:
 
     # ------------------------------------------------------------ event mode
     def run_event_driven(self, tasks: Sequence, *,
-                         loop: Optional[EventLoop] = None) -> RolloutReport:
+                         loop: Optional[EventLoop] = None,
+                         arrivals: Optional[Sequence[float]] = None
+                         ) -> RolloutReport:
         """Generate one trajectory per task on a virtual-time event loop.
 
         Identical semantics to ``run`` — bounded in-flight launches, writer
@@ -308,7 +325,13 @@ class RolloutEngine:
         tasks instead of threads, so ``max_inflight`` can equal the fleet
         size: 1024+ episodes run concurrently on one core and the whole run
         is deterministic for a fixed fleet/seed (same event order, same
-        report, in any process)."""
+        report, in any process).
+
+        ``arrivals`` optionally gives each task a virtual arrival time
+        (ascending, seconds): the feeder holds task *i* until the clock
+        reaches ``arrivals[i]``, which models open-loop bursty workloads
+        (the elastic-cluster benchmark's arrival ramps) instead of the
+        default fire-everything-at-once closed loop."""
         cfg = self.config
         loop = loop or EventLoop()
         self._report = RolloutReport()
@@ -316,7 +339,16 @@ class RolloutEngine:
         t0 = time.monotonic()
         task_dicts = [t.to_dict() if isinstance(t, TaskSpec) else dict(t)
                       for t in tasks]
-        self.gateway.attach_loop(loop)
+        if arrivals is not None:
+            assert len(arrivals) == len(task_dicts), \
+                "arrivals must give one virtual time per task"
+            assert all(b >= a for a, b in zip(arrivals, arrivals[1:])), \
+                "arrivals must be ascending"
+        if self.cluster is not None:
+            # binds the gateway too, plus the autoscaler + gauge daemons
+            self.cluster.attach_loop(loop)
+        else:
+            self.gateway.attach_loop(loop)
         # notified on every episode settle and every virtual consume — the
         # feeder's wakeup channel for both gating conditions
         wake = VirtualCondition(loop)
@@ -326,6 +358,10 @@ class RolloutEngine:
 
         def feeder():
             for i, task in enumerate(task_dicts):
+                if arrivals is not None:
+                    delay = arrivals[i] - loop.now
+                    if delay > 0:
+                        yield Sleep(delay)
                 stalled = False
                 while not self._stop.is_set() and (
                         self._inflight >= cfg.max_inflight
@@ -367,7 +403,10 @@ class RolloutEngine:
         finally:
             # restore thread-mode semantics (wall-clock health stamps,
             # pool-local virtual time) for any subsequent run()
-            self.gateway.detach_loop()
+            if self.cluster is not None:
+                self.cluster.detach_loop()
+            else:
+                self.gateway.detach_loop()
         self._report.virtual_makespan = loop.now
         self._report.wall_seconds = time.monotonic() - t0
         return self._report
@@ -399,7 +438,8 @@ class RolloutEngine:
                 result.nodes += (node,)
                 try:
                     traj, steps, score, vs = yield from self._attempt_ev(
-                        task, scenario, runner)
+                        task, scenario, runner,
+                        scale=self.gateway.pools[node].latency_scale)
                     result.ok = True
                     result.steps = steps
                     result.score = score
@@ -429,20 +469,24 @@ class RolloutEngine:
             self._settle(result)
             wake.notify_all()
 
-    def _attempt_ev(self, task: dict, scenario: Scenario, runner):
+    def _attempt_ev(self, task: dict, scenario: Scenario, runner, *,
+                    scale: Callable[[], float] = None):
         """Cooperative twin of ``_attempt``: each operation's virtual cost
         is slept on the loop, so concurrent episodes interleave exactly as
-        a real fleet's latencies would."""
+        a real fleet's latencies would. ``scale`` (the pool's live
+        CPU-contention factor) is sampled *per operation* — contention
+        rises and falls with concurrent occupancy as the run evolves."""
         cfg = self.config
         oh = cfg.op_overhead or _zero_overhead
+        sc = scale or _unit_scale
         mgr = runner.manager
         vs = 0.0
         try:
-            dur = mgr.configure(task) + oh()
+            dur = mgr.configure(task) * sc() + oh()
             vs += dur
             yield Sleep(dur)
             obs, dur = mgr.reset()
-            dur += oh()
+            dur = dur * sc() + oh()
             vs += dur
             yield Sleep(dur)
             steps: list[TrajectoryStep] = []
@@ -452,14 +496,14 @@ class RolloutEngine:
             while not done and len(steps) < cap:
                 thought, action = scenario.policy(obs, len(steps))
                 obs, _rew, done, _info, dur = mgr.step(action)
-                dur += oh()
+                dur = dur * sc() + oh()
                 vs += dur
                 yield Sleep(dur)
                 steps.append(TrajectoryStep(obs, thought, action))
                 self.telemetry.count("steps")
                 self.telemetry.observe("step_latency_vs", dur)
             score, dur = mgr.evaluate()
-            dur += oh()
+            dur = dur * sc() + oh()
             vs += dur
             yield Sleep(dur)
         except TaskAborted as e:
@@ -476,3 +520,7 @@ class RolloutEngine:
 
 def _zero_overhead() -> float:
     return 0.0
+
+
+def _unit_scale() -> float:
+    return 1.0

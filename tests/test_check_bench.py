@@ -91,6 +91,55 @@ def test_stale_baseline_detected_on_improvement():
     assert any("STALE BASELINE" in p for p in problems)
 
 
+def test_committed_elastic_baseline_self_passes():
+    base = _baseline("BENCH_elastic.json")
+    assert cb.check(base, copy.deepcopy(base), 0.10) == []
+
+
+def test_elastic_cluster_row_regression_fails():
+    base = _baseline("BENCH_elastic.json")
+    perturbed = copy.deepcopy(base)
+    for row in perturbed["clusters"]:
+        if row["name"] == "autoscaled":
+            row["traj_per_min"] *= 0.85
+    problems = cb.check(base, perturbed, 0.10)
+    assert len(problems) == 1
+    assert "REGRESSION" in problems[0]
+    assert "autoscaled" in problems[0]
+
+
+def test_elastic_replica_day_rise_is_a_regression():
+    """replica-days is a cost: rising 30% is a REGRESSION (the autoscaler
+    got lazier), not a stale baseline — labels are direction-aware."""
+    base = _baseline("BENCH_elastic.json")
+    perturbed = copy.deepcopy(base)
+    for row in perturbed["clusters"]:
+        if row["name"] == "autoscaled":
+            row["replica_days"] *= 1.30
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("REGRESSION" in p and "replica_days" in p for p in problems)
+    # and an improvement (cost falls) flags the baseline as stale
+    improved = copy.deepcopy(base)
+    for row in improved["clusters"]:
+        if row["name"] == "autoscaled":
+            row["replica_days"] *= 0.70
+    problems = cb.check(base, improved, 0.10)
+    assert any("STALE BASELINE" in p and "replica_days" in p
+               for p in problems)
+
+
+def test_elastic_gate_boolean_and_missing_row():
+    base = _baseline("BENCH_elastic.json")
+    assert base["gate"]["autoscaled_meets_p95_bound"] is True
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["autoscaled_meets_p95_bound"] = False
+    perturbed["clusters"] = [r for r in perturbed["clusters"]
+                             if r["name"] != "overcommit"]
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("autoscaled_meets_p95_bound" in p for p in problems)
+    assert any("MISSING cluster[overcommit]" in p for p in problems)
+
+
 def test_malformed_payloads_are_rejected():
     assert cb.check({}, {}, 0.10) == [
         "MALFORMED baseline: neither engine rows nor a gate block"

@@ -1,0 +1,353 @@
+"""Live cluster control plane: placement budgets, host accounting guards,
+elastic pool lifecycle (grow/shrink, add/remove mid-run), live CPU
+contention, least-loaded routing, the autoscaler, and replica-day
+accounting."""
+import pytest
+
+from repro.cluster import (AutoscalerConfig, Cluster, Host, MachineSpec,
+                           Placer, PlacementError, default_specs)
+from repro.core.cow_store import CowStore, DiskImage
+from repro.core.event_loop import EventLoop, Sleep
+from repro.core.faults import FaultInjector
+from repro.core.gateway import Gateway
+from repro.core.runner_pool import RunnerPool, SimHost
+from repro.core.seeding import stable_seed
+from repro.rollout.engine import RolloutConfig, RolloutEngine
+from repro.rollout.scenarios import get_default_registry
+from repro.rollout.writer import TrajectoryWriter
+
+
+def _base(store=None):
+    store = store or CowStore(block_size=1 << 20)
+    return DiskImage.create_base(store, "ubuntu", 8 << 20)
+
+
+def _pool(node_id, size=4, seed=0, base=None):
+    return RunnerPool(node_id, base or _base(), size=size,
+                      faults=FaultInjector(enabled=False), seed=seed)
+
+
+# ------------------------------------------------------------- placement
+def test_placer_binpacks_onto_hosts_in_order():
+    store = CowStore(block_size=1 << 20)
+    hosts = [Host(f"h{i}", MachineSpec(88, 768, "E5-2699"), store)
+             for i in range(3)]
+    plan = Placer(hosts).place(70, pool_size=32)
+    assert [(p.host.host_id, p.n) for p in plan] == \
+        [("h0", 32), ("h1", 32), ("h2", 6)]
+    assert sum(h.placed for h in hosts) == 70
+
+
+def test_placer_tops_up_beyond_pool_granularity_when_hosts_scarce():
+    store = CowStore(block_size=1 << 20)
+    host = Host("h0", MachineSpec(88, 768, "E5-2699"), store)  # cap 113
+    plan = Placer([host]).place(64, pool_size=32)
+    assert [(p.host.host_id, p.n) for p in plan] == [("h0", 64)]
+    assert host.placed == 64
+
+
+def test_placer_refuses_on_ram_exhaustion_and_rolls_back():
+    store = CowStore(block_size=1 << 20)
+    # 32 GB machine: 32*0.9 - 4 - 8 = 16.8 GB usable -> 2 replicas at 6 GB
+    hosts = [Host("h0", MachineSpec(8, 32, "small-vm"), store)]
+    assert hosts[0].replica_capacity() == 2
+    with pytest.raises(PlacementError):
+        Placer(hosts).place(3)
+    assert hosts[0].placed == 0          # partial reservation rolled back
+    assert len(Placer(hosts).place(2)) == 1
+
+
+def test_placer_refuses_on_cow_disk_exhaustion():
+    store = CowStore(block_size=1 << 20)
+    # 1 GiB disk budget / 64 MiB worst-case CoW footprint -> 16 replicas
+    spec = MachineSpec(88, 768, "E5-2699", disk_gb=1)
+    hosts = [Host("h0", spec, store)]
+    assert hosts[0].replica_capacity() == 16
+    with pytest.raises(PlacementError):
+        Placer(hosts).place(17)
+    assert Placer(hosts).place(16)[0].n == 16
+
+
+# --------------------------------------------------- host accounting guard
+def test_simhost_free_vm_overfree_is_clamped():
+    h = SimHost()
+    baseline = h.ram_used_gb
+    h.free_vm(6.0)                       # free with nothing allocated
+    assert h.ram_used_gb == baseline     # no drift below the OS baseline
+    assert all(v >= 0 for v in h.used.values())
+
+    h.allocate_vm(6.0)
+    assert h.ram_used_gb == baseline + 6.0
+    h.free_vm(6.0)
+    h.free_vm(6.0)                       # double free of the same VM
+    assert h.ram_used_gb == baseline
+    assert h.vm_count == 0
+    assert all(v == 0 for v in h.used.values())
+
+
+def test_simhost_free_vm_clamps_oversized_release():
+    h = SimHost()
+    baseline = h.ram_used_gb
+    h.allocate_vm(6.0)
+    h.allocate_vm(6.0)
+    h.free_vm(100.0)                     # buggy caller frees too much RAM
+    assert h.ram_used_gb >= baseline     # clamped to what was allocated
+    h.free_vm(100.0)
+    assert h.ram_used_gb == baseline
+
+
+# ------------------------------------------------------- pool grow/shrink
+def test_pool_grow_adds_fresh_runners():
+    pool = _pool("n0", size=2)
+    assert pool.grow(3) == 3
+    assert pool.size == 5 and pool.n_free == 5
+    assert len({r.runner_id for r in pool._all.values()}) == 5
+    pool.close()
+
+
+def test_pool_shrink_never_reclaims_leased_runner():
+    pool = _pool("n0", size=4)
+    vms_before = pool.host.vm_count
+    leased = pool.acquire("t1", timeout=0.1)
+    assert leased is not None
+    retired = pool.shrink(10)            # ask for far more than is free
+    assert retired == 3                  # only the free runners went
+    assert pool.size == 1
+    assert leased.runner_id in pool._all
+    assert leased.busy                   # the lease is untouched
+    assert pool.host.vm_count == vms_before - 3
+    # the leased runner still works and returns to the (smaller) pool
+    pool.release(leased, task_id="t1")
+    assert pool.n_free == 1
+    pool.close()
+
+
+def test_pool_shrink_then_grow_issues_unique_ids():
+    pool = _pool("n0", size=3)
+    pool.shrink(2)
+    pool.grow(2)
+    assert len(pool._all) == 3
+    assert len({r.runner_id for r in pool._all.values()}) == 3
+    pool.close()
+
+
+# ------------------------------------------- dynamic pools on a live loop
+def test_add_pool_mid_run_serves_parked_acquires():
+    base = _base()
+    gw = Gateway([_pool("n0", size=2, base=base)])
+    writer = TrajectoryWriter(retain=False)
+    engine = RolloutEngine(gw, writer, config=RolloutConfig(
+        max_inflight=64, acquire_timeout_vs=2000.0))
+    loop = EventLoop()
+    extra = _pool("n1", size=8, seed=1, base=base)
+    # 16 episodes over 2 runners saturate the fleet; the new node arrives
+    # mid-run while many acquires are parked on the release condition
+    loop.call_later(30.0, lambda: gw.add_pool(extra), daemon=True)
+    tasks = get_default_registry().sample(16, seed=0)
+    report = engine.run_event_driven(tasks, loop=loop)
+    writer.close()
+    assert report.completed == 16
+    served = {n for r in report.results for n in r.nodes}
+    assert served == {"n0", "n1"}        # the live-attached pool served
+    with pytest.raises(ValueError):
+        gw.add_pool(extra)               # duplicate node ids refused
+
+
+def test_remove_pool_mid_run_retires_leased_runners():
+    base = _base()
+    gw = Gateway([_pool("n0", size=4, base=base),
+                  _pool("n1", size=4, seed=1, base=base)])
+    writer = TrajectoryWriter(retain=False)
+    engine = RolloutEngine(gw, writer, config=RolloutConfig(
+        max_inflight=64, acquire_timeout_vs=2000.0))
+    loop = EventLoop()
+    removed = {}
+    def pull():
+        pool = gw.remove_pool("n0")      # mid-run: leases are in flight
+        removed["busy"] = pool.n_busy
+    loop.call_later(20.0, pull, daemon=True)
+    tasks = get_default_registry().sample(24, seed=0)
+    report = engine.run_event_driven(tasks, loop=loop)
+    writer.close()
+    assert report.completed == 24        # nothing lost in the removal
+    assert removed["busy"] > 0           # the pool really was leased out
+    assert list(gw.pools) == ["n1"]
+    assert not gw._retired               # every lease found its way home
+
+
+# ------------------------------------------------------------ contention
+def test_overcommitted_host_inflates_latency_live():
+    reg = get_default_registry()
+
+    def traj_per_min(cores):
+        cl = Cluster([MachineSpec(cores, 768, "E5-2699")], 32, seed=0)
+        writer = TrajectoryWriter(retain=False, capacity=512)
+        engine = RolloutEngine(cl, writer, registry=reg,
+                               config=RolloutConfig(max_inflight=32))
+        report = engine.run_event_driven(reg.sample(48, seed=7),
+                                         loop=EventLoop())
+        writer.close()
+        cl.close()
+        assert report.completed == 48
+        return report.trajectories_per_min(32)
+
+    provisioned = traj_per_min(88)       # 32 replicas need ~17 cores
+    starved = traj_per_min(8)            # ~2.1x overcommitted
+    assert starved < 0.65 * provisioned, (
+        f"CPU overcommit should visibly degrade throughput: "
+        f"{starved:.1f} vs {provisioned:.1f} traj/min")
+
+
+def test_contention_factor_mean_field():
+    store = CowStore(block_size=1 << 20)
+    host = Host("h0", MachineSpec(8, 768, "E5-2699"), store)
+    cl = Cluster([MachineSpec(8, 768, "E5-2699")], 32, seed=0)
+    h = cl.hosts[0]
+    assert h.contention_factor() == 1.0  # idle fleet: idle demand < 8 cores
+    for r in list(h.pool._all.values())[:16]:
+        r.busy = True
+        h.pool._free.remove(r)
+    # 32 idle * 0.1 + 16 stepping * 2.0 * 0.2 + 0.5 = 10.1 cores on 8
+    assert h.contention_factor() == pytest.approx(10.1 / 8)
+    cl.close()
+    assert host.contention_factor() == 1.0   # pool-less host is neutral
+
+
+# -------------------------------------------------------------- routing
+def test_least_loaded_routing_routes_around_busy_node():
+    base = _base()
+    gw = Gateway([_pool("n0", size=4, base=base),
+                  _pool("n1", size=4, seed=1, base=base)],
+                 routing="least_loaded")
+    task = next(t for t in (f"t{i}" for i in range(100))
+                if gw._affinity_order(t)[0] == "n0")
+    # idle fleet: load ties, the hash ring breaks the tie -> affinity node
+    node, r = gw.acquire(task)
+    assert node == "n0"
+    # keep n0 half-busy: routing now prefers the idle n1 despite affinity
+    gw.pools["n0"].acquire_nowait("occupier")
+    node2, r2 = gw.acquire(task)
+    assert node2 == "n1"
+    gw.stop()
+
+
+def test_affinity_routing_unchanged_by_default():
+    gw = Gateway([_pool("n0"), _pool("n1", seed=1)])
+    assert gw.routing == "affinity"
+    for t in ("a", "b", "c"):
+        assert gw._route_order(t) == gw._affinity_order(t)
+
+
+# ------------------------------------------------------------ autoscaler
+def test_autoscaler_grows_on_burst_and_drains_after():
+    reg = get_default_registry()
+    cl = Cluster(default_specs(64), 8, seed=0,
+                 autoscaler=AutoscalerConfig(min_replicas=8,
+                                             max_replicas=64,
+                                             grow_step=16))
+    writer = TrajectoryWriter(retain=False, capacity=1024)
+    engine = RolloutEngine(cl, writer, registry=reg,
+                           config=RolloutConfig(max_inflight=512,
+                                                acquire_timeout_vs=2000.0))
+    # hard burst at t=0, then 400 quiet virtual seconds for the drain
+    tasks = reg.sample(96, seed=3)
+    arrivals = [float(i) * 0.25 for i in range(95)] + [500.0]
+    report = engine.run_event_driven(tasks, loop=EventLoop(),
+                                     arrivals=arrivals)
+    writer.close()
+    auto = cl.autoscaler
+    assert report.completed == 96
+    assert auto.scale_ups > 0, "the burst must force growth"
+    assert auto.scale_downs > 0, "the quiet tail must drain the fleet"
+    assert cl.peak_placed > 8            # actually grew
+    assert cl.placed_replicas < cl.peak_placed   # actually drained
+    assert cl.placed_replicas >= 8       # never below the floor
+    # elasticity saved replica-days vs static-at-peak provisioning
+    static_days = cl.peak_placed * report.virtual_makespan / 86400.0
+    assert cl.replica_days() < 0.9 * static_days
+    cl.close()
+
+
+def test_autoscaler_blocked_by_exhausted_budgets():
+    cl = Cluster([MachineSpec(88, 768, "E5-2699", disk_gb=1)], 16, seed=0,
+                 autoscaler=AutoscalerConfig(min_replicas=8,
+                                             max_replicas=64))
+    # host capacity is 16 by disk budget; any growth must be refused
+    assert cl.request_grow(8) == 0
+    cl.close()
+
+
+# --------------------------------------------------- cluster bookkeeping
+def test_replica_day_integral_tracks_capacity_changes():
+    cl = Cluster(default_specs(64), 16, seed=0)
+    loop = EventLoop()
+    cl.attach_loop(loop)
+    loop.call_later(100.0, lambda: cl.request_grow(16))
+
+    def idle():
+        yield Sleep(200.0)
+
+    loop.spawn(idle())
+    loop.run()
+    cl.detach_loop()
+    # 16 replicas for 100 vs, then 32 for the remaining 100 vs
+    assert cl.replica_seconds() == pytest.approx(16 * 100 + 32 * 100)
+    assert cl.peak_placed == 32
+    cl.close()
+
+
+def test_cluster_prices_from_table1_model():
+    cl = Cluster(default_specs(113, runners_per_node=113), 113,
+                 runners_per_node=113, seed=0)
+    # one E5-2699 at full packing: the paper's 0.2-0.3 USD/replica-day
+    assert 0.2 <= cl.usd_per_replica_day() <= 0.3
+    health = cl.health()
+    assert health["replicas_live"] == 113
+    assert health["hosts"][0]["contention"] == 1.0
+    cl.close()
+
+
+def test_build_fleet_returns_live_cluster():
+    from repro.pipeline import build_fleet
+
+    cluster = build_fleet(8, seed=0)
+    assert isinstance(cluster, Cluster)
+    assert cluster.n_replicas == 8
+    assert cluster.gateway.routing == "least_loaded"
+    # node naming/seeding matches the old static build_fleet exactly
+    assert [p.node_id for p in cluster.pools] == ["node0"]
+    reg = get_default_registry()
+    writer = TrajectoryWriter(retain=False)
+    engine = RolloutEngine(cluster, writer, registry=reg)
+    report = engine.run_event_driven(reg.sample(8, seed=0),
+                                     loop=EventLoop())
+    writer.close()
+    assert report.completed == 8
+    cluster.close()
+
+
+def test_cluster_run_deterministic_per_seed():
+    reg = get_default_registry()
+
+    def run():
+        cl = Cluster(default_specs(32), 16, seed=0,
+                     autoscaler=AutoscalerConfig(min_replicas=8,
+                                                 max_replicas=32,
+                                                 grow_step=8))
+        writer = TrajectoryWriter(retain=False, capacity=512)
+        engine = RolloutEngine(cl, writer, registry=reg,
+                               config=RolloutConfig(
+                                   max_inflight=256,
+                                   acquire_timeout_vs=2000.0))
+        tasks = reg.sample(48, seed=stable_seed(0, "det"))
+        arrivals = [float(i) * 0.5 for i in range(48)]
+        report = engine.run_event_driven(tasks, loop=EventLoop(),
+                                         arrivals=arrivals)
+        writer.close()
+        out = (report.completed, report.virtual_makespan,
+               report.virtual_seconds, cl.replica_seconds(),
+               cl.autoscaler.scale_ups, cl.autoscaler.scale_downs)
+        cl.close()
+        return out
+
+    assert run() == run()

@@ -35,6 +35,19 @@ def test_overload_monotone_in_cores():
     assert lo > hi
 
 
+def test_overload_fraction_deterministic_across_processes():
+    """The Monte Carlo is blake2b-seeded from its parameters (not the
+    process-randomized global RNG), so Fig. 3 / Table 1 artifacts are
+    bit-identical in every process: the pinned values below must hold
+    in any interpreter, on any platform."""
+    d = ReplicaDemand()
+    assert overload_fraction(8, 16.0, d) == overload_fraction(8, 16.0, d)
+    assert overload_fraction(8, 16.0, d) == 0.29625
+    assert overload_fraction(4, 8.0, d) == 0.55125
+    # distinct parameters draw distinct streams
+    assert overload_fraction(8, 16.0, d, trials=201) != 0.29625
+
+
 def test_fig6_throughput_scaling():
     rows = sweep_throughput(designs=("centralized", "decentralized"),
                             sizes=(64, 1024), seeds=3)

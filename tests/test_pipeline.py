@@ -237,17 +237,15 @@ def test_engine_virtual_deadline_paces_launches():
     from repro.rollout.writer import TrajectoryWriter
 
     reg = get_default_registry()
-    gateway, pools = build_fleet(4, seed=0)
+    cluster = build_fleet(4, seed=0)
     writer = TrajectoryWriter(retain=False)
-    engine = RolloutEngine(gateway, writer, registry=reg,
+    engine = RolloutEngine(cluster, writer, registry=reg,
                            config=RolloutConfig(
                                max_inflight=4, virtual_deadline_s=60.0))
     tasks = reg.sample(64, seed=0)
     report = engine.run_event_driven(tasks, loop=EventLoop())
     writer.close()
-    gateway.stop()
-    for p in pools:
-        p.close()
+    cluster.close()
     settled = report.completed + report.failed
     assert 0 < settled < 64, (
         f"deadline should stop launches mid-workload, settled {settled}")
@@ -265,9 +263,9 @@ def test_online_pipeline_interleaved_ppo_end_to_end():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     trainer = PPOTrainer(model, params, cfg=PPOConfig(lr=3e-4))
-    gateway, pools = build_fleet(8, seed=0)
+    cluster = build_fleet(8, seed=0)
     pipe = OnlinePipeline(
-        gateway, 8, trainer,
+        cluster, 8, trainer,
         pipe_cfg=PipelineConfig(rounds=2, tasks_per_round=8,
                                 updates_per_round=2, max_inflight=8),
         learner_cfg=LearnerConfig(algo="ppo", batch_size=4, seq_len=96,
@@ -277,9 +275,7 @@ def test_online_pipeline_interleaved_ppo_end_to_end():
         report = pipe.run_interleaved()
     finally:
         pipe.close()
-        gateway.stop()
-        for p in pools:
-            p.close()
+        cluster.close()
     assert report.rollout_completed > 0
     assert report.updates == 4
     assert report.versions_published == 4
