@@ -1,0 +1,307 @@
+"""Fig. 6 (right) live: mass-failure recovery of the real event-driven fleet.
+
+The offline simulation (``core/simulation.run_recovery``) priced a full
+fleet crash analytically; this benchmark runs the actual stack — a 1024
+replica ``Cluster`` under live load from the ``RolloutEngine`` — through a
+compound §3.4 failure at ``t0`` and records the recovery curve with the
+multi-layer ladder (``repro.recovery``) doing the repairs:
+
+- **30% fleet kill** — 30% of all runners crash mid-episode. In-flight
+  episodes abort and fail over; the runners come back through L1 in-place
+  recovery (release path + health sweeps).
+- **silent corruption** — a set of runners is silently broken (the
+  kernel-limit failure mode: every observation turns to garbage, nothing
+  raises). Only the canary's known-answer checksum can see this; detected
+  runners are quarantined and recreated on fresh VM allocations (L3).
+- **one exhausted node** — every runner on one host is silently broken
+  *and* the host's kernel limits are zeroed, so L3 recreations come back
+  broken too. The ladder gives up on the node (L4): the cluster evicts it
+  and replaces its capacity on the remaining hosts.
+
+Asserts (the §3.4 robustness claims, measured live):
+
+1. the fleet fully recovers — healthy capacity returns to the 1024
+   target — while sustaining >= 50% of the pre-kill steady-state
+   trajectory rate through the recovery window;
+2. 100% of injected silently-broken runners are detected by the canary
+   and quarantined, and no corrupted trajectory reaches the writer after
+   its runner's quarantine (the in-flight one being written at the
+   detection instant is the honest cost of detection latency);
+3. exactly one node is evicted and its capacity is replaced.
+
+    PYTHONPATH=src python benchmarks/recovery.py
+
+Emits ``artifacts/bench/BENCH_recovery.json`` (recovery curve, per-layer
+MTTR from telemetry, detection latencies, gate block);
+``scripts/check_bench.py`` gates CI on it with direction-aware labels
+(MTTR / detection / recovery-time are lower-is-better).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.cluster import Cluster, default_specs
+from repro.core.event_loop import EventLoop
+from repro.core.seeding import stable_seed
+from repro.rollout.engine import RolloutConfig, RolloutEngine
+from repro.rollout.scenarios import get_default_registry
+from repro.rollout.writer import TrajectoryWriter
+
+N_REPLICAS = 1024
+RUNNERS_PER_NODE = 64
+EPISODES_PER_REPLICA = 5
+KILL_AT_VS = 60.0            # t0: compound failure injection
+KILL_FRAC = 0.30             # fraction of the fleet crashed at t0
+SILENT_SCATTERED = 32        # silently-broken runners on healthy hosts
+EVICT_HOST_IDX = 3           # host whose kernel limits are exhausted
+CURVE_RESOLUTION_VS = 2.5
+STEADY_WINDOW_VS = 40.0      # pre-kill window for the steady-state rate
+MIN_RECOVERY_THROUGHPUT = 0.50
+DETECTION_P95_BOUND_VS = 90.0   # canary interval + one full lease, slack
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "bench", "BENCH_recovery.json")
+
+
+def fleet_healthy(cluster: Cluster) -> int:
+    """Live, uncorrupted replicas across the routed fleet."""
+    return sum(p.health()["healthy"] for p in cluster.pools)
+
+
+def run_recovery_benchmark(seed: int = 0) -> dict:
+    """One end-to-end run; returns the full payload (rows + gate)."""
+    t_wall = time.monotonic()
+    registry = get_default_registry()
+    cluster = Cluster(default_specs(N_REPLICAS,
+                                    runners_per_node=RUNNERS_PER_NODE),
+                      N_REPLICAS, runners_per_node=RUNNERS_PER_NODE,
+                      seed=seed)
+    tele = cluster.telemetry
+    writer = TrajectoryWriter(retain=False, capacity=1024)
+    engine = RolloutEngine(cluster, writer, registry=registry,
+                           telemetry=tele,
+                           config=RolloutConfig(
+                               max_inflight=N_REPLICAS,
+                               acquire_timeout_vs=3000.0))
+    tasks = registry.sample(N_REPLICAS * EPISODES_PER_REPLICA,
+                            seed=stable_seed(seed, "recovery-workload"))
+    loop = EventLoop()
+
+    # ladder handles outlive eviction (the evicted host drops its pool
+    # reference) — snapshot them up front for the detection audit
+    pools = list(cluster.pools)
+    ladders = [p.recovery for p in pools]
+    evict_pool = pools[EVICT_HOST_IDX]
+    evict_host = cluster.hosts[EVICT_HOST_IDX]
+
+    injected: set[str] = set()
+    killed: list[str] = []
+    curve: list[tuple[float, int]] = []
+
+    def inject_failures() -> None:
+        """t0: the compound §3.4 failure event."""
+        rng = random.Random(stable_seed(seed, "recovery-kill"))
+        # exhausted node: zero its kernel limits so recreations are born
+        # broken, and silently break every runner it is serving with
+        for k in evict_host.sim.limits:
+            evict_host.sim.limits[k] = 0
+        for r in evict_pool._all.values():
+            r.mark_silent_broken(loop.now)
+            injected.add(r.runner_id)
+        # scattered silent corruption on healthy hosts
+        healthy_runners = [r for p in pools if p is not evict_pool
+                           for r in p._all.values()]
+        healthy_runners.sort(key=lambda r: r.runner_id)
+        for r in rng.sample(healthy_runners, SILENT_SCATTERED):
+            r.mark_silent_broken(loop.now)
+            injected.add(r.runner_id)
+        # 30% fleet kill (disjoint from the injected set)
+        candidates = [r for r in healthy_runners
+                      if r.runner_id not in injected]
+        for r in rng.sample(candidates, int(KILL_FRAC * N_REPLICAS)):
+            r.manager.replica.crash()
+            killed.append(r.runner_id)
+
+    def sample_curve() -> None:
+        curve.append((round(loop.now, 2), fleet_healthy(cluster)))
+        loop.call_later(CURVE_RESOLUTION_VS, sample_curve, daemon=True)
+
+    loop.call_later(KILL_AT_VS, inject_failures, daemon=True)
+    loop.call_later(0.0, sample_curve, daemon=True)
+
+    report = engine.run_event_driven(tasks, loop=loop)
+    curve.append((round(loop.now, 2), fleet_healthy(cluster)))
+
+    # ------------------------------------------------------------ analysis
+    completions = sorted(tele.series("completion_vt"))
+    steady_rate = sum(1 for t in completions
+                      if KILL_AT_VS - STEADY_WINDOW_VS <= t < KILL_AT_VS
+                      ) / STEADY_WINDOW_VS
+    lost_at_t0 = N_REPLICAS - min(h for t, h in curve if t >= KILL_AT_VS)
+    t_full = next((t for t, h in curve
+                   if t > KILL_AT_VS and h >= N_REPLICAS), None)
+    t_half = next((t for t, h in curve
+                   if t > KILL_AT_VS and h >= N_REPLICAS - lost_at_t0 // 2),
+                  None)
+    recovery_window = (t_full - KILL_AT_VS) if t_full else 0.0
+    recovery_rate = (sum(1 for t in completions
+                         if KILL_AT_VS <= t < t_full) / recovery_window
+                     if t_full and recovery_window > 0 else 0.0)
+
+    detected_at: dict[str, float] = {}
+    quarantined_at: dict[str, float] = {}
+    for lad in ladders:
+        detected_at.update(lad.detected_at)
+        quarantined_at.update(lad.quarantined_at)
+    missed = injected - set(detected_at)
+    unquarantined = injected - set(quarantined_at)
+    late_writes = [(rid, vt) for rid, vt in report.corrupted_writes
+                   if vt > quarantined_at.get(rid, float("inf")) + 1e-9]
+
+    mttr = tele.summaries("recovery_mttr_vs:")
+    detection = tele.summary("silent_detection_latency_vs")
+
+    # ------------------------------------------------------------- asserts
+    n_tasks = len(tasks)
+    assert report.completed >= 0.99 * n_tasks, (
+        f"only {report.completed}/{n_tasks} episodes completed — the "
+        f"fleet did not absorb the failure event")
+    assert t_full is not None, (
+        f"fleet never recovered to {N_REPLICAS} healthy replicas "
+        f"(final: {curve[-1][1]})")
+    assert not missed, (
+        f"{len(missed)}/{len(injected)} silently-broken runners were "
+        f"never detected by the canary: {sorted(missed)[:5]}...")
+    assert not unquarantined, (
+        f"{len(unquarantined)} detected runners were never quarantined")
+    assert not late_writes, (
+        f"{len(late_writes)} corrupted trajectories reached the writer "
+        f"AFTER their runner was quarantined: {late_writes[:5]}")
+    assert recovery_rate >= MIN_RECOVERY_THROUGHPUT * steady_rate, (
+        f"throughput during recovery ({recovery_rate * 60:.1f} traj/min) "
+        f"fell below {MIN_RECOVERY_THROUGHPUT:.0%} of steady state "
+        f"({steady_rate * 60:.1f} traj/min)")
+    evicted = tele.counter("cluster_nodes_evicted")
+    assert evicted == 1, f"expected exactly 1 node eviction, got {evicted}"
+    assert detection.get("p95", 0.0) <= DETECTION_P95_BOUND_VS, (
+        f"silent-failure detection p95 {detection['p95']:.1f}s exceeds "
+        f"the canary bound {DETECTION_P95_BOUND_VS}s")
+    for layer in ("l0", "l1", "l2", "l3"):
+        assert mttr.get(layer, {}).get("n", 0) > 0, (
+            f"recovery layer {layer} never fired — the ladder is not "
+            f"exercising every layer")
+
+    gate = {
+        "killed": len(killed),
+        "injected_silent": len(injected),
+        "silent_detected": len(detected_at.keys() & injected),
+        "silent_quarantined": len(quarantined_at.keys() & injected),
+        "all_silent_detected": not missed,
+        "no_corrupt_after_quarantine": not late_writes,
+        "corrupted_written": len(report.corrupted_writes),
+        "nodes_evicted": evicted,
+        "full_recovery_vs": round(t_full - KILL_AT_VS, 2),
+        "t50_vs": round(t_half - KILL_AT_VS, 2) if t_half else None,
+        "detection_p95_vs": round(detection.get("p95", 0.0), 2),
+        "steady_traj_per_min": round(steady_rate * 60.0, 1),
+        "recovery_traj_per_min": round(recovery_rate * 60.0, 1),
+        "recovery_throughput_frac": round(
+            recovery_rate / steady_rate, 4) if steady_rate else 0.0,
+        "mttr_l1_mean_vs": round(mttr["l1"]["mean"], 3),
+        "mttr_l2_mean_vs": round(mttr["l2"]["mean"], 3),
+        "mttr_l3_mean_vs": round(mttr["l3"]["mean"], 3),
+        "completed": report.completed,
+        "failed": report.failed,
+    }
+    payload = {
+        "benchmark": "Fig. 6 recovery, live: 30% fleet kill + silent "
+                     "corruption + one exhausted node at t0 under load, "
+                     "multi-layer ladder recovery on the event-driven "
+                     "engine",
+        "metric": "healthy-replica recovery curve, per-layer MTTR, "
+                  "silent-failure detection latency (virtual seconds)",
+        "seed": seed,
+        "replicas": N_REPLICAS,
+        "kill_at_vs": KILL_AT_VS,
+        "kill_frac": KILL_FRAC,
+        "n_tasks": n_tasks,
+        "virtual_makespan_s": round(report.virtual_makespan, 2),
+        "reassignments": report.reassignments,
+        "reflink_clones": cluster.store.reflink_clones,
+        "recovery_curve": [[t, h] for t, h in curve],
+        "mttr": mttr,
+        "detection_latency": detection,
+        "layer_events": {
+            layer: sum(lad.layer_events[layer] for lad in ladders)
+            for layer in ("l0", "l1", "l2", "l3", "l4")},
+        "wall_seconds": round(time.monotonic() - t_wall, 2),
+        "gate": gate,
+    }
+    writer.drain(timeout=30.0)
+    writer.close()
+    cluster.close()
+    return payload
+
+
+def recovery_table(seed: int = 0):
+    """(rows, derived) in the paper_tables convention for benchmarks/run.py."""
+    payload = run_recovery_benchmark(seed)
+    g = payload["gate"]
+    derived = (f"30% kill of {N_REPLICAS} replicas: full recovery in "
+               f"{g['full_recovery_vs']:.0f}s (t50 {g['t50_vs']:.0f}s) at "
+               f"{g['recovery_throughput_frac']:.0%} steady throughput; "
+               f"{g['silent_detected']}/{g['injected_silent']} silent "
+               f"failures canary-detected (p95 {g['detection_p95_vs']:.0f}s)"
+               f", {g['nodes_evicted']} node evicted+replaced")
+    return [payload], derived
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="assert the run stays under this wall-clock "
+                         "budget (CI guard)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="where to write BENCH_recovery.json")
+    args = ap.parse_args()
+
+    payload = run_recovery_benchmark(args.seed)
+    g = payload["gate"]
+    print(f"{'phase':>22} {'value':>12}")
+    print(f"{'steady traj/min':>22} {g['steady_traj_per_min']:>12.1f}")
+    print(f"{'recovery traj/min':>22} {g['recovery_traj_per_min']:>12.1f}")
+    print(f"{'full recovery (vs)':>22} {g['full_recovery_vs']:>12.1f}")
+    print(f"{'t50 (vs)':>22} {g['t50_vs']:>12.1f}")
+    print(f"{'detection p95 (vs)':>22} {g['detection_p95_vs']:>12.1f}")
+    print(f"{'silent detected':>22} "
+          f"{g['silent_detected']:>9}/{g['injected_silent']}")
+    print(f"{'corrupted written':>22} {g['corrupted_written']:>12}")
+    print(f"{'nodes evicted':>22} {g['nodes_evicted']:>12}")
+    for layer, s in payload["mttr"].items():
+        print(f"{'MTTR ' + layer + ' (vs)':>22} {s['mean']:>12.2f} "
+              f"(n={s['n']})")
+    if args.budget_s is not None:
+        assert payload["wall_seconds"] <= args.budget_s, (
+            f"recovery benchmark took {payload['wall_seconds']:.1f}s wall "
+            f"> budget {args.budget_s}s")
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"full recovery of a {KILL_FRAC:.0%} kill in "
+          f"{g['full_recovery_vs']:.0f} virtual seconds at "
+          f"{g['recovery_throughput_frac']:.0%} of steady throughput; "
+          f"{payload['wall_seconds']:.1f}s wall; baseline -> "
+          f"{os.path.relpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import (e2e_pipeline, elastic_cluster, paper_tables,
-                        roofline, throughput)
+                        recovery, roofline, throughput)
 
 OUTDIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
@@ -21,7 +21,10 @@ def main() -> None:
     os.makedirs(OUTDIR, exist_ok=True)
     benches = [
         ("fig6_scalability", paper_tables.fig6_scalability),
-        ("fig6_recovery", paper_tables.fig6_recovery),
+        # live engine recovery (repro.recovery ladder); the offline
+        # analytic walk is kept alongside as a cross-check
+        ("fig6_recovery", recovery.recovery_table),
+        ("fig6_recovery_sim", paper_tables.fig6_recovery),
         ("fig3_orchestration", paper_tables.fig3_orchestration),
         ("table1_cost", paper_tables.table1_cost),
         ("table2_cow", paper_tables.table2_cow),

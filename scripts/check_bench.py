@@ -15,8 +15,11 @@ and committed with the change that moved it.
 
 The benchmark kind is auto-detected from the payload shape: throughput
 baselines carry per-(design, fleet-size) `engine` rows, elastic-cluster
-baselines carry per-cluster `clusters` rows, e2e baselines carry a
-`gate` block.
+baselines carry per-cluster `clusters` rows, recovery baselines carry a
+`recovery_curve`, e2e baselines carry a bare `gate` block. Gate metrics
+are direction-aware: MTTR / detection-latency / recovery-time names are
+recognized as lower-is-better, so a *rise* there is the regression and a
+drop flags a stale baseline.
 """
 
 from __future__ import annotations
@@ -113,6 +116,35 @@ def check_e2e(base: dict, fresh: dict, tol: float) -> list[str]:
     return check_gate(base, fresh, tol)
 
 
+# gate-metric names matching any of these substrings are costs: a rise is
+# the regression (repair slower, detection later, more corruption)
+LOWER_IS_BETTER_HINTS = (
+    "mttr",
+    "latency",
+    "detection",
+    "recovery_vs",
+    "t50",
+    "corrupted",
+    "failed",
+    "replica_days",
+)
+
+
+def gate_metric_is_cost(name: str) -> bool:
+    return any(h in name for h in LOWER_IS_BETTER_HINTS)
+
+
+def check_recovery(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Recovery baselines: the gate block plus a curve sanity check."""
+    problems: list[str] = []
+    if not base.get("recovery_curve"):
+        problems.append("MALFORMED baseline: empty recovery_curve")
+    if base.get("recovery_curve") and not fresh.get("recovery_curve"):
+        problems.append("MISSING recovery_curve: not in fresh results")
+    problems += check_gate(base, fresh, tol)
+    return problems
+
+
 def check_gate(base: dict, fresh: dict, tol: float) -> list[str]:
     problems: list[str] = []
     base_gate = base.get("gate", {})
@@ -131,7 +163,11 @@ def check_gate(base: dict, fresh: dict, tol: float) -> list[str]:
                 )
         else:
             problems += compare_value(
-                f"gate.{name}", float(expected), float(got), tol
+                f"gate.{name}",
+                float(expected),
+                float(got),
+                tol,
+                lower_is_better=gate_metric_is_cost(name),
             )
     return problems
 
@@ -141,6 +177,8 @@ def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
         return check_throughput(baseline, fresh, tol)
     if "clusters" in baseline:
         return check_elastic(baseline, fresh, tol)
+    if "recovery_curve" in baseline:
+        return check_recovery(baseline, fresh, tol)
     if "gate" in baseline:
         return check_e2e(baseline, fresh, tol)
     return ["MALFORMED baseline: neither engine rows nor a gate block"]

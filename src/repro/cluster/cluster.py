@@ -86,6 +86,9 @@ class Cluster:
         # detach so a reservation whose boot the loop never ran is returned
         # instead of leaking as phantom placed capacity.
         self._pending_grows: list[tuple[Timer, Host, int]] = []
+        # pools dropped from routing by L4 eviction: their hosts no longer
+        # reference them, but close() must still shut their managers down
+        self._evicted_pools: list[RunnerPool] = []
         # replica-seconds integral of *provisioned* capacity (the cost
         # the fleet is paying for, whether or not a runner is leased)
         self._rs_integral = 0.0
@@ -127,6 +130,9 @@ class Cluster:
             self.detach_loop()
         self._loop = loop
         self.gateway.attach_loop(loop)
+        # L4 sink: canary-driven node eviction replaces capacity on the
+        # remaining hosts instead of just dropping it
+        self.gateway.on_evict = self.evict_host
         self._rs_last_vt = loop.now
         self._rs_size = self.placed_replicas
         if self.autoscaler is not None:
@@ -162,6 +168,8 @@ class Cluster:
         for host in self.hosts:
             if host.pool is not None:
                 host.pool.close()
+        for pool in self._evicted_pools:
+            pool.close()
 
     # ----------------------------------------------------------- elasticity
     def request_grow(self, n: int, *, delay_vs: float = 0.0) -> int:
@@ -198,6 +206,12 @@ class Cluster:
         self._grow_host(host, n)
 
     def _grow_host(self, host: Host, n: int) -> None:
+        if host.evicted:
+            # raced with an L4 eviction: the reservation was already
+            # released by evict_host and the node must never rejoin
+            # routing — booting a pool here would serve born-broken
+            # runners from the exhausted host
+            return
         if host.pool is None:
             self.gateway.add_pool(self._build_pool(host, n))
         else:
@@ -205,6 +219,57 @@ class Cluster:
             if created < n:  # resource guard refused part of the grant
                 host.release_placement(n - created)
                 self._note_capacity()
+
+    # ------------------------------------------------------------- L4 evict
+    REPLACEMENT_BOOT_VS = 12.0   # provisioning lag for evicted capacity
+
+    def evict_host(self, node_id: str) -> int:
+        """L4 of the recovery ladder: a node whose recreations keep
+        coming back broken is exhausted (kernel limits) — remove it from
+        routing, mark its host unschedulable, and request replacement
+        capacity on the remaining hosts (charged the usual provisioning
+        boot lag). In-flight leases on the node drain through the
+        gateway's retired-pool path; its silently-broken runners are
+        quarantined on release. Returns how many replacement replicas
+        were granted."""
+        host = next((h for h in self.hosts
+                     if h.pool is not None
+                     and h.pool.node_id == node_id), None)
+        if host is None:
+            return 0
+        pool = host.pool
+        pool.evicted = True
+        if node_id in self.gateway.pools:
+            self.gateway.remove_pool(node_id)
+        # boot-delayed grows reserved on this host will never boot: cancel
+        # them so the timer cannot rebuild a pool on the exhausted node
+        # (their reservation is part of host.placed, released below)
+        for i in range(len(self._pending_grows) - 1, -1, -1):
+            timer, h, _n = self._pending_grows[i]
+            if h is host:
+                timer.cancel()
+                del self._pending_grows[i]
+        # replace the host's full placement, not just the runners still
+        # registered: canary quarantines may already have shrunk the pool
+        # (broken recreations never made it back into service)
+        lost = host.placed
+        host.evicted = True
+        host.release_placement(host.placed)
+        host.pool = None
+        self._evicted_pools.append(pool)
+        self.telemetry.count("cluster_nodes_evicted")
+        self._note_capacity()
+        granted = self.request_grow(lost, delay_vs=self.REPLACEMENT_BOOT_VS)
+        if granted > 0:
+            # node-level MTTR: replacement capacity serves after its boot.
+            # No observation when nothing was granted — an unreplaced
+            # eviction is lost capacity, not a 12 vs recovery
+            self.telemetry.observe(
+                "recovery_mttr_vs:l4", self.REPLACEMENT_BOOT_VS
+            )
+        if granted < lost:
+            self.telemetry.count("evicted_replicas_unreplaced", lost - granted)
+        return granted
 
     def scale_down(self, n: int) -> int:
         """Retire up to ``n`` *free* replicas (leases are never touched),

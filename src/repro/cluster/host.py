@@ -84,6 +84,10 @@ class Host:
         self.disk_budget_bytes = spec.disk_gb << 30
         self.placed = 0  # replicas reserved on this host (incl. booting)
         self.pool: Optional[RunnerPool] = None
+        # L4: an evicted host is unschedulable — the recovery ladder
+        # declared it exhausted (kernel limits), so replacement capacity
+        # must land elsewhere
+        self.evicted = False
 
     # ------------------------------------------------------------- budgets
     def replica_capacity(self) -> int:
@@ -95,6 +99,8 @@ class Host:
         return max(min(by_ram, by_disk, MAX_REPLICAS_PER_NODE), 0)
 
     def headroom(self) -> int:
+        if self.evicted:
+            return 0
         return self.replica_capacity() - self.placed
 
     def reserve(self, n: int) -> None:

@@ -45,6 +45,12 @@ class CowStore:
         # 30 s full copy vs 0.8 s reflink)
         self.copy_bw_bytes_per_s = 24e9 / 30.0
         self.reflink_latency_s = 0.8
+        # provisioning counters: how many overlays were created each way.
+        # The recovery ladder re-clones overlays on every L1/L2 repair and
+        # L3 recreation, so the Fig. 6 benchmark reports reflink traffic
+        # during a mass-recovery event from here.
+        self.reflink_clones = 0
+        self.full_copies = 0
 
     # ---------------------------------------------------------- block API
     def put_virtual(self, content_id: str, size: Optional[int] = None) -> str:
@@ -109,6 +115,8 @@ class DiskImage:
         """Reflink copy. Returns (image, provisioning_seconds)."""
         for cid in self.blocks:
             self.store.put_virtual(cid)
+        with self.store._lock:
+            self.store.reflink_clones += 1
         return (DiskImage(self.store, self.blocks, name or f"{self.name}+"),
                 self.store.reflink_latency_s)
 
@@ -117,6 +125,8 @@ class DiskImage:
         ids = [self.store.put_virtual(f"{name}/copy/{i}")
                for i in range(len(self.blocks))]
         secs = self.logical_bytes() / self.store.copy_bw_bytes_per_s
+        with self.store._lock:
+            self.store.full_copies += 1
         return DiskImage(self.store, ids, name), secs
 
     def write_block(self, idx: int, content: str) -> None:

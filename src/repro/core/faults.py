@@ -13,6 +13,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro.core.seeding import stable_seed
+
 
 class FaultType(enum.Enum):
     CONNECTION = "connection"
@@ -59,16 +61,39 @@ DEFAULT_RATES = {
 }
 
 
+# floating-point slack for the sum-of-rates validation: a rate vector
+# that sums to exactly 1.0 (e.g. {CRASH: 1.0}) must stay legal
+_RATE_SUM_EPS = 1e-9
+
+
 @dataclass
 class FaultInjector:
-    """Deterministic, seeded fault sampler."""
+    """Deterministic, seeded fault sampler.
+
+    Rates are validated at construction: ``sample()`` walks the rate
+    table cumulatively against one uniform draw, so a table whose rates
+    sum past 1.0 silently truncates the tail — faults listed after the
+    saturation point can never fire. That is exactly how a large
+    ``scaled()`` factor used to misbehave unnoticed; now it raises."""
 
     rates: dict = field(default_factory=lambda: dict(DEFAULT_RATES))
     seed: int = 0
     enabled: bool = True
 
     def __post_init__(self):
+        total = 0.0
+        for fault, rate in self.rates.items():
+            if rate < 0.0:
+                raise ValueError(
+                    f"fault rate for {fault} is negative ({rate})")
+            total += rate
+        if total > 1.0 + _RATE_SUM_EPS:
+            raise ValueError(
+                f"fault rates sum to {total:.6g} > 1: faults past the "
+                f"saturation point would be unreachable (check scaled() "
+                f"factors)")
         self._rng = random.Random(self.seed)
+        self._n_children = 0
 
     def sample(self) -> Optional[FaultType]:
         if not self.enabled:
@@ -82,6 +107,18 @@ class FaultInjector:
         return None
 
     def scaled(self, factor: float) -> "FaultInjector":
+        """A child injector with every rate scaled by ``factor``.
+
+        Child seeds derive from the parent's *configured* seed plus a
+        monotone counter — never from the parent's RNG stream. Drawing
+        the child seed from ``self._rng`` perturbed the parent's future
+        fault sequence on every call, so fault streams depended on
+        runner-creation order (prewarm vs a later ``grow()`` produced
+        different faults fleet-wide). Now the k-th child of a given
+        parent is identical however the other children interleave with
+        the parent's own ``sample()`` calls."""
+        child_seed = stable_seed(self.seed, "scaled", self._n_children)
+        self._n_children += 1
         return FaultInjector(
             rates={f: r * factor for f, r in self.rates.items()},
-            seed=self._rng.randrange(1 << 30), enabled=self.enabled)
+            seed=child_seed, enabled=self.enabled)

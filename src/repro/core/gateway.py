@@ -61,6 +61,7 @@ class Gateway:
                  health_interval_s: float = 10.0,
                  unhealthy_threshold: int = 3,
                  routing: str = "affinity",
+                 canary_interval_s: float = 15.0,
                  telemetry: Optional[Telemetry] = None,
                  start_background: bool = False):
         assert pools, "need at least one executor node"
@@ -70,7 +71,14 @@ class Gateway:
         self.health_interval_s = health_interval_s
         self.unhealthy_threshold = unhealthy_threshold
         self.routing = routing
-        self.telemetry = telemetry
+        # §3.4 silent-failure detection: the periodic known-answer sweep
+        # each pool's recovery ladder runs over its free runners (virtual
+        # seconds, event mode only; 0 disables)
+        self.canary_interval_s = canary_interval_s
+        self.telemetry = telemetry or Telemetry()
+        # L4 sink installed by the cluster control plane (eviction with
+        # replacement); without one, eviction just stops routing
+        self.on_evict: Optional[Callable[[str], None]] = None
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -83,8 +91,35 @@ class Gateway:
         self._loop: Optional[EventLoop] = None
         self._release_cv: Optional[VirtualCondition] = None
         self._health_timer: Optional[Timer] = None
+        self._canary_timer: Optional[Timer] = None
+        for p in pools:
+            self._ensure_recovery(p)
         if start_background:
             self.start()
+
+    def _ensure_recovery(self, pool: RunnerPool) -> None:
+        """Install a recovery ladder on a pool that lacks one.
+
+        Imported lazily: ``repro.recovery`` sits above the core layer
+        (it composes pool + replica + telemetry), so the gateway only
+        pulls it in when it actually builds a ladder."""
+        if pool.recovery is None:
+            from repro.recovery.ladder import RecoveryLadder, RecoveryPolicy
+            policy = RecoveryPolicy()
+            if self.canary_interval_s > 0:
+                # one cadence knob: the per-runner probe throttle follows
+                # the sweep interval
+                policy.probe_interval_vs = self.canary_interval_s
+            RecoveryLadder(pool, telemetry=self.telemetry, policy=policy,
+                           on_evict=self._evict_node)
+
+    def _evict_node(self, node_id: str) -> None:
+        """L4 sink: with a cluster attached, evict + replace the node;
+        a bare gateway just stops routing to it."""
+        if self.on_evict is not None:
+            self.on_evict(node_id)
+        elif node_id in self.status:
+            self.mark_unreachable(node_id)
 
     # ---------------------------------------------------------- event mode
     def attach_loop(self, loop: EventLoop, *,
@@ -103,6 +138,9 @@ class Gateway:
             # sweep is re-armed on the new clock below
             self._health_timer.cancel()
             self._health_timer = None
+        if self._canary_timer is not None:
+            self._canary_timer.cancel()
+            self._canary_timer = None
         self._loop = loop
         self._release_cv = VirtualCondition(loop)
         for p in self.pools.values():
@@ -110,6 +148,9 @@ class Gateway:
         if health_checks and self._health_timer is None:
             self._health_timer = loop.call_later(
                 self.health_interval_s, self._health_tick, daemon=True)
+        if health_checks and self.canary_interval_s > 0:
+            self._canary_timer = loop.call_later(
+                self.canary_interval_s, self._canary_tick, daemon=True)
 
     def detach_loop(self) -> None:
         """Unbind the gateway and its pools from the event loop, restoring
@@ -118,6 +159,9 @@ class Gateway:
         if self._health_timer is not None:
             self._health_timer.cancel()
             self._health_timer = None
+        if self._canary_timer is not None:
+            self._canary_timer.cancel()
+            self._canary_timer = None
         for p in self.pools.values():
             p.detach_loop()
         with self._lock:
@@ -133,6 +177,16 @@ class Gateway:
         self._health_timer = self._loop.call_later(
             self.health_interval_s, self._health_tick, daemon=True)
 
+    def _canary_tick(self) -> None:
+        """Periodic canary sweep (§3.4): each pool's recovery ladder runs
+        the known-answer probe over its free runners, escalating silent
+        failures through quarantine/recreation up to node eviction."""
+        for _node, pool in list(self.pools.items()):
+            if pool.recovery is not None:
+                pool.recovery.canary_sweep()
+        self._canary_timer = self._loop.call_later(
+            self.canary_interval_s, self._canary_tick, daemon=True)
+
     # ------------------------------------------------------- dynamic pools
     def add_pool(self, pool: RunnerPool) -> None:
         """Attach a new executor node at runtime.
@@ -144,6 +198,7 @@ class Gateway:
         exhausted fleet see the new capacity at once."""
         if pool.node_id in self.pools or pool.node_id in self._retired:
             raise ValueError(f"node {pool.node_id!r} already attached")
+        self._ensure_recovery(pool)
         with self._lock:
             self.pools[pool.node_id] = pool
             self.status[pool.node_id] = NodeStatus()
@@ -184,8 +239,9 @@ class Gateway:
 
     def _record_wait(self, waited_vs: float) -> None:
         self._wait_window.append(waited_vs)
-        if self.telemetry is not None:
-            self.telemetry.observe("acquire_wait_vs", waited_vs)
+        # telemetry is always present: __init__ defaults to a private
+        # sink so the recovery ladders have somewhere to record MTTR
+        self.telemetry.observe("acquire_wait_vs", waited_vs)
 
     # ------------------------------------------------------------ routing
     def _affinity_order(self, task_id: str) -> list[str]:
@@ -381,6 +437,10 @@ class Gateway:
                         st.healthy = False
             report[node] = {**h, "healthy": st.healthy}
             pool.reclaim_leaked()
+            if pool.recovery is not None:
+                # proactive L1/L2: dead free runners are repaired by the
+                # sweep instead of waiting for an acquire to find them
+                pool.recovery.heal_free_dead()
         return report
 
     def mark_unreachable(self, node: str) -> None:

@@ -41,6 +41,11 @@ class LatencyModel:
     evaluate_s: float = 1.0
     sigma: float = 0.35
     hang_timeout_s: float = 20.0
+    # known-answer canary check (§3.4 silent-failure detection): a
+    # lightweight scripted reset/step against a precomputed observation
+    # checksum — much cheaper than a full reset, deterministic (no
+    # jitter) so probing never perturbs the replica's latency stream
+    canary_s: float = 0.25
 
     def sample(self, rng: random.Random, mean: float) -> float:
         return mean * lognorm_jitter(rng, self.sigma)
@@ -84,6 +89,12 @@ class SimOSReplica:
         self.task: Optional[dict] = None
         self.step_count = 0
         self.obs_nonce = 0
+        # the paper's silent failure mode: exhausted host kernel limits
+        # leave the VM "working" but corrupting every observation. A
+        # property of the VM's host allocation, so a reboot (fresh CoW
+        # overlay, same allocation) does NOT clear it — only recreation
+        # on a host with headroom does (recovery ladder L3).
+        self.silent_broken = False
 
     # ------------------------------------------------------------ lifecycle
     def boot(self) -> float:
@@ -152,7 +163,13 @@ class SimOSReplica:
         horizon = self.task.get("horizon", 15) if self.task else 15
         done = self.step_count >= horizon
         obs = self._observation()
-        return obs, 0.0, done, {"step": self.step_count}, dur
+        info: dict = {"step": self.step_count}
+        if self.silent_broken:
+            # persistent silent failure: the step "succeeds" but the
+            # observation is garbage — flagged in info only so the
+            # canary/benchmark layers can audit; the agent sees nothing
+            info["silent_corruption"] = True
+        return obs, 0.0, done, info, dur
 
     def evaluate(self) -> tuple[float, float]:
         self._require_alive()
@@ -176,9 +193,43 @@ class SimOSReplica:
             idx = self._rng.randrange(len(self.disk.blocks))
             self.disk.write_block(idx, tag)
 
+    def canary_probe(self) -> tuple[bool, float]:
+        """Known-answer health check (§3.4 silent-failure detection).
+
+        Runs a scripted no-op reset/step whose observation is exactly
+        predictable from ``(replica_id, obs_nonce, step_count)`` and
+        checksums it against :func:`expected_observation`. A healthy
+        replica reproduces the known answer bit-for-bit; a silently
+        broken one (kernel-limit corruption) cannot. Returns
+        ``(healthy, virtual_seconds)``; the cost is deterministic (no
+        jitter) so probing never advances the replica's RNG stream."""
+        cost = self.latency.canary_s
+        if not self.alive:
+            return False, cost
+        got = self._observation()
+        want = expected_observation(self.replica_id, self.obs_nonce,
+                                    self.step_count)
+        got_sum = hashlib.blake2b(got.tobytes(), digest_size=8).digest()
+        want_sum = hashlib.blake2b(want.tobytes(), digest_size=8).digest()
+        return got_sum == want_sum, cost
+
     def _observation(self) -> np.ndarray:
-        seed_bytes = hashlib.blake2b(
-            f"{self.replica_id}/{self.obs_nonce}/{self.step_count}".encode(),
-            digest_size=8).digest()
-        rng = np.random.default_rng(int.from_bytes(seed_bytes, "little"))
-        return rng.integers(0, 256, SCREEN, dtype=np.uint8)
+        if self.silent_broken:
+            # kernel-limit exhaustion: frames come back blank, silently
+            return np.zeros(SCREEN, np.uint8)
+        return expected_observation(self.replica_id, self.obs_nonce,
+                                    self.step_count)
+
+
+def expected_observation(replica_id: str, obs_nonce: int,
+                         step_count: int) -> np.ndarray:
+    """The known-answer observation a *healthy* replica must produce.
+
+    Pure function of the replica's visible state — the canary probe's
+    reference value. Kept module-level so detection code never needs a
+    healthy twin replica to compare against."""
+    seed_bytes = hashlib.blake2b(
+        f"{replica_id}/{obs_nonce}/{step_count}".encode(),
+        digest_size=8).digest()
+    rng = np.random.default_rng(int.from_bytes(seed_bytes, "little"))
+    return rng.integers(0, 256, SCREEN, dtype=np.uint8)

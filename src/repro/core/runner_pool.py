@@ -157,6 +157,11 @@ class ResourceGuard:
         return self._inflight
 
 
+# sentinel task id for runners the canary probe (or an in-place repair)
+# is holding out of circulation; release() ignores it like any stale lease
+PROBE_TASK_ID = "__probe__"
+
+
 @dataclass
 class Runner:
     runner_id: str
@@ -165,7 +170,19 @@ class Runner:
     task_id: Optional[str] = None
     deadline_vt: float = float("inf")   # leaked-task reclamation
     silent_broken: bool = False
+    broken_since_vt: Optional[float] = None   # detection-latency anchor
+    boot_vs: float = 0.0                # provisioning cost of last boot
+    last_probe_vt: float = float("-inf")      # canary cadence bookkeeping
     reclaim_timer: Optional[Timer] = field(default=None, repr=False)
+
+    def mark_silent_broken(self, vt: float = 0.0) -> None:
+        """Silently corrupt this runner (kernel-limit exhaustion): every
+        observation from here on is garbage, nothing raises. ``vt``
+        anchors the canary's detection-latency measurement."""
+        self.silent_broken = True
+        self.manager.replica.silent_broken = True
+        if self.broken_since_vt is None:
+            self.broken_since_vt = vt
 
 
 class RunnerPool:
@@ -197,6 +214,14 @@ class RunnerPool:
         self._vt = 0.0                   # pool-local virtual clock
         self._loop: Optional[EventLoop] = None
         self._ev_cv: Optional[VirtualCondition] = None
+        # multi-layer fault recovery (§3.4): installed via
+        # attach_recovery() — typically by the Gateway, which builds a
+        # repro.recovery.RecoveryLadder per pool. Without one, release
+        # falls back to bare in-place recovery as before.
+        self.recovery = None
+        self.evicted = False             # L4: node removed from routing
+        self.quarantined: list[Runner] = []
+        self._quarantined_ids: set[str] = set()
         # cluster hook: a live per-host CPU-contention factor (>= 1.0)
         # multiplying every replica operation's virtual latency — see
         # repro.cluster.host.Host.contention_factor
@@ -217,8 +242,12 @@ class RunnerPool:
             ok = self.host.allocate_vm(rep.resources.ram_limit_gb)
             boot_s = rep.boot()
             runner = Runner(rid, ReplicaStateManager(rep))
-            runner.silent_broken = not ok
+            runner.boot_vs = boot_s
+            if not ok:
+                runner.mark_silent_broken(self.vt)
             self.prewarm_seconds += boot_s
+            if self.recovery is not None:
+                self.recovery.watch(runner)
             return runner
         finally:
             self.guard.end_creation()
@@ -272,6 +301,16 @@ class RunnerPool:
             r.manager.close()
         return len(retired)
 
+    # ----------------------------------------------------------- recovery
+    def attach_recovery(self, ladder) -> None:
+        """Install a ``repro.recovery.RecoveryLadder`` on this pool.
+
+        The ladder takes over release-path healing (L1→L2 escalation),
+        reboots reclaimed runners from the CoW base, and is the target
+        of the gateway's periodic canary sweep (silent-failure
+        detection, L3 quarantine/recreation, L4 eviction)."""
+        self.recovery = ladder
+
     # --------------------------------------------------------- event mode
     def attach_loop(self, loop: EventLoop,
                     release_cv: Optional[VirtualCondition] = None) -> None:
@@ -311,10 +350,17 @@ class RunnerPool:
         r.task_id = task_id
         r.deadline_vt = self.vt + self.task_timeout_vs
         if self._loop is not None:
-            # leak guard: fires only if the task never releases the runner
+            # leak guard: fires only if the task never releases the
+            # runner. Scheduled at *exactly* the deadline — no epsilon
+            # fudge: reclaim_leaked treats vt == deadline as leaked, and
+            # the event loop's (time, sequence) ordering is the
+            # deterministic tie-break. A timer armed here at acquire
+            # time always carries a lower sequence number than a release
+            # event scheduled later for the same timestamp, so a release
+            # landing exactly at the deadline loses to reclamation and
+            # degrades to a stale no-op — never a double-issue race.
             r.reclaim_timer = self._loop.call_later(
-                self.task_timeout_vs * (1 + 1e-9), self.reclaim_leaked,
-                daemon=True)
+                self.task_timeout_vs, self.reclaim_leaked, daemon=True)
         return r
 
     def acquire(self, task_id: str, timeout: Optional[float] = None
@@ -376,29 +422,49 @@ class RunnerPool:
         second time — that would hand one replica to two episodes. Pass
         ``task_id`` to make the staleness check exact; without it, a
         runner that is no longer busy is treated as stale."""
+        quarantine_after = False
         with self._cv:
             if not runner.busy or (task_id is not None
                                    and runner.task_id != task_id):
                 return 0.0
             dur = 0.0
-            if recycle and not runner.manager.replica.alive:
+            quarantine_after = (self.recovery is not None
+                                and self.evicted and runner.silent_broken)
+            if recycle and not quarantine_after:
                 # under the pool lock so reclamation cannot observe the
-                # runner mid-recovery
-                dur += runner.manager.recover_if_needed()
+                # runner mid-recovery; the ladder escalates L1 -> L2 when
+                # in-place recovery does not bring the replica back
+                if self.recovery is not None:
+                    dur += self.recovery.heal(runner)
+                elif not runner.manager.replica.alive:
+                    dur += runner.manager.recover_if_needed()
             runner.busy = False
             runner.task_id = None
             runner.deadline_vt = float("inf")
             if runner.reclaim_timer is not None:
                 runner.reclaim_timer.cancel()
                 runner.reclaim_timer = None
-            self._free.append(runner)
-            self._cv.notify()
+            if not quarantine_after:
+                self._free.append(runner)
+                self._cv.notify()
+        if quarantine_after:
+            # the node was evicted (L4) while this lease was in flight:
+            # a silently-broken runner returning to a dead node is
+            # quarantined on the spot instead of going back to free
+            self.quarantine(runner)
+            self.recovery.note_quarantined(runner)
+            return dur
         if self._ev_cv is not None:
             # wake every virtual waiter: waiters carry per-episode node
             # exclusions, so the frontmost one may refuse this runner and a
             # single notify would strand it (lost wakeup); refused waiters
             # just re-check and re-park, which is cheap on the loop
             self._ev_cv.notify_all()
+        if recycle and self.recovery is not None:
+            # release-path canary (throttled to the probe interval): a
+            # saturated fleet re-leases runners instantly, so this is the
+            # only point where a busy silently-broken runner is ever seen
+            dur += self.recovery.maybe_probe_released(runner)
         return dur
 
     def advance_time(self, dt: float) -> None:
@@ -406,24 +472,142 @@ class RunnerPool:
             self._vt += dt
 
     def reclaim_leaked(self) -> list[str]:
-        """Reclaim runners whose task exceeded the timeout (leaked)."""
+        """Reclaim runners whose task reached the timeout (leaked).
+
+        ``vt >= deadline`` (not strict ``>``): the reclaim timer fires at
+        exactly the deadline, and at-deadline ties resolve by the event
+        loop's sequence order — see ``_take_locked``. With a recovery
+        ladder attached, a leaked task marks the VM suspect: the runner
+        is rebooted from the CoW base (L2) and, on the event loop, only
+        returns to service once the reboot's virtual latency has
+        elapsed. In thread mode the reboot completes synchronously and
+        the runner frees immediately: the pool-local clock has no
+        scheduler to defer availability on, and nudging it forward would
+        prematurely expire every other lease's deadline — the repair
+        still lands in MTTR telemetry, like every thread-mode duration
+        that has no caller to charge. The event-driven path is the
+        faithful one, as everywhere else at scale."""
         reclaimed = []
+        rebooting: list[tuple[Runner, float]] = []
         with self._cv:
             for r in self._all.values():
-                if r.busy and self.vt > r.deadline_vt:
-                    r.busy = False
+                if r.busy and r.task_id != PROBE_TASK_ID \
+                        and self.vt >= r.deadline_vt:
                     tid, r.task_id = r.task_id, None
+                    r.busy = False
                     r.deadline_vt = float("inf")
                     if r.reclaim_timer is not None:
                         r.reclaim_timer.cancel()
                         r.reclaim_timer = None
-                    self._free.append(r)
+                    dur = 0.0
+                    if self.recovery is not None:
+                        dur = self.recovery.on_reclaimed(r)
+                    if dur > 0 and self._loop is not None:
+                        # hold the runner out of service while it reboots
+                        r.busy = True
+                        r.task_id = PROBE_TASK_ID
+                        rebooting.append((r, dur))
+                    else:
+                        self._free.append(r)
                     reclaimed.append(tid)
             if reclaimed:
                 self._cv.notify_all()
+        for r, dur in rebooting:
+            self._loop.call_later(dur, self._finish_probe, r)
         if reclaimed and self._ev_cv is not None:
             self._ev_cv.notify_all()    # see release(): exclusion-aware wake
         return reclaimed
+
+    # ----------------------------------------- canary / quarantine plumbing
+    def free_runners(self) -> list[Runner]:
+        """Snapshot of the free deque (canary sweep iteration order)."""
+        with self._lock:
+            return list(self._free)
+
+    def hold_for_probe(self, runner: Runner) -> bool:
+        """Take one specific *free* runner out of circulation for a canary
+        probe or an in-place repair. Returns False if it is no longer
+        free (a concurrent acquire won the race)."""
+        with self._cv:
+            try:
+                self._free.remove(runner)
+            except ValueError:
+                return False
+            runner.busy = True
+            runner.task_id = PROBE_TASK_ID
+            return True
+
+    def end_probe(self, runner: Runner, after_vs: float = 0.0) -> None:
+        """Return a held runner to service after ``after_vs`` virtual
+        seconds (probe + repair latency) on the event loop; immediately
+        in thread mode, where callers account durations themselves."""
+        if self._loop is not None and after_vs > 0:
+            self._loop.call_later(after_vs, self._finish_probe, runner)
+        else:
+            self._finish_probe(runner)
+
+    def _finish_probe(self, runner: Runner) -> None:
+        with self._cv:
+            if runner.runner_id not in self._all \
+                    or runner.task_id != PROBE_TASK_ID:
+                return    # quarantined (or re-issued) while held
+            runner.busy = False
+            runner.task_id = None
+            self._free.append(runner)
+            self._cv.notify()
+        if self._ev_cv is not None:
+            self._ev_cv.notify_all()
+
+    def quarantine(self, runner: Runner) -> None:
+        """Permanently remove a broken runner from service (ladder L3/L4).
+
+        The runner leaves the issue tables, its VM's RAM and kernel
+        resources return to the host (so a replacement allocation can
+        succeed where this one silently failed), and its manager closes.
+        Works on runners that were never registered too — a ``recreate``
+        replacement born broken still holds a VM allocation that must be
+        freed. Quarantined runners never serve a trajectory again."""
+        with self._cv:
+            if runner.runner_id in self._quarantined_ids:
+                return
+            self._quarantined_ids.add(runner.runner_id)
+            self._all.pop(runner.runner_id, None)
+            try:
+                self._free.remove(runner)
+            except ValueError:
+                pass
+            runner.busy = False
+            runner.task_id = None
+            runner.deadline_vt = float("inf")
+            if runner.reclaim_timer is not None:
+                runner.reclaim_timer.cancel()
+                runner.reclaim_timer = None
+            self.quarantined.append(runner)
+        self.host.free_vm(runner.manager.replica.resources.ram_limit_gb)
+        runner.manager.close()
+
+    def recreate(self, runner: Runner) -> tuple[Optional[Runner], float]:
+        """Quarantine ``runner`` and build a replacement on a fresh VM
+        allocation (ladder L3). The replacement is *not* yet in service:
+        the caller charges its boot latency on the virtual clock and then
+        calls ``put_in_service``. Returns ``(replacement, boot_vs)`` —
+        ``(None, 0.0)`` when the resource guard refuses the creation."""
+        self.quarantine(runner)
+        r = self._make_runner(self._next_idx)
+        if r is None:
+            return None, 0.0
+        self._next_idx += 1
+        return r, r.boot_vs
+
+    def put_in_service(self, runner: Runner) -> None:
+        """Register a ``recreate``d runner once its boot has been charged;
+        it becomes acquirable immediately."""
+        with self._cv:
+            self._all[runner.runner_id] = runner
+            self._free.append(runner)
+            self._cv.notify()
+        if self._ev_cv is not None:
+            self._ev_cv.notify_all()
 
     # ------------------------------------------------------------ metrics
     @property
@@ -446,10 +630,23 @@ class RunnerPool:
         return max(self.latency_scale_fn(), 1.0)
 
     def health(self) -> dict:
-        alive = sum(1 for r in self._all.values()
-                    if r.manager.replica.alive)
+        alive = 0
+        broken = 0
+        healthy = 0
+        with self._lock:
+            for r in self._all.values():
+                if r.manager.replica.alive:
+                    alive += 1
+                    if not r.silent_broken:
+                        healthy += 1
+                if r.silent_broken:
+                    broken += 1
+            n_quarantined = len(self.quarantined)
         return {"node": self.node_id, "size": self.size, "alive": alive,
                 "free": self.n_free,
+                "healthy": healthy,
+                "silent_broken": broken,
+                "quarantined": n_quarantined,
                 "ram_used_gb": self.host.ram_used_gb,
                 "blocked_creations": self.blocked_creations}
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 import enum
 import threading
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 from repro.core.faults import FaultType, ReplicaError, RetryPolicy
 from repro.core.replica import SimOSReplica
@@ -56,6 +56,15 @@ class ReplicaStateManager:
         self.state = ManagerState.COLD
         self.stats = ManagerStats()
         self._lock = threading.Lock()  # per-replica only — no global locks
+        # recovery-ladder hook: (layer, virtual_seconds) per recovery
+        # action — "l0" step retries, "l1" autonomous in-place recovery,
+        # "l2" forced reboots. Installed by repro.recovery.RecoveryLadder
+        # so per-layer MTTR lands in telemetry; None costs nothing.
+        self.recovery_observer: Optional[Callable[[str, float], None]] = None
+
+    def _note_recovery(self, layer: str, dur: float) -> None:
+        if self.recovery_observer is not None:
+            self.recovery_observer(layer, dur)
 
     # ------------------------------------------------------------- public
     def configure(self, task: dict) -> float:
@@ -104,9 +113,11 @@ class ReplicaStateManager:
                         self.stats.virtual_seconds += total
                         raise TaskAborted(self.replica.replica_id,
                                           total) from e
-                    total += self.retry.backoff(attempt)
+                    backoff = self.retry.backoff(attempt)
+                    total += backoff
                     attempt += 1
                     self.stats.retries += 1
+                    self._note_recovery("l0", backoff)
 
     def evaluate(self) -> tuple[float, float]:
         with self._lock:
@@ -137,7 +148,7 @@ class ReplicaStateManager:
     def _health_check(self) -> bool:
         return self.replica.alive
 
-    def _recover(self) -> float:
+    def _recover(self, layer: str = "l1") -> float:
         """Autonomous local recovery: re-clone disk, reboot, reconfigure."""
         self.state = ManagerState.RECOVERING
         dur = self.replica.boot()             # reflink clone + boot
@@ -145,6 +156,7 @@ class ReplicaStateManager:
             dur += self.replica.configure(self.replica.task)
         self.stats.recoveries += 1
         self.state = ManagerState.READY
+        self._note_recovery(layer, dur)
         return dur
 
     def recover_if_needed(self) -> float:
@@ -152,6 +164,18 @@ class ReplicaStateManager:
             if self._health_check():
                 return 0.0
             return self._recover()
+
+    def force_reboot(self) -> float:
+        """L2: unconditional reboot from the shared CoW base image.
+
+        Unlike ``recover_if_needed`` this runs even when the replica
+        reports alive — the recovery ladder uses it for wedged or
+        suspect VMs (leaked tasks, checksum mismatches): the current
+        overlay is dropped and a fresh reflink clone of the base is
+        booted and reconfigured, charging the provisioning latency."""
+        with self._lock:
+            self.replica.crash()              # drop the suspect state
+            return self._recover(layer="l2")
 
 
 class TaskAborted(RuntimeError):

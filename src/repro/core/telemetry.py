@@ -72,6 +72,16 @@ class Telemetry:
             xs = list(self._series.get(name, []))
         return self._summarize(xs)
 
+    def summaries(self, prefix: str) -> dict:
+        """Summaries of every series whose name starts with ``prefix``
+        (e.g. ``summaries("recovery_mttr_vs:")`` → per-layer MTTR). Keys
+        are the suffixes after the prefix, sorted for stable output."""
+        with self._lock:
+            matched = {k[len(prefix):]: list(v)
+                       for k, v in self._series.items()
+                       if k.startswith(prefix)}
+        return {k: self._summarize(matched[k]) for k in sorted(matched)}
+
     @staticmethod
     def _summarize(xs: list[float]) -> dict:
         if not xs:

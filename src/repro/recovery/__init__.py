@@ -1,0 +1,22 @@
+"""Multi-layer fault recovery (§3.4): the live escalation ladder.
+
+The paper's fourth pillar as one subsystem: step retries (L0) and
+autonomous in-place manager recovery (L1) escalate through forced VM
+reboots from the shared CoW base image (L2), canary-driven quarantine
+and runner recreation (L3 — the layer that finally catches *silent*
+failures at runtime), up to node eviction with cluster-side replacement
+(L4). ``RecoveryLadder`` binds one pool's layers together; the gateway
+installs one per pool and drives the periodic canary sweep.
+"""
+
+from repro.recovery.canary import ProbeResult, probe_runner
+from repro.recovery.ladder import LAYERS, MTTR_PREFIX, RecoveryLadder, RecoveryPolicy
+
+__all__ = [
+    "LAYERS",
+    "MTTR_PREFIX",
+    "ProbeResult",
+    "RecoveryLadder",
+    "RecoveryPolicy",
+    "probe_runner",
+]

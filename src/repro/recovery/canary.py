@@ -1,0 +1,42 @@
+"""Canary probe: known-answer detection of silent replica failures.
+
+Silent failures are the §3.4 failure mode that no retry or health check
+catches: a replica whose host exhausted an untuned kernel limit keeps
+"succeeding" while corrupting every observation, so trajectories rot
+without a single exception. The only way to see it is to *ask a question
+whose answer is known*: the probe runs a scripted no-op reset/step whose
+observation is exactly predictable from the replica's visible state and
+checksums the frame against :func:`repro.core.replica.expected_observation`.
+
+A probe costs ``LatencyModel.canary_s`` deterministic virtual seconds
+(no jitter — probing never perturbs a replica's latency RNG stream) and
+only ever touches *free* runners, so detection latency is bounded by the
+sweep interval plus the time a broken runner spends leased.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.runner_pool import Runner
+
+
+@dataclass(frozen=True)
+class ProbeResult:
+    healthy: bool
+    reason: str  # "ok" | "dead" | "checksum"
+    cost_vs: float  # deterministic virtual seconds the probe took
+
+
+def probe_runner(runner: Runner) -> ProbeResult:
+    """One known-answer probe against a runner's replica.
+
+    ``dead`` means the replica is not even alive (crash/hang the health
+    layer has not repaired yet) — an L1 matter. ``checksum`` means the
+    replica answered, but wrongly: the silent failure mode, which only
+    recreation on a host with kernel-limit headroom truly fixes."""
+    rep = runner.manager.replica
+    if not rep.alive:
+        return ProbeResult(False, "dead", rep.latency.canary_s)
+    healthy, cost = rep.canary_probe()
+    return ProbeResult(healthy, "ok" if healthy else "checksum", cost)

@@ -1,0 +1,312 @@
+"""``RecoveryLadder``: one pool's multi-layer fault-recovery escalation.
+
+The paper's §3.4 recovery layers, unified behind one object per pool:
+
+- **L0 — step retry.** Owned by ``RetryPolicy`` inside the state
+  manager; the ladder instruments every manager so each retry's backoff
+  lands in telemetry as L0 repair time.
+- **L1 — in-place manager recovery.** ``recover_if_needed`` on the
+  release path and on dead free runners found by the health sweep.
+- **L2 — VM reboot from the shared CoW base.** ``force_reboot``: the
+  suspect overlay is dropped, a fresh reflink clone of the base image is
+  booted and reconfigured, and the provisioning latency is charged on
+  the virtual clock. Applied to runners whose task leaked (reclaimed)
+  and as the next rung when L1 leaves the replica unhealthy.
+- **L3 — runner recreation with quarantine.** Driven by the canary
+  probes: a runner that fails the known-answer checksum even after a
+  reboot is *silently broken* (kernel-limit exhaustion — a property of
+  its VM allocation, unfixable by rebooting). It is quarantined
+  permanently, its VM's kernel resources return to the host, and a
+  replacement boots on a fresh allocation.
+- **L4 — node eviction.** When recreation keeps producing broken
+  runners the host itself is exhausted: the ladder evicts the node via
+  its ``on_evict`` callback (the cluster control plane replaces the
+  capacity elsewhere; a bare gateway just stops routing to it).
+
+Every repair observes ``recovery_mttr_vs:<layer>`` in telemetry, and
+every canary detection observes ``silent_detection_latency_vs`` against
+the instant the runner broke — the Fig. 6 recovery benchmark's per-layer
+MTTR table reads straight out of these series.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.runner_pool import Runner, RunnerPool
+from repro.core.telemetry import Telemetry
+from repro.recovery.canary import ProbeResult, probe_runner
+
+LAYERS = ("l0", "l1", "l2", "l3", "l4")
+MTTR_PREFIX = "recovery_mttr_vs:"
+
+
+@dataclass
+class RecoveryPolicy:
+    """Escalation thresholds for one pool's ladder."""
+
+    # consecutive L3 recreations that came back broken before the node
+    # is declared exhausted and evicted (L4)
+    evict_after_failed_recreates: int = 3
+    # per-runner canary cadence: a runner is checksummed at most this
+    # often. The periodic sweep covers idle runners; the release-path
+    # probe covers runners a saturated fleet re-leases instantly (they
+    # are never free when a sweep fires), so detection latency stays
+    # bounded by one interval plus a single lease under any load.
+    probe_interval_vs: float = 15.0
+
+
+class RecoveryLadder:
+    """Escalating repair for one pool; see module docstring."""
+
+    def __init__(
+        self,
+        pool: RunnerPool,
+        *,
+        telemetry: Optional[Telemetry] = None,
+        policy: Optional[RecoveryPolicy] = None,
+        on_evict: Optional[Callable[[str], None]] = None,
+    ):
+        self.pool = pool
+        self.telemetry = telemetry or Telemetry()
+        self.policy = policy or RecoveryPolicy()
+        self.on_evict = on_evict
+        self.layer_events = {layer: 0 for layer in LAYERS}
+        self.detected_at: dict[str, float] = {}  # runner_id -> vt
+        self.quarantined_at: dict[str, float] = {}  # runner_id -> vt
+        self._failed_recreates = 0  # consecutive, the L4 fuse
+        for r in list(pool._all.values()):
+            self.watch(r)
+        pool.attach_recovery(self)
+
+    # ---------------------------------------------------- instrumentation
+    def watch(self, runner: Runner) -> None:
+        """Route a manager's L0/L1/L2 repairs into per-layer telemetry."""
+        runner.manager.recovery_observer = self._observe
+
+    def _observe(self, layer: str, dur: float) -> None:
+        self.layer_events[layer] += 1
+        self.telemetry.observe(MTTR_PREFIX + layer, dur)
+        self.telemetry.count(f"recovery_events:{layer}")
+
+    # ------------------------------------------------------- release path
+    def heal(self, runner: Runner) -> float:
+        """L1 with L2 escalation, on the pool's recycle-release path.
+
+        Called under the pool lock (like the bare ``recover_if_needed``
+        it replaces) so reclamation cannot observe the runner
+        mid-recovery. Returns the repair's virtual seconds."""
+        mgr = runner.manager
+        if mgr.replica.alive:
+            return 0.0
+        dur = mgr.recover_if_needed()  # L1
+        if not mgr.replica.alive:  # L1 did not stick -> L2
+            dur += mgr.force_reboot()
+        return dur
+
+    def on_reclaimed(self, runner: Runner) -> float:
+        """A leaked task marks the VM wedged: reboot from the CoW base
+        (L2) before the runner serves again."""
+        return runner.manager.force_reboot()
+
+    # ------------------------------------------------------- health sweep
+    def heal_free_dead(self) -> int:
+        """Health-sweep hook: proactively repair dead *free* runners
+        instead of waiting for an acquire to trip over them. On the
+        event loop each repaired runner returns to service only after
+        its recovery latency has elapsed."""
+        pool = self.pool
+        healed = 0
+        for r in pool.free_runners():
+            if r.manager.replica.alive:
+                continue
+            if not pool.hold_for_probe(r):
+                continue
+            pool.end_probe(r, after_vs=self.heal(r))
+            healed += 1
+        return healed
+
+    # ------------------------------------------------------- canary sweep
+    def canary_sweep(self) -> dict:
+        """Probe every free runner with the known-answer check and
+        escalate failures: L1 -> L2 -> L3 (quarantine + recreate) -> L4
+        (evict). Returns a sweep report for tests and benchmarks.
+
+        Healthy runners are probed *in place* (the check piggybacks the
+        health plane's sweep; its cost shows up in the
+        ``canary_probe_vs`` series, never as scheduling interference —
+        holding healthy runners would perturb the task->runner mapping
+        of a saturated fleet). An *unhealthy* runner is taken out of
+        circulation and only returns once its actual repair latency has
+        elapsed on the virtual clock."""
+        pool = self.pool
+        now = pool.vt
+        report = {
+            "probed": 0,
+            "detected": 0,
+            "healed": 0,
+            "recreated": 0,
+            "quarantined": 0,
+            "evicted": False,
+        }
+        for runner in pool.free_runners():
+            if pool.evicted:
+                break
+            if now - runner.last_probe_vt < self.policy.probe_interval_vs:
+                continue  # the per-runner cadence bound: a runner probed
+                #           recently (e.g. on release) is not re-probed
+            res = probe_runner(runner)
+            runner.last_probe_vt = now
+            report["probed"] += 1
+            self.telemetry.observe("canary_probe_vs", res.cost_vs)
+            if res.healthy:
+                continue
+            if not pool.hold_for_probe(runner):
+                continue  # an acquire won the race; probe next sweep
+            outcome, _dur = self._escalate_held(runner, res, now)
+            if outcome in report:
+                report[outcome] += 1
+            if res.reason == "checksum":
+                report["detected"] += 1
+            if pool.evicted:
+                report["evicted"] = True
+        return report
+
+    def maybe_probe_released(self, runner: Runner) -> float:
+        """Release-path canary (called by the pool right after a recycle
+        release puts the runner back in the free set).
+
+        A saturated fleet re-leases runners the instant they free, so
+        the periodic sweep — which only sees *idle* runners — would
+        never probe them and a silently-broken runner could corrupt
+        trajectories indefinitely. This hook checksums the released
+        runner when its last probe is older than the canary interval;
+        healthy runners are probed in place (no scheduling
+        interference), unhealthy ones are pulled straight into the
+        escalation path. Returns the repair's virtual seconds."""
+        pool = self.pool
+        now = pool.vt
+        if now - runner.last_probe_vt < self.policy.probe_interval_vs:
+            return 0.0
+        if not pool.hold_for_probe(runner):
+            return 0.0  # already re-leased; probed at its next release
+        # hold BEFORE probing: in thread mode a waiter can lease the
+        # just-freed runner concurrently, and a probe racing a live
+        # step() would read torn obs_nonce/step_count and flag a healthy
+        # replica. Held probes are race-free in both modes; a healthy
+        # runner returns to the same end-of-deque slot with zero virtual
+        # cost, so event-mode schedules are unperturbed.
+        res = probe_runner(runner)
+        runner.last_probe_vt = now
+        self.telemetry.observe("canary_probe_vs", res.cost_vs)
+        if res.healthy:
+            pool.end_probe(runner)
+            return 0.0
+        _outcome, dur = self._escalate_held(runner, res, now)
+        return dur
+
+    def _escalate_held(
+        self, runner: Runner, res: ProbeResult, now: float
+    ) -> tuple[str, float]:
+        """L1 -> L2 -> L3 -> L4 escalation for a runner that failed its
+        probe and is already held out of circulation. Returns
+        ``(outcome, repair_virtual_seconds)``; outcome is ``"healed"``,
+        ``"recreated"``, or ``"quarantined"`` (recreation refused or
+        born broken)."""
+        pool = self.pool
+        dur = res.cost_vs
+        mgr = runner.manager
+        if res.reason == "checksum":
+            self.note_detected(runner, now)
+        if not mgr.replica.alive:
+            dur += mgr.recover_if_needed()  # L1
+        if not self._recheck_ok(runner):
+            dur += mgr.force_reboot()  # L2
+            dur += mgr.replica.latency.canary_s  # verification probe
+        if self._recheck_ok(runner):
+            pool.end_probe(runner, after_vs=dur)
+            return "healed", dur
+        # L3: the corruption survives reboots — quarantine the runner
+        # and recreate it on a fresh VM allocation
+        replacement, boot_vs = pool.recreate(runner)
+        self.note_quarantined(runner, now)
+        self._observe("l3", dur + boot_vs)
+        if replacement is None:
+            # resource-guard refusal: transient RAM pressure, not kernel
+            # exhaustion — it must NOT arm the eviction fuse (the node is
+            # not evidently broken, just momentarily tight); the pool
+            # shrinks by one until capacity frees up
+            self.telemetry.count("recreations_refused")
+            return "quarantined", dur
+        if probe_runner(replacement).healthy:
+            self._failed_recreates = 0
+            if pool._loop is not None and boot_vs > 0:
+                # provisioning latency on the virtual clock: the
+                # replacement serves only once its boot completes
+                pool._loop.call_later(boot_vs, pool.put_in_service, replacement)
+            else:
+                pool.put_in_service(replacement)
+            return "recreated", dur
+        # born broken: the host's kernel limits are still exhausted
+        self._failed_recreates += 1
+        pool.quarantine(replacement)
+        self.note_quarantined(replacement, now)
+        if self._failed_recreates >= self.policy.evict_after_failed_recreates:
+            self.evict(now)  # L4
+        return "quarantined", dur
+
+    def _recheck_ok(self, runner: Runner) -> bool:
+        rep = runner.manager.replica
+        return rep.alive and rep.canary_probe()[0]
+
+    # ----------------------------------------------------------- L4 evict
+    def evict(self, now: Optional[float] = None) -> None:
+        """Declare this node exhausted: stop routing to it, quarantine
+        its remaining broken free runners (leased broken runners are
+        quarantined as their leases release), and hand the node to the
+        ``on_evict`` sink — the cluster control plane replaces the
+        capacity on other hosts."""
+        pool = self.pool
+        if pool.evicted:
+            return
+        now = pool.vt if now is None else now
+        pool.evicted = True
+        self.layer_events["l4"] += 1
+        self.telemetry.count("nodes_evicted")
+        for r in pool.free_runners():
+            if r.silent_broken:
+                pool.quarantine(r)
+                self.note_quarantined(r, now)
+        if self.on_evict is not None:
+            self.on_evict(pool.node_id)
+
+    # --------------------------------------------------------- accounting
+    def note_detected(self, runner: Runner, now: Optional[float] = None) -> None:
+        """First detection of a silently-broken runner: observe the
+        detection latency against the instant it broke."""
+        if runner.runner_id in self.detected_at:
+            return
+        now = self.pool.vt if now is None else now
+        self.detected_at[runner.runner_id] = now
+        anchor = runner.broken_since_vt if runner.broken_since_vt is not None else now
+        self.telemetry.observe("silent_detection_latency_vs", now - anchor)
+        self.telemetry.count("canary_detections")
+
+    def note_quarantined(self, runner: Runner, now: Optional[float] = None) -> None:
+        if runner.runner_id in self.quarantined_at:
+            return
+        now = self.pool.vt if now is None else now
+        self.note_detected(runner, now)
+        self.quarantined_at[runner.runner_id] = now
+        self.telemetry.count("runners_quarantined")
+
+    def summary(self) -> dict:
+        """Ladder state snapshot (tests / benchmark reporting)."""
+        return {
+            "node": self.pool.node_id,
+            "layer_events": dict(self.layer_events),
+            "detected": len(self.detected_at),
+            "quarantined": len(self.quarantined_at),
+            "evicted": self.pool.evicted,
+        }

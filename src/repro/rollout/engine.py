@@ -86,6 +86,11 @@ class EpisodeResult:
     nodes: tuple = ()
     virtual_seconds: float = 0.0
     error: str = ""
+    # silent-failure audit trail (§3.4): True when any step of the
+    # successful attempt reported silent_corruption — the observation
+    # stream is garbage even though every call "succeeded"
+    corrupted: bool = False
+    runner_id: str = ""          # runner that served the successful attempt
 
 
 @dataclass
@@ -99,6 +104,11 @@ class RolloutReport:
     virtual_seconds: float = 0.0    # summed per-episode env time
     virtual_makespan: float = 0.0   # event mode: fleet clock at completion
     wall_seconds: float = 0.0
+    corrupted: int = 0              # trajectories written with corrupt obs
+    # event mode: (runner_id, write_vt) per corrupted trajectory — the
+    # recovery benchmark audits these against the ladder's quarantine
+    # times (nothing may be written *after* its runner was quarantined)
+    corrupted_writes: list = field(default_factory=list)
     results: list[EpisodeResult] = field(default_factory=list)
 
     def trajectories_per_min(self, n_replicas: int) -> float:
@@ -135,6 +145,7 @@ class RolloutEngine:
         self._lock = threading.Lock()
         self._report = RolloutReport()
         self._stop = threading.Event()
+        self._loop: Optional[EventLoop] = None   # set during event runs
 
     # ---------------------------------------------------------------- public
     def run(self, tasks: Sequence) -> RolloutReport:
@@ -229,11 +240,13 @@ class RolloutEngine:
                 try:
                     traj, steps, score, vs = self._attempt(
                         task, scenario, runner,
-                        scale=self.gateway.pools[node].latency_scale)
+                        scale=self.gateway.pools[node].latency_scale,
+                        result=result)
                     result.ok = True
                     result.steps = steps
                     result.score = score
                     result.virtual_seconds += vs
+                    result.runner_id = runner.runner_id
                     break
                 except TaskAborted as e:
                     result.virtual_seconds += e.virtual_seconds
@@ -253,6 +266,8 @@ class RolloutEngine:
                 # backpressure must not idle fleet capacity
                 self.writer.write(traj)
                 self.telemetry.count("episodes_completed")
+                if result.corrupted:
+                    self.telemetry.count("corrupted_trajectories")
             return result
         except Exception as e:   # keep one bad episode from sinking the run
             result.error = f"{type(e).__name__}: {e}"
@@ -262,7 +277,7 @@ class RolloutEngine:
             self._settle(result)
 
     def _attempt(self, task: dict, scenario: Scenario, runner, *,
-                 scale: Callable[[], float] = None
+                 scale: Callable[[], float] = None, result=None
                  ) -> tuple[Trajectory, int, float, float]:
         """One full configure → reset → operate → evaluate pass.
 
@@ -274,6 +289,9 @@ class RolloutEngine:
         sc = scale or _unit_scale
         mgr = runner.manager
         vs = 0.0
+        if result is not None:
+            result.corrupted = False    # per-attempt: a clean failover
+            #                             retry clears a poisoned attempt
         try:
             vs = mgr.configure(task) * sc() + oh()
             obs, dur = mgr.reset()
@@ -284,9 +302,11 @@ class RolloutEngine:
             done = False
             while not done and len(steps) < cap:
                 thought, action = scenario.policy(obs, len(steps))
-                obs, _rew, done, _info, dur = mgr.step(action)
+                obs, _rew, done, info, dur = mgr.step(action)
                 dur = dur * sc() + oh()
                 vs += dur
+                if info.get("silent_corruption") and result is not None:
+                    result.corrupted = True
                 steps.append(TrajectoryStep(obs, thought, action))
                 self.telemetry.count("steps")
                 self.telemetry.observe("step_latency_vs", dur)
@@ -310,6 +330,8 @@ class RolloutEngine:
             if result.ok:
                 rep.completed += 1
                 rep.total_steps += result.steps
+                if result.corrupted:
+                    rep.corrupted += 1
             else:
                 rep.failed += 1
 
@@ -344,6 +366,7 @@ class RolloutEngine:
                 "arrivals must give one virtual time per task"
             assert all(b >= a for a, b in zip(arrivals, arrivals[1:])), \
                 "arrivals must be ascending"
+        self._loop = loop
         if self.cluster is not None:
             # binds the gateway too, plus the autoscaler + gauge daemons
             self.cluster.attach_loop(loop)
@@ -403,6 +426,7 @@ class RolloutEngine:
         finally:
             # restore thread-mode semantics (wall-clock health stamps,
             # pool-local virtual time) for any subsequent run()
+            self._loop = None
             if self.cluster is not None:
                 self.cluster.detach_loop()
             else:
@@ -439,11 +463,13 @@ class RolloutEngine:
                 try:
                     traj, steps, score, vs = yield from self._attempt_ev(
                         task, scenario, runner,
-                        scale=self.gateway.pools[node].latency_scale)
+                        scale=self.gateway.pools[node].latency_scale,
+                        result=result)
                     result.ok = True
                     result.steps = steps
                     result.score = score
                     result.virtual_seconds += vs
+                    result.runner_id = runner.runner_id
                     break
                 except TaskAborted as e:
                     result.virtual_seconds += e.virtual_seconds
@@ -462,15 +488,24 @@ class RolloutEngine:
                 # virtual time via the feeder's saturated() check
                 gate.write(traj)
                 self.telemetry.count("episodes_completed")
+                if result.corrupted:
+                    self.telemetry.count("corrupted_trajectories")
+                    with self._lock:
+                        self._report.corrupted_writes.append(
+                            (result.runner_id, self._loop.now))
         except Exception as e:   # keep one bad episode from sinking the run
             result.error = f"{type(e).__name__}: {e}"
         finally:
+            if result.ok and self._loop is not None:
+                # completion timestamps drive windowed throughput metrics
+                # (steady-state vs recovery-window rates in Fig. 6)
+                self.telemetry.observe("completion_vt", self._loop.now)
             self._exit()
             self._settle(result)
             wake.notify_all()
 
     def _attempt_ev(self, task: dict, scenario: Scenario, runner, *,
-                    scale: Callable[[], float] = None):
+                    scale: Callable[[], float] = None, result=None):
         """Cooperative twin of ``_attempt``: each operation's virtual cost
         is slept on the loop, so concurrent episodes interleave exactly as
         a real fleet's latencies would. ``scale`` (the pool's live
@@ -481,6 +516,9 @@ class RolloutEngine:
         sc = scale or _unit_scale
         mgr = runner.manager
         vs = 0.0
+        if result is not None:
+            result.corrupted = False    # per-attempt: a clean failover
+            #                             retry clears a poisoned attempt
         try:
             dur = mgr.configure(task) * sc() + oh()
             vs += dur
@@ -495,9 +533,11 @@ class RolloutEngine:
             done = False
             while not done and len(steps) < cap:
                 thought, action = scenario.policy(obs, len(steps))
-                obs, _rew, done, _info, dur = mgr.step(action)
+                obs, _rew, done, info, dur = mgr.step(action)
                 dur = dur * sc() + oh()
                 vs += dur
+                if info.get("silent_corruption") and result is not None:
+                    result.corrupted = True
                 yield Sleep(dur)
                 steps.append(TrajectoryStep(obs, thought, action))
                 self.telemetry.count("steps")

@@ -140,6 +140,43 @@ def test_elastic_gate_boolean_and_missing_row():
     assert any("MISSING cluster[overcommit]" in p for p in problems)
 
 
+def test_committed_recovery_baseline_self_passes():
+    base = _baseline("BENCH_recovery.json")
+    assert cb.check(base, copy.deepcopy(base), 0.10) == []
+
+
+def test_recovery_mttr_rise_is_a_regression():
+    """MTTR and detection latency are costs — direction-aware labels:
+    a 30% rise is a REGRESSION (slower repairs), a drop flags a stale
+    baseline."""
+    base = _baseline("BENCH_recovery.json")
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["mttr_l3_mean_vs"] *= 1.30
+    perturbed["gate"]["detection_p95_vs"] *= 1.30
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("REGRESSION" in p and "mttr_l3_mean_vs" in p
+               for p in problems)
+    assert any("REGRESSION" in p and "detection_p95_vs" in p
+               for p in problems)
+    improved = copy.deepcopy(base)
+    improved["gate"]["full_recovery_vs"] *= 0.70
+    problems = cb.check(base, improved, 0.10)
+    assert any("STALE BASELINE" in p and "full_recovery_vs" in p
+               for p in problems)
+
+
+def test_recovery_boolean_detection_gate_must_hold():
+    base = _baseline("BENCH_recovery.json")
+    assert base["gate"]["all_silent_detected"] is True
+    assert base["gate"]["no_corrupt_after_quarantine"] is True
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["all_silent_detected"] = False
+    perturbed["recovery_curve"] = []
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("all_silent_detected" in p for p in problems)
+    assert any("MISSING recovery_curve" in p for p in problems)
+
+
 def test_malformed_payloads_are_rejected():
     assert cb.check({}, {}, 0.10) == [
         "MALFORMED baseline: neither engine rows nor a gate block"

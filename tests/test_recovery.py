@@ -1,0 +1,350 @@
+"""Multi-layer fault recovery (§3.4): fault-injector determinism and
+validation, deterministic reclaim tie-breaks, one test per ladder layer
+(L0-L4), and the end-to-end canary contract — a silently-broken runner is
+detected within one probe interval and never serves a trajectory after
+quarantine."""
+import pytest
+
+from repro.core import (CowStore, DiskImage, FaultInjector, FaultType,
+                        Gateway, RunnerPool, Telemetry)
+from repro.core.event_loop import EventLoop, Sleep
+from repro.core.replica import expected_observation
+from repro.core.runner_pool import HostSpec, SimHost
+from repro.recovery import MTTR_PREFIX, probe_runner
+from repro.rollout import (RolloutConfig, RolloutEngine, TrajectoryWriter,
+                           get_default_registry)
+
+
+def _base(store=None):
+    store = store or CowStore(block_size=1 << 20)
+    return DiskImage.create_base(store, "ubuntu", 64 << 20)
+
+
+def _gateway(n_nodes=2, size=4, faults=None, base=None, telemetry=None,
+             **kw):
+    base = base or _base()
+    pools = [RunnerPool(f"n{i}", base, size=size,
+                        faults=faults[i] if faults else None, seed=i)
+             for i in range(n_nodes)]
+    return Gateway(pools, telemetry=telemetry, **kw), pools
+
+
+# ------------------------------------------------- fault injector satellites
+def test_fault_injector_scaled_is_cross_order_deterministic():
+    """Child fault streams must not depend on when siblings are created
+    or on the parent's own sampling — the old implementation drew child
+    seeds from the parent RNG, so prewarm vs grow() orders diverged."""
+    def stream(inj, n=50):
+        return [inj.sample() for _ in range(n)]
+
+    # order A: two children up front
+    pa = FaultInjector(seed=7)
+    a0, a1 = pa.scaled(1.0), pa.scaled(1.0)
+    # order B: parent samples in between child creations
+    pb = FaultInjector(seed=7)
+    b0 = pb.scaled(1.0)
+    interleaved = stream(pb, 30)
+    b1 = pb.scaled(1.0)
+    assert stream(a0) == stream(b0)
+    assert stream(a1) == stream(b1)
+    # and the parent's own stream is unperturbed by scaled() calls
+    pc = FaultInjector(seed=7)
+    assert interleaved == stream(pc, 30)
+
+
+def test_fault_injector_rates_validation_boundary():
+    FaultInjector(rates={FaultType.CRASH: 1.0})        # exactly 1.0: legal
+    with pytest.raises(ValueError, match="sum"):
+        FaultInjector(rates={FaultType.CRASH: 0.7,
+                             FaultType.HANG: 0.4})
+    with pytest.raises(ValueError, match="negative"):
+        FaultInjector(rates={FaultType.CRASH: -0.1})
+    # a large scaled() factor saturating the table is an explicit error
+    # now, not a silent truncation of the tail faults
+    parent = FaultInjector(rates={FaultType.CONNECTION: 0.3,
+                                  FaultType.CRASH: 0.2})
+    parent.scaled(2.0)                                 # sums to 1.0: legal
+    with pytest.raises(ValueError, match="sum"):
+        parent.scaled(3.0)
+
+
+# ---------------------------------------------- deterministic reclaim ties
+def test_release_exactly_at_deadline_loses_to_reclamation():
+    """A release landing on the exact reclaim deadline must resolve
+    deterministically: the reclaim timer (armed at acquire) carries the
+    earlier sequence number, fires first, and the late release degrades
+    to a stale no-op — the runner is issued to exactly one new task."""
+    loop = EventLoop()
+    pool = RunnerPool("n0", _base(), size=1, task_timeout_vs=20.0)
+    pool.attach_loop(loop)
+    trace = []
+
+    def edge_case():
+        r = yield from pool.acquire_ev("task-A")
+        yield Sleep(20.0)               # wakes exactly at the deadline
+        trace.append(("release", pool.release(r, task_id="task-A"),
+                      pool.n_free))
+
+    def waiter():
+        r = yield from pool.acquire_ev("task-B")
+        trace.append(("acquired", loop.now, r.task_id))
+        pool.release(r, task_id="task-B")
+
+    loop.spawn(edge_case())
+    loop.spawn(waiter())
+    loop.run()
+    # reclamation won the tie: task-B got the runner at vt=20, and the
+    # zombie release returned 0.0 without double-freeing
+    assert ("acquired", 20.0, "task-B") in trace
+    assert ("release", 0.0, 0) in trace or ("release", 0.0, 1) in trace
+    assert pool.n_free == 1
+
+
+def test_threaded_reclaim_at_exact_deadline():
+    pool = RunnerPool("n1", _base(), size=1, task_timeout_vs=10.0)
+    pool.acquire("leaky")
+    pool.advance_time(10.0)             # exactly the timeout, not past it
+    assert pool.reclaim_leaked() == ["leaky"]
+    assert pool.n_free == 1
+
+
+# --------------------------------------------------------- ladder layers
+def test_l0_step_retry_mttr_observed():
+    tele = Telemetry()
+    retryable = {0: FaultInjector(rates={FaultType.CONNECTION: 0.5},
+                                  seed=3)}
+    gw, pools = _gateway(n_nodes=1, size=2, faults=retryable,
+                         telemetry=tele)
+    writer = TrajectoryWriter(capacity=16, retain=False)
+    engine = RolloutEngine(gw, writer, telemetry=tele,
+                           config=RolloutConfig(max_inflight=2))
+    report = engine.run(get_default_registry().sample(4, seed=0))
+    assert report.completed == 4
+    l0 = tele.summary(MTTR_PREFIX + "l0")
+    assert l0["n"] > 0 and l0["mean"] > 0    # retries charged as L0 repairs
+    writer.close()
+    gw.stop()
+
+
+def test_l1_release_heal_through_ladder():
+    tele = Telemetry()
+    gw, pools = _gateway(n_nodes=1, size=2, telemetry=tele)
+    node, r = gw.acquire("t1")
+    r.manager.configure({"task_id": "t1", "horizon": 5})
+    r.manager.replica.crash()
+    dur = gw.release(node, r, task_id="t1")
+    assert r.manager.replica.alive           # healed in place on release
+    assert dur > 0
+    assert tele.summary(MTTR_PREFIX + "l1")["n"] == 1
+    gw.stop()
+
+
+def test_l2_reclaimed_runner_is_rebooted_from_cow_base():
+    tele = Telemetry()
+    gw, pools = _gateway(n_nodes=1, size=1, telemetry=tele)
+    pool = pools[0]
+    pool.task_timeout_vs = 30.0
+    loop = EventLoop()
+    gw.attach_loop(loop, health_checks=False)
+    clones_before = pool.base_image.store.reflink_clones
+
+    def leaker():
+        r = yield from pool.acquire_ev("wedged")
+        r.manager.configure({"task_id": "wedged", "horizon": 5})
+        yield Sleep(100.0)               # leaks far past the deadline
+
+    def patient():
+        r = yield from pool.acquire_ev("patient", timeout=500.0)
+        assert r is not None
+        # the reclaimed runner only served after its L2 reboot elapsed
+        assert loop.now > 30.0
+        pool.release(r, task_id="patient")
+
+    loop.spawn(leaker())
+    loop.spawn(patient())
+    loop.run()
+    gw.detach_loop()
+    assert tele.summary(MTTR_PREFIX + "l2")["n"] >= 1
+    # the reboot re-cloned the overlay from the shared CoW base
+    assert pool.base_image.store.reflink_clones > clones_before
+    assert all(r.manager.replica.alive for r in pool._all.values())
+    gw.stop()
+
+
+def test_l3_canary_detects_and_recreates_silent_runner():
+    tele = Telemetry()
+    gw, pools = _gateway(n_nodes=1, size=3, telemetry=tele)
+    pool = pools[0]
+    loop = EventLoop()
+    gw.attach_loop(loop, health_checks=False)
+    victim = next(iter(pool._all.values()))
+    victim.mark_silent_broken(0.0)
+    assert not probe_runner(victim).healthy
+    report = pool.recovery.canary_sweep()
+    assert report["detected"] == 1 and report["recreated"] == 1
+    assert victim.runner_id in pool.recovery.quarantined_at
+    assert victim.runner_id not in pool._all        # out of service forever
+    assert tele.counter("runners_quarantined") == 1
+    assert tele.summary(MTTR_PREFIX + "l3")["n"] == 1
+    # replacement serves only after its boot latency elapses on the loop
+    assert pool.size == 2
+    loop.run()
+    assert pool.size == 3
+    assert all(not r.silent_broken for r in pool._all.values())
+    gw.detach_loop()
+    gw.stop()
+
+
+def test_l4_exhausted_host_is_evicted():
+    tele = Telemetry()
+    host = SimHost(HostSpec(cores=96, ram_gb=768.0))
+    base = _base()
+    pools = [RunnerPool("sick", base, size=4, host=host, seed=0),
+             RunnerPool("ok", base, size=4, seed=1)]
+    gw = Gateway(pools, telemetry=tele)
+    loop = EventLoop()
+    gw.attach_loop(loop, health_checks=False)
+    # exhaust the sick node's kernel limits and silently break its fleet
+    for k in host.limits:
+        host.limits[k] = 0
+    for r in pools[0]._all.values():
+        r.mark_silent_broken(0.0)
+    report = pools[0].recovery.canary_sweep()
+    assert report["evicted"] and pools[0].evicted
+    assert tele.counter("nodes_evicted") == 1
+    # bare gateway (no cluster): eviction stops routing to the node
+    assert "sick" not in gw.healthy_nodes()
+    assert "ok" in gw.healthy_nodes()
+    # every broken runner the sweep saw is quarantined, none serve again
+    assert all(rid in pools[0].recovery.quarantined_at
+               for rid in [r.runner_id for r in pools[0].quarantined])
+    # no VM leaks: quarantine frees the allocation even for born-broken
+    # replacement runners that were never registered in the pool, and the
+    # pool's quarantine list agrees with the ladder's timestamps
+    assert host.vm_count == 0 and host.ram_used_gb == 4.0
+    assert len(pools[0].quarantined) == len(pools[0].recovery.quarantined_at)
+    gw.detach_loop()
+    gw.stop()
+
+
+def test_l4_cluster_evicts_and_replaces_capacity():
+    from repro.cluster import Cluster, default_specs
+
+    cluster = Cluster(default_specs(8, runners_per_node=4), 8,
+                      runners_per_node=4, seed=0, faults=False)
+    loop = EventLoop()
+    cluster.attach_loop(loop)
+    sick = cluster.hosts[0]
+    assert sick.pool is not None
+    node_id = sick.pool.node_id
+    granted = cluster.evict_host(node_id)
+    assert granted == 4                      # capacity replaced elsewhere
+    assert sick.evicted and sick.pool is None and sick.placed == 0
+    assert node_id not in cluster.gateway.pools
+    assert cluster.telemetry.counter("cluster_nodes_evicted") == 1
+
+    def clock_driver():          # boot timers are daemons: carry the
+        yield Sleep(20.0)        # clock past the provisioning delay
+
+    loop.spawn(clock_driver())
+    loop.run()                               # replacement boot timers fire
+    assert cluster.n_replicas == 8
+    assert sick.headroom() == 0              # never schedulable again
+    cluster.close()
+
+
+def test_evicted_host_pending_grow_never_boots():
+    """A boot-delayed grow reserved on a host that is evicted before the
+    boot timer fires must be cancelled — not rebuild a pool on the
+    exhausted node and re-add it to routing."""
+    from repro.cluster import Cluster, default_specs
+
+    cluster = Cluster(default_specs(8, runners_per_node=4), 8,
+                      runners_per_node=4, seed=0, faults=False)
+    loop = EventLoop()
+    cluster.attach_loop(loop)
+    sick = cluster.hosts[0]
+    node_id = sick.pool.node_id
+    granted = cluster.request_grow(4, delay_vs=10.0)   # lands on host0
+    assert granted == 4 and cluster._pending_grows
+    cluster.evict_host(node_id)
+    # the pending grow for the evicted host is gone
+    assert all(h is not sick for _t, h, _n in cluster._pending_grows)
+
+    def clock_driver():
+        yield Sleep(40.0)
+
+    loop.spawn(clock_driver())
+    loop.run()
+    assert sick.pool is None and sick.evicted
+    # routing never sees a pool on the evicted host; capacity (the
+    # original 8 + the pre-eviction grant of 4, minus nothing) lives
+    # entirely on the surviving hosts
+    assert node_id not in cluster.gateway.pools
+    assert all(h is not sick or h.pool is None for h in cluster.hosts)
+    assert cluster.n_replicas == 12
+    cluster.close()
+
+
+# ----------------------------------------------------- end-to-end contract
+def test_silent_runner_detected_within_one_interval_and_never_serves_again():
+    """The acceptance contract: a runner silently broken mid-run is
+    canary-detected within one probe interval of first becoming
+    observable (its next release), quarantined, and no corrupted
+    trajectory is written after the quarantine instant."""
+    tele = Telemetry()
+    gw, pools = _gateway(n_nodes=2, size=4, telemetry=tele,
+                         canary_interval_s=15.0)
+    writer = TrajectoryWriter(capacity=64, retain=False)
+    engine = RolloutEngine(gw, writer, telemetry=tele,
+                           config=RolloutConfig(max_inflight=8,
+                                                acquire_timeout_vs=600.0))
+    tasks = get_default_registry().sample(48, seed=5)
+    loop = EventLoop()
+    broken = {}
+
+    def inject():
+        victim = next(iter(pools[0]._all.values()))
+        victim.mark_silent_broken(loop.now)
+        broken["id"] = victim.runner_id
+        broken["at"] = loop.now
+
+    loop.call_later(25.0, inject, daemon=True)
+    report = engine.run_event_driven(tasks, loop=loop)
+    assert report.completed == 48
+    ladder = pools[0].recovery
+    rid = broken["id"]
+    # detected and quarantined...
+    assert rid in ladder.detected_at and rid in ladder.quarantined_at
+    # ...within one probe interval of the lease it was corrupting ending
+    # (~ one episode), plus the interval itself as the sweep bound
+    latency = ladder.detected_at[rid] - broken["at"]
+    assert latency <= 15.0 + 60.0
+    # corrupted trajectories exist (the in-flight episode at detection is
+    # the honest cost) but none was written after the quarantine instant
+    q_vt = ladder.quarantined_at[rid]
+    for wrid, vt in report.corrupted_writes:
+        assert wrid == rid
+        assert vt <= q_vt + 1e-9
+    # the quarantined runner is gone and the surviving fleet is clean —
+    # nothing left in service can corrupt another trajectory
+    assert rid not in pools[0]._all
+    assert all(not r.manager.replica.silent_broken
+               for p in pools for r in p._all.values())
+    writer.close()
+    gw.stop()
+
+
+def test_canary_probe_known_answer_matches_healthy_replica():
+    pool = RunnerPool("n0", _base(), size=1)
+    r = next(iter(pool._all.values()))
+    rep = r.manager.replica
+    ok, cost = rep.canary_probe()
+    assert ok and cost == rep.latency.canary_s
+    import numpy as np
+    want = expected_observation(rep.replica_id, rep.obs_nonce,
+                                rep.step_count)
+    assert np.array_equal(rep._observation(), want)
+    rep.silent_broken = True
+    assert not rep.canary_probe()[0]
+    pool.close()
