@@ -1,0 +1,372 @@
+"""Event-kernel scaling: the batched time wheel vs the scalar heap oracle.
+
+The batched kernel (``repro.core.event_loop.BatchedEventLoop``) exists to
+lift the fleet ceiling from ~1k replicas to 65k: one sort per time-wheel
+bucket instead of one heap interaction per event. This sweep measures that
+claim two ways and gates both:
+
+- **kernel tier** — a pure timer workload: ``lanes`` independent chains of
+  ``hops_per_lane`` lognormal hop latencies, pre-drawn as one numpy matrix
+  consumed by *both* kernels. The scalar oracle drives it as generator
+  tasks (one ``Sleep`` per hop); the batched kernel as a single
+  ``VecTimer`` family chaining array schedules. Per-lane completion times
+  are the same left-to-right float additions on both sides, so the
+  ``done_at`` arrays must be **bit-identical** — asserted at every size —
+  while the events/sec ratio isolates kernel cost from replica-model cost.
+  The acceptance gate: >= 10x events/sec over the scalar kernel at 8k+.
+- **engine tier** — the real ``RolloutEngine.run_event_driven`` over a
+  paper-shaped fleet (64-runner nodes, stochastic faults, failover, health
+  sweeps, writer backpressure) at 1k -> 8k -> 65k replicas on the batched
+  kernel, with short-horizon tasks so the 65k run stays inside the CI wall
+  budget. At 1024 replicas the same run is replayed on the scalar oracle
+  and the reports must agree exactly (completed / failed / reassignments /
+  virtual seconds / makespan / events processed) — the bit-exact parity
+  contract, enforced in the live stack, not just in unit tests.
+
+    PYTHONPATH=src python benchmarks/kernel_scaling.py --sizes 1024 8192 65536
+
+The committed baseline ``artifacts/bench/BENCH_kernel.json`` records both
+tiers plus a ``gate`` block (parity + speedup booleans, deterministic
+counts) and the sweep's wall budget; ``scripts/check_bench.py`` compares
+fresh runs against it in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from repro.core.event_loop import EventLoop, Sleep
+from repro.core.seeding import stable_seed
+from repro.core.tasks import TaskSpec
+from repro.rollout.engine import RolloutConfig, RolloutEngine
+from repro.rollout.scenarios import get_default_registry
+from repro.rollout.writer import TrajectoryWriter
+
+from throughput import build_fleet
+
+DEFAULT_SIZES = (1024, 8192, 65536)
+DEFAULT_HOPS = 8                 # timer chain length per lane (kernel tier)
+SHORT_HORIZON = 3                # engine-tier steps/episode: bounds the 65k
+#                                  run's wall cost without changing the stack
+SPEEDUP_FLOOR = 10.0             # batched must beat scalar by this factor...
+SPEEDUP_FROM = 8192              # ...from this lane count up (ISSUE 6 gate)
+ENGINE_PARITY_MAX = 1024         # replay the engine on the oracle up to here
+DEFAULT_BUDGET_S = 900.0         # CI wall budget for the whole sweep
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "bench", "BENCH_kernel.json")
+
+# engine-report fields that must agree exactly between kernels: event
+# order determines every one of them, so a single reordered event shows up
+ENGINE_PARITY_KEYS = ("completed", "failed", "reassignments", "total_steps",
+                      "virtual_seconds", "virtual_makespan_s",
+                      "events_processed")
+
+
+# ------------------------------------------------------------- kernel tier
+def lane_hops(n_lanes: int, n_hops: int, seed: int = 0) -> np.ndarray:
+    """The shared workload: one lognormal hop-latency matrix, drawn once.
+
+    Both kernels consume these exact values, so per-lane completion times
+    (left-to-right cumulative sums) are bit-comparable across kernels."""
+    rng = np.random.default_rng(stable_seed(seed, n_lanes, "kernel-hops"))
+    return rng.lognormal(mean=0.5, sigma=0.4, size=(n_lanes, n_hops))
+
+
+def run_lanes_scalar(hops: np.ndarray) -> tuple[np.ndarray, float, EventLoop]:
+    """Oracle: one generator task per lane, one heap event per hop."""
+    n, _n_hops = hops.shape
+    loop = EventLoop(kernel="scalar")
+    done_at = np.zeros(n)
+    rows = hops.tolist()    # plain floats: per-event numpy indexing would
+    #                         charge array-access cost to the kernel
+
+    def lane(i: int, row: list):
+        for dt in row:
+            yield Sleep(dt)
+        done_at[i] = loop.now
+
+    t0 = time.perf_counter()
+    for i in range(n):
+        loop.spawn(lane(i, rows[i]), name=f"lane{i}")
+    loop.run()
+    return done_at, time.perf_counter() - t0, loop
+
+
+def run_lanes_batched(hops: np.ndarray
+                      ) -> tuple[np.ndarray, float, EventLoop, int]:
+    """Batched: one ``VecTimer`` family chains every lane's hops by
+    scheduling the continuing lanes' next hop times as one array per
+    delivered bucket — a handful of Python callbacks for the whole run."""
+    n, n_hops = hops.shape
+    loop = EventLoop(kernel="batched")
+    done_at = np.zeros(n)
+    hop_no = np.zeros(n, dtype=np.int64)
+    calls = 0
+
+    def on_fire(ats: np.ndarray, idx: np.ndarray) -> None:
+        nonlocal calls
+        calls += 1
+        h = hop_no[idx]
+        last = h == n_hops - 1
+        if last.any():
+            done_at[idx[last]] = ats[last]
+        cont = ~last
+        if cont.any():
+            nxt = idx[cont]
+            vt.schedule(ats[cont] + hops[nxt, h[cont] + 1], nxt)
+        hop_no[idx] = h + 1
+
+    vt = loop.vec_timer(on_fire)
+    t0 = time.perf_counter()
+    vt.schedule(hops[:, 0], np.arange(n, dtype=np.int64))
+    loop.run()
+    return done_at, time.perf_counter() - t0, loop, calls
+
+
+def run_lane_row(n_lanes: int, n_hops: int, seed: int = 0) -> dict:
+    hops = lane_hops(n_lanes, n_hops, seed)
+    events = n_lanes * n_hops
+    done_s, wall_s, _loop_s = run_lanes_scalar(hops)
+    done_b, wall_b, loop_b, calls = run_lanes_batched(hops)
+    return {
+        "lanes": n_lanes,
+        "hops_per_lane": n_hops,
+        "events": events,
+        "scalar_events_per_s": events / wall_s,
+        "batched_events_per_s": events / wall_b,
+        "speedup": wall_s / wall_b,
+        "scalar_wall_s": wall_s,
+        "batched_wall_s": wall_b,
+        "batched_callbacks": calls,
+        "batched_buckets": loop_b.n_batches,
+        # deterministic: max over identical float cumsums on both kernels
+        "virtual_makespan_s": float(done_b.max()),
+        "parity_bit_identical": done_s.tobytes() == done_b.tobytes(),
+    }
+
+
+# ------------------------------------------------------------- engine tier
+def short_tasks(n: int, seed: int = 0) -> tuple[list[dict], object]:
+    """The default scenario mix with every horizon clamped short, so the
+    65k engine run exercises the full stack without a 65k-episode wall
+    bill dominated by the replica model rather than the kernel."""
+    registry = get_default_registry()
+    tasks = []
+    for t in registry.sample(n, seed=stable_seed(seed, n, "kernel-workload")):
+        d = t.to_dict() if isinstance(t, TaskSpec) else dict(t)
+        d["horizon"] = SHORT_HORIZON
+        tasks.append(d)
+    return tasks, registry
+
+
+def run_engine(n_replicas: int, kernel: str, *, seed: int = 0) -> dict:
+    """One end-to-end run of the real engine on the chosen kernel."""
+    t0 = time.monotonic()
+    tasks, registry = short_tasks(n_replicas, seed)
+    gateway, _pools = build_fleet(n_replicas, seed=seed)
+    writer = TrajectoryWriter(capacity=256, retain=False)
+    engine = RolloutEngine(gateway, writer, registry=registry,
+                           config=RolloutConfig(
+                               max_inflight=n_replicas,
+                               # fast virtual consumer: the drain tail of
+                               # 65k writes must not dominate the makespan
+                               # (and with it the daemon health sweeps)
+                               writer_consume_vs=0.001))
+    loop = EventLoop(kernel=kernel)
+    report = engine.run_event_driven(tasks, loop=loop)
+    writer.drain(timeout=60.0)
+    writer.close()
+    gateway.stop()
+    row = {
+        "replicas": n_replicas,
+        "kernel": kernel,
+        "completed": report.completed,
+        "failed": report.failed,
+        "reassignments": report.reassignments,
+        "total_steps": report.total_steps,
+        "events_processed": loop.n_processed,
+        # engine-tier rate: replica-model Python cost is included, so this
+        # understates the pure kernel ratio (the kernel-tier rows gate that)
+        "events_per_s": loop.n_processed / max(report.wall_seconds, 1e-9),
+        "virtual_seconds": report.virtual_seconds,
+        "virtual_makespan_s": report.virtual_makespan,
+        "traj_per_min": report.trajectories_per_min(n_replicas),
+        "horizon": SHORT_HORIZON,
+        "run_wall_seconds": report.wall_seconds,
+        "wall_seconds": time.monotonic() - t0,
+    }
+    if kernel == "batched":
+        row["n_batches"] = loop.n_batches
+    return row
+
+
+def engine_parity_ok(rows: list[dict]) -> bool:
+    """True when every (replicas) pair of kernel rows agrees exactly."""
+    by = {}
+    for r in rows:
+        by.setdefault(r["replicas"], {})[r["kernel"]] = r
+    for pair in by.values():
+        if "scalar" not in pair or "batched" not in pair:
+            continue
+        for key in ENGINE_PARITY_KEYS:
+            if pair["scalar"][key] != pair["batched"][key]:
+                return False
+    return True
+
+
+# ----------------------------------------------------------------- asserts
+def assert_lane_parity(kernel_rows: list[dict]) -> None:
+    for r in kernel_rows:
+        assert r["parity_bit_identical"], (
+            f"batched kernel diverged from the scalar oracle at "
+            f"{r['lanes']} lanes — per-lane completion times not "
+            f"bit-identical")
+
+
+def assert_speedup(kernel_rows: list[dict]) -> None:
+    for r in kernel_rows:
+        if r["lanes"] >= SPEEDUP_FROM:
+            assert r["speedup"] >= SPEEDUP_FLOOR, (
+                f"batched kernel only {r['speedup']:.1f}x the scalar "
+                f"oracle at {r['lanes']} lanes (floor {SPEEDUP_FLOOR}x)")
+
+
+def assert_engine_parity(engine_rows: list[dict]) -> None:
+    by = {}
+    for r in engine_rows:
+        by.setdefault(r["replicas"], {})[r["kernel"]] = r
+    for n, pair in sorted(by.items()):
+        if "scalar" not in pair or "batched" not in pair:
+            continue
+        for key in ENGINE_PARITY_KEYS:
+            s, b = pair["scalar"][key], pair["batched"][key]
+            assert s == b, (
+                f"engine parity broke at {n} replicas: {key} scalar={s!r} "
+                f"batched={b!r}")
+
+
+# ----------------------------------------------------------------- harness
+def sweep(sizes, n_hops: int = DEFAULT_HOPS, *, seed: int = 0
+          ) -> tuple[list[dict], list[dict]]:
+    kernel_rows = []
+    engine_rows = []
+    for n in sizes:
+        kernel_rows.append(run_lane_row(n, n_hops, seed))
+        r = kernel_rows[-1]
+        print(f"kernel {n:>6} lanes: scalar "
+              f"{r['scalar_events_per_s']:>10,.0f} ev/s, batched "
+              f"{r['batched_events_per_s']:>12,.0f} ev/s "
+              f"({r['speedup']:.1f}x, parity={r['parity_bit_identical']})")
+    for n in sizes:
+        engine_rows.append(run_engine(n, "batched", seed=seed))
+        r = engine_rows[-1]
+        print(f"engine {n:>6} replicas [batched]: {r['completed']} done, "
+              f"{r['events_processed']} events, "
+              f"{r['events_per_s']:,.0f} ev/s, {r['wall_seconds']:.1f}s wall")
+        if n <= ENGINE_PARITY_MAX:
+            engine_rows.append(run_engine(n, "scalar", seed=seed))
+            r = engine_rows[-1]
+            print(f"engine {n:>6} replicas [scalar]:  {r['completed']} done, "
+                  f"{r['events_processed']} events, "
+                  f"{r['events_per_s']:,.0f} ev/s, "
+                  f"{r['wall_seconds']:.1f}s wall")
+    return kernel_rows, engine_rows
+
+
+def build_gate(kernel_rows: list[dict], engine_rows: list[dict]) -> dict:
+    """Machine-independent gate: parity/speedup booleans plus exact
+    deterministic counts at the largest swept size. Wall-clock rates stay
+    *outside* the gate — check_bench compares them with a wide band and
+    enforces the wall budget separately."""
+    gate = {
+        "lane_parity_bit_identical": all(
+            r["parity_bit_identical"] for r in kernel_rows),
+        "engine_parity_bit_identical": engine_parity_ok(engine_rows),
+    }
+    for r in kernel_rows:
+        if r["lanes"] >= SPEEDUP_FROM:
+            gate[f"speedup_{r['lanes']}_ge_{SPEEDUP_FLOOR:.0f}x"] = (
+                r["speedup"] >= SPEEDUP_FLOOR)
+    big_k = max(kernel_rows, key=lambda r: r["lanes"])
+    gate[f"kernel_events_{big_k['lanes']}"] = big_k["events"]
+    gate[f"lane_makespan_{big_k['lanes']}_s"] = big_k["virtual_makespan_s"]
+    batched = [r for r in engine_rows if r["kernel"] == "batched"]
+    big_e = max(batched, key=lambda r: r["replicas"])
+    n = big_e["replicas"]
+    gate[f"engine_completed_{n}"] = big_e["completed"]
+    gate[f"engine_failed_{n}"] = big_e["failed"]
+    gate[f"engine_events_{n}"] = big_e["events_processed"]
+    gate[f"engine_makespan_{n}_s"] = big_e["virtual_makespan_s"]
+    return gate
+
+
+def write_baseline(path: str, kernel_rows: list[dict],
+                   engine_rows: list[dict], gate: dict, *, sizes,
+                   n_hops: int, budget_s: float,
+                   wall_seconds: float) -> None:
+    payload = {
+        "benchmark": "event-kernel scaling: batched time wheel vs scalar "
+                     "heap oracle, kernel-tier lanes + live RolloutEngine",
+        "metric": "events per second (wall); parity and counts are "
+                  "deterministic, rates are machine-dependent",
+        "sizes": list(sizes),
+        "hops_per_lane": n_hops,
+        "short_horizon": SHORT_HORIZON,
+        "speedup_floor": SPEEDUP_FLOOR,
+        "speedup_from_lanes": SPEEDUP_FROM,
+        "wall_budget_s": budget_s,
+        "sweep_wall_seconds": round(wall_seconds, 2),
+        "kernel": kernel_rows,
+        "engine_sweep": engine_rows,
+        "gate": gate,
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=list(DEFAULT_SIZES))
+    ap.add_argument("--hops", type=int, default=DEFAULT_HOPS,
+                    help="timer-chain length per lane in the kernel tier")
+    ap.add_argument("--budget-s", type=float, default=DEFAULT_BUDGET_S,
+                    help="assert the whole sweep stays under this wall "
+                         "budget (CI guard, recorded in the baseline)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="where to write BENCH_kernel.json")
+    args = ap.parse_args()
+
+    t0 = time.monotonic()
+    kernel_rows, engine_rows = sweep(tuple(args.sizes), args.hops)
+    wall = time.monotonic() - t0
+
+    assert_lane_parity(kernel_rows)
+    assert_speedup(kernel_rows)
+    assert_engine_parity(engine_rows)
+    assert wall <= args.budget_s, (
+        f"sweep took {wall:.1f}s wall > budget {args.budget_s}s")
+
+    gate = build_gate(kernel_rows, engine_rows)
+    write_baseline(args.out, kernel_rows, engine_rows, gate,
+                   sizes=args.sizes, n_hops=args.hops,
+                   budget_s=args.budget_s, wall_seconds=wall)
+    big = max(kernel_rows, key=lambda r: r["lanes"])
+    print(f"batched kernel: {big['batched_events_per_s']:,.0f} events/s at "
+          f"{big['lanes']} lanes ({big['speedup']:.1f}x scalar, parity "
+          f"bit-identical); sweep took {wall:.1f}s wall; baseline -> "
+          f"{os.path.relpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,9 @@ CoW disk management, robust runner pools, gateway, and the centralized
 single-entry data server."""
 from repro.core.cow_store import CowStore, DiskImage, BlobStore
 from repro.core.data_server import DataServer
-from repro.core.event_loop import Condition, EventLoop, Sleep, Task, Timer
+from repro.core.event_loop import (Condition, EventLoop, Sleep, Task, Timer,
+                                   BatchedEventLoop, ScalarEventLoop,
+                                   VecTimer)
 from repro.core.faults import FaultInjector, FaultType, ReplicaError, RetryPolicy
 from repro.core.gateway import Gateway, NoRunnerAvailable
 from repro.core.replica import SimOSReplica, LatencyModel

@@ -6,12 +6,28 @@ every concurrent episode needs a stack, and backpressure is polled with
 virtual clock so *thousands* of episodes run concurrently — the paper's
 1000+ replica fleets execute end-to-end on one core, in seconds.
 
-Design:
+Two interchangeable kernels implement the same contract:
 
-- ``EventLoop`` — a heap-ordered event queue keyed by ``(virtual_time,
-  sequence)``. The sequence number breaks ties deterministically, so one
-  program produces the identical event order on every run and in every
-  process (no hash randomization, no thread scheduling).
+- ``ScalarEventLoop`` — the original heap-ordered queue keyed by
+  ``(virtual_time, sequence)``: one ``heappush``/``heappop`` per event.
+  Retained as the *parity oracle*: simple enough to audit by eye.
+- ``BatchedEventLoop`` (default) — a bucketed time wheel. Events land in
+  fixed-span virtual-time buckets; a bucket is sorted **once** with
+  ``np.lexsort`` when the clock enters it, so the hot path is one heap
+  interaction per batch rather than per event. Insertions that fall inside
+  the already-active bucket go to a small overflow heap merged head-to-head
+  on pop, so the global ``(time, seq)`` order is *bit-identical* to the
+  scalar kernel's: buckets partition virtual time and timers never schedule
+  into the past, hence no event can sort before an already-activated batch.
+
+``EventLoop(...)`` is the factory: ``EventLoop()`` builds the batched
+kernel, ``EventLoop(kernel="scalar")`` the oracle, and the
+``REPRO_KERNEL`` environment variable overrides the default (used by the
+parity suite and ``benchmarks/kernel_scaling.py``). ``isinstance(loop,
+EventLoop)`` holds for both.
+
+Shared task machinery (identical on both kernels):
+
 - ``Task`` — a cooperative coroutine driven by the loop. A task is a plain
   Python generator that yields scheduling directives:
 
@@ -27,12 +43,21 @@ Design:
 - **daemon timers** — recurring background work (gateway health sweeps,
   leaked-runner reclamation) that must not keep the loop alive: ``run()``
   returns once every live task has finished and only daemon events remain.
+- ``VecTimer`` — the batched kernel's array-valued primitive: schedule a
+  whole numpy array of event times in one call; all elements that land in
+  one bucket are delivered back as a single callback with ``(times,
+  indices)`` arrays. The scalar oracle implements the same API one element
+  at a time, so vectorized workloads can be replayed against it.
 """
+
 from __future__ import annotations
 
 import heapq
+import os
 from dataclasses import dataclass
 from typing import Any, Callable, Generator, Optional
+
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -44,13 +69,19 @@ class Sleep:
 
 class Timer:
     """Handle for one scheduled callback. ``cancel()`` is O(1): the entry
-    stays in the heap and is skipped when popped (lazy deletion)."""
+    stays in the queue and is skipped when popped (lazy deletion)."""
 
-    __slots__ = ("at", "seq", "fn", "args", "daemon", "cancelled", "fired",
-                 "_loop")
+    __slots__ = ("at", "seq", "fn", "args", "daemon", "cancelled", "fired", "_loop")
 
-    def __init__(self, loop: "EventLoop", at: float, seq: int,
-                 fn: Callable, args: tuple, daemon: bool):
+    def __init__(
+        self,
+        loop: "EventLoop",
+        at: float,
+        seq: int,
+        fn: Callable,
+        args: tuple,
+        daemon: bool,
+    ):
         self._loop = loop
         self.at = at
         self.seq = seq
@@ -113,9 +144,13 @@ class Task:
         elif isinstance(directive, _Waiter):
             directive.task = self
         else:
-            self._finish(None, TypeError(
-                f"task {self.name!r} yielded {directive!r}; expected Sleep, "
-                f"Task, or Condition.wait()"))
+            self._finish(
+                None,
+                TypeError(
+                    f"task {self.name!r} yielded {directive!r}; expected Sleep, "
+                    f"Task, or Condition.wait()"
+                ),
+            )
 
     def _finish(self, value: Any, error: Optional[BaseException]) -> None:
         self.done = True
@@ -178,29 +213,116 @@ class Condition:
         return len(self._waiters)
 
 
-class EventLoop:
-    """Deterministic single-threaded discrete-event scheduler."""
+class VecTimer:
+    """A *family* of array-scheduled events sharing one callback.
 
-    def __init__(self):
+    ``schedule(ats, idx)`` books one event per array element in a single
+    kernel interaction. On the batched kernel every element of one family
+    that lands in the same time-wheel bucket is delivered back as **one**
+    callback ``fn(ats, idx)`` (numpy arrays sorted by ``(time, seq)``),
+    with ``loop.now`` set to the batch's earliest time; per-element times
+    travel in the ``ats`` array. The scalar oracle delivers the same
+    elements one at a time (length-1 arrays) in exact ``(time, seq)``
+    order, so a vectorized workload can be replayed element-for-element
+    against it: the delivered ``(time, index)`` pairs are identical on
+    both kernels, only the grouping differs.
+
+    Batch delivery is bucket-atomic: don't combine with ``run(until=...)``
+    finer than the wheel span. Exact cross-family ordering is only
+    guaranteed at bucket granularity — use plain timers when two families'
+    callbacks are order-sensitive within ~``span`` virtual seconds.
+    """
+
+    __slots__ = ("loop", "fn", "daemon", "fid", "n_booked", "n_delivered")
+
+    def __init__(self, loop: "EventLoop", fn: Callable, daemon: bool = False):
+        self.loop = loop
+        self.fn = fn
+        self.daemon = daemon
+        self.fid = loop._next_fid()
+        self.n_booked = 0
+        self.n_delivered = 0
+
+    def schedule(self, ats, idx=None) -> int:
+        """Book one event per element of ``ats`` (clamped to ``now``).
+
+        ``idx`` (default ``arange(len(ats))``) is the caller's payload —
+        typically lane/replica indices — handed back verbatim with each
+        delivery. Returns the number of events booked."""
+        ats = np.maximum(np.asarray(ats, dtype=np.float64), self.loop.now)
+        n = len(ats)
+        if n == 0:
+            return 0
+        if idx is None:
+            idx = np.arange(n, dtype=np.int64)
+        else:
+            idx = np.asarray(idx, dtype=np.int64)
+        base = self.loop._seq + 1
+        self.loop._seq += n
+        seqs = np.arange(base, base + n, dtype=np.int64)
+        self.n_booked += n
+        if not self.daemon:
+            self.loop._pending += n
+        self.loop._insert_vec(self, ats, seqs, idx)
+        return n
+
+
+class _VecSingle:
+    """One vec-timer element that fell inside the already-active bucket
+    (or onto the scalar oracle): delivered as a length-1 batch."""
+
+    __slots__ = ("family", "at", "idx")
+
+    def __init__(self, family: VecTimer, at: float, idx: int):
+        self.family = family
+        self.at = at
+        self.idx = idx
+
+
+class EventLoop:
+    """Deterministic single-threaded discrete-event scheduler (factory).
+
+    ``EventLoop()`` returns the batched kernel; ``EventLoop(kernel=
+    "scalar")`` the oracle. The ``REPRO_KERNEL`` environment variable
+    ("batched" | "scalar") overrides the default for whole-process flips
+    — e.g. ``REPRO_KERNEL=scalar pytest`` replays the entire tier-1 suite
+    on the oracle. Both kernels expose the identical API and, for
+    non-vectorized workloads, the identical event order, virtual times,
+    and counters (the bit-exact parity contract enforced by
+    ``tests/test_kernel_parity.py``)."""
+
+    KERNELS = ("batched", "scalar")
+
+    def __new__(cls, kernel: Optional[str] = None):
+        if cls is EventLoop:
+            name = kernel or os.environ.get("REPRO_KERNEL") or "batched"
+            if name == "batched":
+                cls = BatchedEventLoop
+            elif name == "scalar":
+                cls = ScalarEventLoop
+            else:
+                raise ValueError(
+                    f"unknown event kernel {name!r}; "
+                    f"expected one of {EventLoop.KERNELS}"
+                )
+        return object.__new__(cls)
+
+    def __init__(self, kernel: Optional[str] = None):
         self.now = 0.0
         self.errors: list[tuple[str, BaseException]] = []
-        self._heap: list[tuple[float, int, Timer]] = []
         self._seq = 0
-        self._pending = 0      # scheduled, non-daemon, not cancelled/fired
-        self._live = 0         # spawned tasks not yet finished
+        self._pending = 0  # scheduled, non-daemon, not cancelled/fired
+        self._live = 0  # spawned tasks not yet finished
+        self._fid = 0  # vec-timer family ids
+        self.n_processed = 0  # events delivered (vec batches count per elem)
 
     # ------------------------------------------------------------ scheduling
-    def call_at(self, at: float, fn: Callable, *args,
-                daemon: bool = False) -> Timer:
-        self._seq += 1
-        t = Timer(self, max(at, self.now), self._seq, fn, args, daemon)
-        heapq.heappush(self._heap, (t.at, t.seq, t))
-        if not daemon:
-            self._pending += 1
-        return t
+    def call_at(self, at: float, fn: Callable, *args, daemon: bool = False) -> Timer:
+        raise NotImplementedError
 
-    def call_later(self, delay: float, fn: Callable, *args,
-                   daemon: bool = False) -> Timer:
+    def call_later(
+        self, delay: float, fn: Callable, *args, daemon: bool = False
+    ) -> Timer:
         return self.call_at(self.now + delay, fn, *args, daemon=daemon)
 
     def spawn(self, gen: Generator, name: str = "") -> Task:
@@ -213,6 +335,10 @@ class EventLoop:
     def condition(self) -> Condition:
         return Condition(self)
 
+    def vec_timer(self, fn: Callable, daemon: bool = False) -> VecTimer:
+        """Create an array-scheduled timer family (see :class:`VecTimer`)."""
+        return VecTimer(self, fn, daemon)
+
     # --------------------------------------------------------------- driving
     def run(self, until: Optional[float] = None) -> float:
         """Process events in virtual-time order.
@@ -221,27 +347,306 @@ class EventLoop:
         remains (daemon timers — health sweeps, reclamation — never keep
         the loop alive), or when the clock would pass ``until``. Returns
         the final virtual time."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- internals
+    def _next_fid(self) -> int:
+        self._fid += 1
+        return self._fid
+
+    def _insert_vec(
+        self, family: VecTimer, ats: np.ndarray, seqs: np.ndarray, idx: np.ndarray
+    ) -> None:
+        raise NotImplementedError
+
+    @property
+    def kernel(self) -> str:
+        raise NotImplementedError
+
+    @property
+    def n_scheduled(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def n_live_tasks(self) -> int:
+        return self._live
+
+
+class ScalarEventLoop(EventLoop):
+    """The original heap kernel: one heap interaction per event (oracle)."""
+
+    def __init__(self, kernel: Optional[str] = None):
+        super().__init__(kernel)
+        self._heap: list[tuple[float, int, Any]] = []
+
+    @property
+    def kernel(self) -> str:
+        return "scalar"
+
+    # ------------------------------------------------------------ scheduling
+    def call_at(self, at: float, fn: Callable, *args, daemon: bool = False) -> Timer:
+        self._seq += 1
+        t = Timer(self, max(at, self.now), self._seq, fn, args, daemon)
+        heapq.heappush(self._heap, (t.at, t.seq, t))
+        if not daemon:
+            self._pending += 1
+        return t
+
+    def _insert_vec(
+        self, family: VecTimer, ats: np.ndarray, seqs: np.ndarray, idx: np.ndarray
+    ) -> None:
+        # element-at-a-time: the oracle's per-event limit of batch delivery
+        for at, seq, i in zip(ats.tolist(), seqs.tolist(), idx.tolist()):
+            heapq.heappush(self._heap, (at, seq, _VecSingle(family, at, i)))
+
+    # --------------------------------------------------------------- driving
+    def run(self, until: Optional[float] = None) -> float:
         while self._heap:
             if self._pending == 0 and self._live == 0:
                 break
-            at, _seq, timer = self._heap[0]
+            at, _seq, entry = self._heap[0]
             if until is not None and at > until:
                 self.now = until
                 return self.now
             heapq.heappop(self._heap)
-            if timer.cancelled:
-                continue
-            self.now = at
-            timer.fired = True
-            if not timer.daemon:
-                self._pending -= 1
-            timer.fn(*timer.args)
+            if isinstance(entry, Timer):
+                if entry.cancelled:
+                    continue
+                self.now = at
+                entry.fired = True
+                if not entry.daemon:
+                    self._pending -= 1
+                self.n_processed += 1
+                entry.fn(*entry.args)
+            else:  # _VecSingle
+                self.now = at
+                fam = entry.family
+                if not fam.daemon:
+                    self._pending -= 1
+                fam.n_delivered += 1
+                self.n_processed += 1
+                fam.fn(np.array([at]), np.array([entry.idx], dtype=np.int64))
         return self.now
 
     @property
     def n_scheduled(self) -> int:
         return len(self._heap)
 
+
+class _Bucket:
+    """Pending events for one span of virtual time, unsorted until the
+    clock enters the span."""
+
+    __slots__ = ("scalars", "vecs")
+
+    def __init__(self):
+        # scalar timers as (at, seq, Timer) tuples — sortable without a key
+        self.scalars: list[tuple[float, int, Timer]] = []
+        # family id -> (family, [(ats, seqs, idx), ...]) chunks
+        self.vecs: dict[int, tuple[VecTimer, list]] = {}
+
+
+class BatchedEventLoop(EventLoop):
+    """Bucketed time-wheel kernel: one sort per batch, not one heap op per
+    event.
+
+    Events are appended (O(1), unsorted) to fixed-``span`` virtual-time
+    buckets; a min-heap orders only the *bucket keys*. When the clock
+    enters a bucket, its scalar timers are sorted once and each vec-timer
+    family's elements are lexsorted into a single delivery batch. Because
+    ``call_at`` clamps to ``now`` and buckets partition time, nothing can
+    ever schedule *before* the active batch — so the pop order for scalar
+    timers is bit-identical to the scalar kernel's ``(time, seq)`` heap
+    order. Insertions landing inside the already-active span (zero-delay
+    resumes, condition notifies) go to a small overflow heap consulted
+    head-to-head on every pop, preserving exactness there too.
+    """
+
+    #: bucket width in virtual seconds. Replica op latencies are ~1-12 vs,
+    #: so at fleet scale each span holds thousands of events — one sort
+    #: amortized over all of them. Correctness does not depend on the value.
+    SPAN = 0.5
+
+    def __init__(self, kernel: Optional[str] = None):
+        super().__init__(kernel)
+        self.span = float(self.SPAN)
+        self._buckets: dict[int, _Bucket] = {}
+        self._bucket_heap: list[int] = []  # keys of future buckets
+        self._active = -1  # highest activated bucket key
+        self._overflow: list[tuple[float, int, Any]] = []
+        # activated batch (sorted, consumed by pointer):
+        self._cur_scalars: list[tuple[float, int, Timer]] = []
+        self._cur_si = 0
+        # vec delivery units: (at0, seq0, family, ats, idx)
+        self._cur_units: list[tuple] = []
+        self._cur_ui = 0
+        self._n_sched = 0
+        self.n_batches = 0  # bucket activations (heap interactions per batch)
+
     @property
-    def n_live_tasks(self) -> int:
-        return self._live
+    def kernel(self) -> str:
+        return "batched"
+
+    # ------------------------------------------------------------ scheduling
+    def call_at(self, at: float, fn: Callable, *args, daemon: bool = False) -> Timer:
+        self._seq += 1
+        t = Timer(self, max(at, self.now), self._seq, fn, args, daemon)
+        key = int(t.at // self.span)
+        if key <= self._active:
+            heapq.heappush(self._overflow, (t.at, t.seq, t))
+        else:
+            b = self._buckets.get(key)
+            if b is None:
+                b = self._buckets[key] = _Bucket()
+                heapq.heappush(self._bucket_heap, key)
+            b.scalars.append((t.at, t.seq, t))
+        self._n_sched += 1
+        if not daemon:
+            self._pending += 1
+        return t
+
+    def _insert_vec(
+        self, family: VecTimer, ats: np.ndarray, seqs: np.ndarray, idx: np.ndarray
+    ) -> None:
+        keys = (ats // self.span).astype(np.int64)
+        self._n_sched += len(ats)
+        live = keys > self._active
+        if not live.all():
+            # stragglers inside the active span: exact-order overflow path
+            for at, seq, i in zip(
+                ats[~live].tolist(), seqs[~live].tolist(), idx[~live].tolist()
+            ):
+                heapq.heappush(self._overflow, (at, seq, _VecSingle(family, at, i)))
+            ats, seqs, idx, keys = ats[live], seqs[live], idx[live], keys[live]
+            if len(ats) == 0:
+                return
+        order = np.argsort(keys, kind="stable")
+        keys_s = keys[order]
+        bounds = np.flatnonzero(np.diff(keys_s)) + 1
+        starts = np.concatenate(([0], bounds))
+        ends = np.concatenate((bounds, [len(keys_s)]))
+        for s, e in zip(starts.tolist(), ends.tolist()):
+            key = int(keys_s[s])
+            sel = order[s:e]
+            b = self._buckets.get(key)
+            if b is None:
+                b = self._buckets[key] = _Bucket()
+                heapq.heappush(self._bucket_heap, key)
+            ent = b.vecs.get(family.fid)
+            if ent is None:
+                ent = b.vecs[family.fid] = (family, [])
+            ent[1].append((ats[sel], seqs[sel], idx[sel]))
+
+    # --------------------------------------------------------------- driving
+    def _activate_next(self) -> bool:
+        """Sort the earliest future bucket into the current batch (the one
+        heap interaction per batch). Returns False if none remain."""
+        if not self._bucket_heap:
+            return False
+        key = heapq.heappop(self._bucket_heap)
+        b = self._buckets.pop(key)
+        self._active = key
+        b.scalars.sort()
+        self._cur_scalars = b.scalars
+        self._cur_si = 0
+        units = []
+        for family, chunks in b.vecs.values():
+            if len(chunks) == 1:
+                ats, seqs, idx = chunks[0]
+            else:
+                ats = np.concatenate([c[0] for c in chunks])
+                seqs = np.concatenate([c[1] for c in chunks])
+                idx = np.concatenate([c[2] for c in chunks])
+            order = np.lexsort((seqs, ats))
+            ats, seqs, idx = ats[order], seqs[order], idx[order]
+            units.append((float(ats[0]), int(seqs[0]), family, ats, idx))
+        units.sort(key=lambda u: (u[0], u[1]))
+        self._cur_units = units
+        self._cur_ui = 0
+        self.n_batches += 1
+        return True
+
+    def _peek(self):
+        """Earliest pending entry as (at, seq, source) — source 0 = current
+        scalar batch, 1 = vec unit, 2 = overflow — or None when drained.
+        Activates buckets as needed."""
+        while True:
+            best = None
+            if self._cur_si < len(self._cur_scalars):
+                at, seq, _t = self._cur_scalars[self._cur_si]
+                best = (at, seq, 0)
+            if self._cur_ui < len(self._cur_units):
+                u = self._cur_units[self._cur_ui]
+                if best is None or (u[0], u[1]) < (best[0], best[1]):
+                    best = (u[0], u[1], 1)
+            if self._overflow:
+                o = self._overflow[0]
+                if best is None or (o[0], o[1]) < (best[0], best[1]):
+                    best = (o[0], o[1], 2)
+            if best is not None:
+                return best
+            if not self._activate_next():
+                return None
+
+    def run(self, until: Optional[float] = None) -> float:
+        while True:
+            if self._pending == 0 and self._live == 0:
+                break
+            head = self._peek()
+            if head is None:
+                break
+            at, _seq, source = head
+            if until is not None and at > until:
+                self.now = until
+                return self.now
+            if source == 0:
+                _at, _s, timer = self._cur_scalars[self._cur_si]
+                self._cur_si += 1
+                self._fire_scalar(at, timer)
+            elif source == 1:
+                unit = self._cur_units[self._cur_ui]
+                self._cur_ui += 1
+                self._fire_unit(unit)
+            else:
+                entry = heapq.heappop(self._overflow)[2]
+                if isinstance(entry, Timer):
+                    self._fire_scalar(at, entry)
+                else:
+                    self._fire_single(entry)
+        return self.now
+
+    def _fire_scalar(self, at: float, timer: Timer) -> None:
+        self._n_sched -= 1
+        if timer.cancelled:
+            return
+        self.now = at
+        timer.fired = True
+        if not timer.daemon:
+            self._pending -= 1
+        self.n_processed += 1
+        timer.fn(*timer.args)
+
+    def _fire_unit(self, unit: tuple) -> None:
+        at0, _seq0, family, ats, idx = unit
+        n = len(ats)
+        self._n_sched -= n
+        self.now = at0
+        if not family.daemon:
+            self._pending -= n
+        family.n_delivered += n
+        self.n_processed += n
+        family.fn(ats, idx)
+
+    def _fire_single(self, entry: _VecSingle) -> None:
+        self._n_sched -= 1
+        self.now = entry.at
+        fam = entry.family
+        if not fam.daemon:
+            self._pending -= 1
+        fam.n_delivered += 1
+        self.n_processed += 1
+        fam.fn(np.array([entry.at]), np.array([entry.idx], dtype=np.int64))
+
+    @property
+    def n_scheduled(self) -> int:
+        return self._n_sched

@@ -7,6 +7,7 @@ reset / step / evaluate in *virtual seconds*), CoW-backed disk writes, and
 seeded stochastic faults. Default latencies are calibrated so the Table-3
 datagen benchmark reproduces ~1420 trajectories/min at 1024 replicas.
 """
+
 from __future__ import annotations
 
 import enum
@@ -19,7 +20,7 @@ import numpy as np
 
 from repro.core.cow_store import DiskImage
 from repro.core.faults import FaultInjector, FaultType, ReplicaError
-from repro.core.seeding import lognorm_jitter, stable_seed
+from repro.core.seeding import LatencyStream, lognorm_jitter, stable_seed
 
 SCREEN = (48, 64, 3)  # tiny deterministic "screenshot"
 
@@ -50,6 +51,13 @@ class LatencyModel:
     def sample(self, rng: random.Random, mean: float) -> float:
         return mean * lognorm_jitter(rng, self.sigma)
 
+    def stream(self, seed: int) -> LatencyStream:
+        """Bulk-draw latency stream for one replica (see
+        :class:`~repro.core.seeding.LatencyStream`): multipliers come from
+        block numpy draws instead of per-event Python RNG calls, and the
+        stream is stable across processes and event-kernel choice."""
+        return LatencyStream(seed, self.sigma)
+
 
 class ReplicaState(enum.Enum):
     COLD = "cold"
@@ -62,27 +70,38 @@ class ReplicaState(enum.Enum):
 
 @dataclass
 class ReplicaResources:
-    ram_gb: float = 5.0            # steady RAM (limit 6 GB per container)
+    ram_gb: float = 5.0  # steady RAM (limit 6 GB per container)
     ram_limit_gb: float = 6.0
-    cpu_peak_cores: float = 2.0    # burst demand
-    cpu_duty: float = 0.2          # fraction of time at peak
+    cpu_peak_cores: float = 2.0  # burst demand
+    cpu_duty: float = 0.2  # fraction of time at peak
     cpu_idle_cores: float = 0.1
 
 
 class SimOSReplica:
     """A full-featured (simulated) OS sandbox with GUI."""
 
-    def __init__(self, replica_id: str, base_image: DiskImage, *,
-                 faults: Optional[FaultInjector] = None, seed: int = 0,
-                 latency: Optional[LatencyModel] = None,
-                 use_reflink: bool = True,
-                 resources: Optional[ReplicaResources] = None):
+    def __init__(
+        self,
+        replica_id: str,
+        base_image: DiskImage,
+        *,
+        faults: Optional[FaultInjector] = None,
+        seed: int = 0,
+        latency: Optional[LatencyModel] = None,
+        use_reflink: bool = True,
+        resources: Optional[ReplicaResources] = None,
+    ):
         self.replica_id = replica_id
         self.base_image = base_image
         self.faults = faults or FaultInjector(enabled=False)
         self.latency = latency or LatencyModel()
         self.resources = resources or ReplicaResources()
         self.use_reflink = use_reflink
+        # two independent deterministic streams: latency jitter comes from
+        # a bulk numpy LatencyStream (the batched kernel draws blocks, not
+        # per-event Python RNG calls); disk-write placement keeps the
+        # cheap stdlib RNG. Separate keys so neither perturbs the other.
+        self._lat = self.latency.stream(stable_seed(seed, replica_id, "lat"))
         self._rng = random.Random(stable_seed(seed, replica_id))
         self.state = ReplicaState.COLD
         self.disk: Optional[DiskImage] = None
@@ -106,7 +125,7 @@ class SimOSReplica:
             self.disk, prov = self.base_image.full_copy(self.replica_id)
         self.state = ReplicaState.READY
         self.step_count = 0
-        return prov + self.latency.sample(self._rng, self.latency.boot_s)
+        return prov + self._lat.sample(self.latency.boot_s)
 
     def crash(self) -> None:
         self.state = ReplicaState.CRASHED
@@ -128,7 +147,7 @@ class SimOSReplica:
         self.task = dict(task)
         # configuration installs software -> dirties disk blocks
         self._dirty_blocks(n=8, tag="configure")
-        return self.latency.sample(self._rng, self.latency.configure_s)
+        return self._lat.sample(self.latency.configure_s)
 
     def reset(self) -> tuple[np.ndarray, float]:
         self._require_alive()
@@ -136,27 +155,32 @@ class SimOSReplica:
         self.step_count = 0
         self.obs_nonce += 1
         self.state = ReplicaState.RUNNING
-        return (self._observation(),
-                self.latency.sample(self._rng, self.latency.reset_s))
+        return (self._observation(), self._lat.sample(self.latency.reset_s))
 
     def step(self, action: Any) -> tuple[np.ndarray, float, bool, dict, float]:
         """Returns (obs, reward, done, info, virtual_seconds)."""
         self._require_alive()
         fault = self.faults.sample()
-        dur = self.latency.sample(self._rng, self.latency.step_s)
+        dur = self._lat.sample(self.latency.step_s)
         if fault is not None:
             if fault == FaultType.CRASH:
                 self.crash()
                 raise ReplicaError(fault, self.replica_id)
             if fault == FaultType.HANG:
                 self.crash()
-                raise ReplicaError(fault, f"{self.replica_id} "
-                                   f"(>{self.latency.hang_timeout_s}s)")
+                raise ReplicaError(
+                    fault, f"{self.replica_id} (>{self.latency.hang_timeout_s}s)"
+                )
             if fault == FaultType.SILENT:
                 # succeeds but corrupts the observation (untuned kernel limits)
                 self.step_count += 1
-                return (np.zeros(SCREEN, np.uint8), 0.0, False,
-                        {"silent_corruption": True}, dur)
+                return (
+                    np.zeros(SCREEN, np.uint8),
+                    0.0,
+                    False,
+                    {"silent_corruption": True},
+                    dur,
+                )
             raise ReplicaError(fault, self.replica_id)
         self.step_count += 1
         self._dirty_blocks(n=1, tag=f"step{self.step_count}")
@@ -175,16 +199,17 @@ class SimOSReplica:
         self._require_alive()
         # deterministic outcome from (task, trajectory length)
         h = hashlib.blake2b(
-            f"{self.task.get('task_id')}/{self.step_count}".encode(),
-            digest_size=4).digest()
-        score = (h[0] / 255.0)
-        return score, self.latency.sample(self._rng, self.latency.evaluate_s)
+            f"{self.task.get('task_id')}/{self.step_count}".encode(), digest_size=4
+        ).digest()
+        score = h[0] / 255.0
+        return score, self._lat.sample(self.latency.evaluate_s)
 
     # ------------------------------------------------------------ internals
     def _require_alive(self) -> None:
         if not self.alive:
-            raise ReplicaError(FaultType.CRASH,
-                               f"{self.replica_id} is {self.state.value}")
+            raise ReplicaError(
+                FaultType.CRASH, f"{self.replica_id} is {self.state.value}"
+            )
 
     def _dirty_blocks(self, n: int, tag: str) -> None:
         if self.disk is None:
@@ -207,8 +232,7 @@ class SimOSReplica:
         if not self.alive:
             return False, cost
         got = self._observation()
-        want = expected_observation(self.replica_id, self.obs_nonce,
-                                    self.step_count)
+        want = expected_observation(self.replica_id, self.obs_nonce, self.step_count)
         got_sum = hashlib.blake2b(got.tobytes(), digest_size=8).digest()
         want_sum = hashlib.blake2b(want.tobytes(), digest_size=8).digest()
         return got_sum == want_sum, cost
@@ -217,19 +241,31 @@ class SimOSReplica:
         if self.silent_broken:
             # kernel-limit exhaustion: frames come back blank, silently
             return np.zeros(SCREEN, np.uint8)
-        return expected_observation(self.replica_id, self.obs_nonce,
-                                    self.step_count)
+        return expected_observation(self.replica_id, self.obs_nonce, self.step_count)
 
 
-def expected_observation(replica_id: str, obs_nonce: int,
-                         step_count: int) -> np.ndarray:
+_OBS_WORDS = (SCREEN[0] * SCREEN[1] * SCREEN[2]) // 8  # uint64 per frame
+
+
+def expected_observation(
+    replica_id: str, obs_nonce: int, step_count: int
+) -> np.ndarray:
     """The known-answer observation a *healthy* replica must produce.
 
     Pure function of the replica's visible state — the canary probe's
     reference value. Kept module-level so detection code never needs a
-    healthy twin replica to compare against."""
-    seed_bytes = hashlib.blake2b(
-        f"{replica_id}/{obs_nonce}/{step_count}".encode(),
-        digest_size=8).digest()
-    rng = np.random.default_rng(int.from_bytes(seed_bytes, "little"))
-    return rng.integers(0, 256, SCREEN, dtype=np.uint8)
+    healthy twin replica to compare against.
+
+    Frame synthesis is the single hottest call at fleet scale (once per
+    reset/step plus every canary probe), so it goes straight from a
+    blake2b digest of the state to raw Philox counter output — no
+    ``default_rng`` construction, no bounded-integers path — about half
+    the cost of the ``integers(0, 256)`` formulation it replaces."""
+    d = hashlib.blake2b(
+        f"{replica_id}/{obs_nonce}/{step_count}".encode(), digest_size=32
+    ).digest()
+    bits = np.random.Philox(
+        counter=int.from_bytes(d[:16], "little"), key=int.from_bytes(d[16:], "little")
+    )
+    words = bits.random_raw(_OBS_WORDS).astype("<u8", copy=False)
+    return words.view(np.uint8).reshape(SCREEN)

@@ -16,11 +16,23 @@ Two fixes live here:
    every configured mean by 6%. :func:`lognorm_jitter` centers the draw so
    the expected value is exactly 1.0 and the configured means are the
    means that calibration against the paper's numbers assumes.
+
+3. **Bulk draws.** The batched event kernel processes thousands of replica
+   ops per tick; one Python ``random.Random.lognormvariate`` call per op
+   (~0.7 µs) dominates at fleet scale. :class:`LatencyStream` draws
+   mean-preserving lognormal multipliers in numpy blocks from a
+   counter-based Philox generator — ~3× cheaper per draw, and the stream
+   is a pure function of its ``stable_seed`` key, so it is identical
+   across processes, platforms, and consumption patterns (a replica's
+   n-th draw never depends on how other replicas interleave).
 """
+
 from __future__ import annotations
 
 import hashlib
 import random
+
+import numpy as np
 
 _SEP = b"\x1f"  # unit separator: ("ab", "c") never collides with ("a", "bc")
 
@@ -30,8 +42,7 @@ def stable_seed(*parts) -> int:
 
     Parts are stringified, so any mix of ints/strings/floats works:
     ``stable_seed(seed, n_replicas, "centralized")``."""
-    h = hashlib.blake2b(_SEP.join(str(p).encode() for p in parts),
-                        digest_size=8)
+    h = hashlib.blake2b(_SEP.join(str(p).encode() for p in parts), digest_size=8)
     return int.from_bytes(h.digest(), "little") & 0x7FFFFFFFFFFFFFFF
 
 
@@ -42,3 +53,58 @@ def lognorm_jitter(rng: random.Random, sigma: float) -> float:
     lognormal's ``exp(sigma^2/2)`` mean inflation, so
     ``mean * lognorm_jitter(rng, s)`` has expectation ``mean``."""
     return rng.lognormvariate(-0.5 * sigma * sigma, sigma)
+
+
+class LatencyStream:
+    """Block-buffered, mean-preserving lognormal multiplier stream.
+
+    The bulk-draw counterpart of :func:`lognorm_jitter`: draws ``BLOCK``
+    multipliers at a time with one vectorized numpy call instead of one
+    Python RNG call per event. Built on counter-based Philox keyed by a
+    :func:`stable_seed` value, so the n-th draw of a stream is a pure
+    function of ``(seed, n)`` — identical across processes (any
+    ``PYTHONHASHSEED``), platforms, and regardless of how draws from
+    *other* streams interleave with it. Each replica owns one stream, so
+    batched and scalar kernels consume identical per-replica latency
+    sequences whenever they run ops in the same per-replica order (the
+    bit-exact parity contract).
+    """
+
+    BLOCK = 64
+
+    __slots__ = ("sigma", "_gen", "_buf", "_i")
+
+    def __init__(self, seed: int, sigma: float):
+        self.sigma = float(sigma)
+        self._gen = np.random.Generator(np.random.Philox(key=seed))
+        self._buf: np.ndarray = np.empty(0)
+        self._i = 0
+
+    def jitter(self) -> float:
+        """Next multiplier (mean exactly 1.0, like :func:`lognorm_jitter`)."""
+        if self._i >= len(self._buf):
+            z = self._gen.standard_normal(self.BLOCK)
+            self._buf = np.exp(self.sigma * z - 0.5 * self.sigma * self.sigma)
+            self._i = 0
+        v = self._buf[self._i]
+        self._i += 1
+        return float(v)
+
+    def jitter_block(self, n: int) -> np.ndarray:
+        """``n`` multipliers as one array (same stream as :meth:`jitter` —
+        ``jitter_block(n)`` equals n successive ``jitter()`` calls)."""
+        out = np.empty(n)
+        filled = 0
+        while filled < n:
+            if self._i >= len(self._buf):
+                z = self._gen.standard_normal(self.BLOCK)
+                self._buf = np.exp(self.sigma * z - 0.5 * self.sigma * self.sigma)
+                self._i = 0
+            take = min(n - filled, len(self._buf) - self._i)
+            out[filled : filled + take] = self._buf[self._i : self._i + take]
+            self._i += take
+            filled += take
+        return out
+
+    def sample(self, mean: float) -> float:
+        return mean * self.jitter()

@@ -14,6 +14,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed the TPU compiler-params struct from TPUCompilerParams to
+# CompilerParams (jax 0.5): accept either so the kernels (and their
+# interpret-mode tests) run on both sides of the rename.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 DEFAULT_BLOCK_ROWS = 256
 
 
@@ -47,7 +53,7 @@ def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
         ],
         out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xf, scale)

@@ -20,6 +20,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed the TPU compiler-params struct from TPUCompilerParams to
+# CompilerParams (jax 0.5): accept either so the kernels (and their
+# interpret-mode tests) run on both sides of the rename.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 DEFAULT_BLOCK_H = 8
 
 
@@ -121,7 +127,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B_in: jax.Array,
             jax.ShapeDtypeStruct((Bb, H, N, P), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((hb, N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, Bs, Cs, D, init)

@@ -177,6 +177,82 @@ def test_recovery_boolean_detection_gate_must_hold():
     assert any("MISSING recovery_curve" in p for p in problems)
 
 
+def test_committed_kernel_baseline_self_passes():
+    base = _baseline("BENCH_kernel.json")
+    assert cb.check(base, copy.deepcopy(base), 0.10) == []
+
+
+def test_kernel_parity_boolean_gate_must_hold():
+    base = _baseline("BENCH_kernel.json")
+    assert base["gate"]["lane_parity_bit_identical"] is True
+    assert base["gate"]["engine_parity_bit_identical"] is True
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["lane_parity_bit_identical"] = False
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("lane_parity_bit_identical" in p for p in problems)
+
+
+def test_kernel_events_per_s_gets_the_wide_host_band():
+    """Raw events/sec is a wall-clock rate: even a 60% dip (host speed +
+    load) passes its very wide sanity band, a 90% collapse is still a
+    REGRESSION — and the labels stay direction-aware (a 2x rise flags a
+    stale baseline). The speedup ratio cancels host speed, so it keeps
+    the tighter 50% band: a 30% dip passes, a 60% dip fails."""
+    base = _baseline("BENCH_kernel.json")
+    noisy = copy.deepcopy(base)
+    for row in noisy["kernel"]:
+        row["batched_events_per_s"] *= 0.40
+        row["speedup"] *= 0.70
+    assert cb.check(base, noisy, 0.10) == []
+    collapsed = copy.deepcopy(base)
+    for row in collapsed["kernel"]:
+        row["batched_events_per_s"] *= 0.10
+    problems = cb.check(base, collapsed, 0.10)
+    assert problems and all(
+        "REGRESSION" in p and "batched_events_per_s" in p for p in problems)
+    improved = copy.deepcopy(base)
+    for row in improved["kernel"]:
+        row["batched_events_per_s"] *= 2.00
+    problems = cb.check(base, improved, 0.10)
+    assert any("STALE BASELINE" in p and "batched_events_per_s" in p
+               for p in problems)
+    slow_ratio = copy.deepcopy(base)
+    for row in slow_ratio["kernel"]:
+        row["speedup"] *= 0.40
+    problems = cb.check(base, slow_ratio, 0.10)
+    assert problems and all(
+        "REGRESSION" in p and "speedup" in p for p in problems)
+
+
+def test_kernel_deterministic_counts_keep_the_tight_band():
+    base = _baseline("BENCH_kernel.json")
+    perturbed = copy.deepcopy(base)
+    for row in perturbed["kernel"]:
+        row["events"] = int(row["events"] * 0.85)
+    problems = cb.check(base, perturbed, 0.10)
+    assert problems and all("events" in p for p in problems)
+
+
+def test_kernel_wall_budget_is_a_hard_gate():
+    base = _baseline("BENCH_kernel.json")
+    over = copy.deepcopy(base)
+    over["sweep_wall_seconds"] = base["wall_budget_s"] * 1.5
+    problems = cb.check(base, over, 0.10)
+    assert any("wall budget" in p for p in problems)
+    missing = copy.deepcopy(base)
+    del missing["sweep_wall_seconds"]
+    problems = cb.check(base, missing, 0.10)
+    assert any("MISSING sweep_wall_seconds" in p for p in problems)
+
+
+def test_kernel_missing_lane_row_fails():
+    base = _baseline("BENCH_kernel.json")
+    perturbed = copy.deepcopy(base)
+    perturbed["kernel"] = perturbed["kernel"][1:]
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("MISSING kernel[" in p for p in problems)
+
+
 def test_malformed_payloads_are_rejected():
     assert cb.check({}, {}, 0.10) == [
         "MALFORMED baseline: neither engine rows nor a gate block"

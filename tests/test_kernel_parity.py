@@ -1,0 +1,344 @@
+"""Batched-vs-scalar kernel parity: the batched time-wheel kernel must be
+*bit-identical* to the scalar heap oracle on every non-vectorized workload
+— same event order under the (time, seq) tie-break, same virtual times,
+same task results, same counters — plus golden-value pins for the
+stable_seed/lognorm/LatencyStream streams so kernel edits can't silently
+shift all committed benchmark baselines, and a cross-process determinism
+check for the bulk latency draws."""
+import hashlib
+import random
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BatchedEventLoop, CowStore, DiskImage, EventLoop,
+                        FaultInjector, Gateway, RunnerPool, ScalarEventLoop,
+                        Sleep)
+from repro.core.replica import expected_observation
+from repro.core.seeding import LatencyStream, lognorm_jitter, stable_seed
+from repro.rollout import (RolloutConfig, RolloutEngine, TrajectoryWriter,
+                           get_default_registry)
+
+KERNELS = ("scalar", "batched")
+
+
+# ------------------------------------------------------------ factory flag
+def test_factory_dispatch_and_env_flag(monkeypatch):
+    assert isinstance(EventLoop(), BatchedEventLoop)
+    assert isinstance(EventLoop(kernel="scalar"), ScalarEventLoop)
+    assert isinstance(EventLoop(kernel="batched"), BatchedEventLoop)
+    for loop in (EventLoop(), EventLoop(kernel="scalar")):
+        assert isinstance(loop, EventLoop)
+    monkeypatch.setenv("REPRO_KERNEL", "scalar")
+    assert EventLoop().kernel == "scalar"
+    monkeypatch.setenv("REPRO_KERNEL", "batched")
+    assert EventLoop().kernel == "batched"
+    with pytest.raises(ValueError, match="unknown event kernel"):
+        EventLoop(kernel="quantum")
+
+
+# --------------------------------------------------- random-schedule replay
+def _make_spec(seed: int, n_tasks: int = 6, n_conds: int = 3):
+    """A random event schedule: mixed sleeps, timers (some cancelled —
+    immediately or racing a later cancel timer — some daemon), condition
+    waits with/without timeouts, notifies, and task joins."""
+    rng = random.Random(stable_seed("kernel-parity", seed))
+    spec = []
+    for _t in range(n_tasks):
+        ops = []
+        for _o in range(rng.randint(2, 7)):
+            roll = rng.random()
+            if roll < 0.30:
+                ops.append(("sleep", round(rng.uniform(0.0, 3.0), 3)))
+            elif roll < 0.50:
+                ops.append(("timer", round(rng.uniform(0.0, 2.5), 3),
+                            rng.choice(["keep", "cancel_now", "cancel_later"]),
+                            rng.random() < 0.25))
+            elif roll < 0.70:
+                ops.append(("wait", rng.randrange(n_conds),
+                            rng.choice([None, round(rng.uniform(0.05, 2.0),
+                                                    3)])))
+            elif roll < 0.90:
+                ops.append(("notify", rng.randrange(n_conds),
+                            rng.randint(1, 2)))
+            else:
+                ops.append(("join_prev",))
+        spec.append(ops)
+    return spec
+
+
+def _replay(kernel: str, spec):
+    """Run one schedule on one kernel; return every observable output."""
+    loop = EventLoop(kernel=kernel)
+    conds = [loop.condition() for _ in range(8)]
+    trace = []
+    tasks = []
+
+    def program(name, ops):
+        for j, op in enumerate(ops):
+            if op[0] == "sleep":
+                yield Sleep(op[1])
+                trace.append((name, j, "slept", loop.now))
+            elif op[0] == "timer":
+                _, delay, mode, daemon = op
+                t = loop.call_later(
+                    delay,
+                    lambda name=name, j=j: trace.append(
+                        (name, j, "timer-fired", loop.now)),
+                    daemon=daemon)
+                if mode == "cancel_now":
+                    t.cancel()
+                elif mode == "cancel_later":
+                    # racing cancel: lands before/at/after the fire
+                    # deterministically by (time, seq)
+                    loop.call_later(delay * 0.9, t.cancel, daemon=True)
+            elif op[0] == "wait":
+                ok = yield from conds[op[1]].wait(op[2])
+                trace.append((name, j, "wait", ok, loop.now))
+            elif op[0] == "notify":
+                conds[op[1]].notify(op[2])
+                trace.append((name, j, "notify", loop.now))
+            elif op[0] == "join_prev":
+                if tasks:
+                    done = yield tasks[-1]
+                    trace.append((name, j, "joined", done.name, loop.now))
+        return (name, loop.now)
+
+    for i, ops in enumerate(spec):
+        tasks.append(loop.spawn(program(f"t{i}", ops), name=f"t{i}"))
+    end = loop.run()
+    return {
+        "trace": trace,
+        "end": end,
+        "now": loop.now,
+        "results": [(t.name, t.done,
+                     t.value if (t.done and t.error is None) else None,
+                     type(t.error).__name__ if t.error else None)
+                    for t in tasks],
+        "n_processed": loop.n_processed,
+        "n_scheduled_left": loop.n_scheduled,
+        "n_live_left": loop.n_live_tasks,
+        "errors": [(n, type(e).__name__) for n, e in loop.errors],
+    }
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_random_schedules_replay_bit_identically(seed):
+    spec = _make_spec(seed)
+    assert _replay("scalar", spec) == _replay("batched", spec)
+
+
+@given(seed=st.integers(0, 10_000), n_tasks=st.integers(1, 10))
+@settings(max_examples=40, deadline=None)
+def test_property_random_schedules_replay_bit_identically(seed, n_tasks):
+    spec = _make_spec(seed, n_tasks=n_tasks)
+    assert _replay("scalar", spec) == _replay("batched", spec)
+
+
+def test_run_until_clamps_identically():
+    for until in (0.0, 0.7, 1.0, 2.49, 2.5, 99.0):
+        outs = []
+        for kernel in KERNELS:
+            loop = EventLoop(kernel=kernel)
+            fired = []
+            for d in (0.5, 1.0, 1.5, 2.5):
+                loop.call_later(d, fired.append, d)
+            dropped = loop.call_later(0.6, fired.append, "no")
+            dropped.cancel()
+            end = loop.run(until=until)
+            outs.append((end, loop.now, fired, loop.n_processed,
+                         loop.n_scheduled))
+        assert outs[0] == outs[1], f"until={until}"
+
+
+def test_daemon_timers_do_not_keep_either_kernel_alive():
+    outs = []
+    for kernel in KERNELS:
+        loop = EventLoop(kernel=kernel)
+        beats = []
+
+        def heartbeat():
+            beats.append(loop.now)
+            loop.call_later(10.0, heartbeat, daemon=True)
+
+        loop.call_later(10.0, heartbeat, daemon=True)
+        loop.call_later(25.0, beats.append, "work")
+        end = loop.run()
+        outs.append((end, beats))
+    assert outs[0] == outs[1] == (25.0, [10.0, 20.0, "work"])
+
+
+# --------------------------------------------------------- engine-level
+def _engine_report(kernel: str, n_nodes=4, size=8, n_tasks=48):
+    store = CowStore(block_size=1 << 20)
+    base = DiskImage.create_base(store, "ubuntu", 64 << 20)
+    pools = [RunnerPool(f"n{i}", base, size=size,
+                        faults=FaultInjector(seed=i), seed=i)
+             for i in range(n_nodes)]
+    gw = Gateway(pools)
+    writer = TrajectoryWriter(capacity=64, retain=False)
+    engine = RolloutEngine(gw, writer,
+                           config=RolloutConfig(max_inflight=n_nodes * size))
+    tasks = get_default_registry().sample(n_tasks, seed=13)
+    rep = engine.run_event_driven(tasks, loop=EventLoop(kernel=kernel))
+    writer.drain(timeout=10.0)
+    out = {
+        "completed": rep.completed,
+        "failed": rep.failed,
+        "total_steps": rep.total_steps,
+        "reassignments": rep.reassignments,
+        "virtual_seconds": rep.virtual_seconds,      # exact, no rounding
+        "virtual_makespan": rep.virtual_makespan,
+        "backpressure_waits": rep.backpressure_waits,
+        "results": [(r.task["task_id"], r.ok, r.steps, r.attempts,
+                     tuple(r.nodes), r.score, r.virtual_seconds)
+                    for r in rep.results],
+        "failovers": gw.failovers,
+        "writer": (writer.stats.written, writer.stats.consumed,
+                   writer.stats.steps),
+    }
+    writer.close()
+    gw.stop()
+    return out
+
+
+def test_full_engine_run_is_bit_identical_across_kernels():
+    """The real rollout stack — gateway routing, failover, recovery
+    ladder timers, canary sweeps, writer gate — replays bit-for-bit on
+    the batched kernel: every virtual timestamp and latency draw equal,
+    not approximately equal."""
+    assert _engine_report("scalar") == _engine_report("batched")
+
+
+# ------------------------------------------------------------- vec timers
+def test_vec_timer_delivers_same_elements_on_both_kernels():
+    """The array-scheduling primitive: batched delivery may group
+    elements (one callback per bucket) but the delivered (time, index)
+    pairs — and any per-lane arithmetic chained off them — must equal the
+    scalar oracle's element-at-a-time replay bit-for-bit."""
+    rng = np.random.default_rng(stable_seed("vec-parity"))
+    n_lanes, n_hops = 64, 6
+    hops = rng.lognormal(0.5, 0.4, size=(n_lanes, n_hops))
+    outs = []
+    for kernel in KERNELS:
+        loop = EventLoop(kernel=kernel)
+        done_at = np.zeros(n_lanes)
+        hop_no = np.zeros(n_lanes, np.int64)
+        delivered = []
+
+        def on_fire(ats, idx):
+            delivered.extend(zip(idx.tolist(), ats.tolist()))
+            h = hop_no[idx]
+            last = h == n_hops - 1
+            done_at[idx[last]] = ats[last]
+            cont = ~last
+            if cont.any():
+                nxt = idx[cont]
+                # next hop chains the same float additions per lane
+                vt.schedule(ats[cont] + hops[nxt, h[cont] + 1], nxt)
+            hop_no[idx] = h + 1
+
+        vt = loop.vec_timer(on_fire)
+        vt.schedule(hops[:, 0].copy())
+        loop.run()
+        # per-lane delivery order is what the workload observes
+        per_lane = {}
+        for i, at in delivered:
+            per_lane.setdefault(i, []).append(at)
+        outs.append({"per_lane": per_lane,
+                     "done_at": done_at.tobytes(),
+                     "makespan": loop.now,
+                     "n": loop.n_processed,
+                     "booked": vt.n_booked,
+                     "delivered": vt.n_delivered})
+    assert outs[0] == outs[1]
+    # and the virtual completion times are the exact per-lane hop sums
+    np.testing.assert_array_equal(
+        np.frombuffer(outs[0]["done_at"]), hops.cumsum(axis=1)[:, -1])
+
+
+def test_vec_timer_batches_on_batched_kernel():
+    """One bucket's worth of same-family events arrives as one callback
+    on the batched kernel (the 'one heap interaction per batch' claim is
+    observable), while the scalar oracle delivers singletons."""
+    sizes = {}
+    for kernel in KERNELS:
+        loop = EventLoop(kernel=kernel)
+        calls = []
+        vt = loop.vec_timer(lambda ats, idx: calls.append(len(idx)))
+        # 100 events spread over ~2 buckets (span 0.5)
+        vt.schedule(np.linspace(5.0, 5.9, 100))
+        loop.run()
+        assert sum(calls) == 100
+        sizes[kernel] = calls
+    assert all(c == 1 for c in sizes["scalar"])
+    assert len(sizes["batched"]) <= 4     # one per touched bucket
+    assert max(sizes["batched"]) >= 50
+
+
+# ----------------------------------------------- seeding / latency streams
+def test_latency_stream_golden_values():
+    """Exact pinned floats: any change to the LatencyStream derivation
+    silently shifts every committed benchmark baseline — fail loudly
+    instead. (Regenerate baselines AND these pins together, explaining
+    the shift in CHANGES.md.)"""
+    assert stable_seed(0, 1024, "decentralized") == 2432442263420793307
+    assert stable_seed("pool", 7) == 8927699488785045167
+    r = random.Random(stable_seed(42))
+    assert [lognorm_jitter(r, 0.35) for _ in range(4)] == [
+        1.0126809073328895, 1.6187959481484668,
+        0.5458204195057804, 0.9490894145409831]
+    s = LatencyStream(stable_seed(42, "r0", "lat"), 0.35)
+    assert [s.jitter() for _ in range(4)] == [
+        0.9526672134961464, 1.129339085777782,
+        1.2041713483200398, 1.0870846908996488]
+    s2 = LatencyStream(stable_seed(42, "r0", "lat"), 0.35)
+    assert s2.jitter_block(4).tobytes().hex() == (
+        "2bffbdf33f7cee3f6c2978dcc511f23f"
+        "6709fd2c4944f33f1557b6eab264f13f")
+    obs = expected_observation("r0", 1, 3)
+    assert hashlib.blake2b(obs.tobytes(),
+                           digest_size=8).hexdigest() == "3ed73ef4b1807447"
+
+
+def test_latency_stream_block_equals_scalar_draws():
+    """Bulk draws are the same stream: jitter_block(n) == n jitter()s,
+    split anywhere."""
+    a = LatencyStream(stable_seed(9, "x"), 0.35)
+    b = LatencyStream(stable_seed(9, "x"), 0.35)
+    singles = [a.jitter() for _ in range(150)]
+    blocks = list(b.jitter_block(7)) + list(b.jitter_block(64)) + \
+        list(b.jitter_block(79))
+    assert singles == blocks
+
+
+def test_latency_stream_mean_is_one():
+    s = LatencyStream(stable_seed("mean-check"), 0.35)
+    assert abs(float(np.mean(s.jitter_block(100_000))) - 1.0) < 0.01
+
+
+def test_bulk_draws_are_cross_process_deterministic():
+    """The numpy Philox stream must not depend on PYTHONHASHSEED, process
+    boundaries, or consumption pattern — it feeds every committed
+    baseline."""
+    code = (
+        "import sys; sys.path.insert(0, 'src'); import hashlib;"
+        "from repro.core.seeding import LatencyStream, stable_seed;"
+        "from repro.core.replica import expected_observation;"
+        "s = LatencyStream(stable_seed(0, 'r7', 'lat'), 0.35);"
+        "print(s.jitter_block(130).tobytes().hex());"
+        "print(hashlib.blake2b(expected_observation('r7', 2, 5).tobytes(),"
+        "      digest_size=8).hexdigest())")
+    want_stream = LatencyStream(stable_seed(0, "r7", "lat"),
+                                0.35).jitter_block(130).tobytes().hex()
+    want_obs = hashlib.blake2b(expected_observation("r7", 2, 5).tobytes(),
+                               digest_size=8).hexdigest()
+    for hashseed in ("0", "12345"):
+        out = subprocess.run(
+            [sys.executable, "-c", code], cwd=".", capture_output=True,
+            text=True, env={"PYTHONHASHSEED": hashseed, "PATH": "/usr/bin"})
+        lines = out.stdout.split()
+        assert lines == [want_stream, want_obs], out.stderr
