@@ -65,7 +65,13 @@ def run_pipeline(*, algo: str = "ppo", replicas: int = 16, rounds: int = 4,
         learner_cfg=LearnerConfig(algo=algo, batch_size=8, seq_len=192,
                                   staleness_bound=4,
                                   staleness_policy="reweight"),
-        ingest_cfg=IngestConfig(seq_len=192))
+        # interleaved mode consumes nothing mid-round, so deadline flushes
+        # buy no latency — flush at round barriers only, with the fused
+        # scoring width matched to the round's episode count (every flush
+        # is one full fused call; no padding, no per-sample dispatch)
+        ingest_cfg=IngestConfig(seq_len=192, micro_batch=tasks_per_round,
+                                flush_wall_s=float("inf"),
+                                flush_virtual_s=float("inf")))
     try:
         report = pipe.run_interleaved()
     finally:

@@ -1,0 +1,299 @@
+"""Rollout→learner data-plane benchmark: batched ingest + fused learner.
+
+Measures the two halves of the vectorized data plane against their
+per-sample parity oracles, asserting bit-exactness before timing:
+
+- **ingest** — the same episode stream is scored through the per-sample
+  oracle (``micro_batch=1``, batch-size-1 jitted forwards into a
+  dict-list buffer) and the micro-batched plane (``micro_batch=32``
+  fused forward+log-softmax+gather flushes into the SoA arena). Every
+  replay row must match the oracle bit for bit (including a remainder
+  flush), then both planes are timed on a tiny model where per-sample
+  dispatch overhead — the thing micro-batching deletes — dominates.
+- **learner** — steady-state fused ``LearnerLoop`` update rate on the
+  reduced e2e model (columns sampling, one numpy staleness pass,
+  ``make_batch_columns`` assembly), compared against the learner rate of
+  the committed end-to-end baseline the scalar plane produced.
+
+    PYTHONPATH=src python benchmarks/learner_dataplane.py
+
+Emits ``artifacts/bench/BENCH_dataplane.json``; ``scripts/check_bench.py``
+gates CI on its ``gate`` block (parity booleans strict, deterministic
+counts tight, wall-clock rates wide-banded).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(__file__), "..", "artifacts", "bench", "BENCH_dataplane.json"
+)
+
+# learner steps/min of the committed BENCH_e2e baseline (scalar data
+# plane, compile included) at the time the fused-plane gate was set; the
+# steady-state fused rate must clear 2x this. Pinned rather than read
+# from BENCH_e2e.json so regenerating the e2e baseline on the fused
+# plane cannot move this bar.
+E2E_BASELINE_STEPS_PER_MIN = 174.4165349759431
+
+INGEST_SEQ = 128
+MICRO_BATCH = 32
+# parity stream: two full flushes + one remainder flush (32 + 32 + 6)
+PARITY_TRAJS = 70
+TIMED_TRAJS = 96
+LEARNER_STEPS = 16
+
+
+def _trajectories(n: int, seed: int = 0):
+    """Episodes with varied step counts and text, so sample lengths are
+    ragged across a flush (the remainder-padding parity case)."""
+    from repro.data.pipeline import Trajectory, TrajectoryStep
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        n_steps = int(rng.integers(2, 7))
+        steps = [
+            TrajectoryStep(
+                rng.integers(0, 255, (8, 8, 3), np.uint8),
+                f"thought {i}-{k} " + "x" * int(rng.integers(0, 12)),
+                f"click({i}, {k})",
+            )
+            for k in range(n_steps)
+        ]
+        score = float(rng.uniform(0.0, 1.0))
+        out.append(Trajectory(f"terminal_os-{i}", "configure the system", steps, score))
+    return out
+
+
+def build_trainer(*, tiny: bool, seed: int = 0):
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.train.ppo import PPOConfig, PPOTrainer
+
+    over = dict(vocab_size=264)
+    if tiny:
+        # small enough that a batch-size-1 forward is dispatch-bound on
+        # CPU — the regime the paper's data plane batches away
+        over.update(d_model=32, n_layers=1, n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64)
+    cfg = get_reduced("qwen3-1.7b", **over)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return PPOTrainer(model, params, cfg=PPOConfig(lr=3e-4), seed=seed)
+
+
+def make_ingestor(trainer, micro_batch: int, *, seq_len: int = INGEST_SEQ):
+    from repro.core.telemetry import Telemetry
+    from repro.data.replay_buffer import ReplayBuffer
+    from repro.pipeline import IngestConfig, PolicyVersionStore, TrajectoryIngestor
+
+    replay = ReplayBuffer(
+        capacity=4096,
+        seed=0,
+        backend="soa" if micro_batch > 1 else "list",
+        seq_len=seq_len if micro_batch > 1 else None,
+    )
+    store = PolicyVersionStore(trainer.params)
+    ing = TrajectoryIngestor(
+        replay,
+        store,
+        trainer=trainer,
+        # wall deadline off: flushes here come from batch fill + flush()
+        cfg=IngestConfig(
+            seq_len=seq_len, micro_batch=micro_batch, flush_wall_s=float("inf")
+        ),
+        telemetry=Telemetry(),
+    )
+    return replay, ing
+
+
+_EXACT_KEYS = (
+    "tokens",
+    "actions",
+    "action_mask",
+    "rewards",
+    "old_logp",
+    "values",
+    "tokens_full",
+    "loss_mask_full",
+)
+
+
+def assert_parity(oracle_rows: list, batched_rows: list) -> None:
+    """Every batched-plane replay row must equal the oracle's, bit for bit
+    (``ingest_wall`` excepted — it is a wall-clock stamp)."""
+    assert len(oracle_rows) == len(batched_rows), (
+        f"row count diverged: oracle {len(oracle_rows)} vs "
+        f"batched {len(batched_rows)}"
+    )
+    for i, (a, b) in enumerate(zip(oracle_rows, batched_rows)):
+        for key in _EXACT_KEYS:
+            assert np.array_equal(np.asarray(a[key]), np.asarray(b[key])), (
+                f"row {i} field {key!r} diverged between the per-sample "
+                f"oracle and the micro-batched plane"
+            )
+        assert a["version"] == b["version"], (i, a["version"], b["version"])
+        for key in ("task_id", "scenario", "family", "score", "success",
+                    "n_steps", "episode_return"):
+            assert a[key] == b[key], (i, key, a[key], b[key])
+
+
+def run_ingest_bench(seed: int = 0) -> dict:
+    trainer = build_trainer(tiny=True, seed=seed)
+
+    # --- parity: same stream through both planes, compare every row
+    trajs = _trajectories(PARITY_TRAJS, seed=seed)
+    replay_s, ing_s = make_ingestor(trainer, 1)
+    replay_b, ing_b = make_ingestor(trainer, MICRO_BATCH)
+    for t in trajs:
+        ing_s(t)
+    for t in trajs:
+        ing_b(t)
+    flushed = ing_b.flush()  # remainder flush (PARITY_TRAJS % MICRO_BATCH rows)
+    assert flushed == PARITY_TRAJS % MICRO_BATCH, flushed
+    assert_parity(replay_s.snapshot(), replay_b.snapshot())
+    print(f"  parity: {PARITY_TRAJS} samples bit-identical across planes "
+          f"(remainder flush of {flushed})")
+
+    # --- timing: both planes are already compiled (the parity pass warmed
+    # them); feed a fresh stream through each and time the full ingest
+    timed = _trajectories(TIMED_TRAJS, seed=seed + 1)
+    t0 = time.monotonic()
+    for t in timed:
+        ing_s(t)
+    wall_scalar = time.monotonic() - t0
+    t0 = time.monotonic()
+    for t in timed:
+        ing_b(t)
+    ing_b.flush()
+    wall_batched = time.monotonic() - t0
+
+    speedup = wall_scalar / wall_batched
+    per_s_scalar = TIMED_TRAJS / wall_scalar
+    per_s_batched = TIMED_TRAJS / wall_batched
+    print(f"  ingest: scalar {per_s_scalar:.1f} samples/s, "
+          f"batched (B={MICRO_BATCH}) {per_s_batched:.1f} samples/s "
+          f"-> {speedup:.1f}x")
+    return {
+        "micro_batch": MICRO_BATCH,
+        "seq_len": INGEST_SEQ,
+        "parity_samples": PARITY_TRAJS,
+        "timed_samples": TIMED_TRAJS,
+        "samples_per_s_scalar": per_s_scalar,
+        "samples_per_s_batched": per_s_batched,
+        "speedup": speedup,
+        "parity_bit_identical": True,  # assert_parity would have raised
+    }
+
+
+def run_learner_bench(seed: int = 0) -> dict:
+    """Steady-state fused learner rate on the e2e reduced model: fill the
+    arena through the batched ingest plane, warm one step, time the rest."""
+    from repro.pipeline import LearnerConfig, LearnerLoop
+
+    trainer = build_trainer(tiny=False, seed=seed)
+    replay, ing = make_ingestor(trainer, MICRO_BATCH, seq_len=192)
+    for t in _trajectories(64, seed=seed + 2):
+        ing(t)
+    ing.flush()
+    learner = LearnerLoop(
+        trainer,
+        replay,
+        ing.store,
+        # a large bound keeps this a throughput measurement: version
+        # churn over 1 + LEARNER_STEPS updates never evicts the arena
+        cfg=LearnerConfig(algo="ppo", batch_size=8, seq_len=192, staleness_bound=64),
+    )
+    assert learner.step() is not None  # compile + warm
+    t0 = time.monotonic()
+    for _ in range(LEARNER_STEPS):
+        metrics = learner.step()
+        assert metrics is not None, "learner starved mid-measurement"
+    wall = time.monotonic() - t0
+    steps_per_min = 60.0 * LEARNER_STEPS / wall
+    ratio = steps_per_min / E2E_BASELINE_STEPS_PER_MIN
+    print(f"  learner: {steps_per_min:.1f} fused steps/min steady-state "
+          f"({ratio:.2f}x the committed e2e baseline "
+          f"{E2E_BASELINE_STEPS_PER_MIN:.1f}/min)")
+    return {
+        "steps_timed": LEARNER_STEPS,
+        "batch_size": 8,
+        "seq_len": 192,
+        "steps_per_min": steps_per_min,
+        "e2e_baseline_steps_per_min": E2E_BASELINE_STEPS_PER_MIN,
+        "ratio_vs_e2e": ratio,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--budget-s",
+        type=float,
+        default=None,
+        help="assert the whole run stays under this wall budget (CI guard)",
+    )
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    t0 = time.monotonic()
+    print("ingest plane (tiny model, dispatch-bound):")
+    ingest = run_ingest_bench(seed=args.seed)
+    print("learner plane (reduced e2e model):")
+    learner = run_learner_bench(seed=args.seed)
+    wall = time.monotonic() - t0
+
+    gate = {
+        "ingest_parity_bit_identical": ingest["parity_bit_identical"],
+        "ingest_speedup_ge_5x": ingest["speedup"] >= 5.0,
+        "learner_ge_2x_e2e": learner["ratio_vs_e2e"] >= 2.0,
+        "samples": ingest["timed_samples"],
+        "parity_samples": ingest["parity_samples"],
+        "ingest_speedup": ingest["speedup"],
+        "learner_steps_per_min": learner["steps_per_min"],
+    }
+    assert gate["ingest_parity_bit_identical"]
+    assert gate["ingest_speedup_ge_5x"], (
+        f"micro-batched ingest speedup {ingest['speedup']:.2f}x < 5x"
+    )
+    assert gate["learner_ge_2x_e2e"], (
+        f"fused learner {learner['steps_per_min']:.1f} steps/min < 2x the "
+        f"e2e baseline {E2E_BASELINE_STEPS_PER_MIN:.1f}"
+    )
+    if args.budget_s is not None:
+        assert wall <= args.budget_s, (
+            f"dataplane bench took {wall:.1f}s wall > budget {args.budget_s}s"
+        )
+
+    payload = {
+        "benchmark": "rollout->learner data plane "
+        "(micro-batched ingest -> SoA arena -> fused learner)",
+        "config": {"seed": args.seed, "model": "qwen3-1.7b (reduced + tiny)"},
+        "ingest": ingest,
+        "learner": learner,
+        "gate": gate,
+        # hard CI wall ceiling for a fresh run of this benchmark
+        "wall_budget_s": 300.0,
+        "bench_wall_seconds": round(wall, 2),
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wall {wall:.1f}s; baseline -> {os.path.relpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,12 +17,13 @@ The benchmark kind is auto-detected from the payload shape: kernel
 baselines carry per-lane-count `kernel` rows, throughput baselines carry
 per-(design, fleet-size) `engine` rows, elastic-cluster baselines carry
 per-cluster `clusters` rows, recovery baselines carry a
-`recovery_curve`, e2e baselines carry a bare `gate` block. Gate metrics
-are direction-aware: MTTR / detection-latency / recovery-time names are
+`recovery_curve`, data-plane baselines carry `ingest` + `learner`
+blocks, e2e baselines carry a bare `gate` block. Gate metrics are
+direction-aware: MTTR / detection-latency / recovery-time names are
 recognized as lower-is-better, so a *rise* there is the regression and a
-drop flags a stale baseline. Kernel baselines additionally enforce a hard
-wall budget: the fresh sweep must have finished inside the
-`wall_budget_s` recorded in the committed baseline.
+drop flags a stale baseline. Kernel and data-plane baselines
+additionally enforce a hard wall budget: the fresh run must have
+finished inside the `wall_budget_s` recorded in the committed baseline.
 """
 
 from __future__ import annotations
@@ -186,6 +187,85 @@ def check_kernel(base: dict, fresh: dict, tol: float) -> list[str]:
     return problems
 
 
+# data-plane band assignment mirrors the kernel rationale: samples/sec
+# and steps/min are wall-clock rates (host-dependent, wide band);
+# batched-vs-scalar speedup is a same-host ratio (medium band); parity
+# booleans and sample counts are deterministic (strict / normal band).
+DATAPLANE_METRICS = {
+    "ingest": (
+        ("parity_samples", "det"),
+        ("timed_samples", "det"),
+        ("samples_per_s_scalar", "rate"),
+        ("samples_per_s_batched", "rate"),
+        ("speedup", "ratio"),
+    ),
+    "learner": (
+        ("steps_timed", "det"),
+        ("steps_per_min", "rate"),
+        ("ratio_vs_e2e", "ratio"),
+    ),
+}
+DATAPLANE_GATE_BANDS = {"ingest_speedup": "ratio", "learner_steps_per_min": "rate"}
+
+
+def check_dataplane(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Data-plane baselines: ingest + learner blocks (rates wide-banded,
+    counts tight), strict gate booleans, and the hard wall budget."""
+    problems: list[str] = []
+    bands = {
+        "det": tol,
+        "rate": max(tol, KERNEL_RATE_TOL_FLOOR),
+        "ratio": max(tol, KERNEL_WALL_TOL_FLOOR),
+    }
+    for block, metrics in DATAPLANE_METRICS.items():
+        base_block = base.get(block)
+        fresh_block = fresh.get(block)
+        if not base_block:
+            problems.append(f"MALFORMED baseline: no {block} block")
+            continue
+        if not fresh_block:
+            problems.append(f"MISSING {block}: not in fresh results")
+            continue
+        for metric, band in metrics:
+            name = f"{block}.{metric}"
+            if metric not in base_block:
+                continue
+            if metric not in fresh_block:
+                problems.append(f"MISSING {name}: not in fresh results")
+                continue
+            problems += compare_value(
+                name, base_block[metric], fresh_block[metric], bands[band]
+            )
+    base_gate = base.get("gate", {})
+    fresh_gate = fresh.get("gate", {})
+    if not base_gate:
+        problems.append("MALFORMED baseline: no gate block")
+    for name, expected in base_gate.items():
+        if name not in fresh_gate:
+            problems.append(f"MISSING gate.{name}: not in fresh results")
+            continue
+        got = fresh_gate[name]
+        if isinstance(expected, bool):
+            if got != expected:
+                problems.append(
+                    f"REGRESSION gate.{name}: expected {expected}, got {got}"
+                )
+        else:
+            band = bands[DATAPLANE_GATE_BANDS.get(name, "det")]
+            problems += compare_value(f"gate.{name}", float(expected), float(got), band)
+    budget = base.get("wall_budget_s")
+    if budget is not None:
+        wall = fresh.get("bench_wall_seconds")
+        if wall is None:
+            problems.append("MISSING bench_wall_seconds: not in fresh results")
+        elif wall > budget:
+            problems.append(
+                f"REGRESSION bench_wall_seconds: {wall:.1f}s exceeds the "
+                f"baseline wall budget {budget:.1f}s"
+            )
+    return problems
+
+
 def check_recovery(base: dict, fresh: dict, tol: float) -> list[str]:
     """Recovery baselines: the gate block plus a curve sanity check."""
     problems: list[str] = []
@@ -235,6 +315,8 @@ def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
         return check_elastic(baseline, fresh, tol)
     if "recovery_curve" in baseline:
         return check_recovery(baseline, fresh, tol)
+    if "ingest" in baseline and "learner" in baseline:
+        return check_dataplane(baseline, fresh, tol)
     if "gate" in baseline:
         return check_e2e(baseline, fresh, tol)
     return ["MALFORMED baseline: neither engine rows nor a gate block"]

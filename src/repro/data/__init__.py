@@ -1,5 +1,11 @@
-from repro.data.tokenizer import ByteTokenizer
-from repro.data.pipeline import (Trajectory, TrajectoryStep,
-                                 encode_trajectory, pack_batches,
-                                 synthetic_trajectories, PrefetchIterator)
+from repro.data.pipeline import (
+    PrefetchIterator,
+    Trajectory,
+    TrajectoryStep,
+    encode_trajectory,
+    pack_batches,
+    pad_stack,
+    synthetic_trajectories,
+)
 from repro.data.replay_buffer import ReplayBuffer
+from repro.data.tokenizer import ByteTokenizer

@@ -5,6 +5,7 @@ Sequence layout per the paper (§4.2): instruction, then per step
 1 on thought/action tokens and 0 on instruction/screenshot tokens (the model
 is conditioned on them, not trained to produce them).
 """
+
 from __future__ import annotations
 
 import queue
@@ -14,8 +15,7 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-from repro.data.tokenizer import (ByteTokenizer, screenshot_tokens,
-                                  BOS, EOS, SEP, IMG)
+from repro.data.tokenizer import BOS, EOS, IMG, SEP, ByteTokenizer, screenshot_tokens
 
 
 @dataclass
@@ -37,9 +37,13 @@ class Trajectory:
     task: Optional[dict] = None
 
 
-def encode_trajectory(traj: Trajectory, tok: ByteTokenizer,
-                      vocab_size: int, obs_tokens: int = 16,
-                      return_step_ends: bool = False):
+def encode_trajectory(
+    traj: Trajectory,
+    tok: ByteTokenizer,
+    vocab_size: int,
+    obs_tokens: int = 16,
+    return_step_ends: bool = False,
+):
     """Returns (token_ids, loss_mask)[, step_ends].
 
     ``step_ends`` (opt-in) holds, per environment step, the index of the
@@ -49,8 +53,7 @@ def encode_trajectory(traj: Trajectory, tok: ByteTokenizer,
     mask: list[int] = [0] * len(ids)
     step_ends: list[int] = []
     for st in traj.steps:
-        img = [IMG] + screenshot_tokens(st.observation, obs_tokens,
-                                        vocab_size)
+        img = [IMG] + screenshot_tokens(st.observation, obs_tokens, vocab_size)
         ids += img
         mask += [0] * len(img)
         for text in (st.thought, st.action):
@@ -65,9 +68,25 @@ def encode_trajectory(traj: Trajectory, tok: ByteTokenizer,
     return out + (step_ends,) if return_step_ends else out
 
 
-def pack_batches(encoded: list[tuple[np.ndarray, np.ndarray]], *,
-                 batch: int, seq_len: int, seed: int = 0
-                 ) -> Iterator[dict]:
+def pad_stack(rows, *, width: Optional[int] = None, dtype=np.float32) -> np.ndarray:
+    """Zero-pad variable-length 1-D rows to a common width and stack them
+    into one contiguous ``(len(rows), width)`` block — the building move
+    for micro-batched ingest flushes and the SoA replay arena."""
+    width = width if width is not None else max((len(r) for r in rows), default=0)
+    out = np.zeros((len(rows), width), dtype)
+    for i, r in enumerate(rows):
+        n = min(len(r), width)
+        out[i, :n] = r[:n]
+    return out
+
+
+def pack_batches(
+    encoded: list[tuple[np.ndarray, np.ndarray]],
+    *,
+    batch: int,
+    seq_len: int,
+    seed: int = 0,
+) -> Iterator[dict]:
     """Greedy sequence packing into fixed (batch, seq_len) training batches.
 
     Yields {"tokens", "targets", "mask"}: next-token prediction with the
@@ -91,28 +110,39 @@ def pack_batches(encoded: list[tuple[np.ndarray, np.ndarray]], *,
             if len(rows_t) == batch:
                 t = np.stack(rows_t)
                 m = np.stack(rows_m)
-                yield {"tokens": t[:, :-1], "targets": t[:, 1:],
-                       "mask": m[:, 1:]}
+                yield {"tokens": t[:, :-1], "targets": t[:, 1:], "mask": m[:, 1:]}
                 rows_t, rows_m = [], []
 
 
-def synthetic_trajectories(n: int, *, seed: int = 0,
-                           steps_range=(10, 25)) -> list[Trajectory]:
+def synthetic_trajectories(n: int, *, seed: int = 0, steps_range=(10, 25)):
     """Deterministic synthetic demonstrations (offline smoke/bench data)."""
     rng = np.random.default_rng(seed)
     out = []
-    actions = ["click(120, 80)", "type('hello')", "scroll(-3)",
-               "key('ctrl+s')", "drag(10,10,50,60)"]
+    actions = [
+        "click(120, 80)",
+        "type('hello')",
+        "scroll(-3)",
+        "key('ctrl+s')",
+        "drag(10,10,50,60)",
+    ]
     for i in range(n):
         n_steps = int(rng.integers(*steps_range))
-        steps = [
-            TrajectoryStep(
-                observation=rng.integers(0, 256, (48, 64, 3), np.uint8),
-                thought=f"I should {actions[int(rng.integers(len(actions)))][:-1]} next",
-                action=actions[int(rng.integers(len(actions)))],
-            ) for _ in range(n_steps)]
-        out.append(Trajectory(f"task-{i}", f"Complete workflow #{i}", steps,
-                              float(rng.random())))
+        steps = []
+        for _ in range(n_steps):
+            obs = rng.integers(0, 256, (48, 64, 3), np.uint8)
+            planned = actions[int(rng.integers(len(actions)))]
+            steps.append(
+                TrajectoryStep(
+                    observation=obs,
+                    thought=f"I should {planned[:-1]} next",
+                    action=actions[int(rng.integers(len(actions)))],
+                )
+            )
+        out.append(
+            Trajectory(
+                f"task-{i}", f"Complete workflow #{i}", steps, float(rng.random())
+            )
+        )
     return out
 
 

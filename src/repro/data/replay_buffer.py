@@ -1,41 +1,273 @@
 """Replay buffer for the semi-online asynchronous RL pipeline (§4.2):
 rollout workers append experiences while the learner samples batches —
-producers and consumers are decoupled exactly as in the paper."""
+producers and consumers are decoupled exactly as in the paper.
+
+Two storage backends sit behind one dict-shaped API:
+
+- ``backend="list"`` — a deque of sample dicts holding any payload. This
+  is the bit-exact oracle; SFT and offline callers keep using it
+  unchanged.
+- ``backend="soa"`` — a packed structure-of-arrays ring arena:
+  contiguous ``(capacity, seq_len)`` numpy planes for tokens / actions /
+  action_mask / rewards / old_logp / values plus 1-D version /
+  ingest_wall / length columns. ``extend`` and ``extend_columns`` write
+  one vectorized block per plane under a single lock acquisition,
+  ``sample_columns`` gathers stacked arrays with one fancy-index per
+  plane (no per-sample Python work), and ``prune_where`` compacts with
+  one boolean gather. Non-array payload keys (task ids, ``tokens_full``,
+  scores, …) ride in a per-slot meta list so ``sample()`` still returns
+  complete dicts.
+
+Both backends preserve logical FIFO order (oldest → newest), evict
+oldest-first on overflow, and draw sampling indices from the same seeded
+generator — the equivalences ``tests/test_dataplane.py`` locks down.
+"""
+
 from __future__ import annotations
 
 import threading
 from collections import deque
-from typing import Any, Callable
+from typing import Any, Callable, Optional, Sequence, Union
 
 import numpy as np
 
+# (plane, dtype) for the packed per-token arenas; rows are zero-padded to
+# the arena width beyond each sample's ``length``.
+ARENA_PLANES = (
+    ("tokens", np.int32),
+    ("actions", np.int32),
+    ("action_mask", np.float32),
+    ("rewards", np.float32),
+    ("old_logp", np.float32),
+    ("values", np.float32),
+)
+ARENA_PLANE_KEYS = frozenset(name for name, _ in ARENA_PLANES)
+# sample keys stored in dedicated 1-D columns rather than the meta list
+ARENA_SCALAR_KEYS = frozenset({"version", "ingest_wall"})
+
 
 class ReplayBuffer:
-    def __init__(self, capacity: int = 4096, seed: int = 0):
-        self._buf: deque = deque(maxlen=capacity)
+    def __init__(
+        self,
+        capacity: int = 4096,
+        seed: int = 0,
+        *,
+        backend: str = "list",
+        seq_len: Optional[int] = None,
+    ):
+        assert backend in ("list", "soa"), backend
+        self.backend = backend
+        self.capacity = int(capacity)
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
         self.total_added = 0
         self.total_pruned = 0
+        if backend == "list":
+            self._buf: deque = deque(maxlen=capacity)
+        else:
+            if seq_len is None:
+                raise ValueError("backend='soa' requires seq_len")
+            self._S = int(seq_len)
+            self._planes = {
+                name: np.zeros((self.capacity, self._S), dt)
+                for name, dt in ARENA_PLANES
+            }
+            self._version_col = np.zeros(self.capacity, np.int64)
+            self._wall_col = np.zeros(self.capacity, np.float64)
+            self._length_col = np.zeros(self.capacity, np.int64)
+            self._meta: list = [None] * self.capacity
+            self._head = 0
+            self._n = 0
 
+    # ------------------------------------------------------------ appending
     def add(self, item: Any) -> None:
         with self._lock:
-            self._buf.append(item)
-            self.total_added += 1
+            self._append_items([item])
 
     def extend(self, items) -> None:
+        """Bulk insert: one lock acquisition, one block write per plane."""
+        items = list(items)
+        if not items:
+            return
         with self._lock:
-            for it in items:
-                self._buf.append(it)
-                self.total_added += 1
+            self._append_items(items)
 
+    def extend_columns(
+        self,
+        columns: dict,
+        lengths: Sequence[int],
+        metas: Sequence[Optional[dict]],
+    ) -> None:
+        """Bulk insert from pre-stacked columns (the micro-batched ingest
+        fast path). ``columns`` holds the six ``(k, seq_len)`` planes plus
+        1-D ``version`` / ``ingest_wall``; rows must be zero beyond each
+        row's length. The list backend slices the columns back into
+        per-sample dicts, so either backend observes identical samples."""
+        k = len(metas)
+        if k == 0:
+            return
+        lengths = np.asarray(lengths, np.int64)
+        with self._lock:
+            if self.backend == "soa":
+                self._soa_append_columns(columns, lengths, metas, k)
+                self.total_added += k
+                return
+            items = []
+            for i in range(k):
+                L = int(lengths[i])
+                it = dict(metas[i] or {})
+                it["version"] = int(columns["version"][i])
+                it["ingest_wall"] = float(columns["ingest_wall"][i])
+                for name, _ in ARENA_PLANES:
+                    # copy: the ingest flush reuses its column buffers
+                    it[name] = columns[name][i, :L].copy()
+                items.append(it)
+            self._buf.extend(items)
+            self.total_added += k
+
+    def _append_items(self, items: list) -> None:
+        if self.backend == "list":
+            self._buf.extend(items)
+            self.total_added += len(items)
+            return
+        k = len(items)
+        columns = {name: np.zeros((k, self._S), dt) for name, dt in ARENA_PLANES}
+        columns["version"] = np.zeros(k, np.int64)
+        columns["ingest_wall"] = np.zeros(k, np.float64)
+        lengths = np.zeros(k, np.int64)
+        metas: list = [None] * k
+        for i, it in enumerate(items):
+            if not isinstance(it, dict) or "tokens" not in it:
+                raise TypeError(
+                    "backend='soa' stores RL sample dicts with a 'tokens' "
+                    f"array; got {type(it).__name__}"
+                )
+            L = len(it["tokens"])
+            if L > self._S:
+                raise ValueError(f"sample length {L} exceeds arena seq_len {self._S}")
+            lengths[i] = L
+            for name, _ in ARENA_PLANES:
+                row = it.get(name)
+                if row is not None:
+                    columns[name][i, : len(row)] = row
+            columns["version"][i] = int(it.get("version", 0))
+            columns["ingest_wall"][i] = float(it.get("ingest_wall", 0.0))
+            metas[i] = {
+                key: v
+                for key, v in it.items()
+                if key not in ARENA_PLANE_KEYS and key not in ARENA_SCALAR_KEYS
+            }
+        self._soa_append_columns(columns, lengths, metas, k)
+        self.total_added += k
+
+    def _soa_append_columns(self, columns, lengths, metas, k: int) -> None:
+        cap = self.capacity
+        if k > cap:  # only the newest ``capacity`` rows can survive
+            columns = {name: col[-cap:] for name, col in columns.items()}
+            lengths = lengths[-cap:]
+            metas = metas[-cap:]
+            k = cap
+        start = (self._head + self._n) % cap
+        slots = (start + np.arange(k)) % cap
+        for name, _ in ARENA_PLANES:
+            col = np.asarray(columns[name])
+            if col.shape[1] != self._S:
+                raise ValueError(
+                    f"column {name!r} width {col.shape[1]} != arena {self._S}"
+                )
+            self._planes[name][slots] = col[:k]
+        self._version_col[slots] = np.asarray(columns["version"], np.int64)[:k]
+        self._wall_col[slots] = np.asarray(columns["ingest_wall"], np.float64)[:k]
+        self._length_col[slots] = np.minimum(lengths[:k], self._S)
+        for i, slot in enumerate(slots):
+            self._meta[slot] = metas[i]
+        overflow = max(0, self._n + k - cap)
+        self._head = (self._head + overflow) % cap
+        self._n = min(self._n + k, cap)
+
+    # ------------------------------------------------------------- sampling
     def sample(self, n: int) -> list:
         with self._lock:
-            if not self._buf:
+            size = self._size_locked()
+            if size == 0:
                 return []
-            idx = self._rng.integers(0, len(self._buf), size=n)
-            return [self._buf[i] for i in idx]
+            idx = self._rng.integers(0, size, size=n)
+            if self.backend == "list":
+                return [self._buf[i] for i in idx]
+            return [self._soa_item(i) for i in idx]
 
+    def sample_columns(self, n: int, *, seq_len: Optional[int] = None):
+        """``n`` uniformly drawn samples as stacked columns: the six
+        ``(n, S)`` planes plus 1-D ``version`` / ``ingest_wall`` /
+        ``length``. One fancy-index gather per plane on the arena backend;
+        the list backend pads dict rows out to ``seq_len`` (required
+        there) so both return the same shapes. Returns None when empty.
+
+        Consumes exactly one generator draw of size ``n`` — the same
+        stream position ``sample`` would use, so scalar and fused learner
+        paths pull identical indices."""
+        with self._lock:
+            size = self._size_locked()
+            if size == 0:
+                return None
+            idx = self._rng.integers(0, size, size=n)
+            if self.backend == "soa":
+                slots = (self._head + idx) % self.capacity
+                cols = {name: self._planes[name][slots] for name, _ in ARENA_PLANES}
+                cols["version"] = self._version_col[slots]
+                cols["ingest_wall"] = self._wall_col[slots]
+                cols["length"] = self._length_col[slots]
+                return cols
+            if seq_len is None:
+                raise ValueError("list backend needs seq_len for sample_columns")
+            items = [self._buf[i] for i in idx]
+            cols = {name: np.zeros((n, seq_len), dt) for name, dt in ARENA_PLANES}
+            cols["version"] = np.zeros(n, np.int64)
+            cols["ingest_wall"] = np.zeros(n, np.float64)
+            cols["length"] = np.zeros(n, np.int64)
+            for i, it in enumerate(items):
+                L = min(len(it["tokens"]), seq_len)
+                cols["length"][i] = L
+                for name, _ in ARENA_PLANES:
+                    row = it.get(name)
+                    if row is not None:
+                        cols[name][i, :L] = row[:L]
+                cols["version"][i] = int(it.get("version", 0))
+                cols["ingest_wall"][i] = float(it.get("ingest_wall", 0.0))
+            return cols
+
+    def versions(self) -> np.ndarray:
+        """Per-sample behavior-policy versions in logical (FIFO) order."""
+        with self._lock:
+            size = self._size_locked()
+            if self.backend == "soa":
+                slots = (self._head + np.arange(size)) % self.capacity
+                return self._version_col[slots].copy()
+            return np.asarray(
+                [int(it.get("version", 0)) for it in self._buf], np.int64
+            )
+
+    def snapshot(self) -> list:
+        """Every sample as a dict, in logical (FIFO) order. Array fields
+        may be views into backing storage — treat them as read-only. This
+        is the parity-audit accessor (``tests/test_dataplane.py`` diffs
+        backends row by row with it), not a hot-path API."""
+        with self._lock:
+            if self.backend == "list":
+                return list(self._buf)
+            return [self._soa_item(i) for i in range(self._n)]
+
+    def _soa_item(self, i: int) -> dict:
+        slot = (self._head + int(i)) % self.capacity
+        L = int(self._length_col[slot])
+        item = dict(self._meta[slot] or {})
+        for name, _ in ARENA_PLANES:
+            item[name] = self._planes[name][slot, :L]
+        item["version"] = int(self._version_col[slot])
+        item["ingest_wall"] = float(self._wall_col[slot])
+        return item
+
+    # -------------------------------------------------------------- pruning
     def prune(self, pred: Callable[[Any], bool]) -> int:
         """Drop every item for which ``pred`` is true; returns the count.
 
@@ -43,12 +275,74 @@ class ReplayBuffer:
         fell outside the staleness bound — leaving them in place would
         starve the batch sampler with unusable experience."""
         with self._lock:
-            kept = [it for it in self._buf if not pred(it)]
+            if self.backend == "list":
+                kept = [it for it in self._buf if not pred(it)]
+                dropped = len(self._buf) - len(kept)
+                self._buf = deque(kept, maxlen=self.capacity)
+                self.total_pruned += dropped
+                return dropped
+            drop = np.asarray(
+                [bool(pred(self._soa_item(i))) for i in range(self._n)], bool
+            )
+            return self._soa_compact(drop)
+
+    def prune_where(
+        self, drop: Union[np.ndarray, Callable[[np.ndarray], np.ndarray]]
+    ) -> int:
+        """Vectorized prune: ``drop`` is a boolean mask over logical order,
+        or a callable mapping the version column to one — evaluated under
+        the lock, so the mask cannot race concurrent appends."""
+        with self._lock:
+            size = self._size_locked()
+            if callable(drop):
+                if self.backend == "soa":
+                    slots = (self._head + np.arange(size)) % self.capacity
+                    vers = self._version_col[slots]
+                else:
+                    vers = np.asarray(
+                        [int(it.get("version", 0)) for it in self._buf], np.int64
+                    )
+                mask = np.asarray(drop(vers), bool)
+            else:
+                mask = np.zeros(size, bool)
+                mask[: len(drop)] = np.asarray(drop, bool)[:size]
+            if self.backend == "soa":
+                return self._soa_compact(mask)
+            kept = [it for it, d in zip(self._buf, mask) if not d]
             dropped = len(self._buf) - len(kept)
-            self._buf = deque(kept, maxlen=self._buf.maxlen)
+            self._buf = deque(kept, maxlen=self.capacity)
             self.total_pruned += dropped
             return dropped
 
+    def _soa_compact(self, drop: np.ndarray) -> int:
+        """Gather kept rows to the arena front (one boolean gather per
+        plane); logical order is preserved."""
+        dropped = int(drop.sum())
+        if dropped == 0:
+            return 0
+        keep_slots = ((self._head + np.flatnonzero(~drop)) % self.capacity).astype(
+            np.int64
+        )
+        m = len(keep_slots)
+        for name, _ in ARENA_PLANES:
+            plane = self._planes[name]
+            plane[:m] = plane[keep_slots]
+        self._version_col[:m] = self._version_col[keep_slots]
+        self._wall_col[:m] = self._wall_col[keep_slots]
+        self._length_col[:m] = self._length_col[keep_slots]
+        kept_meta = [self._meta[s] for s in keep_slots]
+        self._meta[:m] = kept_meta
+        for i in range(m, self._n):
+            self._meta[i] = None
+        self._head = 0
+        self._n = m
+        self.total_pruned += dropped
+        return dropped
+
+    # ------------------------------------------------------------------ misc
+    def _size_locked(self) -> int:
+        return len(self._buf) if self.backend == "list" else self._n
+
     def __len__(self) -> int:
         with self._lock:
-            return len(self._buf)
+            return self._size_locked()

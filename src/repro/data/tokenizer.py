@@ -4,6 +4,7 @@ The paper's SFT data is `instruction -> screenshot_1 -> thought_1 ->
 action_1 -> ...`; screenshots enter as frontend embeddings (or hashed
 placeholder tokens for text-only backbones), everything else is bytes.
 """
+
 from __future__ import annotations
 
 import hashlib
@@ -22,18 +23,25 @@ class ByteTokenizer:
         return [b + BYTE_OFFSET for b in text.encode("utf-8")]
 
     def decode(self, ids) -> str:
-        bs = bytes(max(0, min(255, int(i) - BYTE_OFFSET)) for i in ids
-                   if int(i) >= BYTE_OFFSET)
+        bs = bytes(
+            max(0, min(255, int(i) - BYTE_OFFSET))
+            for i in ids
+            if int(i) >= BYTE_OFFSET
+        )
         return bs.decode("utf-8", errors="replace")
 
 
-def screenshot_tokens(obs: np.ndarray, n_tokens: int = 16,
-                      vocab_size: int = 264) -> list[int]:
+def screenshot_tokens(
+    obs: np.ndarray, n_tokens: int = 16, vocab_size: int = 264
+) -> list[int]:
     """Hash a screenshot into placeholder observation tokens (text-only
     backbones); VLM backbones get real patch embeddings instead."""
-    h = hashlib.blake2b(np.ascontiguousarray(obs).tobytes(),
-                        digest_size=2 * n_tokens).digest()
+    h = hashlib.blake2b(
+        np.ascontiguousarray(obs).tobytes(), digest_size=2 * n_tokens
+    ).digest()
     lo = N_SPECIAL
     span = max(vocab_size - lo, 1)
-    return [lo + (int.from_bytes(h[2 * i:2 * i + 2], "little") % span)
-            for i in range(n_tokens)]
+    return [
+        lo + (int.from_bytes(h[2 * i : 2 * i + 2], "little") % span)
+        for i in range(n_tokens)
+    ]

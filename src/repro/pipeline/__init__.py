@@ -5,23 +5,41 @@ The asynchronous actor/learner split the paper trains with (§5):
 - actors — ``RolloutEngine`` episodes on the virtual-time event loop,
   streamed through ``TrajectoryWriter`` into the ``TrajectoryIngestor``;
 - ingest — scenario outcomes become shaped rewards (``RewardSpec``),
-  episodes are encoded and stamped with the behavior-policy version;
+  episodes are encoded, scored in micro-batches through one fused
+  policy/value call, and stamped with the behavior-policy version;
+- replay — a packed structure-of-arrays arena (``ReplayBuffer``) the
+  learner samples as pre-stacked columns;
 - learner — ``LearnerLoop`` packs token batches and runs real
   ``repro.train.ppo`` / ``repro.train.sft`` update steps, enforcing a
   staleness bound on off-policy experience;
 - versions — ``PolicyVersionStore`` flows learner updates back to the
   actor side.
+
+Set ``REPRO_DATAPLANE=scalar`` to run the per-sample parity oracle end
+to end instead of the vectorized plane (see ``repro.pipeline.online``).
 """
-from repro.pipeline.ingest import IngestConfig, TrajectoryIngestor, \
-    encode_for_rl
+
+from repro.pipeline.ingest import IngestConfig, TrajectoryIngestor, encode_for_rl
 from repro.pipeline.learner import LearnerConfig, LearnerLoop
-from repro.pipeline.online import OnlinePipeline, PipelineConfig, \
-    PipelineReport, build_fleet
+from repro.pipeline.online import (
+    OnlinePipeline,
+    PipelineConfig,
+    PipelineReport,
+    build_fleet,
+    resolve_dataplane,
+)
 from repro.pipeline.policy_store import PolicyVersionStore
 
 __all__ = [
-    "IngestConfig", "TrajectoryIngestor", "encode_for_rl",
-    "LearnerConfig", "LearnerLoop",
-    "OnlinePipeline", "PipelineConfig", "PipelineReport", "build_fleet",
+    "IngestConfig",
+    "TrajectoryIngestor",
+    "encode_for_rl",
+    "LearnerConfig",
+    "LearnerLoop",
+    "OnlinePipeline",
+    "PipelineConfig",
+    "PipelineReport",
+    "build_fleet",
+    "resolve_dataplane",
     "PolicyVersionStore",
 ]

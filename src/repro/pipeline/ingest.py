@@ -10,11 +10,36 @@ every episode streamed out of the rollout engine it:
    ``RewardSpec`` (success criteria + step penalties + efficiency bonus);
 3. stamps the sample with the behavior-policy version pulled from the
    ``PolicyVersionStore`` and — for PPO — computes ``old_logp`` / value
-   estimates under exactly those parameters (one jitted forward pass);
+   estimates under exactly those parameters;
 4. appends the sample to the ``ReplayBuffer`` the learner drains.
+
+Step 3 runs on one of two data planes:
+
+- **micro-batched** (default, ``micro_batch > 1``) — encoded samples
+  accumulate in a pending group and flush through *one* fused jitted
+  forward + log-softmax + gather per batch of ``micro_batch`` rows
+  (fixed ``(B, seq_len)`` shape, so every flush reuses one compilation;
+  a short flush pads the batch and discards the tail, unless it is below
+  half occupancy — then the bit-identical single-row forward is cheaper
+  than a mostly-padding batch). Pending
+  groups are keyed by policy version — a version change flushes the old
+  group first, so every row is scored under exactly the params it was
+  stamped with. Partial batches never stall a trickle of episodes: they
+  flush on a wall-clock deadline (``flush_wall_s``, checked on arrival
+  and by ``maybe_flush``) and on a virtual-time tick when armed on the
+  rollout event loop (``arm_virtual_flush``).
+- **per-sample oracle** (``micro_batch <= 1``) — the original
+  batch-size-1 path, kept as the bit-exact parity reference
+  (``tests/test_dataplane.py`` asserts the planes agree to the bit).
+
+The hot path is phase-timed (``encode_vs``, ``policy_value_wall``,
+``replay_append_wall``) so a data-plane regression is attributable from
+the telemetry summary alone.
 """
+
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from typing import Optional
@@ -22,68 +47,97 @@ from typing import Optional
 import numpy as np
 
 from repro.core.telemetry import Telemetry
-from repro.data.pipeline import Trajectory, encode_trajectory
+from repro.data.pipeline import Trajectory, encode_trajectory, pad_stack
 from repro.data.replay_buffer import ReplayBuffer
 from repro.data.tokenizer import ByteTokenizer
 from repro.pipeline.policy_store import PolicyVersionStore
 from repro.rollout.scenarios import ScenarioRegistry, get_default_registry
 
 
-def encode_for_rl(traj: Trajectory, tok: ByteTokenizer, vocab_size: int,
-                  obs_tokens: int = 4
-                  ) -> tuple[np.ndarray, np.ndarray, list[int]]:
+def encode_for_rl(
+    traj: Trajectory, tok: ByteTokenizer, vocab_size: int, obs_tokens: int = 4
+) -> tuple[np.ndarray, np.ndarray, list[int]]:
     """``data.pipeline.encode_trajectory`` with per-step boundaries: also
     returns, per environment step, the index of the token that completes
     that step's action — the position step rewards are credited to."""
-    return encode_trajectory(traj, tok, vocab_size, obs_tokens,
-                             return_step_ends=True)
+    return encode_trajectory(traj, tok, vocab_size, obs_tokens, return_step_ends=True)
 
 
 @dataclass
 class IngestConfig:
-    seq_len: int = 192        # samples are truncated to this many tokens
-    obs_tokens: int = 4       # screenshot placeholder tokens per step
-    vocab_size: int = 264     # ByteTokenizer vocab (256 bytes + specials)
+    seq_len: int = 192  # samples are truncated to this many tokens
+    obs_tokens: int = 4  # screenshot placeholder tokens per step
+    vocab_size: int = 264  # ByteTokenizer vocab (256 bytes + specials)
+    micro_batch: int = 32  # rows per fused flush; <= 1 -> per-sample oracle
+    flush_wall_s: float = 0.25  # wall deadline for a partial pending batch
+    flush_virtual_s: float = 5.0  # virtual-time flush cadence (event loop)
 
 
 class TrajectoryIngestor:
     """``on_trajectory`` consumer turning episodes into learner samples."""
 
-    def __init__(self, replay: ReplayBuffer, store: PolicyVersionStore, *,
-                 registry: Optional[ScenarioRegistry] = None,
-                 trainer=None,
-                 cfg: Optional[IngestConfig] = None,
-                 telemetry: Optional[Telemetry] = None):
+    def __init__(
+        self,
+        replay: ReplayBuffer,
+        store: PolicyVersionStore,
+        *,
+        registry: Optional[ScenarioRegistry] = None,
+        trainer=None,
+        cfg: Optional[IngestConfig] = None,
+        telemetry: Optional[Telemetry] = None,
+    ):
         self.replay = replay
         self.store = store
         self.registry = registry or get_default_registry()
-        self.trainer = trainer          # PPOTrainer; None -> SFT-only samples
+        self.trainer = trainer  # PPOTrainer; None -> SFT-only samples
         self.cfg = cfg or IngestConfig()
         self.telemetry = telemetry or Telemetry()
         self.tok = ByteTokenizer()
         self._pv = None
+        self._pv_batch = None
+        # pending micro-batch state; guarded by _lock (the writer's
+        # consumer thread appends while flush deadlines can fire from the
+        # learner's poll loop or a virtual-time tick)
+        self._lock = threading.Lock()
+        self._pending: list[dict] = []
+        self._pending_params = None
+        self._pending_version = -1
+        self._pending_since = 0.0
         if trainer is not None:
             import jax
+            import jax.numpy as jnp
+
             self._pv = jax.jit(trainer.policy_value)
+
+            def fused(params, tokens, actions):
+                logits, values = trainer.policy_value(params, tokens)
+                logp_all = jax.nn.log_softmax(logits.astype(jnp.float32))
+                logp = jnp.take_along_axis(logp_all, actions[..., None], axis=-1)
+                return logp[..., 0], values
+
+            self._pv_batch = jax.jit(fused)
 
     # ------------------------------------------------------------- consume
     def __call__(self, traj: Trajectory) -> None:
         cfg = self.cfg
-        task = traj.task or {"task_id": traj.task_id,
-                             "scenario": traj.task_id.rsplit("-", 1)[0]}
+        task = traj.task or {
+            "task_id": traj.task_id,
+            "scenario": traj.task_id.rsplit("-", 1)[0],
+        }
         scenario = self.registry.resolve(task)
         horizon = int(task.get("horizon", 15))
         n_steps = len(traj.steps)
-        step_rewards = scenario.reward.step_rewards(traj.score, n_steps,
-                                                    horizon)
+        step_rewards = scenario.reward.step_rewards(traj.score, n_steps, horizon)
         success = scenario.reward.success(traj.score)
 
-        ids, mask, step_ends = encode_for_rl(traj, self.tok, cfg.vocab_size,
-                                             cfg.obs_tokens)
+        with self.telemetry.timer("encode_vs"):
+            ids, mask, step_ends = encode_for_rl(
+                traj, self.tok, cfg.vocab_size, cfg.obs_tokens
+            )
         T = min(len(ids) - 1, cfg.seq_len)
         tokens = ids[:T]
-        actions = ids[1:T + 1]
-        action_mask = mask[1:T + 1]
+        actions = ids[1 : T + 1]
+        action_mask = mask[1 : T + 1]
 
         # credit each step's shaped reward to the action position that
         # completes it (position t predicts token t+1); rewards for steps
@@ -96,19 +150,49 @@ class TrajectoryIngestor:
 
         version, params = self.store.current()
         sample = {
-            "tokens": tokens, "actions": actions,
-            "action_mask": action_mask, "rewards": rewards,
-            "tokens_full": ids, "loss_mask_full": mask,
-            "version": version, "ingest_wall": time.monotonic(),
-            "task_id": traj.task_id, "scenario": scenario.name,
-            "family": scenario.family, "score": traj.score,
-            "success": success, "n_steps": n_steps,
+            "tokens": tokens,
+            "actions": actions,
+            "action_mask": action_mask,
+            "rewards": rewards,
+            "tokens_full": ids,
+            "loss_mask_full": mask,
+            "version": version,
+            "ingest_wall": time.monotonic(),
+            "task_id": traj.task_id,
+            "scenario": scenario.name,
+            "family": scenario.family,
+            "score": traj.score,
+            "success": success,
+            "n_steps": n_steps,
             "episode_return": float(step_rewards.sum()),
         }
-        if self._pv is not None and params is not None:
-            sample["old_logp"], sample["values"] = self._behavior_eval(
-                params, tokens, actions, T)
-        self.replay.add(sample)
+
+        if self._pv is None or params is None:
+            with self.telemetry.timer("replay_append_wall"):
+                self.replay.add(sample)
+        elif cfg.micro_batch <= 1:
+            # per-sample oracle: one batch-size-1 jitted forward per episode
+            with self.telemetry.timer("policy_value_wall"):
+                sample["old_logp"], sample["values"] = self._behavior_eval(
+                    params, tokens, actions, T
+                )
+            with self.telemetry.timer("replay_append_wall"):
+                self.replay.add(sample)
+        else:
+            with self._lock:
+                if self._pending and version != self._pending_version:
+                    # new policy version: score the old group under its
+                    # own params before the first row of the new one lands
+                    self._flush_locked()
+                if not self._pending:
+                    self._pending_params = params
+                    self._pending_version = version
+                    self._pending_since = time.monotonic()
+                self._pending.append(sample)
+                if len(self._pending) >= cfg.micro_batch or (
+                    time.monotonic() - self._pending_since >= cfg.flush_wall_s
+                ):
+                    self._flush_locked()
 
         self.telemetry.count("ingested")
         self.telemetry.count(f"family_total:{scenario.family}")
@@ -119,20 +203,135 @@ class TrajectoryIngestor:
         self.telemetry.observe("encoded_len", float(len(ids)))
         self.telemetry.gauge("replay_depth", float(len(self.replay)))
 
+    # ------------------------------------------------------------- flushing
+    @property
+    def pending_rows(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def flush(self) -> int:
+        """Force-flush the pending micro-batch; returns rows flushed."""
+        return self.maybe_flush(force=True)
+
+    def maybe_flush(self, *, force: bool = False) -> int:
+        """Flush the pending group if forced or past the wall deadline."""
+        if self._pv_batch is None or self.cfg.micro_batch <= 1:
+            return 0
+        with self._lock:
+            if not self._pending:
+                return 0
+            overdue = time.monotonic() - self._pending_since >= self.cfg.flush_wall_s
+            if force or overdue:
+                return self._flush_locked()
+            return 0
+
+    def arm_virtual_flush(self, loop) -> None:
+        """Schedule a recurring virtual-time flush tick on an event loop
+        (daemon events: the tick never keeps the round alive). Each tick
+        bounds pending latency to one ``flush_virtual_s`` period, so a
+        trickle of episodes never stalls behind a partial batch."""
+        period = self.cfg.flush_virtual_s
+        if self._pv_batch is None or self.cfg.micro_batch <= 1:
+            return
+        if not np.isfinite(period) or period <= 0:
+            return  # virtual-deadline flushing disabled
+
+        def tick() -> None:
+            self.maybe_flush(force=True)
+            loop.call_later(period, tick, daemon=True)
+
+        loop.call_later(period, tick, daemon=True)
+
+    def _flush_locked(self) -> int:
+        """Score and append the pending group (lock held). Groups at least
+        half full go through one fused jitted call at the fixed
+        ``(micro_batch, seq_len)`` shape (short groups pad with zero rows
+        whose outputs are dropped); trickle groups below half occupancy go
+        through the single-row forward instead — a mostly-padding fused
+        call would spend more compute on discarded rows than on real ones.
+        Both routes are bit-identical (the parity suite pins this), so the
+        split is purely a cost model."""
+        pending = self._pending
+        r = len(pending)
+        if r == 0:
+            return 0
+        cfg = self.cfg
+        tokens = pad_stack(
+            [s["tokens"] for s in pending], width=cfg.seq_len, dtype=np.int32
+        )
+        actions = pad_stack(
+            [s["actions"] for s in pending], width=cfg.seq_len, dtype=np.int32
+        )
+        with self.telemetry.timer("policy_value_wall"):
+            if 2 * r >= cfg.micro_batch:
+                B = max(cfg.micro_batch, r)
+                if r < B:  # fixed flush shape -> single compilation
+                    pad = np.zeros((B - r, cfg.seq_len), np.int32)
+                    tok_in = np.concatenate([tokens, pad])
+                    act_in = np.concatenate([actions, pad])
+                else:
+                    tok_in, act_in = tokens, actions
+                logp, values = self._pv_batch(self._pending_params, tok_in, act_in)
+                logp = np.asarray(logp)[:r]
+                values = np.asarray(values)[:r]
+            else:
+                logp = np.zeros((r, cfg.seq_len), np.float32)
+                values = np.zeros((r, cfg.seq_len), np.float32)
+                for i, s in enumerate(pending):
+                    t = len(s["tokens"])
+                    logp[i, :t], values[i, :t] = self._behavior_eval(
+                        self._pending_params, s["tokens"], s["actions"], t
+                    )
+        lengths = np.asarray([len(s["tokens"]) for s in pending], np.int64)
+        live = np.arange(cfg.seq_len)[None, :] < lengths[:, None]
+        columns = {
+            "tokens": tokens[:r],
+            "actions": actions[:r],
+            "action_mask": pad_stack(
+                [s["action_mask"] for s in pending], width=cfg.seq_len, dtype=np.float32
+            ),
+            "rewards": pad_stack(
+                [s["rewards"] for s in pending], width=cfg.seq_len, dtype=np.float32
+            ),
+            # padded positions carry log-softmax of pad logits: zero them so
+            # arena rows match the oracle's [:T]-sliced outputs exactly
+            "old_logp": np.where(live, logp, 0.0).astype(np.float32),
+            "values": np.where(live, values, 0.0).astype(np.float32),
+            "version": np.full(r, self._pending_version, np.int64),
+            "ingest_wall": np.asarray([s["ingest_wall"] for s in pending], np.float64),
+        }
+        metas = [
+            {k: v for k, v in s.items() if k not in _COLUMN_KEYS} for s in pending
+        ]
+        with self.telemetry.timer("replay_append_wall"):
+            self.replay.extend_columns(columns, lengths, metas)
+        self.telemetry.count("ingest_flushes")
+        self.telemetry.observe("ingest_flush_rows", float(r))
+        self.telemetry.gauge("replay_depth", float(len(self.replay)))
+        self._pending = []
+        self._pending_params = None
+        return r
+
     # ------------------------------------------------------------ behavior
-    def _behavior_eval(self, params, tokens: np.ndarray,
-                       actions: np.ndarray, T: int
-                       ) -> tuple[np.ndarray, np.ndarray]:
+    def _behavior_eval(
+        self, params, tokens: np.ndarray, actions: np.ndarray, T: int
+    ) -> tuple[np.ndarray, np.ndarray]:
         """log pi_behavior(action) and value estimates under the params
         that were current when the episode finished (one fixed-shape jitted
         forward, so every trajectory reuses the same compilation)."""
         import jax
         import numpy as onp
+
         cfg = self.cfg
         padded = onp.zeros((1, cfg.seq_len), onp.int32)
         padded[0, :T] = tokens
         logits, values = self._pv(params, padded)
         logp_all = jax.nn.log_softmax(logits[0, :T].astype("float32"))
         logp = onp.asarray(logp_all)[onp.arange(T), actions]
-        return (logp.astype(onp.float32),
-                onp.asarray(values[0, :T], onp.float32))
+        return (logp.astype(onp.float32), onp.asarray(values[0, :T], onp.float32))
+
+
+# sample keys that live in the flush columns; everything else is meta
+_COLUMN_KEYS = frozenset(
+    {"tokens", "actions", "action_mask", "rewards", "version", "ingest_wall"}
+)

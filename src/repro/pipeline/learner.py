@@ -17,7 +17,20 @@ staleness bound:
 Both outcomes are counted in ``Telemetry`` (``stale_dropped`` /
 ``stale_reweighted``), alongside the rollout→learner latency of every
 sample that reaches an update.
+
+PPO updates run on the **fused data plane** by default: staleness
+weights for the whole pulled batch are computed in one numpy pass,
+samples arrive as pre-stacked columns (``ReplayBuffer.sample_columns``),
+and the fixed-shape batch is assembled by ``make_batch_columns`` without
+per-sample Python loops. The dict-at-a-time path remains as the parity
+oracle (``fused=False``, or any trainer without ``make_batch_columns`` —
+both paths draw the same sampler indices and produce bit-identical
+batches). Starved batches are padded by cycling survivors to keep the
+jitted step on one compilation, but padded slots are counted separately
+(``learner_batch_padded``) and contribute nothing to the update or its
+telemetry: their loss-mask rows and advantages are zeroed.
 """
+
 from __future__ import annotations
 
 import time
@@ -34,33 +47,41 @@ from repro.pipeline.policy_store import PolicyVersionStore
 
 @dataclass
 class LearnerConfig:
-    algo: str = "ppo"                   # "ppo" | "sft"
-    batch_size: int = 8                 # trajectories per PPO update
+    algo: str = "ppo"  # "ppo" | "sft"
+    batch_size: int = 8  # trajectories per PPO update
     seq_len: int = 192
-    staleness_bound: int = 8            # K: versions before off-policy acts
+    staleness_bound: int = 8  # K: versions before off-policy acts
     staleness_policy: str = "reweight"  # "reweight" | "drop"
-    staleness_decay: float = 0.8        # advantage discount per excess step
-    min_weight: float = 0.05            # evict below this discount
-    oversample: int = 2                 # sample this x batch_size, filter
-    sft_pack_rows: int = 2              # packed rows per SFT batch
-    sft_success_only: bool = True       # filtered behavior cloning
+    staleness_decay: float = 0.8  # advantage discount per excess step
+    min_weight: float = 0.05  # evict below this discount
+    oversample: int = 2  # sample this x batch_size, filter
+    sft_pack_rows: int = 2  # packed rows per SFT batch
+    sft_success_only: bool = True  # filtered behavior cloning
+    fused: bool = True  # vectorized PPO step (dict path = parity oracle)
 
 
 class LearnerLoop:
     """Drains the replay buffer into real PPO/SFT update steps."""
 
-    def __init__(self, trainer, replay: ReplayBuffer,
-                 store: PolicyVersionStore, *,
-                 cfg: Optional[LearnerConfig] = None,
-                 telemetry: Optional[Telemetry] = None):
+    def __init__(
+        self,
+        trainer,
+        replay: ReplayBuffer,
+        store: PolicyVersionStore,
+        *,
+        cfg: Optional[LearnerConfig] = None,
+        telemetry: Optional[Telemetry] = None,
+    ):
         self.trainer = trainer
         self.replay = replay
         self.store = store
         self.cfg = cfg or LearnerConfig()
         self.telemetry = telemetry or Telemetry()
         assert self.cfg.algo in ("ppo", "sft"), self.cfg.algo
-        assert self.cfg.staleness_policy in ("reweight", "drop"), \
-            self.cfg.staleness_policy
+        assert self.cfg.staleness_policy in (
+            "reweight",
+            "drop",
+        ), self.cfg.staleness_policy
         self.updates = 0
         self.losses: list[float] = []
         self._learn_wall = 0.0
@@ -74,21 +95,43 @@ class LearnerLoop:
             return 1.0
         if cfg.staleness_policy == "drop":
             return None
-        w = cfg.staleness_decay ** excess
+        w = cfg.staleness_decay**excess
         return w if w >= cfg.min_weight else None
 
+    def _weights_vec(self, version: int, sample_versions: np.ndarray) -> np.ndarray:
+        """``_weight`` over a whole version column at once; unusable
+        samples come back as NaN instead of None."""
+        cfg = self.cfg
+        excess = (int(version) - np.asarray(sample_versions, np.int64)) - int(
+            cfg.staleness_bound
+        )
+        w = np.ones(len(excess), np.float64)
+        stale = excess > 0
+        if stale.any():
+            # python pow per distinct excess, not np.power over the column:
+            # they differ in the last ulp, and these weights scale
+            # advantages — the planes must agree bit for bit
+            for e in np.unique(excess[stale]):
+                w[excess == e] = cfg.staleness_decay ** int(e)
+        if cfg.staleness_policy == "drop":
+            w[stale] = np.nan
+        else:
+            w[w < cfg.min_weight] = np.nan
+        return w
+
     def _evict_stale(self, version: int) -> int:
-        """Prune buffer items no future update could use."""
-        dropped = self.replay.prune(
-            lambda s: self._weight(version, s["version"]) is None)
+        """Prune buffer items no future update could use — one vectorized
+        pass over the buffer's version column."""
+        dropped = self.replay.prune_where(
+            lambda vers: np.isnan(self._weights_vec(version, vers))
+        )
         if dropped:
             self.telemetry.count("stale_dropped", dropped)
         return dropped
 
     # -------------------------------------------------------------- updates
     def ready(self) -> bool:
-        need = (self.cfg.batch_size if self.cfg.algo == "ppo"
-                else self.cfg.sft_pack_rows)
+        need = self.cfg.batch_size if self.cfg.algo == "ppo" else self.cfg.sft_pack_rows
         return len(self.replay) >= need
 
     def step(self) -> Optional[dict]:
@@ -97,6 +140,59 @@ class LearnerLoop:
         t0 = time.monotonic()
         version = self.store.version
         self._evict_stale(version)
+        if (
+            cfg.algo == "ppo"
+            and cfg.fused
+            and hasattr(self.trainer, "make_batch_columns")
+        ):
+            return self._step_ppo_fused(version, t0)
+        return self._step_dicts(version, t0)
+
+    # fused plane: columns in, one numpy staleness pass, no per-sample loops
+    def _step_ppo_fused(self, version: int, t0: float) -> Optional[dict]:
+        cfg = self.cfg
+        cols = self.replay.sample_columns(
+            cfg.batch_size * cfg.oversample, seq_len=cfg.seq_len
+        )
+        if cols is None:
+            self.telemetry.count("learner_starved")
+            return None
+        w = self._weights_vec(version, cols["version"])
+        usable = np.flatnonzero(~np.isnan(w))
+        if usable.size == 0:
+            self.telemetry.count("learner_starved")
+            return None
+        sel = usable[: cfg.batch_size]  # first usable, same as the dict scan
+        n_kept = int(sel.size)
+        n_reweighted = int((w[sel] < 1.0).sum())
+        if n_reweighted:
+            self.telemetry.count("stale_reweighted", n_reweighted)
+        n_padded = cfg.batch_size - n_kept
+        if n_padded:
+            # fixed batch shape keeps the jitted step on one compilation:
+            # cycle survivors into the padding slots (zeroed below)
+            sel_full = np.concatenate([sel, sel[np.arange(n_padded) % n_kept]])
+            self.telemetry.count("learner_batch_padded", n_padded)
+        else:
+            sel_full = sel
+        batch = self.trainer.make_batch_columns(cols, sel_full, seq_len=cfg.seq_len)
+        batch["advantages"] = batch["advantages"] * w[sel_full, None].astype(np.float32)
+        if n_padded:
+            # padded slots are shape filler: no loss-mask weight, no
+            # gradient, no telemetry contribution
+            batch["action_mask"][n_kept:] = 0.0
+            batch["advantages"][n_kept:] = 0.0
+        metrics = self.trainer.update(batch)
+        if metrics is None:
+            return None
+        return self._finalize(
+            metrics, t0, version, cols["ingest_wall"][sel], cols["version"][sel]
+        )
+
+    # oracle plane: dict-at-a-time scan (also serves SFT and any trainer
+    # without column assembly)
+    def _step_dicts(self, version: int, t0: float) -> Optional[dict]:
+        cfg = self.cfg
         pulled = self.replay.sample(cfg.batch_size * cfg.oversample)
         kept: list[dict] = []
         weights: list[float] = []
@@ -113,42 +209,52 @@ class LearnerLoop:
         if not kept:
             self.telemetry.count("learner_starved")
             return None
-        # fixed batch shape keeps the jitted step on one compilation:
-        # pad a starved batch by cycling the samples that did survive
         n_kept = len(kept)
-        while len(kept) < cfg.batch_size:
-            kept.append(kept[len(kept) % n_kept])
-            weights.append(weights[len(weights) % n_kept])
-            self.telemetry.count("learner_batch_padded")
-
         if cfg.algo == "ppo":
-            metrics = self._ppo_update(kept, np.asarray(weights, np.float32))
+            while len(kept) < cfg.batch_size:
+                kept.append(kept[len(kept) % n_kept])
+                weights.append(weights[len(weights) % n_kept])
+                self.telemetry.count("learner_batch_padded")
+            metrics = self._ppo_update(kept, np.asarray(weights, np.float32), n_kept)
         else:
             metrics = self._sft_update(kept)
         if metrics is None:
             return None
+        kept = kept[:n_kept]  # padded slots carry no telemetry
+        walls = np.asarray([s["ingest_wall"] for s in kept], np.float64)
+        versions = np.asarray([s["version"] for s in kept], np.int64)
+        return self._finalize(metrics, t0, version, walls, versions)
 
+    def _finalize(
+        self,
+        metrics: dict,
+        t0: float,
+        version: int,
+        ingest_walls: np.ndarray,
+        sample_versions: np.ndarray,
+    ) -> dict:
         new_version = self.store.publish(self.trainer.params)
         self.updates += 1
         self.losses.append(float(metrics["loss"]))
         self._learn_wall += time.monotonic() - t0
-
         now = time.monotonic()
-        for s in kept:
-            self.telemetry.observe("rollout_to_learner_s",
-                                   now - s["ingest_wall"])
-            self.telemetry.observe("staleness_versions",
-                                   float(version - s["version"]))
+        for wall, sv in zip(ingest_walls, sample_versions):
+            self.telemetry.observe("rollout_to_learner_s", now - float(wall))
+            self.telemetry.observe("staleness_versions", float(version - int(sv)))
         self.telemetry.count("learner_updates")
         self.telemetry.observe("learner_loss", float(metrics["loss"]))
         self.telemetry.gauge("policy_version", float(new_version))
         metrics["version"] = new_version
         return metrics
 
-    def _ppo_update(self, kept: list[dict],
-                    weights: np.ndarray) -> Optional[dict]:
+    def _ppo_update(
+        self, kept: list[dict], weights: np.ndarray, n_kept: int
+    ) -> Optional[dict]:
         batch = self.trainer.make_batch(kept, seq_len=self.cfg.seq_len)
         batch["advantages"] = batch["advantages"] * weights[:, None]
+        if n_kept < len(kept):
+            batch["action_mask"][n_kept:] = 0.0
+            batch["advantages"][n_kept:] = 0.0
         return self.trainer.update(batch)
 
     def _sft_update(self, kept: list[dict]) -> Optional[dict]:
@@ -169,9 +275,12 @@ class LearnerLoop:
             self.telemetry.count("learner_starved")
             return None
         encoded = encoded * (need // max(have, 1) + 1)
-        batch = next(pack_batches(encoded, batch=cfg.sft_pack_rows,
-                                  seq_len=cfg.seq_len,
-                                  seed=self.updates), None)
+        batch = next(
+            pack_batches(
+                encoded, batch=cfg.sft_pack_rows, seq_len=cfg.seq_len, seed=self.updates
+            ),
+            None,
+        )
         if batch is None:
             self.telemetry.count("learner_starved")
             return None
@@ -189,10 +298,16 @@ class LearnerLoop:
         'is it learning' signal, robust to per-step PPO noise."""
         n = len(self.losses)
         if n < 3:
-            return {"first_third": float("nan"),
-                    "last_third": float("nan"), "decreased": False}
+            return {
+                "first_third": float("nan"),
+                "last_third": float("nan"),
+                "decreased": False,
+            }
         third = max(n // 3, 1)
         first = float(np.mean(self.losses[:third]))
         last = float(np.mean(self.losses[-third:]))
-        return {"first_third": first, "last_third": last,
-                "decreased": bool(last < first)}
+        return {
+            "first_third": first,
+            "last_third": last,
+            "decreased": bool(last < first),
+        }

@@ -3,9 +3,10 @@
 Wires the fleet (a live ``repro.cluster.Cluster`` — hosts, placement,
 least-loaded routing, optional autoscaling — or a bare ``Gateway``), the
 event-driven ``RolloutEngine``, the ``TrajectoryIngestor`` and the
-``LearnerLoop`` into one closed loop: scenario episodes stream into the replay buffer as
-reward-shaped samples, the learner runs real jitted update steps, and
-each update publishes a new policy version back toward the actors.
+``LearnerLoop`` into one closed loop: scenario episodes stream into the
+replay buffer as reward-shaped samples, the learner runs real jitted
+update steps, and each update publishes a new policy version back toward
+the actors.
 
 Two execution modes:
 
@@ -18,16 +19,27 @@ Two execution modes:
 - ``run_concurrent`` — a real asynchronous split: the actor thread
   generates rounds continuously while the learner updates from the
   buffer as fast as experience arrives (the paper's semi-online mode).
+
+The rollout→learner data plane has two implementations (see
+``repro.pipeline.ingest``): the default ``dataplane="batched"`` plane
+(micro-batched ingest flushes into a packed SoA replay arena, fused
+learner batch assembly) and the per-sample ``dataplane="scalar"`` oracle
+(batch-size-1 forwards into a dict-list buffer — the original path, kept
+bit-exact). Set ``PipelineConfig.dataplane`` or the ``REPRO_DATAPLANE``
+environment variable (which wins) to pick; both planes produce identical
+samples, so this is a performance switch, not a semantics switch.
 """
+
 from __future__ import annotations
 
+import dataclasses
+import os
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
-from repro.cluster import AutoscalerConfig, Cluster, MachineSpec, \
-    default_specs
+from repro.cluster import AutoscalerConfig, Cluster, MachineSpec, default_specs
 from repro.core.event_loop import EventLoop
 from repro.core.gateway import Gateway
 from repro.core.seeding import stable_seed
@@ -41,12 +53,16 @@ from repro.rollout.scenarios import ScenarioRegistry, get_default_registry
 from repro.rollout.writer import TrajectoryWriter
 
 
-def build_fleet(n_replicas: int, *, runners_per_node: int = 32,
-                seed: int = 0,
-                specs: Optional[Sequence[MachineSpec]] = None,
-                routing: str = "least_loaded",
-                autoscaler: Optional[AutoscalerConfig] = None,
-                telemetry: Optional[Telemetry] = None) -> Cluster:
+def build_fleet(
+    n_replicas: int,
+    *,
+    runners_per_node: int = 32,
+    seed: int = 0,
+    specs: Optional[Sequence[MachineSpec]] = None,
+    routing: str = "least_loaded",
+    autoscaler: Optional[AutoscalerConfig] = None,
+    telemetry: Optional[Telemetry] = None,
+) -> Cluster:
     """A paper-shaped **live cluster** for the online pipeline.
 
     ``n_replicas`` runners are bin-packed onto hosts (default: enough
@@ -59,16 +75,21 @@ def build_fleet(n_replicas: int, *, runners_per_node: int = 32,
     a static pool list; it now returns a :class:`repro.cluster.Cluster`
     (``cluster.gateway`` / ``cluster.pools`` are the old pieces, and
     ``cluster.close()`` replaces the manual gateway/pool teardown)."""
-    specs = specs or default_specs(n_replicas,
-                                   runners_per_node=runners_per_node)
-    return Cluster(specs, n_replicas, runners_per_node=runners_per_node,
-                   seed=seed, routing=routing, autoscaler=autoscaler,
-                   telemetry=telemetry)
+    specs = specs or default_specs(n_replicas, runners_per_node=runners_per_node)
+    return Cluster(
+        specs,
+        n_replicas,
+        runners_per_node=runners_per_node,
+        seed=seed,
+        routing=routing,
+        autoscaler=autoscaler,
+        telemetry=telemetry,
+    )
 
 
 @dataclass
 class PipelineConfig:
-    rounds: int = 3                 # actor rounds (interleaved mode)
+    rounds: int = 3  # actor rounds (interleaved mode)
     tasks_per_round: int = 16
     updates_per_round: int = 4
     max_inflight: int = 64
@@ -78,6 +99,9 @@ class PipelineConfig:
     # optional virtual-time pacing: stop launching episodes in a round
     # once the round's virtual clock passes this (see RolloutConfig)
     virtual_deadline_s: Optional[float] = None
+    # "batched" (micro-batched ingest + SoA arena + fused learner) or
+    # "scalar" (per-sample oracle); REPRO_DATAPLANE overrides when set
+    dataplane: str = "batched"
 
 
 @dataclass
@@ -90,9 +114,9 @@ class PipelineReport:
     rollout_steps: int = 0
     reassignments: int = 0
     rollout_virtual_seconds: float = 0.0
-    rollout_traj_per_min: float = 0.0      # virtual-time, fleet-projected
+    rollout_traj_per_min: float = 0.0  # virtual-time, fleet-projected
     rollout_wall_seconds: float = 0.0
-    learner_steps_per_min: float = 0.0     # wall-clock update rate
+    learner_steps_per_min: float = 0.0  # wall-clock update rate
     losses: list[float] = field(default_factory=list)
     loss_first_third: float = float("nan")
     loss_last_third: float = float("nan")
@@ -104,6 +128,8 @@ class PipelineReport:
     staleness: dict = field(default_factory=dict)
     rollout_to_learner_s: dict = field(default_factory=dict)
     wall_seconds: float = 0.0
+    dataplane: str = "batched"
+    ingest_flushes: int = 0
 
     def to_dict(self) -> dict:
         d = dict(self.__dict__)
@@ -111,15 +137,29 @@ class PipelineReport:
         return d
 
 
+def resolve_dataplane(cfg_value: str) -> str:
+    """Pipeline data-plane selection: REPRO_DATAPLANE wins over config."""
+    plane = os.environ.get("REPRO_DATAPLANE", "").strip() or cfg_value
+    if plane not in ("batched", "scalar"):
+        raise ValueError(f"unknown dataplane {plane!r}: use 'batched' or 'scalar'")
+    return plane
+
+
 class OnlinePipeline:
     """Actor/learner pipeline over one fleet, one trainer, one registry."""
 
-    def __init__(self, fleet, n_replicas: Optional[int], trainer, *,
-                 registry: Optional[ScenarioRegistry] = None,
-                 pipe_cfg: Optional[PipelineConfig] = None,
-                 learner_cfg: Optional[LearnerConfig] = None,
-                 ingest_cfg: Optional[IngestConfig] = None,
-                 telemetry: Optional[Telemetry] = None):
+    def __init__(
+        self,
+        fleet,
+        n_replicas: Optional[int],
+        trainer,
+        *,
+        registry: Optional[ScenarioRegistry] = None,
+        pipe_cfg: Optional[PipelineConfig] = None,
+        learner_cfg: Optional[LearnerConfig] = None,
+        ingest_cfg: Optional[IngestConfig] = None,
+        telemetry: Optional[Telemetry] = None,
+    ):
         # ``fleet`` is a Cluster (the build_fleet product: the engine then
         # binds the autoscaler/contention control plane to each round's
         # loop) or a bare Gateway (legacy callers)
@@ -131,43 +171,65 @@ class OnlinePipeline:
                 n_replicas = fleet.n_replicas
         else:
             self.gateway = fleet
-            assert n_replicas is not None, \
-                "n_replicas is required with a bare Gateway"
+            assert n_replicas is not None, "n_replicas is required with a bare Gateway"
         self.n_replicas = n_replicas
         self.trainer = trainer
         self.registry = registry or get_default_registry()
         self.cfg = pipe_cfg or PipelineConfig()
         self.telemetry = telemetry or Telemetry()
         learner_cfg = learner_cfg or LearnerConfig()
+        ingest_cfg = ingest_cfg or IngestConfig()
 
-        self.replay = ReplayBuffer(capacity=self.cfg.replay_capacity,
-                                   seed=stable_seed(self.cfg.seed, "replay"))
+        self.dataplane = resolve_dataplane(self.cfg.dataplane)
+        if self.dataplane == "scalar":
+            # per-sample oracle end to end: batch-size-1 ingest forwards,
+            # dict-list replay, dict-at-a-time learner assembly
+            ingest_cfg = dataclasses.replace(ingest_cfg, micro_batch=1)
+            learner_cfg = dataclasses.replace(learner_cfg, fused=False)
+        backend = "soa" if self.dataplane == "batched" else "list"
+        self.replay = ReplayBuffer(
+            capacity=self.cfg.replay_capacity,
+            seed=stable_seed(self.cfg.seed, "replay"),
+            backend=backend,
+            seq_len=ingest_cfg.seq_len if backend == "soa" else None,
+        )
         self.store = PolicyVersionStore(trainer.params)
         self.ingestor = TrajectoryIngestor(
-            self.replay, self.store, registry=self.registry,
+            self.replay,
+            self.store,
+            registry=self.registry,
             trainer=trainer if learner_cfg.algo == "ppo" else None,
-            cfg=ingest_cfg, telemetry=self.telemetry)
+            cfg=ingest_cfg,
+            telemetry=self.telemetry,
+        )
         self.writer = TrajectoryWriter(
-            on_trajectory=self.ingestor, retain=False,
-            capacity=self.cfg.writer_capacity)
+            on_trajectory=self.ingestor, retain=False, capacity=self.cfg.writer_capacity
+        )
         self.engine = RolloutEngine(
             self.cluster if self.cluster is not None else self.gateway,
-            self.writer, registry=self.registry,
+            self.writer,
+            registry=self.registry,
             config=RolloutConfig(
                 max_inflight=self.cfg.max_inflight,
-                virtual_deadline_s=self.cfg.virtual_deadline_s),
-            telemetry=self.telemetry)
-        self.learner = LearnerLoop(trainer, self.replay, self.store,
-                                   cfg=learner_cfg,
-                                   telemetry=self.telemetry)
-        self._rollout_totals = dict(completed=0, failed=0, steps=0,
-                                    reassignments=0, virtual_seconds=0.0,
-                                    wall_seconds=0.0)
+                virtual_deadline_s=self.cfg.virtual_deadline_s,
+            ),
+            telemetry=self.telemetry,
+        )
+        self.learner = LearnerLoop(
+            trainer, self.replay, self.store, cfg=learner_cfg, telemetry=self.telemetry
+        )
+        self._rollout_totals = dict(
+            completed=0,
+            failed=0,
+            steps=0,
+            reassignments=0,
+            virtual_seconds=0.0,
+            wall_seconds=0.0,
+        )
         self._rounds_run = 0
 
     # --------------------------------------------------------------- actors
-    def _run_round(self, round_idx: int,
-                   abort: Optional[threading.Event] = None) -> None:
+    def _run_round(self, round_idx: int, abort: Optional[threading.Event] = None):
         if abort is not None and abort.is_set():
             # checked at round entry: run_event_driven re-arms the engine's
             # own stop flag, so a stop that landed between rounds would
@@ -175,8 +237,13 @@ class OnlinePipeline:
             return
         tasks = self.registry.sample(
             self.cfg.tasks_per_round,
-            seed=stable_seed(self.cfg.seed, "round", round_idx))
-        report = self.engine.run_event_driven(tasks, loop=EventLoop())
+            seed=stable_seed(self.cfg.seed, "round", round_idx),
+        )
+        loop = EventLoop()
+        # virtual-time flush deadline: a trickle of episodes can never
+        # stall in the ingest pending batch for more than one tick
+        self.ingestor.arm_virtual_flush(loop)
+        report = self.engine.run_event_driven(tasks, loop=loop)
         tot = self._rollout_totals
         tot["completed"] += report.completed
         tot["failed"] += report.failed
@@ -194,13 +261,14 @@ class OnlinePipeline:
         for r in range(self.cfg.rounds):
             self._run_round(r)
             self.writer.drain()
+            self.ingestor.flush()  # everything ingested reaches the learner
             for _ in range(self.cfg.updates_per_round):
                 self.learner.step()
         return self._report(time.monotonic() - t0)
 
-    def run_concurrent(self, total_updates: int, *,
-                       max_rounds: int = 64,
-                       poll_s: float = 0.02) -> PipelineReport:
+    def run_concurrent(
+        self, total_updates: int, *, max_rounds: int = 64, poll_s: float = 0.02
+    ) -> PipelineReport:
         """True async actor/learner split: the actor thread streams rounds
         while the learner updates from the buffer as experience lands."""
         t0 = time.monotonic()
@@ -212,8 +280,7 @@ class OnlinePipeline:
                     break
                 self._run_round(r, abort=stop)
 
-        thread = threading.Thread(target=actor, name="pipeline-actor",
-                                  daemon=True)
+        thread = threading.Thread(target=actor, name="pipeline-actor", daemon=True)
         thread.start()
         try:
             while self.learner.updates < total_updates:
@@ -222,11 +289,15 @@ class OnlinePipeline:
                     # trajectories before concluding there is no more
                     # experience coming
                     self.writer.drain()
+                    self.ingestor.flush()
                     if not self.learner.ready():
                         break
                 if self.learner.ready():
                     self.learner.step()
                 else:
+                    # starved: give a partial ingest batch past its wall
+                    # deadline a push instead of waiting out the trickle
+                    self.ingestor.maybe_flush()
                     time.sleep(poll_s)
         finally:
             stop.set()
@@ -237,6 +308,7 @@ class OnlinePipeline:
                 # live actor thread is still mutating
                 raise RuntimeError("pipeline actor thread failed to stop")
             self.writer.drain()
+            self.ingestor.flush()
         return self._report(time.monotonic() - t0)
 
     def close(self) -> None:
@@ -253,13 +325,17 @@ class OnlinePipeline:
             if name.startswith("family_total:"):
                 fam = name.split(":", 1)[1]
                 ok = counters.get(f"family_success:{fam}", 0)
-                families[fam] = {"episodes": n, "successes": ok,
-                                 "rate": ok / n if n else 0.0}
+                families[fam] = {
+                    "episodes": n,
+                    "successes": ok,
+                    "rate": ok / n if n else 0.0,
+                }
         ingested = counters.get("ingested", 0)
         traj_per_min = 0.0
         if tot["completed"] and tot["virtual_seconds"] > 0:
-            traj_per_min = (self.n_replicas * 60.0 * tot["completed"]
-                            / tot["virtual_seconds"])
+            traj_per_min = (
+                self.n_replicas * 60.0 * tot["completed"] / tot["virtual_seconds"]
+            )
         return PipelineReport(
             rounds=self._rounds_run,
             updates=self.learner.updates,
@@ -276,13 +352,15 @@ class OnlinePipeline:
             loss_first_third=trend["first_third"],
             loss_last_third=trend["last_third"],
             loss_decreased=trend["decreased"],
-            success_rate=(counters.get("ingest_success", 0) / ingested
-                          if ingested else 0.0),
+            success_rate=(
+                counters.get("ingest_success", 0) / ingested if ingested else 0.0
+            ),
             success_by_family=families,
             stale_dropped=counters.get("stale_dropped", 0),
             stale_reweighted=counters.get("stale_reweighted", 0),
             staleness=snap["series"].get("staleness_versions", {"n": 0}),
-            rollout_to_learner_s=snap["series"].get(
-                "rollout_to_learner_s", {"n": 0}),
+            rollout_to_learner_s=snap["series"].get("rollout_to_learner_s", {"n": 0}),
             wall_seconds=wall,
+            dataplane=self.dataplane,
+            ingest_flushes=counters.get("ingest_flushes", 0),
         )

@@ -7,6 +7,7 @@ behavior policy). Versions are how staleness is measured: an experience
 generated under version ``v`` is ``current - v`` updates off-policy by the
 time the learner consumes it.
 """
+
 from __future__ import annotations
 
 import threading

@@ -5,6 +5,7 @@ the final hidden state. Rollouts arrive through the DataServer's async
 batched interface into the replay buffer; the learner samples independently
 — rollouts and updates are decoupled exactly as in the paper.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -19,6 +20,13 @@ from repro.models.lm import LM
 from repro.models.param import Spec, init_params
 from repro.train.optimizer import Optimizer, OptimizerConfig
 
+# step-arg donation sets per PPOConfig.donate: donating the optimizer
+# state is always safe (nothing outside the trainer holds it); donating
+# params frees the previous step's buffers too but invalidates any
+# externally-held reference — e.g. a PolicyVersionStore snapshot actors
+# are still scoring with — so "all" is opt-in for isolated learners.
+_DONATE_ARGNUMS = {"none": (), "opt_state": (1,), "all": (0, 1)}
+
 
 @dataclass(frozen=True)
 class PPOConfig:
@@ -27,13 +35,15 @@ class PPOConfig:
     entropy_coef: float = 0.01
     gamma: float = 0.99
     gae_lambda: float = 0.95
-    lr: float = 1e-6             # paper: 1e-6 Adam
-    batch_size: int = 64         # paper: 64
+    lr: float = 1e-6  # paper: 1e-6 Adam
+    batch_size: int = 64  # paper: 64
     epochs_per_batch: int = 1
+    donate: str = "opt_state"  # "none" | "opt_state" | "all"
 
 
-def compute_gae(rewards: np.ndarray, values: np.ndarray, gamma: float,
-                lam: float) -> tuple[np.ndarray, np.ndarray]:
+def compute_gae(
+    rewards: np.ndarray, values: np.ndarray, gamma: float, lam: float
+) -> tuple[np.ndarray, np.ndarray]:
     """rewards/values: (T,). Returns (advantages, returns)."""
     T = len(rewards)
     adv = np.zeros(T, np.float32)
@@ -46,30 +56,72 @@ def compute_gae(rewards: np.ndarray, values: np.ndarray, gamma: float,
     return adv, adv + values[:T]
 
 
+# the accumulation dtype the scalar loop promotes to: float32 under NEP 50
+# (numpy >= 2), float64 under legacy promotion — matching it keeps the
+# batched recursion bit-identical to compute_gae on either numpy
+_GAE_ACC_DT = (np.float32(0) + 0.0).dtype
+
+
+def compute_gae_batch(
+    rewards: np.ndarray, values: np.ndarray, gamma: float, lam: float
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized GAE over ``(B, S)`` row blocks — one backward sweep for
+    the whole batch instead of a Python loop per sample.
+
+    Rows zero-padded beyond their true length yield zero advantage/return
+    in the padding (delta and the recursion both collapse to 0 there), and
+    the live prefix is bit-identical per element to running ``compute_gae``
+    on the unpadded row."""
+    r = rewards.astype(_GAE_ACC_DT)
+    v = values.astype(_GAE_ACC_DT)
+    B, S = r.shape
+    adv = np.zeros((B, S), np.float32)
+    zero = np.zeros(B, _GAE_ACC_DT)
+    last = zero
+    for t in range(S - 1, -1, -1):
+        next_v = v[:, t + 1] if t + 1 < S else zero
+        delta = r[:, t] + gamma * next_v - v[:, t]
+        last = delta + gamma * lam * last
+        adv[:, t] = last
+    return adv, adv + values.astype(np.float32)
+
+
 class PPOTrainer:
     """Clipped-objective PPO over (tokens, action_mask, old_logp, adv, ret)."""
 
-    def __init__(self, model: LM, params, *,
-                 cfg: Optional[PPOConfig] = None,
-                 rules: Optional[AxisRules] = None, seed: int = 0):
+    def __init__(
+        self,
+        model: LM,
+        params,
+        *,
+        cfg: Optional[PPOConfig] = None,
+        rules: Optional[AxisRules] = None,
+        seed: int = 0,
+    ):
         self.model = model
         self.cfg = cfg or PPOConfig()
         self.rules = rules or AxisRules()
-        vh_spec = {"w": Spec((model.cfg.d_model, 1), ("embed", None),
-                             "scaled", "float32")}
-        self.params = {"lm": params,
-                       "value_head": init_params(jax.random.PRNGKey(seed + 1),
-                                                 vh_spec, "float32")}
-        self.opt = Optimizer(OptimizerConfig(
-            name="adamw", lr=self.cfg.lr, warmup_steps=0, grad_clip=1.0))
+        assert self.cfg.donate in _DONATE_ARGNUMS, self.cfg.donate
+        vh_spec = {
+            "w": Spec((model.cfg.d_model, 1), ("embed", None), "scaled", "float32")
+        }
+        self.params = {
+            "lm": params,
+            "value_head": init_params(jax.random.PRNGKey(seed + 1), vh_spec, "float32"),
+        }
+        self.opt = Optimizer(
+            OptimizerConfig(name="adamw", lr=self.cfg.lr, warmup_steps=0, grad_clip=1.0)
+        )
         self.opt_state = self.opt.init(self.params)
-        self._step = jax.jit(self._make_step())
+        self._step = jax.jit(
+            self._make_step(), donate_argnums=_DONATE_ARGNUMS[self.cfg.donate]
+        )
 
     def policy_value(self, params, tokens):
         logits, _, hidden = self.model.forward(
-            params["lm"], tokens, rules=self.rules, return_hidden=True)
-        values = (hidden.astype(jnp.float32)
-                  @ params["value_head"]["w"])[..., 0]
+            params["lm"], tokens, rules=self.rules, return_hidden=True
+        )
+        values = (hidden.astype(jnp.float32) @ params["value_head"]["w"])[..., 0]
         return logits.astype(jnp.float32), values
 
     def _make_step(self):
@@ -78,28 +130,26 @@ class PPOTrainer:
         def loss_fn(params, batch):
             logits, values = self.policy_value(params, batch["tokens"])
             logp_all = jax.nn.log_softmax(logits, axis=-1)
-            logp = jnp.take_along_axis(
-                logp_all, batch["actions"][..., None], axis=-1)[..., 0]
+            logp = jnp.take_along_axis(logp_all, batch["actions"][..., None], axis=-1)[
+                ..., 0
+            ]
             mask = batch["action_mask"]
             ratio = jnp.exp(logp - batch["old_logp"])
             adv = batch["advantages"]
             unclipped = ratio * adv
-            clipped = jnp.clip(ratio, 1 - cfg.clip_eps,
-                               1 + cfg.clip_eps) * adv
+            clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv
             pg = -jnp.sum(jnp.minimum(unclipped, clipped) * mask)
             v_loss = jnp.sum(jnp.square(values - batch["returns"]) * mask)
             ent = -jnp.sum(jnp.sum(jnp.exp(logp_all) * logp_all, -1) * mask)
             denom = jnp.maximum(jnp.sum(mask), 1.0)
-            total = (pg + cfg.value_coef * v_loss
-                     - cfg.entropy_coef * ent) / denom
-            return total, {"pg": pg / denom, "v": v_loss / denom,
-                           "entropy": ent / denom}
+            total = (pg + cfg.value_coef * v_loss - cfg.entropy_coef * ent) / denom
+            return total, {"pg": pg / denom, "v": v_loss / denom, "entropy": ent / denom}
 
         def step(params, opt_state, batch):
-            (loss, aux), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, batch)
-            params, opt_state, info = self.opt.update(grads, opt_state,
-                                                      params)
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            params, opt_state, info = self.opt.update(grads, opt_state, params)
             return params, opt_state, {"loss": loss, **aux, **info}
 
         return step
@@ -108,7 +158,9 @@ class PPOTrainer:
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         for _ in range(self.cfg.epochs_per_batch):
             self.params, self.opt_state, metrics = self._step(
-                self.params, self.opt_state, batch)
+                self.params, self.opt_state, batch
+            )
+        metrics = jax.device_get(metrics)  # one transfer for all metrics
         return {k: float(v) for k, v in metrics.items()}
 
     # ------------------------------------------------------ rollout -> batch
@@ -116,8 +168,10 @@ class PPOTrainer:
         """samples: dicts with tokens (S,), actions (S,), action_mask (S,),
         rewards (S,) — padded/truncated to seq_len with GAE computed here."""
         B = len(samples)
-        out = {k: np.zeros((B, seq_len), np.float32) for k in
-               ("action_mask", "old_logp", "advantages", "returns")}
+        out = {
+            k: np.zeros((B, seq_len), np.float32)
+            for k in ("action_mask", "old_logp", "advantages", "returns")
+        }
         out["tokens"] = np.zeros((B, seq_len), np.int32)
         out["actions"] = np.zeros((B, seq_len), np.int32)
         for i, s in enumerate(samples):
@@ -126,10 +180,60 @@ class PPOTrainer:
             out["actions"][i, :T] = s["actions"][:T]
             out["action_mask"][i, :T] = s["action_mask"][:T]
             out["old_logp"][i, :T] = s["old_logp"][:T]
-            adv, ret = compute_gae(np.asarray(s["rewards"][:T], np.float32),
-                                   np.asarray(s["values"][:T], np.float32),
-                                   self.cfg.gamma, self.cfg.gae_lambda)
+            adv, ret = compute_gae(
+                np.asarray(s["rewards"][:T], np.float32),
+                np.asarray(s["values"][:T], np.float32),
+                self.cfg.gamma,
+                self.cfg.gae_lambda,
+            )
             std = adv.std() + 1e-8
             out["advantages"][i, :T] = (adv - adv.mean()) / std
             out["returns"][i, :T] = ret
+        return out
+
+    def make_batch_columns(self, cols: dict, sel: np.ndarray, seq_len: int) -> dict:
+        """Fused ``make_batch``: assemble an update batch straight from
+        pre-stacked sample columns (``ReplayBuffer.sample_columns``) for
+        the selected row indices — block copies plus one vectorized GAE
+        sweep, no per-sample Python assembly.
+
+        Bit-identical to running ``make_batch`` on the equivalent sample
+        dicts: the advantage normalization still reduces over each row's
+        live ``[:T]`` slice (``np.mean``/``np.std`` pairwise summation
+        order is length-dependent, so a masked full-width reduction would
+        round differently)."""
+        sel = np.asarray(sel)
+        B = len(sel)
+        S_in = cols["tokens"].shape[1]
+        W = min(S_in, seq_len)
+        lengths = np.minimum(cols["length"][sel], W).astype(np.int64)
+        live = np.arange(seq_len)[None, :] < lengths[:, None]
+        out = {}
+        for k, dt in (
+            ("tokens", np.int32),
+            ("actions", np.int32),
+            ("action_mask", np.float32),
+            ("old_logp", np.float32),
+        ):
+            buf = np.zeros((B, seq_len), dt)
+            buf[:, :W] = cols[k][sel, :W]
+            buf[~live] = 0  # guard rows wider than their recorded length
+            out[k] = buf
+        rewards = np.zeros((B, seq_len), np.float32)
+        rewards[:, :W] = cols["rewards"][sel, :W]
+        rewards[~live] = 0.0
+        values = np.zeros((B, seq_len), np.float32)
+        values[:, :W] = cols["values"][sel, :W]
+        values[~live] = 0.0
+        adv, ret = compute_gae_batch(rewards, values, self.cfg.gamma, self.cfg.gae_lambda)
+        out["advantages"] = np.zeros((B, seq_len), np.float32)
+        out["returns"] = np.zeros((B, seq_len), np.float32)
+        for i in range(B):
+            T = int(lengths[i])
+            if T == 0:
+                continue
+            a = adv[i, :T]
+            std = a.std() + 1e-8
+            out["advantages"][i, :T] = (a - a.mean()) / std
+            out["returns"][i, :T] = ret[i, :T]
         return out

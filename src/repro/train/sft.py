@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from repro.distributed.sharding import AxisRules
 from repro.models.lm import LM
 from repro.train.optimizer import Optimizer, OptimizerConfig
-from repro.train.train_step import TrainConfig, make_train_step
+from repro.train.train_step import TrainConfig, donate_argnums, make_train_step
 
 
 @dataclass
@@ -29,7 +29,8 @@ class SFTTrainer:
                                                         warmup_steps=20))
         self.rules = rules or AxisRules()
         tc = train_cfg or TrainConfig(microbatches=1, remat=None)
-        self._step = jax.jit(make_train_step(model, self.opt, self.rules, tc))
+        self._step = jax.jit(make_train_step(model, self.opt, self.rules, tc),
+                             donate_argnums=donate_argnums(tc))
         self.params = model.init(jax.random.PRNGKey(seed))
         self.opt_state = self.opt.init(self.params)
 

@@ -23,6 +23,17 @@ class TrainConfig:
     accum_dtype: str = "float32"         # bfloat16 for the 300-400B configs
     grad_compression: Optional[str] = None   # None | "int8_ef"
     loss_dtype: str = "float32"
+    # donate (params, opt_state) into the jitted step so every update
+    # reuses the previous step's device buffers instead of allocating a
+    # fresh copy of the model state. Opt-in: donation invalidates any
+    # externally-held reference to the pre-step params (checkpoints,
+    # policy stores), so only enable it for an isolated training loop.
+    donate: bool = False
+
+
+def donate_argnums(cfg: "TrainConfig") -> tuple[int, ...]:
+    """jit donate_argnums for a train_step(params, opt_state, batch)."""
+    return (0, 1) if cfg.donate else ()
 
 
 def _split_microbatches(batch: dict, n: int) -> dict:

@@ -253,6 +253,71 @@ def test_kernel_missing_lane_row_fails():
     assert any("MISSING kernel[" in p for p in problems)
 
 
+def test_committed_dataplane_baseline_self_passes():
+    base = _baseline("BENCH_dataplane.json")
+    assert cb.check(base, copy.deepcopy(base), 0.10) == []
+
+
+def test_dataplane_parity_boolean_gates_must_hold():
+    base = _baseline("BENCH_dataplane.json")
+    assert base["gate"]["ingest_parity_bit_identical"] is True
+    assert base["gate"]["ingest_speedup_ge_5x"] is True
+    assert base["gate"]["learner_ge_2x_e2e"] is True
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["ingest_parity_bit_identical"] = False
+    perturbed["gate"]["learner_ge_2x_e2e"] = False
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("ingest_parity_bit_identical" in p for p in problems)
+    assert any("learner_ge_2x_e2e" in p for p in problems)
+
+
+def test_dataplane_rates_get_the_wide_host_band():
+    """samples/sec and steps/min are wall-clock rates: a 60% dip (host
+    speed) passes the wide band, a 90% collapse fails; the speedup ratio
+    cancels host speed and keeps the tighter 50% band."""
+    base = _baseline("BENCH_dataplane.json")
+    noisy = copy.deepcopy(base)
+    noisy["ingest"]["samples_per_s_batched"] *= 0.40
+    noisy["learner"]["steps_per_min"] *= 0.40
+    noisy["gate"]["learner_steps_per_min"] *= 0.40
+    noisy["ingest"]["speedup"] *= 0.70
+    noisy["gate"]["ingest_speedup"] *= 0.70
+    assert cb.check(base, noisy, 0.10) == []
+    collapsed = copy.deepcopy(base)
+    collapsed["ingest"]["samples_per_s_batched"] *= 0.10
+    problems = cb.check(base, collapsed, 0.10)
+    assert problems and all("samples_per_s_batched" in p for p in problems)
+    slow_ratio = copy.deepcopy(base)
+    slow_ratio["ingest"]["speedup"] *= 0.40
+    slow_ratio["gate"]["ingest_speedup"] *= 0.40
+    problems = cb.check(base, slow_ratio, 0.10)
+    assert problems and all(
+        "REGRESSION" in p and "speedup" in p for p in problems)
+
+
+def test_dataplane_deterministic_counts_keep_the_tight_band():
+    base = _baseline("BENCH_dataplane.json")
+    perturbed = copy.deepcopy(base)
+    perturbed["ingest"]["parity_samples"] = int(
+        base["ingest"]["parity_samples"] * 0.5)
+    perturbed["gate"]["samples"] = int(base["gate"]["samples"] * 0.5)
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("ingest.parity_samples" in p for p in problems)
+    assert any("gate.samples" in p for p in problems)
+
+
+def test_dataplane_wall_budget_and_missing_block():
+    base = _baseline("BENCH_dataplane.json")
+    over = copy.deepcopy(base)
+    over["bench_wall_seconds"] = base["wall_budget_s"] * 1.5
+    problems = cb.check(base, over, 0.10)
+    assert any("wall budget" in p for p in problems)
+    missing = copy.deepcopy(base)
+    del missing["learner"]
+    problems = cb.check(base, missing, 0.10)
+    assert any("MISSING learner" in p for p in problems)
+
+
 def test_malformed_payloads_are_rejected():
     assert cb.check({}, {}, 0.10) == [
         "MALFORMED baseline: neither engine rows nor a gate block"

@@ -1,0 +1,526 @@
+"""Vectorized rollout→learner data plane: parity with the scalar oracle.
+
+Locks down the PR's bit-exactness contracts:
+
+- micro-batched ingest == per-sample ingest, replay row for replay row
+  (full flushes, remainder flushes, deadline flushes);
+- SoA arena backend == dict-list backend under one seed (same sampling
+  stream, same FIFO eviction, same pruning);
+- fused learner batches == dict-path learner batches, update for update;
+- packed batch assembly is deterministic across processes.
+"""
+import hashlib
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.event_loop import EventLoop
+from repro.core.telemetry import Telemetry
+from repro.data.pipeline import Trajectory, TrajectoryStep
+from repro.data.replay_buffer import ReplayBuffer
+from repro.pipeline import (IngestConfig, LearnerConfig, LearnerLoop,
+                            PolicyVersionStore, TrajectoryIngestor)
+
+SEQ = 96
+MB = 8  # test micro-batch
+
+
+# --------------------------------------------------------------- helpers
+def _trajectories(n, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        n_steps = int(rng.integers(2, 5))
+        steps = [TrajectoryStep(rng.integers(0, 255, (8, 8, 3), np.uint8),
+                                f"thought {i}-{k} " + "x" * int(rng.integers(0, 9)),
+                                f"click({i}, {k})")
+                 for k in range(n_steps)]
+        out.append(Trajectory(f"terminal_os-{i}", "configure the system",
+                              steps, float(rng.uniform(0, 1))))
+    return out
+
+
+def _rows(n, seed=0, seq_len=SEQ, version=0):
+    """Synthetic RL sample dicts with ragged lengths (no model needed)."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    for i in range(n):
+        L = int(rng.integers(4, seq_len + 1))
+        rows.append({
+            "tokens": rng.integers(0, 264, L).astype(np.int32),
+            "actions": rng.integers(0, 264, L).astype(np.int32),
+            "action_mask": (rng.random(L) < 0.7).astype(np.float32),
+            "rewards": rng.normal(size=L).astype(np.float32),
+            "old_logp": rng.normal(size=L).astype(np.float32),
+            "values": rng.normal(size=L).astype(np.float32),
+            "version": version,
+            "ingest_wall": 1000.0 + i,
+            "task_id": f"t-{seed}-{i}",
+        })
+    return rows
+
+
+def _assert_rows_equal(a_rows, b_rows):
+    assert len(a_rows) == len(b_rows)
+    for i, (a, b) in enumerate(zip(a_rows, b_rows)):
+        keys = {k for k in a if k != "ingest_wall"}
+        assert keys == {k for k in b if k != "ingest_wall"}, (i, keys)
+        for k in keys:
+            va, vb = a[k], b[k]
+            if isinstance(va, np.ndarray):
+                assert np.array_equal(va, np.asarray(vb)), (i, k)
+            else:
+                assert va == vb, (i, k, va, vb)
+
+
+@pytest.fixture(scope="module")
+def tiny_trainer():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.train.ppo import PPOConfig, PPOTrainer
+
+    def build(seed=0):
+        cfg = get_reduced("qwen3-1.7b", vocab_size=264, d_model=32,
+                          n_layers=1, n_heads=2, n_kv_heads=2, head_dim=16,
+                          d_ff=64)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        return PPOTrainer(model, params, cfg=PPOConfig(lr=3e-4), seed=seed)
+
+    return build
+
+
+def _make_ingest(trainer, micro_batch, **cfg_over):
+    cfg_over.setdefault("flush_wall_s", float("inf"))
+    replay = ReplayBuffer(capacity=256, seed=0,
+                          backend="soa" if micro_batch > 1 else "list",
+                          seq_len=SEQ if micro_batch > 1 else None)
+    store = PolicyVersionStore(trainer.params)
+    ing = TrajectoryIngestor(
+        replay, store, trainer=trainer, telemetry=Telemetry(),
+        cfg=IngestConfig(seq_len=SEQ, micro_batch=micro_batch, **cfg_over))
+    return replay, ing
+
+
+# ----------------------------------------------------- ingest plane parity
+def test_batched_ingest_bit_identical_to_oracle(tiny_trainer):
+    trainer = tiny_trainer()
+    # below one batch (forced flush), exactly one batch, two + remainder
+    for n in (MB - 3, MB, 2 * MB + 3):
+        trajs = _trajectories(n, seed=n)
+        replay_s, ing_s = _make_ingest(trainer, 1)
+        replay_b, ing_b = _make_ingest(trainer, MB)
+        for t in trajs:
+            ing_s(t)
+        for t in trajs:
+            ing_b(t)
+        ing_b.flush()
+        assert ing_b.pending_rows == 0
+        _assert_rows_equal(replay_s.snapshot(), replay_b.snapshot())
+
+
+def test_wall_deadline_flushes_partial_batches(tiny_trainer):
+    trainer = tiny_trainer()
+    replay_s, ing_s = _make_ingest(trainer, 1)
+    replay_b, ing_b = _make_ingest(trainer, MB, flush_wall_s=0.0)
+    # a zero wall deadline makes every arrival overdue: each episode
+    # flushes alone through the padded fused call — still bit-exact
+    for t in _trajectories(3):
+        ing_s(t)
+        ing_b(t)
+        assert ing_b.pending_rows == 0
+    assert len(replay_b) == 3
+    _assert_rows_equal(replay_s.snapshot(), replay_b.snapshot())
+
+
+def test_maybe_flush_respects_deadline(tiny_trainer):
+    trainer = tiny_trainer()
+    _, ing = _make_ingest(trainer, MB)
+    for t in _trajectories(3):
+        ing(t)
+    assert ing.pending_rows == 3
+    assert len(ing.replay) == 0
+    assert ing.maybe_flush() == 0            # not overdue, not forced
+    ing.cfg.flush_wall_s = 0.0
+    assert ing.maybe_flush() == 3            # now overdue
+    assert ing.pending_rows == 0
+    assert len(ing.replay) == 3
+
+
+def test_virtual_time_tick_flushes_pending(tiny_trainer):
+    trainer = tiny_trainer()
+    _, ing = _make_ingest(trainer, MB, flush_virtual_s=5.0)
+    loop = EventLoop()
+    ing.arm_virtual_flush(loop)
+    for t in _trajectories(3):
+        ing(t)
+    assert ing.pending_rows == 3
+    # one non-daemon event keeps the loop alive past the first tick; the
+    # tick itself is daemon and must not keep the loop running forever
+    loop.call_later(6.0, lambda: None)
+    loop.run()
+    assert ing.pending_rows == 0
+    assert len(ing.replay) == 3
+
+
+def test_version_change_flushes_old_group_first(tiny_trainer):
+    trainer = tiny_trainer()
+    _, ing = _make_ingest(trainer, MB)
+    trajs = _trajectories(3)
+    ing(trajs[0])
+    ing(trajs[1])
+    ing.store.publish(trainer.params)        # behavior policy moved on
+    ing(trajs[2])                            # arrival flushes the v0 group
+    assert len(ing.replay) == 2
+    assert ing.pending_rows == 1
+    ing.flush()
+    assert [s["version"] for s in ing.replay.snapshot()] == [0, 0, 1]
+
+
+# -------------------------------------------------- arena backend parity
+def _both(capacity=64, seed=7):
+    return (ReplayBuffer(capacity, seed=seed, backend="list"),
+            ReplayBuffer(capacity, seed=seed, backend="soa", seq_len=SEQ))
+
+
+def test_soa_and_list_share_one_sampling_stream():
+    lst, soa = _both()
+    rows = _rows(20)
+    lst.extend(rows)
+    soa.extend(rows)
+    assert len(lst) == len(soa) == 20
+    np.testing.assert_array_equal(lst.versions(), soa.versions())
+    _assert_rows_equal(lst.sample(10), soa.sample(10))
+    _assert_rows_equal(lst.snapshot(), soa.snapshot())
+
+
+def test_soa_and_list_evict_oldest_on_overflow():
+    lst, soa = _both(capacity=8)
+    for chunk in (0, 1, 2):
+        rows = _rows(5, seed=chunk, version=chunk)
+        lst.extend(rows)
+        soa.extend(rows)
+    assert len(lst) == len(soa) == 8
+    assert lst.total_added == soa.total_added == 15
+    _assert_rows_equal(lst.snapshot(), soa.snapshot())
+    # newest 8 of the 15 survive, in FIFO order
+    assert [s["version"] for s in soa.snapshot()] == [1, 1, 1, 2, 2, 2, 2, 2]
+
+
+def test_soa_bulk_insert_wider_than_capacity_keeps_newest():
+    lst, soa = _both(capacity=8)
+    rows = _rows(12)
+    lst.extend(rows)
+    soa.extend(rows)
+    _assert_rows_equal(lst.snapshot(), soa.snapshot())
+    _assert_rows_equal(soa.snapshot(), rows[-8:])
+
+
+def test_soa_and_list_prune_equivalently():
+    lst, soa = _both()
+    rows = _rows(16)
+    lst.extend(rows)
+    soa.extend(rows)
+    # dict-level predicate
+    pred = lambda it: len(it["tokens"]) % 2 == 0
+    assert lst.prune(pred) == soa.prune(pred)
+    _assert_rows_equal(lst.snapshot(), soa.snapshot())
+    # vectorized mask over the version column
+    drop = lambda vers: vers >= 0
+    assert lst.prune_where(drop) == soa.prune_where(drop)
+    assert len(lst) == len(soa) == 0
+    assert lst.total_pruned == soa.total_pruned
+
+
+def test_soa_and_list_sample_columns_agree():
+    lst, soa = _both()
+    rows = _rows(12)
+    lst.extend(rows)
+    soa.extend(rows)
+    a = lst.sample_columns(6, seq_len=SEQ)
+    b = soa.sample_columns(6)
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    with pytest.raises(ValueError):
+        lst.sample_columns(2)                # list backend needs seq_len
+    assert ReplayBuffer(8, backend="soa", seq_len=SEQ).sample_columns(2) is None
+
+
+def test_soa_rejects_malformed_samples():
+    with pytest.raises(ValueError):
+        ReplayBuffer(8, backend="soa")       # seq_len required
+    soa = ReplayBuffer(8, backend="soa", seq_len=16)
+    with pytest.raises(TypeError):
+        soa.add("not a sample dict")
+    with pytest.raises(ValueError):
+        soa.add({"tokens": np.zeros(17, np.int32)})  # wider than the arena
+
+
+def test_extend_columns_list_backend_copies_planes():
+    lst = ReplayBuffer(8, backend="list")
+    cols = {name: np.ones((2, SEQ), np.float32) for name in
+            ("tokens", "actions", "action_mask", "rewards", "old_logp",
+             "values")}
+    cols["version"] = np.zeros(2, np.int64)
+    cols["ingest_wall"] = np.zeros(2, np.float64)
+    lst.extend_columns(cols, [4, 4], [{}, {}])
+    cols["rewards"][:] = -99.0               # ingest reuses its buffers
+    assert float(lst.snapshot()[0]["rewards"].sum()) == 4.0
+
+
+def test_extend_is_atomic_under_contention():
+    for backend in ("list", "soa"):
+        buf = ReplayBuffer(256, seed=0, backend=backend, seq_len=SEQ)
+        errors = []
+
+        def writer(k):
+            try:
+                for i in range(25):
+                    buf.extend(_rows(4, seed=k * 100 + i))
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+
+        def sampler():
+            try:
+                for _ in range(50):
+                    buf.sample(8)
+                    buf.versions()
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer, args=(k,)) for k in range(4)]
+        threads.append(threading.Thread(target=sampler))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert buf.total_added == 4 * 25 * 4
+        assert len(buf) == 256               # filled to capacity
+
+
+# ------------------------------------------------------ learner plane parity
+def test_weights_vec_matches_scalar_weight():
+    for policy in ("reweight", "drop"):
+        loop = LearnerLoop.__new__(LearnerLoop)
+        loop.cfg = LearnerConfig(staleness_bound=4, staleness_policy=policy,
+                                 staleness_decay=0.8, min_weight=0.05)
+        versions = np.arange(0, 30, dtype=np.int64)
+        vec = loop._weights_vec(29, versions)
+        for i, v in enumerate(versions):
+            scalar = loop._weight(29, int(v))
+            if scalar is None:
+                assert np.isnan(vec[i]), (policy, v)
+            else:
+                assert vec[i] == scalar, (policy, v)
+
+
+def test_compute_gae_batch_bit_identical_to_scalar():
+    from repro.train.ppo import compute_gae, compute_gae_batch
+
+    rng = np.random.default_rng(0)
+    lengths = [1, 3, 17, 40, 64]
+    S = 64
+    rewards = np.zeros((len(lengths), S), np.float32)
+    values = np.zeros((len(lengths), S), np.float32)
+    for i, L in enumerate(lengths):
+        rewards[i, :L] = rng.normal(size=L).astype(np.float32)
+        values[i, :L] = rng.normal(size=L).astype(np.float32)
+    adv_b, ret_b = compute_gae_batch(rewards, values, 0.99, 0.95)
+    for i, L in enumerate(lengths):
+        adv_s, ret_s = compute_gae(rewards[i, :L], values[i, :L], 0.99, 0.95)
+        assert np.array_equal(adv_b[i, :L], adv_s), L
+        assert np.array_equal(ret_b[i, :L], ret_s), L
+        assert not adv_b[i, L:].any() and not ret_b[i, L:].any(), L
+
+
+def _shim_ppo():
+    from repro.train.ppo import PPOConfig, PPOTrainer
+
+    shim = PPOTrainer.__new__(PPOTrainer)
+    shim.cfg = PPOConfig()
+    return shim
+
+
+def test_make_batch_columns_matches_make_batch():
+    shim = _shim_ppo()
+    soa = ReplayBuffer(64, seed=3, backend="soa", seq_len=SEQ)
+    rows = _rows(12, seed=5)
+    soa.extend(rows)
+    cols = soa.sample_columns(10)
+    fused = shim.make_batch_columns(cols, np.arange(10), seq_len=SEQ)
+    # reconstruct the per-sample dicts the dict path would have pulled
+    dicts = []
+    for i in range(10):
+        L = int(cols["length"][i])
+        dicts.append({k: cols[k][i, :L] for k in
+                      ("tokens", "actions", "action_mask", "rewards",
+                       "old_logp", "values")})
+    oracle = shim.make_batch(dicts, seq_len=SEQ)
+    assert set(fused) == set(oracle)
+    for k in oracle:
+        assert np.array_equal(fused[k], oracle[k]), k
+
+
+def test_fused_learner_bit_matches_dict_learner(tiny_trainer):
+    # two identical trainers; the same episode stream through each plane;
+    # then every update must consume an identical batch and produce an
+    # identical loss
+    trainer_f = tiny_trainer()
+    trainer_d = tiny_trainer()
+    trajs = _trajectories(12, seed=9)
+    replay_d, ing_d = _make_ingest(trainer_d, 1)
+    replay_f, ing_f = _make_ingest(trainer_f, MB)
+    for t in trajs:
+        ing_d(t)
+        ing_f(t)
+    ing_f.flush()
+    _assert_rows_equal(replay_d.snapshot(), replay_f.snapshot())
+
+    seen = {}
+
+    def recording(trainer, tag):
+        inner = trainer.update
+
+        def update(batch):
+            seen.setdefault(tag, []).append(
+                {k: np.asarray(v).copy() for k, v in batch.items()})
+            return inner(batch)
+
+        trainer.update = update
+
+    recording(trainer_f, "fused")
+    recording(trainer_d, "dicts")
+    cfg = dict(algo="ppo", batch_size=4, seq_len=SEQ, staleness_bound=8)
+    loop_f = LearnerLoop(trainer_f, replay_f, ing_f.store,
+                         cfg=LearnerConfig(fused=True, **cfg))
+    loop_d = LearnerLoop(trainer_d, replay_d, ing_d.store,
+                         cfg=LearnerConfig(fused=False, **cfg))
+    for step in range(3):
+        mf = loop_f.step()
+        md = loop_d.step()
+        assert mf is not None and md is not None
+        assert mf["loss"] == md["loss"], step
+        bf, bd = seen["fused"][step], seen["dicts"][step]
+        assert set(bf) == set(bd)
+        for k in bf:
+            assert np.array_equal(bf[k], bd[k]), (step, k)
+
+
+class _FakeFusedTrainer:
+    """make_batch_columns/make_batch + update recorder (no jax)."""
+
+    def __init__(self, seq_len=SEQ):
+        self.params = {"step": 0}
+        self.seq_len = seq_len
+        self.batches = []
+
+    def _ones(self, n):
+        return {"advantages": np.ones((n, self.seq_len), np.float32),
+                "action_mask": np.ones((n, self.seq_len), np.float32)}
+
+    def make_batch(self, samples, seq_len):
+        return self._ones(len(samples))
+
+    def make_batch_columns(self, cols, sel, seq_len):
+        return self._ones(len(sel))
+
+    def update(self, batch):
+        self.batches.append(batch)
+        self.params = {"step": self.params["step"] + 1}
+        return {"loss": 0.5}
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_padded_slots_are_zeroed_and_counted_separately(fused):
+    # a short batch needs unusable rows to survive into the sampler — that
+    # only happens when experience lands *after* the step's eviction pass
+    # (the concurrent-mode race); simulate it by disabling eviction
+    backend = "soa" if fused else "list"
+    replay = ReplayBuffer(32, seed=0, backend=backend, seq_len=SEQ)
+    replay.extend(_rows(2, version=4))       # excess 1 -> w=0.5 (reweighted)
+    replay.extend(_rows(6, seed=1, version=0))  # excess 5 -> w<min_weight
+    store = PolicyVersionStore(None)
+    for _ in range(6):
+        store.publish(None)                  # current version: 6
+    tel = Telemetry()
+    loop = LearnerLoop(
+        _FakeFusedTrainer(), replay, store, telemetry=tel,
+        cfg=LearnerConfig(algo="ppo", batch_size=4, seq_len=SEQ, fused=fused,
+                          oversample=2, staleness_bound=1,
+                          staleness_decay=0.5, staleness_policy="reweight",
+                          min_weight=0.05))
+    loop._evict_stale = lambda version: 0
+    # replicate the buffer's first draw to know which rows it pulls:
+    # logical rows 0-1 are the usable (reweighted) ones
+    draws = np.random.default_rng(0).integers(0, 8, size=8)
+    n_kept = min(int((draws < 2).sum()), 4)
+    assert 0 < n_kept < 4, "seed must yield a short batch for this test"
+    n_padded = 4 - n_kept
+    assert loop.step() is not None
+    batch = loop.trainer.batches[-1]
+    assert tel.counter("learner_batch_padded") == n_padded
+    assert tel.counter("stale_reweighted") == n_kept, \
+        "padded slots must not inflate staleness telemetry"
+    assert np.all(batch["advantages"][:n_kept] == 0.5)   # ones x weight
+    assert not batch["advantages"][n_kept:].any()
+    assert not batch["action_mask"][n_kept:].any()
+
+
+# ------------------------------------------------- cross-process determinism
+_DET_SCRIPT = """
+import hashlib
+import numpy as np
+from repro.train.ppo import PPOConfig, PPOTrainer
+from repro.data.replay_buffer import ReplayBuffer
+
+rng = np.random.default_rng(0)
+buf = ReplayBuffer(64, seed=3, backend="soa", seq_len=96)
+rows = []
+for i in range(12):
+    L = int(rng.integers(4, 97))
+    rows.append({
+        "tokens": rng.integers(0, 264, L).astype(np.int32),
+        "actions": rng.integers(0, 264, L).astype(np.int32),
+        "action_mask": (rng.random(L) < 0.7).astype(np.float32),
+        "rewards": rng.normal(size=L).astype(np.float32),
+        "old_logp": rng.normal(size=L).astype(np.float32),
+        "values": rng.normal(size=L).astype(np.float32),
+        "version": 0, "ingest_wall": float(i),
+    })
+buf.extend(rows)
+cols = buf.sample_columns(8)
+shim = PPOTrainer.__new__(PPOTrainer)
+shim.cfg = PPOConfig()
+batch = PPOTrainer.make_batch_columns(shim, cols, np.arange(8), seq_len=96)
+h = hashlib.sha256()
+for k in sorted(batch):
+    h.update(k.encode())
+    h.update(batch[k].tobytes())
+print(h.hexdigest())
+"""
+
+
+def test_packed_batches_deterministic_across_processes():
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    if env.get("PYTHONPATH"):
+        env["PYTHONPATH"] = src + os.pathsep + env["PYTHONPATH"]
+    else:
+        env["PYTHONPATH"] = src
+    digests = []
+    for _ in range(2):
+        out = subprocess.run([sys.executable, "-c", _DET_SCRIPT], env=env,
+                             capture_output=True, text=True, timeout=120)
+        assert out.returncode == 0, out.stderr
+        digests.append(out.stdout.strip())
+    assert digests[0] == digests[1]
+    assert len(digests[0]) == 64
