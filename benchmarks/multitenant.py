@@ -1,0 +1,320 @@
+"""Multi-tenant serving plane under open-loop tenant streams: fairness,
+burst isolation, and admission control measured end to end.
+
+The control plane (``repro.tenancy``) between job submission and the
+gateway, exercised on the event-driven engine with seeded Poisson
+arrival streams from hundreds of simulated tenants. Three scenarios:
+
+- **steady** — ~160 equal-weight tenants trickle jobs at a fleet the
+  capacity planner sized correctly; every tenant's submit->runner p99
+  must sit inside the acquire-wait SLO.
+- **burst** — the same quiet population plus one noisy tenant firing a
+  10x spike through a tight token bucket. The spike must be *throttled
+  at the door* (explicit ``AdmissionDecision``, not silent queue
+  growth), no quiet tenant may be throttled, the quiet p99 must stay
+  inside the SLO, and the Jain fairness index over quiet-tenant service
+  must stay >= 0.9 — a noisy neighbor cannot move a quiet tail.
+- **weighted** — three tenants with weights 1:2:4 saturating a small
+  fleet until a virtual deadline; weighted DRR must split completed
+  episodes proportionally to weight.
+
+Every scenario also audits **zero cross-tenant trajectory leakage** by
+construction: each completed episode's task is checked against the
+submission-time tenant map (strictly per-tenant queues mean no episode
+can ever be accounted to another tenant).
+
+    PYTHONPATH=src python benchmarks/multitenant.py
+
+Emits ``artifacts/bench/BENCH_multitenant.json``;
+``scripts/check_bench.py`` gates CI on its per-scenario rows and gate
+block (virtual-time metrics, deterministic per seed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.cluster import Cluster, default_specs
+from repro.core.event_loop import EventLoop
+from repro.core.seeding import stable_seed
+from repro.core.telemetry import p99
+from repro.rollout.engine import RolloutConfig, RolloutEngine
+from repro.rollout.scenarios import get_default_registry
+from repro.rollout.writer import TrajectoryWriter
+from repro.tenancy import FairShareScheduler, Tenant, jain_index
+
+N_STEADY_TENANTS = 160       # quiet tenants in the steady scenario
+N_BURST_QUIET = 80           # quiet tenants sharing the fleet with a spike
+JOBS_PER_TENANT = 4          # open-loop jobs per quiet tenant
+BURST_MULTIPLIER = 10        # noisy tenant sends 10x a quiet tenant's jobs
+SLO_WAIT_P99_VS = 120.0      # per-tenant submit->runner p99 target
+JAIN_BOUND = 0.9             # quiet-tenant fairness floor under the burst
+RUNNERS_PER_NODE = 32
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "bench", "BENCH_multitenant.json")
+
+
+# ---------------------------------------------------------------- workload
+def tenant_streams(n_tenants: int, jobs_each: int, *, seed: int,
+                   rate: float, label: str,
+                   start_vs: float = 0.0) -> list[tuple[float, str]]:
+    """Seeded per-tenant Poisson streams merged into one arrival-ordered
+    ``(arrival_vs, tenant_id)`` list. Each tenant draws its own stream
+    from a stable per-tenant seed, so adding tenants never perturbs an
+    existing tenant's arrivals."""
+    events: list[tuple[float, str]] = []
+    for i in range(n_tenants):
+        tid = f"{label}{i:03d}"
+        rng = random.Random(stable_seed(seed, f"mt-{label}-{i}"))
+        t = start_vs
+        for _ in range(jobs_each):
+            t += rng.expovariate(rate)
+            events.append((t, tid))
+    events.sort()
+    return events
+
+
+def build_tasks(events: list[tuple[float, str]], *, seed: int):
+    """Scenario tasks for one merged arrival stream, tenant-stamped."""
+    registry = get_default_registry()
+    specs = registry.sample(len(events), seed=stable_seed(seed, "mt-tasks"))
+    arrivals, tasks = [], []
+    for spec, (at, tid) in zip(specs, events):
+        d = spec.to_dict()
+        d["tenant"] = tid
+        arrivals.append(at)
+        tasks.append(d)
+    return registry, arrivals, tasks
+
+
+# ------------------------------------------------------------------- runs
+def run_scenario(name: str, tenants: list[Tenant],
+                 events: list[tuple[float, str]], *, seed: int,
+                 n_replicas: int, deadline_vs: float = None) -> dict:
+    """Replay one merged tenant stream through the fair-share plane."""
+    t0 = time.monotonic()
+    registry, arrivals, tasks = build_tasks(events, seed=seed)
+    submitted_by = {t["task_id"]: t["tenant"] for t in tasks}
+    cluster = Cluster(default_specs(n_replicas), n_replicas,
+                      runners_per_node=RUNNERS_PER_NODE, seed=seed)
+    sched = FairShareScheduler(tenants, telemetry=cluster.telemetry)
+    writer = TrajectoryWriter(retain=False, capacity=8192)
+    engine = RolloutEngine(cluster, writer, registry=registry,
+                           telemetry=cluster.telemetry,
+                           config=RolloutConfig(
+                               max_inflight=n_replicas,
+                               acquire_timeout_vs=3000.0,
+                               virtual_deadline_s=deadline_vs))
+    report = engine.run_event_driven(tasks, loop=EventLoop(),
+                                     arrivals=arrivals, scheduler=sched)
+
+    # zero cross-tenant leakage by construction: every settled episode's
+    # task must still carry the tenant it was submitted under
+    leaks = sum(1 for r in report.results
+                if r.task.get("tenant") != submitted_by.get(
+                    str(r.task.get("task_id"))))
+    stats = sched.stats()
+    throttled = sum(s.throttled for s in stats.values())
+    wait_p99_by = {tid: p99(s.wait_vs) for tid, s in stats.items()
+                   if s.wait_vs}
+    row = {
+        "name": name,
+        "n_tenants": len(tenants),
+        "n_jobs": len(tasks),
+        "completed": report.completed,
+        "failed": report.failed,
+        "throttled": throttled,
+        "dropped_at_stop": sum(s.queued_at_stop for s in stats.values()),
+        "wait_p99_max_vs": max(wait_p99_by.values(), default=0.0),
+        "virtual_makespan_s": report.virtual_makespan,
+        "cross_tenant_leaks": leaks,
+        "wall_seconds": time.monotonic() - t0,
+    }
+    writer.drain(timeout=30.0)
+    writer.close()
+    cluster.close()
+    return row, stats, wait_p99_by
+
+
+def multitenant_matrix(seed: int = 0) -> tuple[list[dict], dict]:
+    """The three-scenario sweep; returns (rows, gate block)."""
+    rows: list[dict] = []
+    gate: dict = {"slo_wait_p99_vs": SLO_WAIT_P99_VS}
+
+    # -- steady: a correctly sized fleet serves everyone inside the SLO
+    quiet = [Tenant(f"q{i:03d}", slo_wait_p95_vs=SLO_WAIT_P99_VS)
+             for i in range(N_STEADY_TENANTS)]
+    events = tenant_streams(N_STEADY_TENANTS, JOBS_PER_TENANT, seed=seed,
+                            rate=1.0 / 90.0, label="q")
+    row, _stats, p99_by = run_scenario(
+        "steady", quiet, events, seed=seed, n_replicas=64)
+    assert row["completed"] == row["n_jobs"], (
+        f"steady: {row['completed']}/{row['n_jobs']} completed — a "
+        f"correctly sized fleet must serve the whole stream")
+    assert row["throttled"] == 0, (
+        f"steady: {row['throttled']} submissions throttled with capacity "
+        f"to spare")
+    assert row["wait_p99_max_vs"] <= SLO_WAIT_P99_VS, (
+        f"steady: worst tenant p99 {row['wait_p99_max_vs']:.1f}vs > SLO "
+        f"{SLO_WAIT_P99_VS}vs")
+    gate["steady_wait_p99_vs"] = round(row["wait_p99_max_vs"], 3)
+    rows.append(row)
+
+    # -- burst: one noisy tenant's 10x spike vs a quiet population
+    quiet = [Tenant(f"q{i:03d}", slo_wait_p95_vs=SLO_WAIT_P99_VS)
+             for i in range(N_BURST_QUIET)]
+    noisy = Tenant("noisy", burst_tokens=24.0, refill_per_vs=0.05,
+                   max_queued=64)
+    events = tenant_streams(N_BURST_QUIET, JOBS_PER_TENANT, seed=seed,
+                            rate=1.0 / 90.0, label="q")
+    spike = tenant_streams(1, BURST_MULTIPLIER * JOBS_PER_TENANT * 8,
+                           seed=seed, rate=4.0, label="noisy",
+                           start_vs=60.0)
+    spike = [(at, "noisy") for at, _ in spike]
+    merged = sorted(events + spike)
+    row, stats, p99_by = run_scenario(
+        "burst", quiet + [noisy], merged, seed=seed, n_replicas=64)
+    quiet_p99 = max((p99_by[t.tenant_id] for t in quiet
+                     if t.tenant_id in p99_by), default=0.0)
+    quiet_throttled = sum(stats[t.tenant_id].throttled for t in quiet)
+    noisy_throttled = stats["noisy"].throttled
+    # fairness over the quiet population's delivered service: with equal
+    # demand, any quiet tenant starved by the spike drags the index down
+    jain = jain_index([stats[t.tenant_id].completed for t in quiet])
+    assert quiet_p99 <= SLO_WAIT_P99_VS, (
+        f"burst moved a quiet tenant's tail: p99 {quiet_p99:.1f}vs > SLO "
+        f"{SLO_WAIT_P99_VS}vs")
+    assert quiet_throttled == 0, (
+        f"{quiet_throttled} quiet submissions throttled — the noisy "
+        f"tenant's budget must absorb its own spike")
+    assert noisy_throttled > 0, (
+        "the 10x spike was never throttled — admission control is not "
+        "engaging")
+    assert jain >= JAIN_BOUND, (
+        f"Jain fairness over quiet tenants {jain:.3f} < {JAIN_BOUND}")
+    row["quiet_wait_p99_vs"] = round(quiet_p99, 3)
+    row["jain_index"] = round(jain, 4)
+    row["noisy_throttled"] = noisy_throttled
+    gate.update({
+        "burst_quiet_wait_p99_vs": round(quiet_p99, 3),
+        "burst_jain_index": round(jain, 4),
+        "burst_noisy_throttled": noisy_throttled,
+        "burst_quiet_throttled": quiet_throttled,
+    })
+    rows.append(row)
+
+    # -- weighted: DRR splits a saturated fleet 1:2:4 by weight
+    weights = {"bronze": 1.0, "silver": 2.0, "gold": 4.0}
+    tenants = [Tenant(tid, weight=w, max_inflight=64, max_queued=4096,
+                      burst_tokens=512.0, refill_per_vs=8.0)
+               for tid, w in weights.items()]
+    events = []
+    for tid in weights:
+        events += [(at, tid) for at, _ in tenant_streams(
+            1, 300, seed=seed, rate=8.0, label=tid)]
+    events.sort()
+    row, stats, _ = run_scenario(
+        "weighted", tenants, events, seed=seed, n_replicas=32,
+        deadline_vs=400.0)
+    done = {tid: stats[tid].completed for tid in weights}
+    assert min(done.values()) > 0, f"a tenant was starved outright: {done}"
+    ratio_silver = done["silver"] / done["bronze"]
+    ratio_gold = done["gold"] / done["bronze"]
+    assert 1.4 <= ratio_silver <= 2.6, (
+        f"weight-2 tenant got {ratio_silver:.2f}x the weight-1 share "
+        f"(want ~2x): {done}")
+    assert 2.8 <= ratio_gold <= 5.2, (
+        f"weight-4 tenant got {ratio_gold:.2f}x the weight-1 share "
+        f"(want ~4x): {done}")
+    row["completed_by_tenant"] = done
+    row["share_ratio_silver"] = round(ratio_silver, 3)
+    row["share_ratio_gold"] = round(ratio_gold, 3)
+    gate.update({
+        "weighted_ratio_silver": round(ratio_silver, 3),
+        "weighted_ratio_gold": round(ratio_gold, 3),
+    })
+    rows.append(row)
+
+    leaks = sum(r["cross_tenant_leaks"] for r in rows)
+    assert leaks == 0, f"{leaks} episodes leaked across tenants"
+    gate["zero_cross_tenant_leakage"] = True
+    return rows, gate
+
+
+# ----------------------------------------------------------------- harness
+def multitenant_table(seed: int = 0):
+    """(rows, derived) in the paper_tables convention for benchmarks/run.py."""
+    rows, gate = multitenant_matrix(seed)
+    derived = (f"multi-tenant plane: quiet p99 {gate['burst_quiet_wait_p99_vs']}vs "
+               f"under a 10x spike (SLO {SLO_WAIT_P99_VS:.0f}vs), Jain "
+               f"{gate['burst_jain_index']}, DRR split "
+               f"1:{gate['weighted_ratio_silver']}:{gate['weighted_ratio_gold']}")
+    return rows, derived
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="assert the whole sweep stays under this "
+                         "wall-clock budget (CI guard)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="where to write BENCH_multitenant.json")
+    args = ap.parse_args()
+
+    t0 = time.monotonic()
+    rows, gate = multitenant_matrix(args.seed)
+    wall = time.monotonic() - t0
+
+    print(f"{'scenario':>9} {'tenants':>8} {'jobs':>6} {'done':>6} "
+          f"{'throttled':>9} {'p99 wait':>9} {'makespan':>9}")
+    for r in rows:
+        print(f"{r['name']:>9} {r['n_tenants']:>8} {r['n_jobs']:>6} "
+              f"{r['completed']:>6} {r['throttled']:>9} "
+              f"{r['wait_p99_max_vs']:>9.2f} {r['virtual_makespan_s']:>9.1f}")
+
+    if args.budget_s is not None:
+        assert wall <= args.budget_s, (
+            f"multitenant sweep took {wall:.1f}s wall > budget "
+            f"{args.budget_s}s")
+
+    payload = {
+        "benchmark": "multi-tenant serving plane under open-loop tenant "
+                     "streams (steady / 10x burst / weighted DRR)",
+        "metric": "per-tenant submit->runner wait p99 (vs), Jain "
+                  "fairness, throttle counts (virtual time)",
+        "seed": args.seed,
+        "slo_wait_p99_vs": SLO_WAIT_P99_VS,
+        "workload": {
+            "arrivals": "seeded per-tenant Poisson streams, merged",
+            "n_tenants_total": sum(r["n_tenants"] for r in rows),
+        },
+        "sweep_wall_seconds": round(wall, 2),
+        # hard CI guard: a fresh run must finish inside this wall budget
+        # (the sweep takes ~3s locally; the budget absorbs slow CI hosts)
+        "wall_budget_s": 120.0,
+        "scenarios": rows,
+        "gate": gate,
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"quiet p99 {gate['burst_quiet_wait_p99_vs']}vs under a 10x "
+          f"spike (SLO {SLO_WAIT_P99_VS:.0f}vs); Jain "
+          f"{gate['burst_jain_index']}; noisy throttled "
+          f"{gate['burst_noisy_throttled']}; DRR split "
+          f"1:{gate['weighted_ratio_silver']}:{gate['weighted_ratio_gold']}; "
+          f"sweep {wall:.1f}s wall; baseline -> "
+          f"{os.path.relpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

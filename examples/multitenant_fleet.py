@@ -1,0 +1,113 @@
+"""Multi-tenant fleet demo: fair-share scheduling and admission control, live.
+
+Three teams share one fleet through the ``repro.tenancy`` control plane:
+a *gold* team with 4x weight and its own SLO, a *silver* team at 2x, and
+a *bronze* batch team that fires a job spike through a tight token
+bucket. The demo replays their merged seeded Poisson streams on the
+event-driven engine and prints what the plane did: every admission
+verdict class, the DRR service split, each tenant's submit->runner wait
+tail, and the Jain fairness index.
+
+    PYTHONPATH=src python examples/multitenant_fleet.py --replicas 24
+
+Everything runs on the virtual-time event loop: the whole run is about a
+wall-second, deterministic per seed.
+"""
+import argparse
+import random
+import time
+
+from repro.cluster import Cluster, default_specs
+from repro.core.event_loop import EventLoop
+from repro.core.seeding import stable_seed
+from repro.core.telemetry import p99
+from repro.rollout import (RolloutConfig, RolloutEngine, TrajectoryWriter,
+                           get_default_registry)
+from repro.tenancy import FairShareScheduler, Tenant, jain_index
+
+
+def build_stream(tenant_id, n_jobs, rate, seed, registry, start_vs=0.0):
+    """One tenant's seeded Poisson submission stream."""
+    rng = random.Random(stable_seed(seed, f"demo-{tenant_id}"))
+    specs = registry.sample(n_jobs, seed=stable_seed(seed, f"tasks-{tenant_id}"))
+    events, t = [], start_vs
+    for spec in specs:
+        t += rng.expovariate(rate)
+        task = spec.to_dict()
+        task["tenant"] = tenant_id
+        events.append((t, task))
+    return events
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=24)
+    ap.add_argument("--jobs", type=int, default=40,
+                    help="jobs per tenant (bronze sends 3x as a spike)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    tenants = [
+        Tenant("gold", weight=4.0, slo_wait_p95_vs=60.0,
+               burst_tokens=64.0, refill_per_vs=2.0),
+        Tenant("silver", weight=2.0, slo_wait_p95_vs=120.0,
+               burst_tokens=64.0, refill_per_vs=2.0),
+        # the batch team: low weight and a tight bucket — its spike gets
+        # throttled at the door instead of queueing behind everyone
+        Tenant("bronze", weight=1.0, burst_tokens=16.0, refill_per_vs=0.2,
+               max_queued=64),
+    ]
+    registry = get_default_registry()
+    events = (
+        build_stream("gold", args.jobs, 0.5, args.seed, registry)
+        + build_stream("silver", args.jobs, 0.5, args.seed, registry)
+        + build_stream("bronze", 3 * args.jobs, 4.0, args.seed, registry,
+                       start_vs=30.0)
+    )
+    events.sort(key=lambda e: e[0])
+    arrivals = [at for at, _ in events]
+    tasks = [task for _, task in events]
+
+    cluster = Cluster(default_specs(args.replicas), args.replicas,
+                      runners_per_node=8, seed=args.seed)
+    sched = FairShareScheduler(tenants, telemetry=cluster.telemetry)
+    writer = TrajectoryWriter(retain=False, capacity=4096)
+    engine = RolloutEngine(cluster, writer, registry=registry,
+                           telemetry=cluster.telemetry,
+                           config=RolloutConfig(
+                               max_inflight=args.replicas,
+                               acquire_timeout_vs=3000.0))
+
+    t0 = time.monotonic()
+    report = engine.run_event_driven(tasks, loop=EventLoop(),
+                                     arrivals=arrivals, scheduler=sched)
+    wall = time.monotonic() - t0
+
+    print(f"{len(tasks)} jobs from {len(tenants)} tenants over "
+          f"{args.replicas} replicas -> {report.completed} episodes in "
+          f"{report.virtual_makespan:.0f} virtual s ({wall:.1f}s wall)\n")
+    print(f"{'tenant':>8} {'weight':>6} {'sub':>5} {'adm':>5} {'thr':>5} "
+          f"{'done':>5} {'share':>7} {'p99 wait':>9}")
+    share = sched.share_of_fleet()
+    for t in tenants:
+        s = sched.stats()[t.tenant_id]
+        print(f"{t.tenant_id:>8} {t.weight:>6.1f} {s.submitted:>5} "
+              f"{s.admitted:>5} {s.throttled:>5} {s.completed:>5} "
+              f"{share[t.tenant_id]:>6.1%} {p99(s.wait_vs):>8.1f}vs")
+
+    quiet_done = [sched.stats()[t].completed for t in ("gold", "silver")]
+    print(f"\nJain fairness (gold/silver): "
+          f"{jain_index(quiet_done):.3f}")
+    bronze = sched.stats()["bronze"]
+    print(f"bronze spike: {bronze.throttled} of {bronze.submitted} "
+          f"submissions throttled at the door (explicit verdicts — "
+          f"no silent queue growth)")
+    assert report.completed > 0 and bronze.throttled > 0
+
+    writer.drain(timeout=10.0)
+    writer.close()
+    cluster.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -18,12 +18,14 @@ baselines carry per-lane-count `kernel` rows, throughput baselines carry
 per-(design, fleet-size) `engine` rows, elastic-cluster baselines carry
 per-cluster `clusters` rows, recovery baselines carry a
 `recovery_curve`, data-plane baselines carry `ingest` + `learner`
-blocks, e2e baselines carry a bare `gate` block. Gate metrics are
-direction-aware: MTTR / detection-latency / recovery-time names are
+blocks, multi-tenant baselines carry per-scenario `scenarios` rows, e2e
+baselines carry a bare `gate` block. Gate metrics are direction-aware:
+MTTR / detection-latency / recovery-time / wait-p99 names are
 recognized as lower-is-better, so a *rise* there is the regression and a
-drop flags a stale baseline. Kernel and data-plane baselines
-additionally enforce a hard wall budget: the fresh run must have
-finished inside the `wall_budget_s` recorded in the committed baseline.
+drop flags a stale baseline. Kernel, data-plane, and multi-tenant
+baselines additionally enforce a hard wall budget: the fresh run must
+have finished inside the `wall_budget_s` recorded in the committed
+baseline.
 """
 
 from __future__ import annotations
@@ -131,6 +133,8 @@ LOWER_IS_BETTER_HINTS = (
     "corrupted",
     "failed",
     "replica_days",
+    "wait_p99",
+    "throttled",
 )
 
 
@@ -277,6 +281,60 @@ def check_recovery(base: dict, fresh: dict, tol: float) -> list[str]:
     return problems
 
 
+# multi-tenant scenario rows are all virtual-time deterministic per seed;
+# wait p99 and throttle/drop counts are costs (a rise is the regression)
+MULTITENANT_METRICS = (
+    ("completed", False),
+    ("throttled", True),
+    ("dropped_at_stop", True),
+    ("wait_p99_max_vs", True),
+    ("virtual_makespan_s", False),
+)
+
+
+def check_multitenant(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Multi-tenant baselines: per-scenario fairness/SLO rows, the gate
+    block (Jain index, per-tenant p99s, throttle counts), and the hard
+    wall budget."""
+    problems: list[str] = []
+    base_rows = base.get("scenarios", [])
+    if not base_rows:
+        problems.append("MALFORMED baseline: no scenario rows")
+    fresh_rows = {row["name"]: row for row in fresh.get("scenarios", [])}
+    for row in base_rows:
+        other = fresh_rows.get(row["name"])
+        if other is None:
+            problems.append(f"MISSING scenario[{row['name']}]: not in fresh results")
+            continue
+        for metric, lower_is_better in MULTITENANT_METRICS:
+            if metric not in row:
+                continue
+            name = f"{metric}[{row['name']}]"
+            if metric not in other:
+                problems.append(f"MISSING {name}: not in fresh results")
+                continue
+            problems += compare_value(
+                name, row[metric], other[metric], tol, lower_is_better=lower_is_better
+            )
+        if row.get("cross_tenant_leaks", 0) == 0 and other.get("cross_tenant_leaks"):
+            problems.append(
+                f"REGRESSION cross_tenant_leaks[{row['name']}]: "
+                f"{other['cross_tenant_leaks']} episodes leaked across tenants"
+            )
+    budget = base.get("wall_budget_s")
+    if budget is not None:
+        wall = fresh.get("sweep_wall_seconds")
+        if wall is None:
+            problems.append("MISSING sweep_wall_seconds: not in fresh results")
+        elif wall > budget:
+            problems.append(
+                f"REGRESSION sweep_wall_seconds: {wall:.1f}s exceeds the "
+                f"baseline wall budget {budget:.1f}s"
+            )
+    problems += check_gate(base, fresh, tol)
+    return problems
+
+
 def check_gate(base: dict, fresh: dict, tol: float) -> list[str]:
     problems: list[str] = []
     base_gate = base.get("gate", {})
@@ -317,6 +375,8 @@ def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
         return check_recovery(baseline, fresh, tol)
     if "ingest" in baseline and "learner" in baseline:
         return check_dataplane(baseline, fresh, tol)
+    if "scenarios" in baseline:
+        return check_multitenant(baseline, fresh, tol)
     if "gate" in baseline:
         return check_e2e(baseline, fresh, tol)
     return ["MALFORMED baseline: neither engine rows nor a gate block"]

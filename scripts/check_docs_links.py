@@ -1,0 +1,71 @@
+"""Docs-link checker: fail CI on dead relative links in the doc suite.
+
+Scans ``README.md`` and ``docs/*.md`` for Markdown links and bare
+inline-code path references, resolves every *relative* link against the
+containing file, and exits non-zero listing each target that does not
+exist. External links (http/https/mailto) and pure in-page anchors are
+skipped; a ``path#anchor`` link is checked for the path only.
+
+    python scripts/check_docs_links.py
+
+The doc files themselves cross-link heavily (README -> docs/*.md ->
+benchmarks/ and src/), so a rename that strands a reader is caught at CI
+time instead of by the reader.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# [text](target) — excluding images' inner brackets is not needed since
+# ![alt](target) still matches on the (target) part we care about
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files() -> list[str]:
+    files = [os.path.join(ROOT, "README.md")]
+    files += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def dead_links(path: str) -> list[str]:
+    """Relative link targets in ``path`` that do not resolve to a file
+    or directory in the repo."""
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    base = os.path.dirname(path)
+    problems = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(base, rel))
+        if not os.path.exists(resolved):
+            problems.append(target)
+    return problems
+
+
+def main() -> int:
+    bad = 0
+    files = doc_files()
+    for path in files:
+        for target in dead_links(path):
+            print(f"DEAD LINK {os.path.relpath(path, ROOT)}: ({target})")
+            bad += 1
+    if bad:
+        print(f"docs-link check FAILED: {bad} dead relative link(s)")
+        return 1
+    print(f"docs-link check OK: {len(files)} files, no dead relative links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

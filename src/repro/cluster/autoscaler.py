@@ -1,31 +1,74 @@
 """Elastic autoscaler: an event-loop daemon that sizes the live fleet.
 
-Watches the gateway's virtual acquire-wait p95 and queue depth every
-``interval_vs`` virtual seconds and asks the cluster to grow when demand
-outruns capacity (waiters queueing, p95 above the high-water mark) or to
-drain when the fleet idles (no waiters, p95 under the low-water mark,
-most runners free). Growth is placed against host budgets — a fleet
-that is out of RAM or CoW disk refuses to scale and counts the refusal —
-and new capacity only serves after a boot delay in virtual time, so
-scaling decisions pay a realistic provisioning lag.
+Every ``interval_vs`` virtual seconds the daemon drains the gateway's
+tenant-tagged acquire-wait window and computes the fleet's **SLO burn**:
+each tenant's wait p95 divided by that tenant's SLO target, maxed over
+tenants. Burn > 1.0 means some tenant is out of SLO — the fleet grows
+even if the *aggregate* p95 looks healthy (one starved tenant hiding
+under a quiet majority is exactly the case a global signal misses).
+Untagged samples form the single-tenant special case: their burn is the
+old global ``p95 / wait_p95_high_vs`` ratio, so fleets without tenancy
+scale bit-identically to the pre-tenant autoscaler.
 
-Every decision reads deterministic fleet state on the deterministic
-event loop, so an autoscaled run is exactly reproducible per seed.
+Growth is placed against host budgets — a fleet that is out of RAM or
+CoW disk refuses to scale and counts the refusal — and new capacity only
+serves after a boot delay in virtual time, so scaling decisions pay a
+realistic provisioning lag. Draining still keys off the aggregate
+signal: idleness is a fleet-wide property (no waiters anywhere, most
+runners free), not a per-tenant one.
+
+Determinism contract: every decision reads deterministic fleet state on
+the deterministic event loop (virtual clock, tagged wait window, queue
+depth), so an autoscaled run — including every grow, drain, and refusal
+— is exactly reproducible per seed in any process.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.event_loop import EventLoop, Timer
 from repro.core.telemetry import Telemetry, p95
 
 
+def slo_burn(
+    tagged_waits: list[tuple[Optional[str], float]],
+    default_slo_vs: float,
+    tenant_slos: Optional[dict[str, float]] = None,
+) -> float:
+    """Max over tenants of (wait p95 / SLO target) for one window.
+
+    ``tagged_waits`` is the gateway's drained ``(tenant, waited_vs)``
+    window; untagged samples (tenant ``None``) burn against
+    ``default_slo_vs``, which makes the no-tenant fleet the single-tenant
+    special case: ``slo_burn([(None, w), ...], high) > 1.0`` iff the old
+    global ``p95 > high`` test fired. Returns 0.0 on an empty window.
+
+    >>> slo_burn([(None, 20.0)] * 20, 10.0)
+    2.0
+    >>> slo_burn([("a", 4.0), ("b", 4.0)], 10.0, {"b": 2.0})
+    2.0
+    """
+    if not tagged_waits:
+        return 0.0
+    slos = tenant_slos or {}
+    by_tenant: dict[Optional[str], list[float]] = {}
+    for tenant, w in tagged_waits:
+        by_tenant.setdefault(tenant, []).append(w)
+    burn = 0.0
+    for tenant, waits in by_tenant.items():
+        slo = slos.get(tenant, default_slo_vs) if tenant is not None else default_slo_vs
+        if slo <= 0.0:
+            continue
+        burn = max(burn, p95(waits) / slo)
+    return burn
+
+
 @dataclass
 class AutoscalerConfig:
     interval_vs: float = 5.0  # tick period on the virtual clock
-    wait_p95_high_vs: float = 10.0  # grow above this acquire-wait p95
+    wait_p95_high_vs: float = 10.0  # default per-tenant SLO: grow past this
     wait_p95_low_vs: float = 1.0  # drain below this (and idle)
     queue_high: int = 1  # grow when this many acquires are parked
     grow_step: int = 16  # replicas added per scale-up
@@ -35,10 +78,14 @@ class AutoscalerConfig:
     cooldown_vs: float = 15.0  # minimum virtual time between scalings
     min_replicas: int = 8
     max_replicas: int = 2048
+    # per-tenant SLO overrides (tenant id -> acquire-wait p95 target, vs);
+    # tenants not listed burn against wait_p95_high_vs. Wire from a
+    # FairShareScheduler with ``tenant_slos=scheduler.slo_map()``.
+    tenant_slos: dict[str, float] = field(default_factory=dict)
 
 
 class Autoscaler:
-    """Grow/drain daemon over one cluster's gateway signals."""
+    """Grow/drain daemon over one cluster's tenant-tagged gateway signals."""
 
     def __init__(
         self,
@@ -59,6 +106,9 @@ class Autoscaler:
 
     # ------------------------------------------------------------ lifecycle
     def attach_loop(self, loop: EventLoop) -> None:
+        """Arm the tick daemon on ``loop``'s virtual clock. Idempotent per
+        run: ``detach_loop`` cancels the timer so a cluster can bind to a
+        fresh loop (a new engine run) with clean cooldown state."""
         self._loop = loop
         self._last_scale_vt = float("-inf")
         self._timer = loop.call_later(self.cfg.interval_vs, self._tick, daemon=True)
@@ -71,21 +121,30 @@ class Autoscaler:
 
     # ----------------------------------------------------------------- tick
     def _tick(self) -> None:
+        """One sizing decision on the virtual clock.
+
+        Pressure = per-tenant SLO burn (see :func:`slo_burn`) or queued
+        acquires; idleness = aggregate p95 under the low-water mark with
+        no waiters and most runners free. Exactly one of grow/drain can
+        fire per tick, and only after the cooldown."""
         cfg = self.cfg
         gw = self.cluster.gateway
-        waits = gw.drain_wait_samples()
+        tagged = gw.drain_wait_samples_tagged()
+        waits = [w for _t, w in tagged]
         wait_p95 = p95(waits)
+        burn = slo_burn(tagged, cfg.wait_p95_high_vs, cfg.tenant_slos)
         depth = gw.n_waiting
         placed = self.cluster.placed_replicas
         live = self.cluster.n_replicas
         free = sum(p.n_free for p in gw.pools.values())
         free_frac = free / live if live else 0.0
         self.telemetry.gauge("autoscaler_wait_p95_vs", wait_p95)
+        self.telemetry.gauge("autoscaler_slo_burn", burn)
         self.telemetry.gauge("autoscaler_queue_depth", float(depth))
 
         now = self._loop.now
         cooled = now - self._last_scale_vt >= cfg.cooldown_vs
-        pressured = wait_p95 > cfg.wait_p95_high_vs or depth >= cfg.queue_high
+        pressured = burn > 1.0 or depth >= cfg.queue_high
         idle = (
             wait_p95 < cfg.wait_p95_low_vs
             and depth == 0

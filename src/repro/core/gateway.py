@@ -20,6 +20,18 @@ candidate order on every wakeup so they see pools added after they
 parked. A removed pool that still has leased runners is retired rather
 than dropped: its leases release through the gateway as usual and the
 pool detaches once the last one comes back.
+
+Acquire-wait samples are **tenant-tagged**: event-mode acquires may carry
+a ``tenant=`` id, and every wait sample is recorded as
+``(tenant, waited_vs)`` so the autoscaler can burn per-tenant SLOs
+instead of one global p95. The untagged path (``tenant=None``) is just
+the single-tenant special case — same window, same series, bit-identical
+behavior for existing single-job fleets.
+
+Determinism contract: in event mode every method reads fleet state on
+the single-threaded virtual clock — routing scores, health sweeps, wait
+samples, and failover counts are pure functions of (fleet, seed, task
+stream) and replay identically in any process.
 """
 from __future__ import annotations
 
@@ -90,8 +102,11 @@ class Gateway:
         self._stopped = False
         self.failovers = 0
         self._retired: dict[str, RunnerPool] = {}
-        # recent virtual acquire-wait samples — the autoscaler's signal
-        self._wait_window: deque[float] = deque(maxlen=1024)
+        # recent virtual acquire-wait samples as (tenant, waited_vs) —
+        # the autoscaler's SLO-burn signal; tenant is None for untagged
+        # (single-tenant) acquires
+        self._wait_window: deque[tuple[Optional[str], float]] = \
+            deque(maxlen=1024)
         self._loop: Optional[EventLoop] = None
         self._release_cv: Optional[VirtualCondition] = None
         self._health_timer: Optional[Timer] = None
@@ -237,17 +252,27 @@ class Gateway:
         return self._release_cv.n_waiters
 
     def drain_wait_samples(self) -> list[float]:
-        """Hand the recent acquire-wait samples to the caller (autoscaler
-        tick) and reset the window."""
+        """Hand the recent acquire-wait samples to the caller and reset
+        the window (tenant tags stripped — the aggregate view)."""
+        return [w for _t, w in self.drain_wait_samples_tagged()]
+
+    def drain_wait_samples_tagged(self) -> list[tuple[Optional[str], float]]:
+        """Hand the recent ``(tenant, waited_vs)`` samples to the caller
+        (the autoscaler's SLO-burn tick) and reset the window. Untagged
+        samples carry tenant ``None``; a stream with only ``None`` tags
+        is the single-tenant special case."""
         out = list(self._wait_window)
         self._wait_window.clear()
         return out
 
-    def _record_wait(self, waited_vs: float) -> None:
-        self._wait_window.append(waited_vs)
+    def _record_wait(self, waited_vs: float,
+                     tenant: Optional[str] = None) -> None:
+        self._wait_window.append((tenant, waited_vs))
         # telemetry is always present: __init__ defaults to a private
         # sink so the recovery ladders have somewhere to record MTTR
         self.telemetry.observe("acquire_wait_vs", waited_vs)
+        if tenant is not None:
+            self.telemetry.observe(f"acquire_wait_vs:{tenant}", waited_vs)
 
     # ------------------------------------------------------------ routing
     def _affinity_order(self, task_id: str) -> list[str]:
@@ -311,13 +336,18 @@ class Gateway:
         return self.acquire(task_id, timeout=0.0, exclude=exclude)
 
     def acquire_ev(self, task_id: str, timeout: Optional[float] = 1.0,
-                   exclude: Collection[str] = ()):
+                   exclude: Collection[str] = (),
+                   tenant: Optional[str] = None):
         """Event-loop acquire: ``got = yield from gw.acquire_ev(...)``.
 
         Same affinity/health/exclusion semantics as ``acquire``, but the
         calling task parks on the shared virtual release-condition until
         any pool frees a runner or ``timeout`` virtual seconds elapse —
         no thread ever blocks. Returns ``(node, runner)`` or ``None``.
+
+        ``tenant`` tags this acquire's wait sample (window + telemetry
+        series ``acquire_wait_vs:<tenant>``) so per-tenant latency SLOs
+        can be tracked; ``None`` keeps the untagged single-tenant path.
 
         The candidate order is recomputed on every wakeup: pools added or
         removed while this task was parked (elastic scaling) are seen on
@@ -344,7 +374,7 @@ class Gateway:
                 if r is not None:
                     if attempt > 0:
                         self.failovers += 1
-                    self._record_wait(self._loop.now - t0)
+                    self._record_wait(self._loop.now - t0, tenant)
                     return node, r
             if candidates == 0:
                 # nothing a release could fix: every node is excluded or
@@ -354,7 +384,7 @@ class Gateway:
             remaining = (None if deadline is None
                          else deadline - self._loop.now)
             if remaining is not None and remaining <= 0:
-                self._record_wait(self._loop.now - t0)
+                self._record_wait(self._loop.now - t0, tenant)
                 return None
             yield from self._release_cv.wait(remaining)
 

@@ -18,6 +18,15 @@ def p95(xs: list[float]) -> float:
     return sorted(xs)[int(0.95 * (len(xs) - 1))]
 
 
+def p99(xs: list[float]) -> float:
+    """Nearest-rank p99, same convention as :func:`p95`; used by the
+    multi-tenant SLO gates (per-tenant acquire-wait p99 vs the tenant's
+    SLO target). Returns 0.0 on an empty series."""
+    if not xs:
+        return 0.0
+    return sorted(xs)[int(0.99 * (len(xs) - 1))]
+
+
 class Telemetry:
     """Thread-safe metric sink shared across the fleet and the learner.
 
@@ -91,6 +100,7 @@ class Telemetry:
             "mean": statistics.fmean(xs),
             "p50": statistics.median(xs),
             "p95": p95(xs),
+            "p99": p99(xs),
             "max": max(xs),
         }
 

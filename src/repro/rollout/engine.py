@@ -29,6 +29,21 @@ Two execution modes share these semantics:
   on one core with identical semantics (bounded in-flight, writer
   backpressure via ``VirtualWriterGate``, failover-with-exclusion). This
   is how the paper-scale 1024-replica fleets execute end-to-end.
+
+Event mode optionally serves a **multi-tenant job stream**: pass
+``scheduler=FairShareScheduler(...)`` (``repro.tenancy``) and the feeder
+routes every arriving task through admission control (explicit
+admitted/throttled/rejected verdicts) into per-tenant queues, while a
+dispatcher task launches episodes in weighted deficit-round-robin order
+whenever worker slots free up. Tenant-tagged tasks thread their tenant id
+down into the gateway's acquire-wait telemetry, so per-tenant latency
+series exist end to end.
+
+Determinism contract: event-mode runs are bit-identical per (fleet,
+seed, task stream) in any process — the virtual clock, the fault
+streams, the scheduler's admission verdicts and DRR interleavings, and
+every report field replay exactly. Wall-clock fields
+(``wall_seconds``) are the only machine-dependent outputs.
 """
 from __future__ import annotations
 
@@ -146,6 +161,7 @@ class RolloutEngine:
         self._report = RolloutReport()
         self._stop = threading.Event()
         self._loop: Optional[EventLoop] = None   # set during event runs
+        self._scheduler = None                   # set during tenant runs
 
     # ---------------------------------------------------------------- public
     def run(self, tasks: Sequence) -> RolloutReport:
@@ -338,7 +354,8 @@ class RolloutEngine:
     # ------------------------------------------------------------ event mode
     def run_event_driven(self, tasks: Sequence, *,
                          loop: Optional[EventLoop] = None,
-                         arrivals: Optional[Sequence[float]] = None
+                         arrivals: Optional[Sequence[float]] = None,
+                         scheduler=None
                          ) -> RolloutReport:
         """Generate one trajectory per task on a virtual-time event loop.
 
@@ -353,7 +370,20 @@ class RolloutEngine:
         (ascending, seconds): the feeder holds task *i* until the clock
         reaches ``arrivals[i]``, which models open-loop bursty workloads
         (the elastic-cluster benchmark's arrival ramps) instead of the
-        default fire-everything-at-once closed loop."""
+        default fire-everything-at-once closed loop.
+
+        ``scheduler`` (a ``repro.tenancy.FairShareScheduler``) turns the
+        stream multi-tenant: instead of launching tasks in arrival order,
+        each arriving task is submitted through admission control (the
+        verdict lands in ``scheduler.decisions`` — throttled/rejected
+        tasks never launch and are NOT counted as failed episodes; they
+        were refused at the door, not attempted) and a dispatcher task
+        launches admitted jobs in weighted deficit-round-robin order as
+        worker slots and writer capacity free up. Global backpressure
+        (``max_inflight``, writer gate) applies at dispatch, not at
+        submission, so clients always get an immediate verdict. With
+        ``virtual_deadline_s`` set, jobs still queued at the deadline are
+        dropped and counted per tenant (``queued_at_stop``)."""
         cfg = self.config
         loop = loop or EventLoop()
         self._report = RolloutReport()
@@ -367,6 +397,7 @@ class RolloutEngine:
             assert all(b >= a for a, b in zip(arrivals, arrivals[1:])), \
                 "arrivals must be ascending"
         self._loop = loop
+        self._scheduler = scheduler
         if self.cluster is not None:
             # binds the gateway too, plus the autoscaler + gauge daemons
             self.cluster.attach_loop(loop)
@@ -379,7 +410,10 @@ class RolloutEngine:
                                  consume_vs=cfg.writer_consume_vs,
                                  on_drain=wake.notify_all)
 
+        feeding_done = False
+
         def feeder():
+            nonlocal feeding_done
             for i, task in enumerate(task_dicts):
                 if arrivals is not None:
                     delay = arrivals[i] - loop.now
@@ -403,6 +437,47 @@ class RolloutEngine:
                 loop.spawn(self._episode_ev(task, gate, wake),
                            name=f"episode:{task.get('task_id', i)}")
 
+        def tenant_feeder():
+            # multi-tenant plane: the feeder only runs admission — the
+            # verdict is immediate and the feeder never parks on fleet
+            # backpressure (bounded-in-flight + writer gating move to the
+            # dispatcher, where DRR picks what the freed slot runs next)
+            nonlocal feeding_done
+            for i, task in enumerate(task_dicts):
+                if arrivals is not None:
+                    delay = arrivals[i] - loop.now
+                    if delay > 0:
+                        yield Sleep(delay)
+                if self._stop.is_set():
+                    break
+                scheduler.submit(task, now=loop.now)
+                wake.notify_all()
+            feeding_done = True
+            wake.notify_all()
+            yield Sleep(0.0)
+
+        def dispatcher():
+            # DRR launch pump: woken by submissions, episode settles, and
+            # writer drains; exits when the stream is done and the queues
+            # are empty (in-flight episodes settle on their own)
+            while True:
+                if self._stop.is_set():
+                    scheduler.mark_stopped(loop.now)
+                    break
+                budget = cfg.max_inflight - self._inflight
+                if budget > 0 and not gate.saturated():
+                    for job in scheduler.dispatch(loop.now, budget):
+                        self._enter()
+                        loop.spawn(
+                            self._episode_ev(job, gate, wake),
+                            name=f"episode:{job.get('task_id', '?')}")
+                elif scheduler.n_queued:
+                    self._report.backpressure_waits += 1
+                    self.telemetry.count("backpressure_waits")
+                if feeding_done and scheduler.n_queued == 0:
+                    break
+                yield from wake.wait()
+
         if cfg.virtual_deadline_s is not None:
             # daemon: the deadline must not keep an otherwise-finished
             # loop alive; notify the wake condition so a feeder parked on
@@ -412,7 +487,11 @@ class RolloutEngine:
                 wake.notify_all()
             loop.call_later(cfg.virtual_deadline_s, _deadline, daemon=True)
 
-        loop.spawn(feeder(), name="rollout-feeder")
+        if scheduler is not None:
+            loop.spawn(tenant_feeder(), name="rollout-feeder")
+            loop.spawn(dispatcher(), name="tenant-dispatcher")
+        else:
+            loop.spawn(feeder(), name="rollout-feeder")
         try:
             loop.run()
             if loop.errors:
@@ -427,6 +506,7 @@ class RolloutEngine:
             # restore thread-mode semantics (wall-clock health stamps,
             # pool-local virtual time) for any subsequent run()
             self._loop = None
+            self._scheduler = None
             if self.cluster is not None:
                 self.cluster.detach_loop()
             else:
@@ -437,27 +517,43 @@ class RolloutEngine:
 
     def _episode_ev(self, task: dict, gate: VirtualWriterGate,
                     wake: VirtualCondition):
-        """Cooperative-task twin of ``_episode_with_failover``."""
+        """Cooperative-task twin of ``_episode_with_failover``.
+
+        Tenant-tagged tasks (``task["tenant"]``) thread their id into the
+        gateway's acquire-wait telemetry; under a fair-share scheduler the
+        episode additionally reports its end-to-end submit->runner wait
+        and its settle (slot release + service accounting) back to the
+        scheduler."""
         cfg = self.config
+        tenant = task.get("tenant")
         result = EpisodeResult(task=task, ok=False)
         excluded: set[str] = set()
         traj = None
+        wait_observed = False
         try:
             scenario = self.registry.resolve(task)
             for attempt in range(cfg.max_attempts):
                 result.attempts = attempt + 1
                 got = yield from self.gateway.acquire_ev(
                     task["task_id"], timeout=cfg.acquire_timeout_vs,
-                    exclude=excluded)
+                    exclude=excluded, tenant=tenant)
                 if got is None and excluded:
                     # every other node is busy/unhealthy: fall back to the
                     # full fleet rather than deadlocking on exclusions
                     excluded.clear()
                     got = yield from self.gateway.acquire_ev(
-                        task["task_id"], timeout=cfg.acquire_timeout_vs)
+                        task["task_id"], timeout=cfg.acquire_timeout_vs,
+                        tenant=tenant)
                 if got is None:
                     result.error = f"no runner available ({task['task_id']})"
                     break
+                if (not wait_observed and self._scheduler is not None
+                        and tenant is not None and "_submit_vt" in task):
+                    # the tenant-facing wait: admission -> first runner
+                    # lease (queue time + gateway acquire time)
+                    wait_observed = True
+                    self._scheduler.observe_wait(
+                        tenant, self._loop.now - task["_submit_vt"])
                 node, runner = got
                 result.nodes += (node,)
                 try:
@@ -500,6 +596,15 @@ class RolloutEngine:
                 # completion timestamps drive windowed throughput metrics
                 # (steady-state vs recovery-window rates in Fig. 6)
                 self.telemetry.observe("completion_vt", self._loop.now)
+                if tenant is not None:
+                    self.telemetry.observe(
+                        f"completion_vt:{tenant}", self._loop.now)
+            if self._scheduler is not None and tenant is not None:
+                # free the tenant's quota slot *before* waking the
+                # dispatcher, so the freed slot is dispatchable at once
+                self._scheduler.task_done(
+                    tenant, ok=result.ok,
+                    service_vs=result.virtual_seconds)
             self._exit()
             self._settle(result)
             wake.notify_all()

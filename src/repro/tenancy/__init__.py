@@ -1,0 +1,31 @@
+"""Multi-tenant serving plane: tenant descriptors, admission control,
+and fair-share scheduling between job submission and the gateway.
+
+The control plane (this package: who may run how much, when) is split
+from the data plane (``repro.core.gateway`` + ``repro.rollout``: leases
+and episode traffic). See ``docs/MULTITENANCY.md`` for the operator
+guide and ``benchmarks/multitenant.py`` for the CI-gated fairness and
+isolation benchmark.
+"""
+
+from repro.tenancy.scheduler import FairShareScheduler
+from repro.tenancy.tenant import (
+    ADMITTED,
+    REJECTED,
+    THROTTLED,
+    AdmissionDecision,
+    Tenant,
+    TenantStats,
+    jain_index,
+)
+
+__all__ = [
+    "ADMITTED",
+    "REJECTED",
+    "THROTTLED",
+    "AdmissionDecision",
+    "FairShareScheduler",
+    "Tenant",
+    "TenantStats",
+    "jain_index",
+]

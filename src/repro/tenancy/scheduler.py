@@ -1,0 +1,352 @@
+"""Fair-share scheduler: the control plane between submission and the fleet.
+
+:class:`FairShareScheduler` sits between a multi-tenant job stream and
+the ``Gateway``'s data plane (leases, episode traffic). It does three
+things, all on the deterministic virtual clock:
+
+- **admission control** — every submission gets an explicit
+  :class:`~repro.tenancy.tenant.AdmissionDecision`; past-quota or
+  past-burst-budget traffic is *throttled* at the door (the client sees
+  it) instead of growing an unbounded queue;
+- **weighted deficit-round-robin dispatch** — admitted jobs wait in
+  strictly per-tenant queues; under contention each backlogged tenant
+  earns ``quantum * weight`` dispatch credit per round and serves one
+  queued job per unit of credit, so long-run service is proportional to
+  weight regardless of how deep any one tenant's backlog is;
+- **burst isolation** — one tenant's Poisson spike is bounded twice:
+  the token bucket throttles the spike at admission, and DRR caps the
+  admitted backlog's share of dispatch at the tenant's weight, so a
+  quiet tenant's acquire-wait tail cannot be moved by a noisy neighbor.
+
+Priority classes are strict tiers: all dispatchable backlog in tier 0
+is served before tier 1 is considered (DRR applies within a tier). A
+tenant at its ``max_inflight`` quota is skipped without earning credit,
+so quota-blocked tenants cannot bank deficit while blocked.
+
+Determinism contract: the scheduler holds no wall-clock state and draws
+no randomness. Admission verdicts and dispatch order are pure functions
+of (submission order, virtual time, tenant descriptors), so a seeded
+multi-tenant run — including every throttle and every DRR interleaving
+— replays bit-identically in any process, on either event kernel.
+
+Typical wiring (the engine does this internally; see
+``RolloutEngine.run_event_driven(scheduler=...)``)::
+
+    sched = FairShareScheduler([Tenant("a"), Tenant("b", weight=2.0)])
+    decision = sched.submit(task, now=loop.now)   # explicit verdict
+    for job in sched.dispatch(loop.now, budget=free_slots):
+        launch(job)                                # DRR-picked order
+    ...
+    sched.task_done(tenant_id, ok=True, service_vs=episode_vs)
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.telemetry import Telemetry
+from repro.tenancy.tenant import (
+    ADMITTED,
+    REJECTED,
+    THROTTLED,
+    AdmissionDecision,
+    Tenant,
+    TenantStats,
+)
+
+
+@dataclass
+class _TenantState:
+    """Runtime scheduling state for one tenant (queue, bucket, deficit)."""
+
+    tenant: Tenant
+    queue: deque = field(default_factory=deque)
+    deficit: float = 0.0
+    turn_credited: bool = False  # this DRR turn already earned its quantum
+    tokens: float = 0.0
+    last_refill_vt: float = 0.0
+    inflight: int = 0
+    in_ring: bool = False
+    stats: TenantStats = field(default_factory=TenantStats)
+
+
+class FairShareScheduler:
+    """Admission control + weighted DRR dispatch over per-tenant queues."""
+
+    def __init__(
+        self,
+        tenants: list[Tenant],
+        *,
+        quantum: float = 1.0,
+        default_tenant: Optional[str] = None,
+        telemetry: Optional[Telemetry] = None,
+    ):
+        if quantum <= 0.0:
+            raise ValueError(f"quantum must be > 0, got {quantum}")
+        self.quantum = quantum
+        self.telemetry = telemetry or Telemetry()
+        self._t: dict[str, _TenantState] = {}
+        # priority tier -> rotation ring of backlogged tenant ids. Tenants
+        # enter in submission order and leave when their queue drains, so
+        # the rotation order is a pure function of the arrival stream.
+        self._rings: dict[int, deque[str]] = {}
+        self.decisions: list[AdmissionDecision] = []
+        self._now_vt = 0.0
+        for t in tenants:
+            self.register(t)
+        if default_tenant is not None and default_tenant not in self._t:
+            raise ValueError(f"default tenant {default_tenant!r} not registered")
+        self.default_tenant = default_tenant
+
+    # -------------------------------------------------------------- tenants
+    def register(self, tenant: Tenant) -> Tenant:
+        """Add a tenant; its token bucket starts full at the current
+        virtual time (a fresh tenant may burst up to its budget at once)."""
+        if tenant.tenant_id in self._t:
+            raise ValueError(f"tenant {tenant.tenant_id!r} already registered")
+        st = _TenantState(tenant, tokens=tenant.burst_tokens, last_refill_vt=self._now_vt)
+        self._t[tenant.tenant_id] = st
+        return tenant
+
+    def tenant_ids(self) -> list[str]:
+        return list(self._t)
+
+    def tenant_of(self, task: dict) -> Optional[str]:
+        """The tenant a task dict belongs to (``task["tenant"]``, else the
+        scheduler's default tenant, else None)."""
+        return task.get("tenant", self.default_tenant)
+
+    def slo_map(self) -> dict[str, float]:
+        """Per-tenant acquire-wait SLO targets for the autoscaler
+        (tenants without an explicit ``slo_wait_p95_vs`` are omitted and
+        fall back to the autoscaler's default)."""
+        return {
+            tid: st.tenant.slo_wait_p95_vs
+            for tid, st in self._t.items()
+            if st.tenant.slo_wait_p95_vs is not None
+        }
+
+    # ------------------------------------------------------------ admission
+    def submit(self, task: dict, *, now: float) -> AdmissionDecision:
+        """Admit, throttle, or reject one submission at virtual time
+        ``now``; admitted tasks are stamped (``tenant``, ``_submit_vt``)
+        and enqueued on their tenant's queue. Never blocks."""
+        self._now_vt = max(self._now_vt, now)
+        tid = self.tenant_of(task)
+        task_id = str(task.get("task_id", ""))
+        st = self._t.get(tid) if tid is not None else None
+        if st is None:
+            return self._decide(
+                AdmissionDecision(tid or "<none>", task_id, REJECTED, "unknown tenant", 0, now)
+            )
+        t = st.tenant
+        st.stats.submitted += 1
+        self._refill(st, now)
+        if len(st.queue) >= t.max_queued:
+            d = AdmissionDecision(
+                tid, task_id, THROTTLED, "queue full", len(st.queue), now
+            )
+        elif st.tokens < 1.0:
+            d = AdmissionDecision(
+                tid, task_id, THROTTLED, "burst budget exhausted", len(st.queue), now
+            )
+        else:
+            st.tokens -= 1.0
+            task["tenant"] = tid
+            task["_submit_vt"] = now
+            st.queue.append(task)
+            if not st.in_ring:
+                st.in_ring = True
+                self._rings.setdefault(t.priority, deque()).append(tid)
+            d = AdmissionDecision(tid, task_id, ADMITTED, "", len(st.queue), now)
+        return self._decide(d, st)
+
+    def _refill(self, st: _TenantState, now: float) -> None:
+        """Continuous token-bucket refill on the virtual clock."""
+        dt = now - st.last_refill_vt
+        if dt > 0:
+            st.tokens = min(
+                st.tenant.burst_tokens, st.tokens + dt * st.tenant.refill_per_vs
+            )
+        st.last_refill_vt = max(st.last_refill_vt, now)
+
+    def _decide(
+        self, d: AdmissionDecision, st: Optional[_TenantState] = None
+    ) -> AdmissionDecision:
+        self.decisions.append(d)
+        self.telemetry.count(f"tenant_{d.status}:{d.tenant_id}")
+        if st is not None:
+            if d.status == ADMITTED:
+                st.stats.admitted += 1
+            elif d.status == THROTTLED:
+                st.stats.throttled += 1
+            else:
+                st.stats.rejected += 1
+            self.telemetry.gauge(f"tenant_queue_depth:{d.tenant_id}", float(len(st.queue)))
+        return d
+
+    # ------------------------------------------------------------- dispatch
+    def dispatch(self, now: float, budget: int) -> list[dict]:
+        """Pick up to ``budget`` queued jobs by strict-priority weighted
+        DRR and mark their tenants in flight. The caller launches them in
+        the returned order (which IS the fairness contract)."""
+        out: list[dict] = []
+        if budget <= 0:
+            return out
+        self._now_vt = max(self._now_vt, now)
+        for prio in sorted(self._rings):
+            ring = self._rings[prio]
+            if not ring:
+                continue
+            budget = self._dispatch_tier(ring, budget, out)
+            if budget <= 0:
+                break
+        return out
+
+    def _dispatch_tier(self, ring: deque, budget: int, out: list[dict]) -> int:
+        """One tier's DRR sweep; returns the remaining budget.
+
+        Termination: ``quota_streak`` breaks once a full rotation served
+        nothing because every backlogged tenant is at its inflight quota,
+        and ``max_idle`` bounds *consecutive non-serving visits* — the
+        credit-building passes a sub-unit weight may legitimately need
+        before it can afford one job. Serving visits reset the bound, so
+        a large dispatch budget sweeps as many full rotations as it can
+        pay for.
+        """
+        min_w = min(self._t[tid].tenant.weight for tid in ring)
+        max_idle = (len(ring) + 1) * (1 + int(math.ceil(1.0 / (self.quantum * min_w))))
+        idle = 0
+        quota_streak = 0
+        while budget > 0 and ring and idle < max_idle:
+            tid = ring[0]
+            st = self._t[tid]
+            t = st.tenant
+            if st.inflight >= t.max_inflight:
+                # skip without credit: a quota-blocked tenant must not
+                # bank deficit while its own episodes hold the quota
+                st.turn_credited = False
+                ring.rotate(-1)
+                idle += 1
+                quota_streak += 1
+                if quota_streak >= len(ring):
+                    break
+                continue
+            quota_streak = 0
+            if not st.turn_credited:
+                # credit exactly once per turn; cap so carry from a
+                # mid-turn quota block cannot compound into a burst
+                st.deficit = min(
+                    st.deficit + self.quantum * t.weight,
+                    2.0 * max(1.0, self.quantum * t.weight),
+                )
+                st.turn_credited = True
+            served = 0
+            while (
+                budget > 0
+                and st.queue
+                and st.deficit >= 1.0
+                and st.inflight < t.max_inflight
+            ):
+                job = st.queue.popleft()
+                st.deficit -= 1.0
+                st.inflight += 1
+                st.stats.dispatched += 1
+                out.append(job)
+                budget -= 1
+                served += 1
+                self.telemetry.count(f"tenant_dispatched:{tid}")
+                self.telemetry.gauge(f"tenant_queue_depth:{tid}", float(len(st.queue)))
+            if (
+                budget <= 0
+                and st.queue
+                and st.deficit >= 1.0
+                and st.inflight < t.max_inflight
+            ):
+                # the budget interrupted this turn mid-credit: resume it
+                # on the next dispatch call without re-crediting
+                break
+            # turn over: out of credit, out of backlog, or quota hit mid-turn
+            st.turn_credited = False
+            idle = 0 if served else idle + 1
+            if not st.queue:
+                st.deficit = 0.0  # classic DRR: empty queue forfeits credit
+                st.in_ring = False
+                ring.popleft()
+            else:
+                ring.rotate(-1)
+        return budget
+
+    # ------------------------------------------------------------- feedback
+    def task_done(self, tenant_id: str, *, ok: bool, service_vs: float = 0.0) -> None:
+        """Episode settled: free the tenant's inflight slot and account
+        the service it received (virtual seconds of fleet time)."""
+        st = self._t.get(tenant_id)
+        if st is None:
+            return
+        st.inflight = max(st.inflight - 1, 0)
+        if ok:
+            st.stats.completed += 1
+        else:
+            st.stats.failed += 1
+        st.stats.service_vs += service_vs
+        self.telemetry.count(f"tenant_{'completed' if ok else 'failed'}:{tenant_id}")
+
+    def observe_wait(self, tenant_id: str, wait_vs: float) -> None:
+        """Record one submit->runner-acquired wait (the tenant-facing
+        latency the SLO is written against)."""
+        st = self._t.get(tenant_id)
+        if st is not None:
+            st.stats.wait_vs.append(wait_vs)
+        self.telemetry.observe(f"tenant_wait_vs:{tenant_id}", wait_vs)
+
+    def mark_stopped(self, now: float) -> int:
+        """A deadline or stop cut the run: drop all queued jobs, counting
+        them per tenant (``queued_at_stop``). Returns how many were
+        dropped. In-flight episodes are untouched — they settle through
+        ``task_done`` as usual."""
+        dropped = 0
+        for st in self._t.values():
+            n = len(st.queue)
+            if n:
+                st.stats.queued_at_stop += n
+                dropped += n
+                st.queue.clear()
+            st.in_ring = False
+            st.deficit = 0.0
+            st.turn_credited = False
+        for ring in self._rings.values():
+            ring.clear()
+        if dropped:
+            self.telemetry.count("tenant_jobs_dropped_at_stop", dropped)
+        self._now_vt = max(self._now_vt, now)
+        return dropped
+
+    # -------------------------------------------------------------- queries
+    @property
+    def n_queued(self) -> int:
+        return sum(len(st.queue) for st in self._t.values())
+
+    @property
+    def n_inflight(self) -> int:
+        return sum(st.inflight for st in self._t.values())
+
+    def queue_depth(self, tenant_id: str) -> int:
+        return len(self._t[tenant_id].queue)
+
+    def tokens(self, tenant_id: str) -> float:
+        return self._t[tenant_id].tokens
+
+    def stats(self) -> dict[str, TenantStats]:
+        """Per-tenant accounting, keyed by tenant id (sorted)."""
+        return {tid: self._t[tid].stats for tid in sorted(self._t)}
+
+    def share_of_fleet(self) -> dict[str, float]:
+        """Each tenant's fraction of total served virtual seconds."""
+        total = sum(st.stats.service_vs for st in self._t.values())
+        if total <= 0.0:
+            return {tid: 0.0 for tid in sorted(self._t)}
+        return {tid: self._t[tid].stats.service_vs / total for tid in sorted(self._t)}

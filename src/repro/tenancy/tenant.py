@@ -1,0 +1,154 @@
+"""Tenant descriptors and admission-control vocabulary for the serving plane.
+
+A :class:`Tenant` is the control-plane contract one job stream signs with
+the fleet: how much of it the stream may use at once (``max_inflight``),
+how much backlog it may park (``max_queued``), how fast it may submit
+(the ``burst_tokens`` / ``refill_per_vs`` token bucket, measured on the
+**virtual** clock), what share of contended capacity it earns
+(``weight``), and which strict ``priority`` tier it dispatches from.
+
+Every admission verdict is an explicit :class:`AdmissionDecision` —
+clients see ``throttled`` or ``rejected`` with a reason instead of
+silent queue growth. Decisions are pure functions of submission order
+and virtual time, so a seeded multi-tenant run replays bit-identically
+in any process (the determinism contract shared by the whole event-time
+stack).
+
+>>> t = Tenant("acme", weight=2.0, max_inflight=8)
+>>> t.weight, t.priority
+(2.0, 1)
+>>> jain_index([1.0, 1.0, 1.0, 1.0])
+1.0
+>>> round(jain_index([1.0, 0.0, 0.0, 0.0]), 3)
+0.25
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+# AdmissionDecision.status values. ``THROTTLED`` is transient (quota or
+# burst budget — retry later); ``REJECTED`` is permanent for this
+# submission (unknown tenant / malformed task).
+ADMITTED = "admitted"
+THROTTLED = "throttled"
+REJECTED = "rejected"
+
+
+@dataclass(frozen=True)
+class Tenant:
+    """One tenant's scheduling contract.
+
+    ``weight`` sets the deficit-round-robin share under contention (a
+    weight-2 tenant earns twice the dispatch credit of a weight-1 tenant
+    per round). ``max_inflight`` caps concurrently *running* episodes;
+    ``max_queued`` caps the admitted-but-undispatched backlog — a
+    submission past it is throttled, never silently parked.
+    ``burst_tokens`` / ``refill_per_vs`` form a token bucket on the
+    virtual clock: a submission costs one token, the bucket refills
+    continuously and never exceeds ``burst_tokens``, so a Poisson spike
+    is absorbed up to the budget and throttled beyond it. ``priority``
+    is a strict tier: lower numbers dispatch first; DRR shares apply
+    *within* a tier only. ``slo_wait_p95_vs`` optionally overrides the
+    autoscaler's default per-tenant acquire-wait SLO target.
+    """
+
+    tenant_id: str
+    weight: float = 1.0
+    max_inflight: int = 32
+    max_queued: int = 256
+    burst_tokens: float = 64.0
+    refill_per_vs: float = 2.0
+    priority: int = 1
+    slo_wait_p95_vs: float | None = None
+
+    def __post_init__(self) -> None:
+        if not self.tenant_id:
+            raise ValueError("tenant_id must be non-empty")
+        if not (self.weight > 0.0 and math.isfinite(self.weight)):
+            raise ValueError(f"weight must be finite and > 0, got {self.weight}")
+        if self.max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {self.max_inflight}")
+        if self.max_queued < 1:
+            raise ValueError(f"max_queued must be >= 1, got {self.max_queued}")
+        if self.burst_tokens < 1.0:
+            raise ValueError(f"burst_tokens must be >= 1, got {self.burst_tokens}")
+        if self.refill_per_vs < 0.0:
+            raise ValueError(f"refill_per_vs must be >= 0, got {self.refill_per_vs}")
+
+
+@dataclass(frozen=True)
+class AdmissionDecision:
+    """The explicit verdict on one submission.
+
+    ``status`` is one of :data:`ADMITTED` / :data:`THROTTLED` /
+    :data:`REJECTED`; ``reason`` names the binding constraint
+    (``"queue full"``, ``"burst budget exhausted"``, ``"unknown
+    tenant"``). ``queue_depth`` is the tenant's backlog *after* the
+    decision and ``vt`` the virtual submission time, so a decision log
+    doubles as an audit trail of the admission plane.
+    """
+
+    tenant_id: str
+    task_id: str
+    status: str
+    reason: str = ""
+    queue_depth: int = 0
+    vt: float = 0.0
+
+    @property
+    def admitted(self) -> bool:
+        return self.status == ADMITTED
+
+
+@dataclass
+class TenantStats:
+    """Mutable per-tenant accounting kept by the scheduler (one instance
+    per tenant per run; all counters are updated on the event loop, so
+    they are deterministic per seed)."""
+
+    submitted: int = 0
+    admitted: int = 0
+    throttled: int = 0
+    rejected: int = 0
+    dispatched: int = 0
+    completed: int = 0
+    failed: int = 0
+    queued_at_stop: int = 0
+    service_vs: float = 0.0  # summed virtual seconds of served episodes
+    wait_vs: list[float] = field(default_factory=list)  # submit -> runner
+
+    def as_dict(self) -> dict:
+        out = {
+            k: getattr(self, k)
+            for k in (
+                "submitted",
+                "admitted",
+                "throttled",
+                "rejected",
+                "dispatched",
+                "completed",
+                "failed",
+                "queued_at_stop",
+            )
+        }
+        out["service_vs"] = round(self.service_vs, 6)
+        return out
+
+
+def jain_index(xs: list[float]) -> float:
+    """Jain's fairness index over per-tenant allocations.
+
+    ``(sum x)^2 / (n * sum x^2)`` — 1.0 when every tenant gets the same
+    allocation, ``1/n`` when one tenant gets everything. Returns 1.0 for
+    an empty or all-zero series (nothing was allocated, nothing was
+    unfair).
+    """
+    if not xs:
+        return 1.0
+    sq = sum(x * x for x in xs)
+    if sq == 0.0:
+        return 1.0
+    s = sum(xs)
+    return (s * s) / (len(xs) * sq)

@@ -318,6 +318,56 @@ def test_dataplane_wall_budget_and_missing_block():
     assert any("MISSING learner" in p for p in problems)
 
 
+def test_committed_multitenant_baseline_self_passes():
+    base = _baseline("BENCH_multitenant.json")
+    assert cb.check(base, copy.deepcopy(base), 0.10) == []
+
+
+def test_multitenant_wait_p99_rise_is_a_regression():
+    base = _baseline("BENCH_multitenant.json")
+    perturbed = copy.deepcopy(base)
+    for row in perturbed["scenarios"]:
+        row["wait_p99_max_vs"] = row["wait_p99_max_vs"] * 1.5 + 10.0
+    perturbed["gate"]["burst_quiet_wait_p99_vs"] = (
+        base["gate"]["burst_quiet_wait_p99_vs"] * 1.5 + 10.0)
+    problems = cb.check(base, perturbed, 0.10)
+    assert problems
+    # wait p99 is a cost: the rise must read REGRESSION, not STALE
+    assert all("REGRESSION" in p for p in problems if "wait_p99" in p)
+    assert any("burst_quiet_wait_p99_vs" in p for p in problems)
+
+
+def test_multitenant_jain_drop_is_a_regression():
+    base = _baseline("BENCH_multitenant.json")
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["burst_jain_index"] = (
+        base["gate"]["burst_jain_index"] * 0.7)
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("REGRESSION" in p and "jain" in p for p in problems)
+
+
+def test_multitenant_leakage_and_boolean_gate():
+    base = _baseline("BENCH_multitenant.json")
+    leaked = copy.deepcopy(base)
+    leaked["scenarios"][0]["cross_tenant_leaks"] = 3
+    leaked["gate"]["zero_cross_tenant_leakage"] = False
+    problems = cb.check(base, leaked, 0.10)
+    assert any("cross_tenant_leaks" in p for p in problems)
+    assert any("zero_cross_tenant_leakage" in p for p in problems)
+
+
+def test_multitenant_wall_budget_and_missing_scenario():
+    base = _baseline("BENCH_multitenant.json")
+    over = copy.deepcopy(base)
+    over["sweep_wall_seconds"] = base["wall_budget_s"] * 1.5
+    problems = cb.check(base, over, 0.10)
+    assert any("wall budget" in p for p in problems)
+    missing = copy.deepcopy(base)
+    missing["scenarios"] = missing["scenarios"][1:]
+    problems = cb.check(base, missing, 0.10)
+    assert any("MISSING scenario" in p for p in problems)
+
+
 def test_malformed_payloads_are_rejected():
     assert cb.check({}, {}, 0.10) == [
         "MALFORMED baseline: neither engine rows nor a gate block"

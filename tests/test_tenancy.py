@@ -1,0 +1,424 @@
+"""Multi-tenant serving plane (repro.tenancy): admission control, weighted
+DRR fairness, burst isolation, per-tenant telemetry, and determinism."""
+import json
+import random
+import subprocess
+import sys
+
+import pytest
+
+from repro.cluster import Cluster, default_specs
+from repro.cluster.autoscaler import slo_burn
+from repro.core.event_loop import EventLoop
+from repro.core.seeding import stable_seed
+from repro.core.telemetry import Telemetry, p99
+from repro.rollout.engine import RolloutConfig, RolloutEngine
+from repro.rollout.scenarios import get_default_registry
+from repro.rollout.writer import TrajectoryWriter
+from repro.tenancy import (ADMITTED, REJECTED, THROTTLED, FairShareScheduler,
+                           Tenant, jain_index)
+
+
+def _task(i, tenant=None):
+    d = {"task_id": f"t{i:04d}", "task_type": "web", "domain": "web",
+         "description": "x", "horizon": 10, "scenario": ""}
+    if tenant is not None:
+        d["tenant"] = tenant
+    return d
+
+
+# ---------------------------------------------------------------- admission
+def test_unknown_tenant_rejected():
+    sched = FairShareScheduler([Tenant("a")])
+    d = sched.submit(_task(0, "ghost"), now=0.0)
+    assert d.status == REJECTED and "unknown" in d.reason
+    assert not d.admitted
+    d = sched.submit(_task(1), now=0.0)   # no tenant, no default
+    assert d.status == REJECTED
+
+
+def test_default_tenant_routes_untagged_tasks():
+    sched = FairShareScheduler([Tenant("a")], default_tenant="a")
+    d = sched.submit(_task(0), now=0.0)
+    assert d.status == ADMITTED and d.tenant_id == "a"
+    assert sched.queue_depth("a") == 1
+
+
+def test_queue_quota_throttles_not_grows():
+    sched = FairShareScheduler([Tenant("a", max_queued=3, burst_tokens=100.0)])
+    verdicts = [sched.submit(_task(i, "a"), now=0.0) for i in range(5)]
+    assert [v.status for v in verdicts] == [ADMITTED] * 3 + [THROTTLED] * 2
+    assert all("queue full" in v.reason for v in verdicts[3:])
+    assert sched.queue_depth("a") == 3  # explicit verdicts, no silent growth
+
+
+def test_burst_budget_throttles_then_refills():
+    t = Tenant("a", burst_tokens=2.0, refill_per_vs=1.0, max_queued=100)
+    sched = FairShareScheduler([t])
+    assert sched.submit(_task(0, "a"), now=0.0).status == ADMITTED
+    assert sched.submit(_task(1, "a"), now=0.0).status == ADMITTED
+    blocked = sched.submit(_task(2, "a"), now=0.0)
+    assert blocked.status == THROTTLED and "burst budget" in blocked.reason
+    # one token refills after one virtual second at refill_per_vs=1.0
+    assert sched.submit(_task(3, "a"), now=1.0).status == ADMITTED
+    assert sched.tokens("a") == pytest.approx(0.0)
+
+
+def test_bucket_caps_at_burst_tokens():
+    t = Tenant("a", burst_tokens=4.0, refill_per_vs=10.0)
+    sched = FairShareScheduler([t])
+    sched.submit(_task(0, "a"), now=0.0)
+    sched.submit(_task(1, "a"), now=1000.0)  # long idle must not overfill
+    assert sched.tokens("a") <= t.burst_tokens
+
+
+def test_tenant_validation():
+    with pytest.raises(ValueError):
+        Tenant("a", weight=0.0)
+    with pytest.raises(ValueError):
+        Tenant("a", max_inflight=0)
+    with pytest.raises(ValueError):
+        FairShareScheduler([Tenant("a"), Tenant("a")])
+    with pytest.raises(ValueError):
+        FairShareScheduler([Tenant("a")], default_tenant="b")
+
+
+# ----------------------------------------------------------------- dispatch
+def _drain(sched, now=0.0, budget=10**9):
+    """Dispatch everything currently servable, observing DRR order."""
+    return sched.dispatch(now, budget)
+
+
+def test_drr_weight_proportionality_under_saturation():
+    tenants = [Tenant("a", weight=1.0, max_inflight=10**6, max_queued=10**6,
+                      burst_tokens=10**6),
+               Tenant("b", weight=2.0, max_inflight=10**6, max_queued=10**6,
+                      burst_tokens=10**6),
+               Tenant("c", weight=4.0, max_inflight=10**6, max_queued=10**6,
+                      burst_tokens=10**6)]
+    sched = FairShareScheduler(tenants)
+    for i in range(300):
+        sched.submit(_task(i, "abc"[i % 3]), now=0.0)
+    # saturated: dispatch far fewer slots than the backlog holds
+    got = sched.dispatch(0.0, 70)
+    by = {t: sum(1 for j in got if j["tenant"] == t) for t in "abc"}
+    assert by["b"] / by["a"] == pytest.approx(2.0, rel=0.15)
+    assert by["c"] / by["a"] == pytest.approx(4.0, rel=0.15)
+
+
+def test_drr_sub_unit_weight_still_served():
+    tenants = [Tenant("a", weight=0.25, max_inflight=100, burst_tokens=100.0),
+               Tenant("b", weight=1.0, max_inflight=100, burst_tokens=100.0)]
+    sched = FairShareScheduler(tenants)
+    for i in range(40):
+        sched.submit(_task(i, "ab"[i % 2]), now=0.0)
+    got = sched.dispatch(0.0, 20)
+    by = {t: sum(1 for j in got if j["tenant"] == t) for t in "ab"}
+    assert by["a"] > 0, "a sub-unit weight must still make progress"
+    assert by["b"] / by["a"] == pytest.approx(4.0, rel=0.35)
+
+
+def test_inflight_quota_blocks_without_banking_credit():
+    t = Tenant("a", max_inflight=2, burst_tokens=100.0)
+    sched = FairShareScheduler([t, Tenant("b", burst_tokens=100.0)])
+    for i in range(6):
+        sched.submit(_task(i, "a"), now=0.0)
+        sched.submit(_task(100 + i, "b"), now=0.0)
+    got = sched.dispatch(0.0, 100)
+    assert sum(1 for j in got if j["tenant"] == "a") == 2  # quota binds
+    assert sched.n_inflight == 8
+    # freeing one slot lets exactly one more "a" job through
+    sched.task_done("a", ok=True)
+    got = sched.dispatch(0.0, 100)
+    assert [j["tenant"] for j in got] == ["a"]
+
+
+def test_priority_tiers_are_strict():
+    tenants = [Tenant("low", priority=2, burst_tokens=100.0),
+               Tenant("high", priority=0, burst_tokens=100.0)]
+    sched = FairShareScheduler(tenants)
+    for i in range(4):
+        sched.submit(_task(i, "low"), now=0.0)
+        sched.submit(_task(10 + i, "high"), now=0.0)
+    got = sched.dispatch(0.0, 6)
+    assert [j["tenant"] for j in got] == ["high"] * 4 + ["low"] * 2
+
+
+def test_dispatch_respects_budget_across_calls():
+    sched = FairShareScheduler([Tenant("a", burst_tokens=100.0),
+                                Tenant("b", burst_tokens=100.0)])
+    for i in range(10):
+        sched.submit(_task(i, "ab"[i % 2]), now=0.0)
+    first = sched.dispatch(0.0, 3)
+    second = sched.dispatch(0.0, 100)
+    assert len(first) == 3 and len(second) == 7
+    ids = [j["task_id"] for j in first + second]
+    assert len(set(ids)) == 10  # nothing dispatched twice
+
+
+def test_mark_stopped_drops_and_accounts():
+    sched = FairShareScheduler([Tenant("a", burst_tokens=100.0)])
+    for i in range(5):
+        sched.submit(_task(i, "a"), now=0.0)
+    sched.dispatch(0.0, 2)
+    dropped = sched.mark_stopped(10.0)
+    assert dropped == 3
+    st = sched.stats()["a"]
+    assert st.queued_at_stop == 3 and st.dispatched == 2
+    assert sched.n_queued == 0
+
+
+# ---------------------------------------------------------------- telemetry
+def test_per_tenant_telemetry_exactness():
+    tel = Telemetry()
+    sched = FairShareScheduler(
+        [Tenant("a", max_queued=2, burst_tokens=100.0)], telemetry=tel)
+    for i in range(4):
+        sched.submit(_task(i, "a"), now=0.0)
+    sched.dispatch(0.0, 1)
+    sched.task_done("a", ok=True, service_vs=7.5)
+    sched.observe_wait("a", 3.0)
+    assert tel.counter("tenant_admitted:a") == 2
+    assert tel.counter("tenant_throttled:a") == 2
+    assert tel.counter("tenant_dispatched:a") == 1
+    assert tel.counter("tenant_completed:a") == 1
+    assert tel.summary("tenant_wait_vs:a")["n"] == 1
+    st = sched.stats()["a"]
+    assert (st.submitted, st.admitted, st.throttled) == (4, 2, 2)
+    assert st.service_vs == pytest.approx(7.5)
+    assert sched.share_of_fleet() == {"a": 1.0}
+
+
+def test_jain_index_units():
+    assert jain_index([]) == 1.0
+    assert jain_index([5.0, 5.0, 5.0]) == pytest.approx(1.0)
+    assert jain_index([1.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
+    assert 0.5 < jain_index([1.0, 2.0]) < 1.0
+
+
+# --------------------------------------------------------------- autoscaler
+def test_slo_burn_single_tenant_special_case():
+    # untagged window: burn > 1.0 iff the old global p95 > high test fired
+    slow = [(None, w) for w in [1.0] * 10 + [50.0] * 10]
+    assert p99([w for _t, w in slow]) == 50.0
+    assert slo_burn(slow, 10.0) > 1.0
+    assert slo_burn([(None, w) for w in [1.0, 2.0, 3.0]], 10.0) <= 1.0
+    assert slo_burn([], 10.0) == 0.0
+
+
+def test_slo_burn_catches_starved_minority_tenant():
+    # 19 quick samples for "big", one slow tenant out of SLO: aggregate
+    # p95 looks fine but the per-tenant burn must flag it
+    tagged = [("big", 1.0)] * 19 + [("small", 40.0)]
+    aggregate_p95 = sorted(w for _t, w in tagged)[int(0.95 * 19)]
+    assert aggregate_p95 <= 10.0
+    assert slo_burn(tagged, 10.0) > 1.0
+
+
+def test_slo_burn_per_tenant_overrides():
+    tagged = [("gold", 8.0), ("bronze", 8.0)]
+    assert slo_burn(tagged, 10.0) <= 1.0
+    assert slo_burn(tagged, 10.0, {"gold": 4.0}) == pytest.approx(2.0)
+
+
+def test_scheduler_slo_map():
+    sched = FairShareScheduler([Tenant("a", slo_wait_p95_vs=30.0),
+                                Tenant("b")])
+    assert sched.slo_map() == {"a": 30.0}
+
+
+# --------------------------------------------------------- engine end-to-end
+def _mt_run(seed=0, n_tasks=36, n_replicas=8, tenants=None, weights=None):
+    reg = get_default_registry()
+    cluster = Cluster(default_specs(n_replicas), n_replicas,
+                      runners_per_node=4, seed=seed)
+    writer = TrajectoryWriter(retain=False, capacity=2048)
+    engine = RolloutEngine(cluster, writer, registry=reg,
+                           telemetry=cluster.telemetry,
+                           config=RolloutConfig(max_inflight=n_replicas,
+                                                acquire_timeout_vs=3000.0))
+    tenants = tenants or [Tenant("a", burst_tokens=100.0),
+                          Tenant("b", burst_tokens=100.0),
+                          Tenant("c", burst_tokens=100.0)]
+    sched = FairShareScheduler(tenants, telemetry=cluster.telemetry)
+    ids = [t.tenant_id for t in tenants]
+    specs = reg.sample(n_tasks, seed=stable_seed(seed, "tenancy-e2e"))
+    tasks = []
+    for i, s in enumerate(specs):
+        d = s.to_dict()
+        d["tenant"] = ids[i % len(ids)]
+        tasks.append(d)
+    rng = random.Random(stable_seed(seed, "tenancy-arrivals"))
+    arrivals, t = [], 0.0
+    for _ in tasks:
+        t += rng.expovariate(1.0)
+        arrivals.append(t)
+    report = engine.run_event_driven(tasks, loop=EventLoop(),
+                                     arrivals=arrivals, scheduler=sched)
+    writer.drain(timeout=10.0)
+    writer.close()
+    cluster.close()
+    return report, sched, cluster, tasks
+
+
+def test_engine_multitenant_run_completes_all():
+    report, sched, cluster, tasks = _mt_run()
+    assert report.completed == len(tasks)
+    stats = sched.stats()
+    assert sum(s.completed for s in stats.values()) == len(tasks)
+    assert all(s.submitted == s.admitted for s in stats.values())
+    # every tenant observed a submit->runner wait per dispatched job
+    for tid, s in stats.items():
+        assert len(s.wait_vs) == s.dispatched
+        assert cluster.telemetry.summary(f"tenant_wait_vs:{tid}")["n"] \
+            == s.dispatched
+
+
+def test_engine_zero_cross_tenant_leakage():
+    report, _sched, _cluster, tasks = _mt_run()
+    submitted_by = {t["task_id"]: t["tenant"] for t in tasks}
+    for r in report.results:
+        assert r.task["tenant"] == submitted_by[r.task["task_id"]]
+
+
+def test_engine_throttled_tasks_never_launch():
+    # one tenant with a 3-token bucket and no refill: exactly 3 of its
+    # jobs may run; throttled ones are verdicts, not failed episodes
+    tenants = [Tenant("tight", burst_tokens=3.0, refill_per_vs=0.0),
+               Tenant("open", burst_tokens=100.0)]
+    report, sched, _cluster, tasks = _mt_run(n_tasks=20, tenants=tenants)
+    st = sched.stats()["tight"]
+    assert st.admitted == 3 and st.throttled == 7
+    assert st.completed == 3
+    assert report.failed == 0
+    assert report.completed == 3 + sched.stats()["open"].completed
+
+
+def test_engine_burst_isolation_quiet_p95():
+    # quiet tenant alone on an idle fleet: measure its wait profile; then
+    # add a noisy tenant spiking 6x the jobs — the quiet p95 must not
+    # degrade beyond the SLO even though total load jumped
+    reg = get_default_registry()
+
+    def run(noisy_jobs):
+        cluster = Cluster(default_specs(8), 8, runners_per_node=4, seed=0)
+        writer = TrajectoryWriter(retain=False, capacity=2048)
+        engine = RolloutEngine(cluster, writer, registry=reg,
+                               telemetry=cluster.telemetry,
+                               config=RolloutConfig(max_inflight=8,
+                                                    acquire_timeout_vs=3000.0))
+        tenants = [Tenant("quiet", burst_tokens=100.0),
+                   Tenant("noisy", burst_tokens=8.0, refill_per_vs=0.02)]
+        sched = FairShareScheduler(tenants, telemetry=cluster.telemetry)
+        quiet_specs = reg.sample(12, seed=stable_seed(0, "iso-quiet"))
+        rng = random.Random(stable_seed(0, "iso-arrivals"))
+        events = []
+        t = 0.0
+        for s in quiet_specs:
+            t += rng.expovariate(0.05)
+            d = s.to_dict()
+            d["tenant"] = "quiet"
+            events.append((t, d))
+        if noisy_jobs:
+            noisy_specs = reg.sample(noisy_jobs,
+                                     seed=stable_seed(0, "iso-noisy"))
+            nt = 20.0
+            nrng = random.Random(stable_seed(0, "iso-noisy-arr"))
+            for s in noisy_specs:
+                nt += nrng.expovariate(2.0)
+                d = s.to_dict()
+                d["tenant"] = "noisy"
+                events.append((nt, d))
+        events.sort(key=lambda e: e[0])
+        arrivals = [e[0] for e in events]
+        tasks = [e[1] for e in events]
+        engine.run_event_driven(tasks, loop=EventLoop(), arrivals=arrivals,
+                                scheduler=sched)
+        waits = sched.stats()["quiet"].wait_vs
+        writer.drain(timeout=10.0)
+        writer.close()
+        cluster.close()
+        return sorted(waits)[int(0.95 * (len(waits) - 1))], sched
+
+    alone_p95, _ = run(0)
+    with_spike_p95, sched = run(72)
+    assert sched.stats()["noisy"].throttled > 0  # the spike was clamped
+    # the quiet tail may move by the spike's admitted share, but stays
+    # bounded: within the bucket-sized allowance, not the 6x spike
+    assert with_spike_p95 <= alone_p95 + 60.0
+
+
+def test_engine_deadline_drops_are_accounted():
+    reg = get_default_registry()
+    cluster = Cluster(default_specs(4), 4, runners_per_node=4, seed=0)
+    writer = TrajectoryWriter(retain=False, capacity=2048)
+    engine = RolloutEngine(cluster, writer, registry=reg,
+                           config=RolloutConfig(max_inflight=4,
+                                                acquire_timeout_vs=3000.0,
+                                                virtual_deadline_s=50.0))
+    sched = FairShareScheduler([Tenant("a", burst_tokens=1000.0,
+                                       max_queued=1000)])
+    specs = reg.sample(60, seed=stable_seed(0, "deadline"))
+    tasks = []
+    for s in specs:
+        d = s.to_dict()
+        d["tenant"] = "a"
+        tasks.append(d)
+    report = engine.run_event_driven(tasks, loop=EventLoop(),
+                                     arrivals=[0.0] * len(tasks),
+                                     scheduler=sched)
+    st = sched.stats()["a"]
+    assert st.queued_at_stop > 0, "the deadline should strand a backlog"
+    assert st.dispatched + st.queued_at_stop == st.admitted
+    assert report.completed == st.completed
+
+
+def test_cross_process_seed_determinism():
+    """The full multi-tenant pipeline replays bit-identically in a fresh
+    interpreter: same seeds -> same verdicts, waits, and completions."""
+    prog = """
+import json, random, sys
+sys.path.insert(0, "src")
+from repro.cluster import Cluster, default_specs
+from repro.core.event_loop import EventLoop
+from repro.core.seeding import stable_seed
+from repro.rollout.engine import RolloutConfig, RolloutEngine
+from repro.rollout.scenarios import get_default_registry
+from repro.rollout.writer import TrajectoryWriter
+from repro.tenancy import FairShareScheduler, Tenant
+
+reg = get_default_registry()
+cluster = Cluster(default_specs(8), 8, runners_per_node=4, seed=0)
+writer = TrajectoryWriter(retain=False, capacity=2048)
+engine = RolloutEngine(cluster, writer, registry=reg,
+                       config=RolloutConfig(max_inflight=8,
+                                            acquire_timeout_vs=3000.0))
+tenants = [Tenant("a", burst_tokens=5.0, refill_per_vs=0.1),
+           Tenant("b", weight=2.0, burst_tokens=100.0)]
+sched = FairShareScheduler(tenants)
+specs = reg.sample(30, seed=stable_seed(0, "det"))
+tasks = []
+for i, s in enumerate(specs):
+    d = s.to_dict(); d["tenant"] = "ab"[i % 2]; tasks.append(d)
+rng = random.Random(stable_seed(0, "det-arr"))
+arrivals, t = [], 0.0
+for _ in tasks:
+    t += rng.expovariate(1.5); arrivals.append(t)
+report = engine.run_event_driven(tasks, loop=EventLoop(),
+                                 arrivals=arrivals, scheduler=sched)
+out = {
+    "verdicts": [[d.tenant_id, d.status, d.vt] for d in sched.decisions],
+    "waits": {tid: s.wait_vs for tid, s in sched.stats().items()},
+    "completed": report.completed,
+    "makespan": report.virtual_makespan,
+}
+writer.drain(timeout=10.0); writer.close(); cluster.close()
+print(json.dumps(out, sort_keys=True))
+"""
+    runs = [subprocess.run([sys.executable, "-c", prog],
+                           capture_output=True, text=True, timeout=120)
+            for _ in range(2)]
+    for r in runs:
+        assert r.returncode == 0, r.stderr
+    assert runs[0].stdout == runs[1].stdout
+    assert json.loads(runs[0].stdout)["completed"] > 0
