@@ -1,0 +1,176 @@
+"""Federated fleet demo: 2 regions, a brownout spill, one DiLoCo sync.
+
+Two regions — cheap ``us`` and a pricier ``eu`` — serve one workload
+through the ``repro.federation`` geo layer. Mid-run the ``eu`` region
+goes dark (a full brownout: unreachable, every in-flight episode
+killed); its homed episodes spill to ``us`` over metered WAN control
+messages and their trajectories ship back home as WAN trajectory bytes.
+The region is restored before the run ends, so late episodes route home
+again. Afterwards each region's learner replica takes ``H`` inner PPO
+steps on its own homed trajectories and the two exchange one DiLoCo
+outer step — int8 parameter deltas over the same metered WAN — and the
+demo prints the wire bytes next to what per-step delta streaming would
+have cost.
+
+    PYTHONPATH=src python examples/federated_fleet.py --replicas 24
+
+Everything runs on the virtual-time event loop: the rollout half is
+deterministic per seed and takes about a wall-second; the learner half
+needs jax (CPU is fine).
+"""
+import argparse
+import time
+
+from repro.core.event_loop import EventLoop
+from repro.core.seeding import stable_seed
+from repro.federation import Federation, RegionSpec
+from repro.rollout import (RolloutConfig, RolloutEngine, TrajectoryWriter,
+                           get_default_registry)
+
+TRAJS_PER_REGION = 12   # kept back for the learner half
+SEQ_LEN = 64
+DILOCO_H = 5            # inner steps before the one outer sync
+
+
+def run_fleet(args, registry):
+    """Rollout half: two regions, brownout + restore, spill accounting."""
+    fed = Federation([
+        RegionSpec("us", args.replicas, runners_per_node=8),
+        RegionSpec("eu", args.replicas, runners_per_node=8,
+                   price_multiplier=1.12),
+    ], seed=args.seed)
+    tele = fed.telemetry
+
+    tasks = [t.to_dict() for t in registry.sample(
+        args.tasks, seed=stable_seed(args.seed, "demo-workload"))]
+    fed.assign(tasks)
+
+    kept = {"us": [], "eu": []}
+    writer = TrajectoryWriter(retain=False, capacity=4 * args.tasks)
+    orig_write = writer.write
+
+    def keeping_write(traj, timeout=None):
+        lst = kept[fed.home_region(traj.task_id).name]
+        if len(lst) < TRAJS_PER_REGION:
+            lst.append(traj)
+        return orig_write(traj, timeout)
+
+    writer.write = keeping_write
+    engine = RolloutEngine(fed, writer, registry=registry, telemetry=tele,
+                           config=RolloutConfig(
+                               max_inflight=2 * args.replicas,
+                               acquire_timeout_vs=3000.0))
+    loop = EventLoop()
+    killed = []
+    loop.call_later(args.brownout_at,
+                    lambda: killed.append(fed.brownout("eu")), daemon=True)
+    loop.call_later(args.restore_at, lambda: fed.restore("eu"), daemon=True)
+
+    t0 = time.monotonic()
+    report = engine.run_event_driven(tasks, loop=loop)
+    wall = time.monotonic() - t0
+
+    homed = {n: sum(1 for t in tasks if t["region"] == n)
+             for n in ("us", "eu")}
+    by_kind = fed.wan.bytes_by_kind()
+    print(f"{len(tasks)} episodes over 2x{args.replicas} replicas -> "
+          f"{report.completed} completed in {report.virtual_makespan:.0f} "
+          f"virtual s ({wall:.1f}s wall)")
+    print(f"brownout: eu dark at t={args.brownout_at:.0f}vs killed "
+          f"{killed[0] if killed else 0} in-flight episodes; restored at "
+          f"t={args.restore_at:.0f}vs")
+    print(f"spill:    {tele.counter('episodes_spilled')} episodes ran out "
+          f"of region ({tele.counter('wan_trajectories')} trajectories "
+          f"shipped home over the WAN)")
+    for pair, nbytes in sorted(fed.wan.ledger().items()):
+        print(f"          {pair}: {nbytes / 1e6:.2f} MB on the wire")
+    print(f"          by kind: "
+          + ", ".join(f"{k}={v / 1e6:.2f} MB"
+                      for k, v in sorted(by_kind.items())))
+    assert report.completed > 0 and tele.counter("episodes_spilled") > 0
+    writer.drain(timeout=10.0)
+    writer.close()
+    fed.close()
+    return kept
+
+
+def run_diloco(kept, registry, seed):
+    """Learner half: H inner steps per region, one metered outer sync."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.core.telemetry import Telemetry
+    from repro.data.replay_buffer import ReplayBuffer
+    from repro.distributed.diloco import DiLoCoConfig
+    from repro.federation import (FederatedLearners, RegionLearner,
+                                  WanTopology)
+    from repro.models import build_model
+    from repro.pipeline import (IngestConfig, LearnerConfig,
+                                PolicyVersionStore, TrajectoryIngestor)
+    from repro.train.ppo import PPOConfig, PPOTrainer
+
+    cfg = get_reduced("qwen3-1.7b", vocab_size=264, d_model=32, n_layers=1,
+                      n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64)
+    model = build_model(cfg)
+    trainer = PPOTrainer(model, model.init(jax.random.PRNGKey(seed)),
+                         cfg=PPOConfig(lr=3e-4), seed=seed)
+    tele = Telemetry()
+    wan = WanTopology.seeded(sorted(kept), seed=stable_seed(seed, "wan"),
+                             telemetry=tele)
+    learners = []
+    for i, (name, trajs) in enumerate(sorted(kept.items())):
+        replay = ReplayBuffer(capacity=128, seed=i, backend="soa",
+                              seq_len=SEQ_LEN)
+        store = PolicyVersionStore(trainer.params)
+        ingest = TrajectoryIngestor(
+            replay, store, registry=registry, trainer=trainer,
+            cfg=IngestConfig(seq_len=SEQ_LEN, micro_batch=8))
+        for t in trajs:
+            ingest(t)
+        ingest.flush()
+        learners.append(RegionLearner(
+            name, trainer, replay, store,
+            cfg=LearnerConfig(batch_size=2, seq_len=SEQ_LEN)))
+    plane = FederatedLearners(learners,
+                              cfg=DiLoCoConfig(inner_steps=DILOCO_H),
+                              wan=wan, telemetry=tele)
+
+    for _ in range(DILOCO_H):
+        for lr in learners:
+            assert lr.step() is not None, f"{lr.name}: no batch ready"
+    cost = plane.maybe_sync()
+    assert cost is not None and plane.anchors_equal()
+
+    diloco_bytes = tele.counter("wan_bytes_kind:diloco")
+    stream_bytes = (plane.stream_bytes_per_region() * len(learners)
+                    * DILOCO_H)
+    print(f"\ndiloco:   {DILOCO_H} inner steps per region, then one outer "
+          f"sync ({plane.n_params} params, int8 deltas)")
+    for lr in learners:
+        trend = lr.loss_trend()
+        print(f"          {lr.name}: loss {trend['first_third']:.4f} -> "
+              f"{trend['last_third']:.4f}")
+    print(f"          {diloco_bytes / 1e3:.1f} KB on the WAN vs "
+          f"{stream_bytes / 1e3:.1f} KB for per-step streaming "
+          f"({stream_bytes / diloco_bytes:.0f}x fewer bytes); "
+          f"post-sync anchors bit-identical across regions")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=24,
+                    help="replicas per region")
+    ap.add_argument("--tasks", type=int, default=96)
+    ap.add_argument("--brownout-at", type=float, default=20.0,
+                    help="virtual time of the eu brownout")
+    ap.add_argument("--restore-at", type=float, default=60.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    registry = get_default_registry()
+    kept = run_fleet(args, registry)
+    run_diloco(kept, registry, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,14 +18,15 @@ baselines carry per-lane-count `kernel` rows, throughput baselines carry
 per-(design, fleet-size) `engine` rows, elastic-cluster baselines carry
 per-cluster `clusters` rows, recovery baselines carry a
 `recovery_curve`, data-plane baselines carry `ingest` + `learner`
-blocks, multi-tenant baselines carry per-scenario `scenarios` rows, e2e
-baselines carry a bare `gate` block. Gate metrics are direction-aware:
-MTTR / detection-latency / recovery-time / wait-p99 names are
-recognized as lower-is-better, so a *rise* there is the regression and a
-drop flags a stale baseline. Kernel, data-plane, and multi-tenant
-baselines additionally enforce a hard wall budget: the fresh run must
-have finished inside the `wall_budget_s` recorded in the committed
-baseline.
+blocks, multi-tenant baselines carry per-scenario `scenarios` rows,
+federation baselines carry per-region `regions` rows, e2e baselines
+carry a bare `gate` block. Gate metrics are direction-aware: MTTR /
+detection-latency / recovery-time / wait-p99 / WAN-byte / USD-per-traj
+names are recognized as lower-is-better, so a *rise* there is the
+regression and a drop flags a stale baseline. Kernel, data-plane,
+multi-tenant, and federation baselines additionally enforce a hard wall
+budget: the fresh run must have finished inside the `wall_budget_s`
+recorded in the committed baseline.
 """
 
 from __future__ import annotations
@@ -135,6 +136,8 @@ LOWER_IS_BETTER_HINTS = (
     "replica_days",
     "wait_p99",
     "throttled",
+    "wan_bytes",
+    "usd_per_traj",
 )
 
 
@@ -335,6 +338,87 @@ def check_multitenant(base: dict, fresh: dict, tol: float) -> list[str]:
     return problems
 
 
+# federation region rows are all virtual-time deterministic per seed:
+# homed/spilled episode counts and metered WAN bytes keep the tight band
+# (spill volume and cross-region bytes are costs — a rise is the
+# regression); per-region USD/day folds in the price sheet and makespan,
+# and the USD metrics share the wide same-host ratio band so honest
+# price-sheet tweaks upstream don't flap the gate.
+FEDERATION_REGION_METRICS = (
+    ("replicas", False, "det"),
+    ("homed_tasks", False, "det"),
+    ("spilled_out", True, "det"),
+    ("wan_bytes_out", True, "det"),
+    ("usd_per_day", True, "usd"),
+)
+
+
+def check_federation(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Federation baselines: per-region routing/WAN/price rows, the gate
+    block (WAN byte totals and USD/traj are costs, DiLoCo reduction and
+    outage-throughput fraction are higher-is-better), and the hard wall
+    budget."""
+    problems: list[str] = []
+    usd_tol = max(tol, KERNEL_WALL_TOL_FLOOR)
+    base_rows = base.get("regions", [])
+    if not base_rows:
+        problems.append("MALFORMED baseline: no region rows")
+    fresh_rows = {row["name"]: row for row in fresh.get("regions", [])}
+    for row in base_rows:
+        other = fresh_rows.get(row["name"])
+        if other is None:
+            problems.append(f"MISSING region[{row['name']}]: not in fresh results")
+            continue
+        for metric, lower_is_better, band in FEDERATION_REGION_METRICS:
+            if metric not in row:
+                continue
+            name = f"{metric}[{row['name']}]"
+            if metric not in other:
+                problems.append(f"MISSING {name}: not in fresh results")
+                continue
+            problems += compare_value(
+                name,
+                row[metric],
+                other[metric],
+                usd_tol if band == "usd" else tol,
+                lower_is_better=lower_is_better,
+            )
+    base_gate = base.get("gate", {})
+    fresh_gate = fresh.get("gate", {})
+    if not base_gate:
+        problems.append("MALFORMED baseline: no gate block")
+    for name, expected in base_gate.items():
+        if name not in fresh_gate:
+            problems.append(f"MISSING gate.{name}: not in fresh results")
+            continue
+        got = fresh_gate[name]
+        if isinstance(expected, bool):
+            if got != expected:
+                problems.append(
+                    f"REGRESSION gate.{name}: expected {expected}, got {got}"
+                )
+        else:
+            band = usd_tol if "usd" in name else tol
+            problems += compare_value(
+                f"gate.{name}",
+                float(expected),
+                float(got),
+                band,
+                lower_is_better=gate_metric_is_cost(name),
+            )
+    budget = base.get("wall_budget_s")
+    if budget is not None:
+        wall = fresh.get("wall_seconds")
+        if wall is None:
+            problems.append("MISSING wall_seconds: not in fresh results")
+        elif wall > budget:
+            problems.append(
+                f"REGRESSION wall_seconds: {wall:.1f}s exceeds the "
+                f"baseline wall budget {budget:.1f}s"
+            )
+    return problems
+
+
 def check_gate(base: dict, fresh: dict, tol: float) -> list[str]:
     problems: list[str] = []
     base_gate = base.get("gate", {})
@@ -377,6 +461,8 @@ def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
         return check_dataplane(baseline, fresh, tol)
     if "scenarios" in baseline:
         return check_multitenant(baseline, fresh, tol)
+    if "regions" in baseline:
+        return check_federation(baseline, fresh, tol)
     if "gate" in baseline:
         return check_e2e(baseline, fresh, tol)
     return ["MALFORMED baseline: neither engine rows nor a gate block"]

@@ -14,7 +14,7 @@ time and USD/replica-day gauges computed from the Table-1 price model.
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
 from repro.cluster.host import Host, HostDemand
@@ -60,10 +60,16 @@ class Cluster:
         autoscaler: Optional[AutoscalerConfig] = None,
         telemetry: Optional[Telemetry] = None,
         sample_interval_vs: float = 10.0,
+        fault_profile: Optional[Callable[[Host], Optional[dict]]] = None,
     ):
         self.seed = seed
         self.node_prefix = node_prefix
         self.faults = faults
+        # per-host fault-rate override: called with the Host at pool build
+        # time; a dict return replaces DEFAULT_RATES for that host's
+        # injector (regions use this to give spot-tier hosts a preempt
+        # rate), None keeps the defaults. Seeds are unchanged either way.
+        self.fault_profile = fault_profile
         self.latency = latency
         self.telemetry = telemetry or Telemetry()
         self.sample_interval_vs = sample_interval_vs
@@ -101,7 +107,14 @@ class Cluster:
         """One pre-warmed pool on ``host`` (its placement already holds)."""
         i = self._pool_seq
         self._pool_seq += 1
-        injector = FaultInjector(seed=stable_seed(self.seed, "faults", i))
+        rates = None
+        if self.fault_profile is not None:
+            rates = self.fault_profile(host)
+        if rates is None:
+            injector = FaultInjector(seed=stable_seed(self.seed, "faults", i))
+        else:
+            injector = FaultInjector(
+                rates=rates, seed=stable_seed(self.seed, "faults", i))
         if not self.faults:
             injector = FaultInjector(enabled=False)
         pool = RunnerPool(

@@ -80,6 +80,10 @@ class Host:
         self.spec = spec
         self.store = store
         self.demand = demand or HostDemand()
+        # regional price-sheet scale: a Region prices its hosts off the
+        # Table-1 model times this factor (regional market premium, and a
+        # deep discount on spot/preemptible tiers). 1.0 = the spec price.
+        self.price_multiplier = 1.0
         self.sim = SimHost(HostSpec(cores=spec.cores, ram_gb=float(spec.ram_gb)))
         self.disk_budget_bytes = spec.disk_gb << 30
         self.placed = 0  # replicas reserved on this host (incl. booting)
@@ -148,5 +152,6 @@ class Host:
         }
 
     def price_per_day(self) -> float:
-        """USD/day for this machine (the Table-1 price model, live)."""
-        return self.spec.price_per_day()
+        """USD/day for this machine (the Table-1 price model, live),
+        scaled by the regional/spot price multiplier."""
+        return self.spec.price_per_day() * self.price_multiplier

@@ -23,6 +23,10 @@ class FaultType(enum.Enum):
     CRASH = "crash"
     HANG = "hang"
     SILENT = "silent"
+    # spot/preemptible capacity reclaimed mid-episode: the VM is *gone*,
+    # not merely crashed — recovery is an L2 respawn from the base image
+    # (possibly on another host or region), never an in-place L1 repair
+    PREEMPT = "preempt"
 
 
 # step-retryable faults (paper: retry covers connection/timeout/runtime)
@@ -59,6 +63,16 @@ DEFAULT_RATES = {
     FaultType.CRASH: 0.002,
     FaultType.HANG: 0.001,
 }
+
+
+def spot_rates(preempt_rate: float, *, base: Optional[dict] = None) -> dict:
+    """Rate table for a spot/preemptible tier: the base software-fault
+    rates plus a per-step reclaim probability. The preempt entry rides
+    through the same ``__post_init__`` validation as every other rate
+    (negative or rates summing past 1.0 raise)."""
+    rates = dict(DEFAULT_RATES if base is None else base)
+    rates[FaultType.PREEMPT] = preempt_rate
+    return rates
 
 
 # floating-point slack for the sum-of-rates validation: a rate vector

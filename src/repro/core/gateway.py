@@ -359,23 +359,37 @@ class Gateway:
                     else self._loop.now + timeout)
         while True:
             candidates = 0
-            for attempt, node in enumerate(self._route_order(task_id)):
-                if node in exclude or not self.status[node].healthy:
-                    continue
-                candidates += 1
-                pool = self.pools[node]
-                if pool.n_free == 0:
-                    # lock-free skip: the event loop is single-threaded,
-                    # so an empty free list cannot refill under us — no
-                    # need to pay the pool lock just to learn it is empty
-                    # (the all-busy sweep is O(nodes) on every wakeup)
-                    continue
-                r = pool.acquire_nowait(task_id)
-                if r is not None:
-                    if attempt > 0:
-                        self.failovers += 1
-                    self._record_wait(self._loop.now - t0, tenant)
-                    return node, r
+            if not any(p.n_free for p in self.pools.values()):
+                # saturation fast path: release() wakes *every* parked
+                # waiter (exclusion-aware, see runner_pool), so under a
+                # deep backlog most wakeups find the one freed runner
+                # already consumed. With zero free runners no acquire can
+                # succeed and routing order is moot — just count healthy
+                # candidates (for the nothing-can-help early return) and
+                # skip the load-score sort. Bit-identical to the full
+                # scan, which skips every empty pool anyway.
+                for node in self._node_ring:
+                    if node not in exclude and self.status[node].healthy:
+                        candidates += 1
+            else:
+                for attempt, node in enumerate(self._route_order(task_id)):
+                    if node in exclude or not self.status[node].healthy:
+                        continue
+                    candidates += 1
+                    pool = self.pools[node]
+                    if pool.n_free == 0:
+                        # lock-free skip: the event loop is single-
+                        # threaded, so an empty free list cannot refill
+                        # under us — no need to pay the pool lock just to
+                        # learn it is empty (the all-busy sweep is
+                        # O(nodes) on every wakeup)
+                        continue
+                    r = pool.acquire_nowait(task_id)
+                    if r is not None:
+                        if attempt > 0:
+                            self.failovers += 1
+                        self._record_wait(self._loop.now - t0, tenant)
+                        return node, r
             if candidates == 0:
                 # nothing a release could fix: every node is excluded or
                 # unhealthy — report immediately so the caller can clear

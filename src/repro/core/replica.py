@@ -171,6 +171,12 @@ class SimOSReplica:
                 raise ReplicaError(
                     fault, f"{self.replica_id} (>{self.latency.hang_timeout_s}s)"
                 )
+            if fault == FaultType.PREEMPT:
+                # spot reclaim: the allocation is revoked under the VM —
+                # same crash state, but the manager recovers it at L2
+                # (fresh respawn), never in place
+                self.crash()
+                raise ReplicaError(fault, f"{self.replica_id} (spot reclaim)")
             if fault == FaultType.SILENT:
                 # succeeds but corrupts the observation (untuned kernel limits)
                 self.step_count += 1

@@ -97,22 +97,30 @@ class ReplicaStateManager:
                         self.state = ManagerState.EVALUATING
                     return obs, rew, done, info, total
                 except ReplicaError as e:
-                    if e.fault in (FaultType.CRASH, FaultType.HANG):
+                    if e.fault in (FaultType.CRASH, FaultType.HANG,
+                                   FaultType.PREEMPT):
                         # charge the hang timeout before detection
                         if e.fault == FaultType.HANG:
                             total += self.replica.latency.hang_timeout_s
-                        total += self._recover()
+                        if e.fault == FaultType.PREEMPT:
+                            # the allocation is gone with the VM: recovery
+                            # is an L2 respawn from base, not an in-place
+                            # L1 repair (the cloud's reclaim notice makes
+                            # detection immediate — no hang timeout)
+                            total += self._recover(layer="l2")
+                        else:
+                            total += self._recover()
                         self.stats.virtual_seconds += total
                         self.state = ManagerState.FAILED
                         self.stats.failures += 1
                         raise TaskAborted(self.replica.replica_id,
-                                          total) from e
+                                          total, fault=e.fault) from e
                     if not self.retry.should_retry(e.fault, attempt):
                         self.state = ManagerState.FAILED
                         self.stats.failures += 1
                         self.stats.virtual_seconds += total
                         raise TaskAborted(self.replica.replica_id,
-                                          total) from e
+                                          total, fault=e.fault) from e
                     backoff = self.retry.backoff(attempt)
                     total += backoff
                     attempt += 1
@@ -179,12 +187,18 @@ class ReplicaStateManager:
 
 
 class TaskAborted(RuntimeError):
-    """Raised when a runner fails permanently; the pool reassigns the task."""
+    """Raised when a runner fails permanently; the pool reassigns the task.
 
-    def __init__(self, replica_id: str, virtual_seconds: float):
+    ``fault`` carries the terminal fault class (when known) so upper
+    layers can attribute the abort — e.g. the rollout engine counts
+    spot preemptions separately from crash/hang aborts."""
+
+    def __init__(self, replica_id: str, virtual_seconds: float,
+                 fault: Optional[FaultType] = None):
         super().__init__(f"task aborted on {replica_id}")
         self.replica_id = replica_id
         self.virtual_seconds = virtual_seconds
+        self.fault = fault
 
 
 # --------------------------------------------------------------- baselines

@@ -68,6 +68,16 @@ class Telemetry:
         with self._lock:
             return self._counters.get(name, 0)
 
+    def counters(self, prefix: str) -> dict:
+        """Counters whose name starts with ``prefix``, keyed by the
+        suffix after it (e.g. ``counters("wan_bytes:")`` → per-link WAN
+        byte totals), sorted for stable output."""
+        with self._lock:
+            matched = {k[len(prefix):]: v
+                       for k, v in self._counters.items()
+                       if k.startswith(prefix)}
+        return {k: matched[k] for k in sorted(matched)}
+
     def gauge_value(self, name: str, default: float = 0.0) -> float:
         with self._lock:
             return self._gauges.get(name, default)

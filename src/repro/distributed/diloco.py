@@ -72,6 +72,12 @@ def outer_sync(params, outer_state, cfg: DiLoCoConfig, *,
     return new_params, {"anchor": new_anchor, "momentum": new_mom}
 
 
+def param_count(params) -> int:
+    """Total elements in a parameter tree — the ``n_params`` that the
+    byte accounting below (and the federation's metered WAN links) use."""
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
 def cross_pod_bytes_per_cycle(n_params: int, cfg: DiLoCoConfig) -> dict:
     """Collective-bytes accounting: per-step all-reduce vs DiLoCo cycle."""
     per_step_allreduce = 2 * n_params * 2           # ring, bf16

@@ -1,0 +1,40 @@
+"""Geo-distributed federation: a Region layer above the Cluster.
+
+Regions are full clusters with their own price sheets (regional
+multipliers, spot/preemptible tiers with mid-episode reclaim); a
+``Federation`` routes episodes region-locally with WAN-priced spill on
+brownout or exhaustion, ships spilled trajectories home over byte-
+metered ``WanLink``s, and synchronizes per-region learner replicas with
+DiLoCo outer steps that move ~H× fewer cross-region bytes than per-step
+delta streaming. A single-region federation is bit-identical to the
+bare ``Cluster`` stack.
+"""
+from repro.federation.federation import (
+    CONTROL_BYTES,
+    FederatedGateway,
+    Federation,
+)
+from repro.federation.learner import FederatedLearners, RegionLearner
+from repro.federation.region import Region, RegionSpec
+from repro.federation.wan import (
+    WAN_CLASSES,
+    WanLink,
+    WanProfile,
+    WanTopology,
+    trajectory_bytes,
+)
+
+__all__ = [
+    "CONTROL_BYTES",
+    "FederatedGateway",
+    "Federation",
+    "FederatedLearners",
+    "RegionLearner",
+    "Region",
+    "RegionSpec",
+    "WAN_CLASSES",
+    "WanLink",
+    "WanProfile",
+    "WanTopology",
+    "trajectory_bytes",
+]

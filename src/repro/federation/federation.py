@@ -1,0 +1,406 @@
+"""Geo-distributed federation: Regions + WAN-aware routing above them.
+
+A :class:`Federation` owns a set of :class:`~repro.federation.region.Region`
+clusters and presents the same duck-typed surface the
+:class:`~repro.rollout.engine.RolloutEngine` already accepts for a
+``Cluster``: ``.gateway`` (acquire/release/attach), ``attach_loop`` /
+``detach_loop``, and the optional ``deliver_trajectory`` hook. That makes
+geo-distribution a constructor swap — ``RolloutEngine(federation, ...)``
+— with no engine changes beyond the hook.
+
+Routing policy (the tentpole's WAN-awareness):
+
+- **episodes stay in-region** — every task has a *home* region (explicit
+  assignment via :meth:`assign` / ``task["region"]``, else a stable hash
+  of the task id), and the federated acquire tries the home gateway
+  first. A task served at home pays zero WAN cost — byte-identical to
+  running the home cluster alone.
+- **spill on brownout or exhaustion** — routing is decided when the
+  acquire arrives: a *dark* home (regional partition) routes to the
+  cheapest reachable peer (free capacity preferred; USD/replica-day
+  with a deterministic hash tie-break), while a healthy home spills
+  only when some peer has *idle* runners at that moment — parking at
+  home is free, so burning WAN money to stand in a remote queue is
+  never rational. Each cross-region route pays one control-plane round
+  trip on the metered WAN; the task then parks on the chosen region's
+  condition queue for its full remaining timeout, so a saturated
+  federation costs zero polling wakeups.
+- **trajectories ship home** — an episode served by a peer region ships
+  its finished trajectory back over the WAN (``trajectory_bytes``,
+  vec-timer delivery at the transfer's virtual arrival), so the home
+  region's learner always ingests its own tasks' data and the bytes are
+  metered where they physically flow.
+
+With a single region every call path delegates verbatim to the regional
+gateway — same generators, same timeouts, same condition-queue order —
+so ``federation=off`` is bit-identical to today's ``Cluster`` stack.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Collection, Optional, Sequence
+
+from repro.core.event_loop import EventLoop, Sleep
+from repro.core.replica import LatencyModel
+from repro.core.runner_pool import Runner
+from repro.core.seeding import stable_seed
+from repro.core.telemetry import Telemetry
+from repro.federation.region import Region, RegionSpec
+from repro.federation.wan import WanTopology, trajectory_bytes
+
+# bytes of one cross-region control-plane round trip (acquire RPC,
+# lease bookkeeping) — charged per spill attempt
+CONTROL_BYTES = 2048
+
+
+class Federation:
+    """Regions + WAN + federated routing, behind a Cluster-shaped surface."""
+
+    def __init__(self, specs: Sequence[RegionSpec], *, seed: int = 0,
+                 telemetry: Optional[Telemetry] = None,
+                 wan: Optional[WanTopology] = None,
+                 latency: Optional[LatencyModel] = None,
+                 faults: bool = True,
+                 spill_after_vs: float = 5.0,
+                 control_bytes: int = CONTROL_BYTES):
+        assert specs, "a federation needs at least one region"
+        names = [s.name for s in specs]
+        assert len(set(names)) == len(names), f"duplicate regions: {names}"
+        self.seed = seed
+        self.telemetry = telemetry or Telemetry()
+        self.spill_after_vs = spill_after_vs
+        self.control_bytes = control_bytes
+        self.regions = [
+            Region(s,
+                   seed=(s.seed if s.seed is not None
+                         else stable_seed(seed, "region", s.name)),
+                   telemetry=self.telemetry, latency=latency, faults=faults)
+            for s in specs
+        ]
+        self._by_name = {r.name: r for r in self.regions}
+        self._names = names
+        self.wan = wan or WanTopology.seeded(
+            names, seed=stable_seed(seed, "wan"), telemetry=self.telemetry)
+        self._home_by_task: dict[str, str] = {}
+        self._loop: Optional[EventLoop] = None
+        self.gateway = FederatedGateway(self)
+
+    # -------------------------------------------------------------- lookup
+    def region(self, name: str) -> Region:
+        return self._by_name[name]
+
+    def home_region(self, task) -> Region:
+        """Resolve a task's home region (dict or task-id string).
+
+        Explicit assignments (:meth:`assign` / :meth:`set_home`) win;
+        otherwise a ``task["region"]`` stamp; otherwise a stable hash of
+        the task id — the same resolution on the acquire path (which only
+        sees the id) and the delivery path (which sees the dict), so a
+        task's home never shifts between lease and commit."""
+        if isinstance(task, dict):
+            tid = task["task_id"]
+            name = self._home_by_task.get(tid) or task.get("region")
+        else:
+            tid = task
+            name = self._home_by_task.get(tid)
+        if name is None:
+            name = self._names[
+                stable_seed(self.seed, "home", tid) % len(self._names)]
+        return self._by_name[name]
+
+    def set_home(self, task_id: str, region: str) -> None:
+        assert region in self._by_name, region
+        self._home_by_task[task_id] = region
+
+    def assign(self, tasks: Sequence[dict],
+               regions: Optional[Sequence[str]] = None) -> None:
+        """Pin tasks' home regions (round-robin over ``regions`` or all
+        regions, in order) and stamp ``task["region"]`` for the record."""
+        names = list(regions or self._names)
+        for i, t in enumerate(tasks):
+            name = names[i % len(names)]
+            t["region"] = name
+            self.set_home(t["task_id"], name)
+
+    def region_of_node(self, node_id: str) -> Region:
+        """Owner of a node id, by the longest matching node prefix."""
+        best = None
+        for r in self.regions:
+            prefix = r.cluster.node_prefix
+            if node_id.startswith(prefix):
+                if best is None or len(prefix) > len(best.cluster.node_prefix):
+                    best = r
+        if best is None:
+            raise KeyError(f"node {node_id!r} belongs to no region")
+        return best
+
+    # ------------------------------------------------------------ brownout
+    def brownout(self, name: str, *, kill_running: bool = True) -> int:
+        """Partition a region: mark it dark and (by default) crash every
+        runner it is serving, so in-flight episodes abort and fail over.
+        Returns the number of runners crashed."""
+        region = self._by_name[name]
+        region.dark = True
+        self.telemetry.count("region_brownouts")
+        killed = 0
+        if kill_running:
+            for pool in region.pools:
+                for r in pool._all.values():
+                    r.manager.replica.crash()
+                    killed += 1
+        return killed
+
+    def restore(self, name: str) -> None:
+        """Clear a brownout: the region is routable again (its local heal
+        machinery has been repairing crashed runners all along)."""
+        self._by_name[name].dark = False
+        self.telemetry.count("region_restores")
+
+    # ---------------------------------------------------------- spill order
+    def spill_target(self, task_id: str, home: Region, *,
+                     require_free: bool) -> Optional[Region]:
+        """Cheapest reachable peer region for one spill attempt.
+
+        Peers with free runner capacity always win (cheapest among them
+        by USD/replica-day, deterministic per-task hash tie-break so
+        equal-priced peers share spill load) — spilling into a queue
+        while another region has idle runners would strand capacity.
+        When *no* peer has free capacity, ``require_free`` decides:
+        demand it (the healthy-home case, where remote queueing can
+        never beat parking at home — return None) or fall back to the
+        cheapest reachable queue (the dark-home case, where waiting
+        somewhere remote is the only option)."""
+        def tie(r: Region) -> int:
+            h = hashlib.blake2b(f"{task_id}/{r.name}".encode(),
+                                digest_size=8).digest()
+            return int.from_bytes(h, "little")
+
+        cands = [r for r in self.regions
+                 if r is not home and r.reachable()]
+        free = [r for r in cands if r.free_runners() > 0]
+        if free:
+            cands = free
+        elif require_free:
+            return None
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (round(r.usd_per_replica_day(), 9),
+                                         tie(r)))
+
+    # ----------------------------------------------------- trajectory plane
+    def deliver_trajectory(self, task: dict, result, traj, commit) -> bool:
+        """Rollout-engine hook: route a finished trajectory to its commit.
+
+        Served at home (or no loop attached): return False — the engine
+        commits inline, bit-identical to the non-federated path. Served by
+        a peer: meter the trajectory over the WAN and schedule the commit
+        at its virtual arrival; returns True (the engine must not commit
+        inline)."""
+        if self._loop is None or not result.nodes:
+            return False
+        serving = self.region_of_node(result.nodes[-1])
+        home = self.home_region(task)
+        if serving is home:
+            return False
+        link = self.wan.link(serving.name, home.name)
+        self.telemetry.count("wan_trajectories")
+        link.deliver(trajectory_bytes(traj), "traj", commit)
+        return True
+
+    # ------------------------------------------------------------ lifecycle
+    def attach_loop(self, loop: EventLoop) -> None:
+        self._loop = loop
+        for r in self.regions:
+            r.attach_loop(loop)
+        if len(self.regions) > 1:
+            # single-region federations never touch the WAN; skipping the
+            # timer family keeps the event stream identical to a bare
+            # Cluster run
+            self.wan.attach_loop(loop)
+
+    def detach_loop(self) -> None:
+        for r in self.regions:
+            r.detach_loop()
+        self.wan.detach_loop()
+        self._loop = None
+
+    def close(self) -> None:
+        self.detach_loop()
+        for r in self.regions:
+            r.close()
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def n_replicas(self) -> int:
+        return sum(r.n_replicas for r in self.regions)
+
+    def price_per_day(self) -> float:
+        return sum(r.price_per_day() for r in self.regions)
+
+    def replica_seconds(self) -> float:
+        return sum(r.cluster.replica_seconds() for r in self.regions)
+
+    def health(self) -> dict:
+        return {r.name: {"dark": r.dark,
+                         "replicas": r.n_replicas,
+                         "free": r.free_runners(),
+                         "usd_per_day": round(r.price_per_day(), 2)}
+                for r in self.regions}
+
+
+class FederatedGateway:
+    """The Gateway surface the rollout engine drives, federated.
+
+    One region: every method delegates verbatim — same generator, same
+    timeout, same position in the regional condition queue — so a
+    single-region federation is bit-identical to the bare cluster.
+    Multiple regions: home-first acquire with WAN-priced spill."""
+
+    def __init__(self, fed: Federation):
+        self.fed = fed
+
+    # pools view: the engine indexes pools[node] for latency_scale
+    @property
+    def pools(self) -> dict:
+        if len(self.fed.regions) == 1:
+            return self.fed.regions[0].gateway.pools
+        merged = {}
+        for r in self.fed.regions:
+            merged.update(r.gateway.pools)
+        return merged
+
+    @property
+    def failovers(self) -> int:
+        return sum(r.gateway.failovers for r in self.fed.regions)
+
+    def drain_wait_samples(self) -> list:
+        out = []
+        for r in self.fed.regions:
+            out.extend(r.gateway.drain_wait_samples())
+        return out
+
+    # ------------------------------------------------------------- acquire
+    def acquire_ev(self, task_id: str, timeout: Optional[float] = 1.0,
+                   exclude: Collection[str] = (),
+                   tenant: Optional[str] = None):
+        """Event-loop acquire: route once, then park — never poll.
+
+        The spill decision is made when the acquire arrives (and again
+        only if a park ends without a runner): a *dark* home routes to
+        the cheapest reachable peer (free capacity preferred); a healthy
+        home spills only when some peer has idle runners at that moment
+        — otherwise the task parks on the home region's condition queue
+        for the full remaining timeout, exactly like a plain gateway
+        acquire, so a saturated-but-healthy federation costs zero extra
+        wakeups, zero WAN bytes, and keeps the FIFO handoff on release.
+        Each cross-region routing pays one control round trip on the
+        metered WAN; every successful spill is counted (global + per
+        region pair)."""
+        fed = self.fed
+        if len(fed.regions) == 1:
+            return (yield from fed.regions[0].gateway.acquire_ev(
+                task_id, timeout=timeout, exclude=exclude, tenant=tenant))
+        loop = fed._loop
+        assert loop is not None, "attach_loop() before acquire_ev()"
+        home = fed.home_region(task_id)
+        deadline = None if timeout is None else loop.now + timeout
+        while True:
+            remaining = None if deadline is None else deadline - loop.now
+            if remaining is not None and remaining <= 0:
+                return None
+            round_t0 = loop.now
+            if home.dark:
+                target = fed.spill_target(task_id, home, require_free=False)
+            elif home.free_runners() > 0:
+                target = home
+            else:
+                # exhaustion spill: home is full right now, so take idle
+                # capacity elsewhere if any exists — but never trade the
+                # free home queue for a busy peer's queue plus WAN money
+                target = fed.spill_target(task_id, home, require_free=True)
+                if target is None:
+                    target = home
+            if target is not None:
+                if target is not home:
+                    # pay the cross-region control round trip, honestly,
+                    # on the virtual clock, then contend remotely
+                    link = fed.wan.link(home.name, target.name)
+                    cost = link.send(fed.control_bytes, "control")
+                    fed.telemetry.count("spill_attempts")
+                    if cost > 0:
+                        yield Sleep(cost)
+                    remaining = (None if deadline is None
+                                 else deadline - loop.now)
+                    if remaining is not None and remaining <= 0:
+                        return None
+                got = yield from target.gateway.acquire_ev(
+                    task_id, timeout=remaining, exclude=exclude,
+                    tenant=tenant)
+                if got is not None:
+                    if target is not home:
+                        fed.telemetry.count("episodes_spilled")
+                        fed.telemetry.count(
+                            f"episodes_spilled:{home.name}->{target.name}")
+                    return got
+            if loop.now == round_t0:
+                # no virtual time passed (home dark with no reachable
+                # peer, or an instant all-unhealthy return): park one
+                # spill interval instead of spinning the clock in place
+                t = (fed.spill_after_vs if remaining is None
+                     else min(fed.spill_after_vs, remaining))
+                if t <= 0:
+                    return None
+                yield Sleep(t)
+
+    def acquire(self, task_id: str, timeout: Optional[float] = 1.0,
+                exclude: Collection[str] = ()):
+        """Threaded acquire (parity surface): home first, then reachable
+        peers in spill order. No WAN pricing — wall-clock mode has no
+        virtual clock to charge; the event path is the measured one."""
+        fed = self.fed
+        home = fed.home_region(task_id)
+        order = [home] if not home.dark else []
+        seen = {home.name}
+        while True:
+            nxt = fed.spill_target(task_id, home, require_free=False)
+            if nxt is None or nxt.name in seen:
+                break
+            order.append(nxt)
+            seen.add(nxt.name)
+            break  # one spill candidate is enough for the threaded path
+        for region in order:
+            got = region.gateway.acquire(task_id, timeout=timeout,
+                                         exclude=exclude)
+            if got is not None:
+                return got
+        return None
+
+    # ------------------------------------------------------------- release
+    def release(self, node: str, runner: Runner, **kw) -> float:
+        return self.fed.region_of_node(node).gateway.release(
+            node, runner, **kw)
+
+    # ----------------------------------------------------------- lifecycle
+    def attach_loop(self, loop: EventLoop, **kw) -> None:
+        # engines holding only the gateway still bind the whole federation
+        self.fed.attach_loop(loop)
+
+    def detach_loop(self) -> None:
+        self.fed.detach_loop()
+
+    def stop(self) -> None:
+        for r in self.fed.regions:
+            r.gateway.stop()
+
+    def check_now(self) -> dict:
+        report = {}
+        for r in self.fed.regions:
+            report.update(r.gateway.check_now())
+        return report
+
+    def healthy_nodes(self) -> list[str]:
+        out = []
+        for r in self.fed.regions:
+            if not r.dark:
+                out.extend(r.gateway.healthy_nodes())
+        return out

@@ -1,0 +1,224 @@
+"""Per-region learner replicas synchronized by DiLoCo outer steps.
+
+Each region runs its own ingest → replay → inner-step loop against
+region-local rollouts (a :class:`RegionLearner` wraps one
+:class:`~repro.pipeline.learner.LearnerLoop`); every ``H`` inner steps
+the regions exchange int8-compressed parameter *deltas* through the
+federation's metered WAN links and apply one shared Nesterov outer
+update (:mod:`repro.distributed.diloco` math, cross-region instead of
+cross-pod).
+
+Two deliberate design points:
+
+- **one trainer, many regions** — every region's learner shares a single
+  ``PPOTrainer`` instance and swaps its ``(params, opt_state)`` in and
+  out around each step. The jitted train step and the ingest closures
+  are pure in those arguments, so N regions cost exactly one XLA
+  compilation instead of N.
+- **bit-identical anchors** — each region computes its own delta; the
+  deltas are averaged once and the *same* outer update is applied to
+  every region's anchor. Anchors start identical (one init snapshot) and
+  receive identical updates, so after every sync the regions' anchors —
+  and their post-sync params — agree bit for bit, with no parameter
+  broadcast on the wire beyond the delta exchange itself.
+
+``stream_sync`` is the measured baseline the DiLoCo claim is judged
+against: per-inner-step bf16 delta streaming (ring all-reduce bytes),
+metered over the same WAN links, kind ``"stream"`` vs ``"diloco"``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.telemetry import Telemetry
+from repro.data.replay_buffer import ReplayBuffer
+from repro.distributed.collectives import compress_roundtrip
+from repro.distributed.diloco import (
+    DiLoCoConfig,
+    init_outer_state,
+    param_count,
+)
+from repro.federation.wan import WanTopology
+from repro.pipeline.learner import LearnerConfig, LearnerLoop
+from repro.pipeline.policy_store import PolicyVersionStore
+
+
+class RegionLearner:
+    """One region's learner replica over a shared trainer.
+
+    Holds the region's own ``(params, opt_state)`` and swaps them into
+    the shared trainer around each ``LearnerLoop.step()`` — the loop,
+    replay buffer, and policy store are region-local; only the compiled
+    step is shared."""
+
+    def __init__(self, name: str, trainer, replay: ReplayBuffer,
+                 store: PolicyVersionStore, *,
+                 cfg: Optional[LearnerConfig] = None,
+                 telemetry: Optional[Telemetry] = None):
+        self.name = name
+        self.trainer = trainer
+        self.replay = replay
+        self.store = store
+        self.loop = LearnerLoop(trainer, replay, store, cfg=cfg,
+                                telemetry=telemetry)
+        # region-local copies of the shared trainer's initial state: every
+        # region starts from the same snapshot (the DiLoCo anchor)
+        self.params = jax.tree.map(lambda p: p, trainer.params)
+        self.opt_state = trainer.opt.init(self.params)
+        self.inner_steps = 0
+
+    def ready(self) -> bool:
+        return self.loop.ready()
+
+    def step(self) -> Optional[dict]:
+        """One inner step on this region's data, under its own params."""
+        self.trainer.params = self.params
+        self.trainer.opt_state = self.opt_state
+        try:
+            metrics = self.loop.step()
+        finally:
+            self.params = self.trainer.params
+            self.opt_state = self.trainer.opt_state
+        if metrics is not None:
+            self.inner_steps += 1
+        return metrics
+
+    def set_params(self, params) -> None:
+        """Install post-sync params (inner optimizer state is kept, as in
+        DiLoCo: the outer step moves the anchor, not Adam's moments)."""
+        self.params = params
+        self.store.publish(params)
+
+    def losses(self) -> list[float]:
+        return self.loop.losses
+
+    def loss_trend(self) -> dict:
+        return self.loop.loss_trend()
+
+
+class FederatedLearners:
+    """The cross-region sync plane over a set of ``RegionLearner``s."""
+
+    def __init__(self, learners: list[RegionLearner], *,
+                 cfg: Optional[DiLoCoConfig] = None,
+                 wan: Optional[WanTopology] = None,
+                 telemetry: Optional[Telemetry] = None):
+        assert learners, "need at least one regional learner"
+        self.learners = learners
+        self.cfg = cfg or DiLoCoConfig()
+        self.wan = wan
+        self.telemetry = telemetry or Telemetry()
+        self.n_params = param_count(learners[0].params)
+        # one outer state per region, initialized from each region's own
+        # (identical) start params — anchors are bit-identical from step 0
+        self.outer = {lr.name: init_outer_state(lr.params)
+                      for lr in learners}
+        self.syncs = 0
+
+    # ------------------------------------------------------------- metering
+    def _meter_ring(self, nbytes_per_region: int, kind: str) -> float:
+        """Charge one ring exchange: every region ships its payload to its
+        ring neighbor. Returns the slowest link's virtual cost (the
+        barrier time of the synchronous exchange)."""
+        names = [lr.name for lr in self.learners]
+        if self.wan is None or len(names) < 2:
+            return 0.0
+        worst = 0.0
+        for i, src in enumerate(names):
+            dst = names[(i + 1) % len(names)]
+            cost = self.wan.link(src, dst).send(nbytes_per_region, kind)
+            worst = max(worst, cost)
+        return worst
+
+    def diloco_bytes_per_region(self) -> int:
+        """Wire bytes one region ships per DiLoCo outer sync."""
+        return self.n_params * (1 if self.cfg.compress_int8 else 4)
+
+    def stream_bytes_per_region(self) -> int:
+        """Wire bytes one region ships per *inner step* under per-step
+        delta streaming (ring all-reduce, bf16): the baseline."""
+        return 2 * self.n_params * 2
+
+    # ----------------------------------------------------------- sync modes
+    def outer_sync(self) -> float:
+        """One DiLoCo outer step across regions; returns the WAN barrier
+        cost in virtual seconds.
+
+        Per region: ``delta = anchor - params`` (int8 round-tripped when
+        ``compress_int8`` — compression error is *inside* the averaged
+        quantity, exactly what lands on the wire). Deltas are averaged,
+        then every region applies the identical Nesterov outer update to
+        its own anchor. Identical anchors + identical updates keep the
+        regions' anchors bit-for-bit equal after every sync."""
+        cfg = self.cfg
+        deltas = []
+        for lr in self.learners:
+            st = self.outer[lr.name]
+            delta = jax.tree.map(
+                lambda a, p: a - p.astype(jnp.float32),
+                st["anchor"], lr.params)
+            if cfg.compress_int8:
+                delta = jax.tree.map(compress_roundtrip, delta)
+            deltas.append(delta)
+        n = float(len(deltas))
+        mean = jax.tree.map(lambda *ds: sum(ds) / n, *deltas)
+        cost = self._meter_ring(self.diloco_bytes_per_region(), "diloco")
+        for lr in self.learners:
+            st = self.outer[lr.name]
+            m_new = jax.tree.map(
+                lambda m, d: cfg.outer_momentum * m + d,
+                st["momentum"], mean)
+            if cfg.nesterov:
+                step_dir = jax.tree.map(
+                    lambda d, m: d + cfg.outer_momentum * m, mean, m_new)
+            else:
+                step_dir = m_new
+            anchor_new = jax.tree.map(
+                lambda a, s: a - cfg.outer_lr * s, st["anchor"], step_dir)
+            self.outer[lr.name] = {"anchor": anchor_new, "momentum": m_new}
+            lr.set_params(jax.tree.map(
+                lambda a, p: a.astype(p.dtype), anchor_new, lr.params))
+        self.syncs += 1
+        self.telemetry.count("diloco_outer_syncs")
+        return cost
+
+    def stream_sync(self) -> float:
+        """Per-step baseline: average raw params across regions every
+        inner step, ring all-reduce bytes (bf16 both directions) metered
+        per region. Returns the WAN barrier cost."""
+        n = float(len(self.learners))
+        mean = jax.tree.map(
+            lambda *ps: sum(p.astype(jnp.float32) for p in ps) / n,
+            *[lr.params for lr in self.learners])
+        cost = self._meter_ring(self.stream_bytes_per_region(), "stream")
+        for lr in self.learners:
+            lr.set_params(jax.tree.map(
+                lambda m, p: m.astype(p.dtype), mean, lr.params))
+        self.telemetry.count("stream_syncs")
+        return cost
+
+    def maybe_sync(self) -> Optional[float]:
+        """DiLoCo cadence helper: outer-sync when every region has run
+        ``inner_steps`` more inner steps since the last sync."""
+        due = (self.syncs + 1) * self.cfg.inner_steps
+        if all(lr.inner_steps >= due for lr in self.learners):
+            return self.outer_sync()
+        return None
+
+    # ------------------------------------------------------------ reporting
+    def anchors_equal(self) -> bool:
+        """True when every region's anchor is bit-identical (the sync
+        invariant the tests pin)."""
+        ref = self.outer[self.learners[0].name]["anchor"]
+        for lr in self.learners[1:]:
+            other = self.outer[lr.name]["anchor"]
+            leaves = zip(jax.tree.leaves(ref), jax.tree.leaves(other))
+            if not all(bool(jnp.array_equal(a, b)) for a, b in leaves):
+                return False
+        return True
+
+
+__all__ = ["RegionLearner", "FederatedLearners", "DiLoCoConfig"]

@@ -1,0 +1,135 @@
+"""A Region: one geographic cluster with its own price sheet and spot tier.
+
+Each region wraps a full :class:`repro.cluster.Cluster` — hosts, placer,
+gateway, recovery ladders, autoscaler hooks — and adds the geo-layer
+state the federation routes on:
+
+- **regional price sheet** — every host's Table-1 price is scaled by the
+  region's ``price_multiplier`` (regional market premium/discount);
+- **spot/preemptible tier** — the last ``ceil(spot_frac * n_hosts)``
+  hosts are spot: priced at ``spot_discount`` of the regional rate, but
+  their runners carry a per-step ``preempt_rate`` (the
+  ``FaultType.PREEMPT`` fault class). A reclaimed VM aborts its episode;
+  the state manager recovers the replica at L2 (fresh respawn from the
+  base image — the allocation is *gone*, an in-place L1 repair is
+  meaningless) and the rollout engine's failover re-dispatches the task,
+  possibly onto another host or, via federation spill, another region;
+- **brownout flag** — ``dark`` marks a regional network partition: the
+  federated gateway stops routing to the region, whatever its pools'
+  local health machinery says. The flag models unreachability, not
+  destruction — local heal daemons keep running, and clearing the flag
+  restores the region's capacity.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.cluster.cluster import DEFAULT_MACHINE, Cluster
+from repro.cluster.host import Host
+from repro.core.faults import spot_rates
+from repro.core.orchestrator import MachineSpec
+from repro.core.replica import LatencyModel
+from repro.core.telemetry import Telemetry
+
+
+@dataclass
+class RegionSpec:
+    """Declarative shape of one region in a federation."""
+
+    name: str
+    n_replicas: int
+    runners_per_node: int = 32
+    machine: Optional[MachineSpec] = None   # default: Table-1 E5-2699
+    price_multiplier: float = 1.0           # regional market scale
+    spot_frac: float = 0.0                  # fraction of hosts on spot
+    spot_discount: float = 0.35             # spot price vs regional rate
+    preempt_rate: float = 0.002             # per-step reclaim probability
+    routing: str = "least_loaded"
+    seed: Optional[int] = None              # default: derived by Federation
+    node_prefix: Optional[str] = None       # default: "<name>:node"
+
+
+class Region:
+    """One live cluster plus the federation-facing geo state."""
+
+    def __init__(self, spec: RegionSpec, *, seed: int,
+                 telemetry: Optional[Telemetry] = None,
+                 latency: Optional[LatencyModel] = None,
+                 faults: bool = True):
+        self.spec = spec
+        self.name = spec.name
+        self.dark = False       # brownout: unreachable to the federation
+        machine = spec.machine or DEFAULT_MACHINE
+        n_hosts = max(math.ceil(spec.n_replicas / spec.runners_per_node), 1)
+        n_spot = min(math.ceil(spec.spot_frac * n_hosts), n_hosts)
+        # spot tier at the tail of the host list: the placer fills hosts
+        # in order, so on-demand capacity is packed first and the spot
+        # hosts are exactly the ones a preemption storm can empty
+        self._spot_hosts = {f"host{i}" for i in
+                            range(n_hosts - n_spot, n_hosts)}
+
+        def fault_profile(host: Host) -> Optional[dict]:
+            if host.host_id in self._spot_hosts:
+                return spot_rates(spec.preempt_rate)
+            return None
+
+        self.cluster = Cluster(
+            [machine] * n_hosts, spec.n_replicas,
+            runners_per_node=spec.runners_per_node,
+            seed=seed,
+            routing=spec.routing,
+            node_prefix=(spec.node_prefix or f"{spec.name}:node"),
+            faults=faults,
+            latency=latency,
+            telemetry=telemetry,
+            fault_profile=fault_profile if n_spot else None,
+        )
+        for host in self.cluster.hosts:
+            mult = spec.price_multiplier
+            if host.host_id in self._spot_hosts:
+                mult *= spec.spot_discount
+            host.price_multiplier = mult
+
+    # -------------------------------------------------------------- surface
+    @property
+    def gateway(self):
+        return self.cluster.gateway
+
+    @property
+    def pools(self):
+        return self.cluster.pools
+
+    @property
+    def n_replicas(self) -> int:
+        return self.cluster.n_replicas
+
+    def is_spot_host(self, host: Host) -> bool:
+        return host.host_id in self._spot_hosts
+
+    def reachable(self) -> bool:
+        """Routable by the federation: not dark, and at least one node
+        the regional gateway still considers healthy."""
+        if self.dark:
+            return False
+        return any(st.healthy for st in self.gateway.status.values())
+
+    def free_runners(self) -> int:
+        return sum(p.n_free for p in self.pools)
+
+    def price_per_day(self) -> float:
+        return self.cluster.price_per_day()
+
+    def usd_per_replica_day(self) -> float:
+        return self.cluster.usd_per_replica_day()
+
+    # ------------------------------------------------------------ lifecycle
+    def attach_loop(self, loop) -> None:
+        self.cluster.attach_loop(loop)
+
+    def detach_loop(self) -> None:
+        self.cluster.detach_loop()
+
+    def close(self) -> None:
+        self.cluster.close()

@@ -1,0 +1,214 @@
+"""Metered WAN links between regions (the federation's §3.2-at-geo-scale
+cost model).
+
+Intra-region traffic keeps today's latency model untouched; anything that
+crosses a region boundary goes through a :class:`WanLink`, which
+
+- **meters bytes** — every transfer lands in the link's own ledger
+  (``bytes_total`` / ``transfers`` / per-kind breakdown) *and* in shared
+  Telemetry counters (``wan_bytes``, ``wan_bytes:<src>-><dst>``,
+  ``wan_bytes_kind:<kind>``, ``wan_transfers``), so cross-region byte
+  claims (e.g. DiLoCo's ~H× reduction) are measured, never modeled;
+- **prices virtual time** — ``cost(nbytes) = latency + nbytes/bandwidth``
+  from the pair's :class:`WanProfile`. Callers either ``yield
+  Sleep(link.send(...))`` inline (control-plane round trips) or hand a
+  completion to ``deliver(...)``, which schedules it at the transfer's
+  virtual arrival through one :class:`~repro.core.event_loop.VecTimer`
+  family per link (bulk trajectory shipping: one kernel interaction per
+  batch of arrivals, and the pending transfer keeps the loop alive until
+  the payload lands).
+
+Profiles per region pair are drawn deterministically from a seed
+(:meth:`WanTopology.seeded`): an unordered pair gets one of the three WAN
+latency classes below, both directions symmetric, stable across processes
+and region-construction order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.event_loop import EventLoop, VecTimer
+from repro.core.seeding import stable_seed
+from repro.core.telemetry import Telemetry
+
+# header + one uint8 screenshot (48*64*3) + action/thought text per step:
+# the wire size of one trajectory shipped home across regions
+TRAJ_HEADER_BYTES = 4096
+TRAJ_STEP_BYTES = 9216
+
+
+def trajectory_bytes(traj) -> int:
+    """Wire bytes for shipping one trajectory between regions."""
+    return TRAJ_HEADER_BYTES + len(traj.steps) * TRAJ_STEP_BYTES
+
+
+@dataclass(frozen=True)
+class WanProfile:
+    """One WAN latency class: one-way latency plus shared bandwidth."""
+
+    name: str
+    latency_s: float     # one-way propagation + queuing floor
+    gbps: float          # provisioned inter-region bandwidth
+
+    def cost(self, nbytes: int) -> float:
+        """Virtual seconds for ``nbytes`` to land on the far side."""
+        return self.latency_s + (nbytes * 8.0) / (self.gbps * 1e9)
+
+
+# the seeded classes a region pair can draw (roughly metro peering /
+# same-continent backbone / intercontinental submarine path)
+WAN_CLASSES = (
+    WanProfile("metro", 0.002, 100.0),
+    WanProfile("continental", 0.040, 10.0),
+    WanProfile("intercontinental", 0.120, 2.5),
+)
+
+
+class WanLink:
+    """One directed region pair: byte ledger + virtual-time delivery."""
+
+    def __init__(self, src: str, dst: str, profile: WanProfile, *,
+                 telemetry: Optional[Telemetry] = None):
+        self.src = src
+        self.dst = dst
+        self.profile = profile
+        self.telemetry = telemetry or Telemetry()
+        self.bytes_total = 0
+        self.transfers = 0
+        self.by_kind: dict[str, int] = {}
+        self._loop: Optional[EventLoop] = None
+        self._timer: Optional[VecTimer] = None
+        # in-flight deliveries: token -> completion callback
+        self._pending: dict[int, Callable[[], None]] = {}
+        self._token = 0
+
+    # ------------------------------------------------------------- metering
+    def send(self, nbytes: int, kind: str = "data") -> float:
+        """Meter ``nbytes`` over this link; returns the virtual cost.
+
+        The caller owns the time accounting (sleep the cost, or schedule
+        at ``now + cost``); the bytes are charged here either way."""
+        nbytes = int(nbytes)
+        self.bytes_total += nbytes
+        self.transfers += 1
+        self.by_kind[kind] = self.by_kind.get(kind, 0) + nbytes
+        self.telemetry.count("wan_bytes", nbytes)
+        self.telemetry.count(f"wan_bytes:{self.src}->{self.dst}", nbytes)
+        self.telemetry.count(f"wan_bytes_kind:{kind}", nbytes)
+        self.telemetry.count("wan_transfers")
+        return self.profile.cost(nbytes)
+
+    # ------------------------------------------------------------- delivery
+    def attach_loop(self, loop: EventLoop) -> None:
+        """Bind the link's delivery timer family to an event loop.
+
+        Non-daemon: a trajectory in flight over the WAN must land (and run
+        its commit) before the loop is allowed to finish."""
+        if self._loop is loop:
+            return
+        self._loop = loop
+        self._timer = loop.vec_timer(self._fire)
+
+    def detach_loop(self) -> None:
+        self._loop = None
+        self._timer = None
+        self._pending.clear()
+
+    def deliver(self, nbytes: int, kind: str,
+                fn: Callable[[], None]) -> float:
+        """Meter a transfer and run ``fn`` at its virtual arrival time.
+
+        Requires an attached loop. Returns the transfer cost."""
+        assert self._timer is not None, "attach_loop() before deliver()"
+        cost = self.send(nbytes, kind)
+        self._token += 1
+        self._pending[self._token] = fn
+        self._timer.schedule(
+            np.asarray([self._loop.now + cost]),
+            np.asarray([self._token]))
+        return cost
+
+    def _fire(self, ats, idx) -> None:
+        # one callback may carry a whole bucket of arrivals (batched
+        # kernel); deliver in (time, seq) order as handed to us
+        for token in np.asarray(idx).tolist():
+            fn = self._pending.pop(int(token), None)
+            if fn is not None:
+                fn()
+
+
+class WanTopology:
+    """All pairwise links between a set of regions, lazily materialized."""
+
+    def __init__(self, profiles: dict[tuple[str, str], WanProfile], *,
+                 telemetry: Optional[Telemetry] = None):
+        # unordered-pair profiles; both directions share one class
+        self._profiles = dict(profiles)
+        self.telemetry = telemetry or Telemetry()
+        self._links: dict[tuple[str, str], WanLink] = {}
+        self._loop: Optional[EventLoop] = None
+
+    @classmethod
+    def seeded(cls, names: list[str], *, seed: int = 0,
+               telemetry: Optional[Telemetry] = None) -> "WanTopology":
+        """Draw one WAN class per unordered region pair from ``seed``.
+
+        The draw keys on the sorted pair names, so the profile table is
+        independent of region declaration order."""
+        profiles = {}
+        for i, a in enumerate(sorted(names)):
+            for b in sorted(names)[i + 1:]:
+                k = stable_seed(seed, "wan-class", a, b) % len(WAN_CLASSES)
+                profiles[(a, b)] = WAN_CLASSES[k]
+        return cls(profiles, telemetry=telemetry)
+
+    def profile(self, src: str, dst: str) -> WanProfile:
+        key = (src, dst) if src <= dst else (dst, src)
+        try:
+            return self._profiles[key]
+        except KeyError:
+            raise KeyError(f"no WAN profile for region pair {key}") from None
+
+    def link(self, src: str, dst: str) -> WanLink:
+        """The directed link ``src -> dst`` (created on first use)."""
+        assert src != dst, "intra-region traffic never touches the WAN"
+        key = (src, dst)
+        lk = self._links.get(key)
+        if lk is None:
+            lk = WanLink(src, dst, self.profile(src, dst),
+                         telemetry=self.telemetry)
+            if self._loop is not None:
+                lk.attach_loop(self._loop)
+            self._links[key] = lk
+        return lk
+
+    # ------------------------------------------------------------ lifecycle
+    def attach_loop(self, loop: EventLoop) -> None:
+        self._loop = loop
+        for lk in self._links.values():
+            lk.attach_loop(loop)
+
+    def detach_loop(self) -> None:
+        self._loop = None
+        for lk in self._links.values():
+            lk.detach_loop()
+
+    # -------------------------------------------------------------- ledgers
+    def total_bytes(self) -> int:
+        return sum(lk.bytes_total for lk in self._links.values())
+
+    def bytes_by_kind(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for lk in self._links.values():
+            for kind, n in lk.by_kind.items():
+                out[kind] = out.get(kind, 0) + n
+        return {k: out[k] for k in sorted(out)}
+
+    def ledger(self) -> dict:
+        """Per-link byte totals keyed ``src->dst`` (sorted, stable)."""
+        rows = {f"{s}->{d}": lk.bytes_total
+                for (s, d), lk in self._links.items()}
+        return {k: rows[k] for k in sorted(rows)}

@@ -104,18 +104,29 @@ class TrajectoryIngestor:
         self._pending_version = -1
         self._pending_since = 0.0
         if trainer is not None:
-            import jax
-            import jax.numpy as jnp
+            # jitted closures are cached on the trainer: both take params
+            # explicitly (pure in the trainer's weights), so every ingestor
+            # sharing one trainer — e.g. per-region ingestors in a
+            # federation — reuses one compilation instead of paying a
+            # fresh trace per instance
+            cache = getattr(trainer, "_ingest_jit_cache", None)
+            if cache is not None:
+                self._pv, self._pv_batch = cache
+            else:
+                import jax
+                import jax.numpy as jnp
 
-            self._pv = jax.jit(trainer.policy_value)
+                self._pv = jax.jit(trainer.policy_value)
 
-            def fused(params, tokens, actions):
-                logits, values = trainer.policy_value(params, tokens)
-                logp_all = jax.nn.log_softmax(logits.astype(jnp.float32))
-                logp = jnp.take_along_axis(logp_all, actions[..., None], axis=-1)
-                return logp[..., 0], values
+                def fused(params, tokens, actions):
+                    logits, values = trainer.policy_value(params, tokens)
+                    logp_all = jax.nn.log_softmax(logits.astype(jnp.float32))
+                    logp = jnp.take_along_axis(
+                        logp_all, actions[..., None], axis=-1)
+                    return logp[..., 0], values
 
-            self._pv_batch = jax.jit(fused)
+                self._pv_batch = jax.jit(fused)
+                trainer._ingest_jit_cache = (self._pv, self._pv_batch)
 
     # ------------------------------------------------------------- consume
     def __call__(self, traj: Trajectory) -> None:

@@ -55,6 +55,7 @@ from typing import Callable, Optional, Sequence
 
 from repro.core.event_loop import Condition as VirtualCondition
 from repro.core.event_loop import EventLoop, Sleep
+from repro.core.faults import FaultType
 from repro.core.gateway import Gateway
 from repro.core.state_manager import TaskAborted
 from repro.core.tasks import TaskSpec
@@ -271,6 +272,8 @@ class RolloutEngine:
                     with self._lock:
                         self._report.reassignments += 1
                     self.telemetry.count("task_reassignments")
+                    if e.fault is FaultType.PREEMPT:
+                        self.telemetry.count("preemptions")
                 finally:
                     # pool recycles (and autonomously recovers) the runner;
                     # task_id guards against releasing a runner that leak
@@ -573,6 +576,8 @@ class RolloutEngine:
                     excluded.add(node)
                     self._report.reassignments += 1
                     self.telemetry.count("task_reassignments")
+                    if e.fault is FaultType.PREEMPT:
+                        self.telemetry.count("preemptions")
                 finally:
                     # pool recycles (and autonomously recovers) the runner;
                     # task_id guards against releasing a runner that leak
@@ -580,15 +585,27 @@ class RolloutEngine:
                     self.gateway.release(node, runner,
                                          task_id=task["task_id"])
             if traj is not None:
-                # runner already released; the gate applies backpressure in
-                # virtual time via the feeder's saturated() check
-                gate.write(traj)
-                self.telemetry.count("episodes_completed")
-                if result.corrupted:
-                    self.telemetry.count("corrupted_trajectories")
-                    with self._lock:
-                        self._report.corrupted_writes.append(
-                            (result.runner_id, self._loop.now))
+                def commit(traj=traj, result=result):
+                    # runner already released; the gate applies
+                    # backpressure in virtual time via the feeder's
+                    # saturated() check
+                    gate.write(traj)
+                    self.telemetry.count("episodes_completed")
+                    if result.corrupted:
+                        self.telemetry.count("corrupted_trajectories")
+                        with self._lock:
+                            self._report.corrupted_writes.append(
+                                (result.runner_id, self._loop.now))
+
+                # federated fleets ship spilled trajectories back to the
+                # task's home region over the metered WAN: the commit then
+                # runs at the transfer's virtual arrival time. Local (or
+                # non-federated) episodes commit inline — bit-identical to
+                # the pre-federation path.
+                deliver = (None if self.cluster is None else
+                           getattr(self.cluster, "deliver_trajectory", None))
+                if deliver is None or not deliver(task, result, traj, commit):
+                    commit()
         except Exception as e:   # keep one bad episode from sinking the run
             result.error = f"{type(e).__name__}: {e}"
         finally:

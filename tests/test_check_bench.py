@@ -368,6 +368,85 @@ def test_multitenant_wall_budget_and_missing_scenario():
     assert any("MISSING scenario" in p for p in problems)
 
 
+def test_committed_federation_baseline_self_passes():
+    base = _baseline("BENCH_federation.json")
+    assert cb.check(base, copy.deepcopy(base), 0.10) == []
+
+
+def test_federation_wan_bytes_rise_is_a_regression():
+    """WAN bytes are a cost — DiLoCo sync bytes rising 30% is a
+    REGRESSION (the compression got lazier), a drop flags a stale
+    baseline; same direction for the per-region metered totals."""
+    base = _baseline("BENCH_federation.json")
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["wan_bytes_diloco"] *= 1.30
+    for row in perturbed["regions"]:
+        row["wan_bytes_out"] *= 1.30
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("REGRESSION" in p and "wan_bytes_diloco" in p
+               for p in problems)
+    assert any("REGRESSION" in p and "wan_bytes_out" in p for p in problems)
+    improved = copy.deepcopy(base)
+    improved["gate"]["wan_bytes_diloco"] *= 0.70
+    problems = cb.check(base, improved, 0.10)
+    assert any("STALE BASELINE" in p and "wan_bytes_diloco" in p
+               for p in problems)
+
+
+def test_federation_outage_throughput_drop_is_a_regression():
+    base = _baseline("BENCH_federation.json")
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["outage_traj_per_min"] *= 0.80
+    perturbed["gate"]["outage_throughput_frac"] *= 0.80
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("REGRESSION" in p and "outage_traj_per_min" in p
+               for p in problems)
+    assert any("REGRESSION" in p and "outage_throughput_frac" in p
+               for p in problems)
+
+
+def test_federation_usd_gets_the_wide_band():
+    """USD/traj folds in the price sheet: a 30% shift passes the wide
+    band (honest sheet tweaks must not flap the gate), a 60% jump is
+    still a REGRESSION — and the rise direction is the cost direction."""
+    base = _baseline("BENCH_federation.json")
+    noisy = copy.deepcopy(base)
+    noisy["gate"]["spot_usd_per_traj"] *= 1.30
+    for row in noisy["regions"]:
+        row["usd_per_day"] *= 1.30
+    assert cb.check(base, noisy, 0.10) == []
+    jumped = copy.deepcopy(base)
+    jumped["gate"]["spot_usd_per_traj"] *= 1.60
+    problems = cb.check(base, jumped, 0.10)
+    assert any("REGRESSION" in p and "spot_usd_per_traj" in p
+               for p in problems)
+
+
+def test_federation_boolean_gates_must_hold():
+    base = _baseline("BENCH_federation.json")
+    assert base["gate"]["outage_survived"] is True
+    assert base["gate"]["bytes_accounting_exact"] is True
+    assert base["gate"]["spot_cheaper"] is True
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["outage_survived"] = False
+    perturbed["gate"]["bytes_accounting_exact"] = False
+    problems = cb.check(base, perturbed, 0.10)
+    assert any("outage_survived" in p for p in problems)
+    assert any("bytes_accounting_exact" in p for p in problems)
+
+
+def test_federation_wall_budget_and_missing_region():
+    base = _baseline("BENCH_federation.json")
+    over = copy.deepcopy(base)
+    over["wall_seconds"] = base["wall_budget_s"] * 1.5
+    problems = cb.check(base, over, 0.10)
+    assert any("wall budget" in p for p in problems)
+    missing = copy.deepcopy(base)
+    missing["regions"] = missing["regions"][1:]
+    problems = cb.check(base, missing, 0.10)
+    assert any("MISSING region[" in p for p in problems)
+
+
 def test_malformed_payloads_are_rejected():
     assert cb.check({}, {}, 0.10) == [
         "MALFORMED baseline: neither engine rows nor a gate block"
