@@ -1,0 +1,323 @@
+"""Heterogeneous mixed fleet: four EnvBackends through one gateway.
+
+The tentpole claim of the ``repro.envs`` subsystem, measured live: one
+``Cluster`` hosts four calibrated environment backends at once — SimOS
+VMs, container-free SWE sandboxes, headless browsers, and device
+emulators — each bin-packed at its own RAM/CoW footprint onto dedicated
+hosts, and one ``Gateway`` serves a mixed episode stream with
+backend-constrained routing (a SWE episode never lands on a browser
+pool). At ``t0`` every backend gets a seeded dose of silent corruption
+(the §3.4 kernel-limit failure mode), and each backend's *own*
+known-answer canary must detect it: the whole L0–L4 recovery ladder is
+backend-agnostic, so quarantine and recreation work identically on a
+sandbox, a browser, and an emulator. The surviving mixed stream then
+feeds one PPO learner through the cross-domain reward shaping
+(per-backend ``reward_scale``), whose loss must decrease.
+
+Asserts:
+
+1. every backend completes episodes, and zero episodes are routed to a
+   pool of the wrong backend (the routing audit walks every episode's
+   node list against the node->backend map);
+2. 100% of injected silently-broken runners are detected by their own
+   backend's canary and quarantined, and no corrupted trajectory
+   reaches the writer after its runner's quarantine — on every backend;
+3. the single learner's loss decreases on the mixed four-domain stream.
+
+    PYTHONPATH=src python benchmarks/mixed_fleet.py
+
+Emits ``artifacts/bench/BENCH_mixedfleet.json`` (per-backend rows +
+gate); ``scripts/check_bench.py --baseline ... --fresh ...`` gates CI on
+it, with a hard wall budget recorded in the baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.cluster import Cluster, default_specs
+from repro.core.event_loop import EventLoop
+from repro.core.seeding import stable_seed
+from repro.envs import get_backend
+from repro.rollout.engine import RolloutConfig, RolloutEngine
+from repro.rollout.scenarios import mixed_registry
+from repro.rollout.writer import TrajectoryWriter
+
+BACKENDS = ("simos", "swe", "browser", "mobile")
+REPLICAS_PER_BACKEND = 32
+RUNNERS_PER_NODE = 16
+EPISODES_PER_REPLICA = 5
+KILL_AT_VS = 30.0            # t0: per-backend silent corruption
+SILENT_PER_BACKEND = 4       # silently-broken runners per backend
+MAX_UPDATES = 12             # PPO updates on the mixed stream
+WALL_BUDGET_S = 120.0        # hard CI budget recorded in the baseline
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "bench", "BENCH_mixedfleet.json")
+
+
+def run_mixed_fleet_benchmark(seed: int = 0) -> dict:
+    """One end-to-end mixed-fleet run; returns the full payload."""
+    t_wall = time.monotonic()
+    n_total = REPLICAS_PER_BACKEND * len(BACKENDS)
+    registry = mixed_registry()
+    cluster = Cluster(
+        default_specs(n_total, runners_per_node=RUNNERS_PER_NODE),
+        n_total, runners_per_node=RUNNERS_PER_NODE, seed=seed,
+        backends=[(b, REPLICAS_PER_BACKEND) for b in BACKENDS])
+    tele = cluster.telemetry
+    # retain trajectories and feed the learner after the run: the virtual
+    # clock stays decoupled from jax wall time, so the rollout half is
+    # deterministic per seed on any host
+    writer = TrajectoryWriter(retain=True, capacity=1024)
+    engine = RolloutEngine(cluster, writer, registry=registry,
+                           telemetry=tele,
+                           config=RolloutConfig(
+                               max_inflight=n_total,
+                               acquire_timeout_vs=3000.0))
+    # an even per-backend task mix: the per-backend rates stay comparable
+    # instead of following the Table-3 weights of the SimOS families
+    per_backend = REPLICAS_PER_BACKEND * EPISODES_PER_REPLICA
+    tasks = []
+    for b in BACKENDS:
+        tasks.extend(registry.sample(
+            per_backend, seed=stable_seed(seed, "mixed-workload", b),
+            backends=[b]))
+    loop = EventLoop()
+
+    pools = list(cluster.pools)
+    ladders = [p.recovery for p in pools]
+    by_backend = {b: [p for p in pools if p.backend_name == b]
+                  for b in BACKENDS}
+    node_backend = {p.node_id: p.backend_name for p in pools}
+    injected: dict[str, set] = {b: set() for b in BACKENDS}
+
+    def inject_failures() -> None:
+        """t0: silent corruption on every backend at once."""
+        rng = random.Random(stable_seed(seed, "mixed-kill"))
+        for b in BACKENDS:
+            runners = [r for p in by_backend[b] for r in p._all.values()]
+            runners.sort(key=lambda r: r.runner_id)
+            for r in rng.sample(runners, SILENT_PER_BACKEND):
+                r.mark_silent_broken(loop.now)
+                injected[b].add(r.runner_id)
+
+    loop.call_later(KILL_AT_VS, inject_failures, daemon=True)
+    report = engine.run_event_driven(tasks, loop=loop)
+    # pools added after t0 (replacement capacity) still belong to a
+    # backend — fold them into the routing audit map
+    for p in cluster.pools:
+        node_backend.setdefault(p.node_id, p.backend_name)
+
+    # ------------------------------------------------------------ analysis
+    detected_at: dict[str, float] = {}
+    quarantined_at: dict[str, float] = {}
+    for lad in ladders:
+        detected_at.update(lad.detected_at)
+        quarantined_at.update(lad.quarantined_at)
+    all_injected = set().union(*injected.values())
+    missed = all_injected - set(detected_at)
+    unquarantined = all_injected - set(quarantined_at)
+    late_writes = [(rid, vt) for rid, vt in report.corrupted_writes
+                   if vt > quarantined_at.get(rid, float("inf")) + 1e-9]
+
+    completed_by = {b: 0 for b in BACKENDS}
+    failed_by = {b: 0 for b in BACKENDS}
+    violations = []
+    for r in report.results:
+        b = r.task.get("backend", "simos")
+        (completed_by if r.ok else failed_by)[b] += 1
+        for node in r.nodes:
+            if node_backend.get(node) != b:
+                violations.append((r.task["task_id"], node))
+
+    makespan = max(report.virtual_makespan, 1e-9)
+    rows = []
+    for b in BACKENDS:
+        backend = get_backend(b)
+        lats = sorted(detected_at[rid] - KILL_AT_VS
+                      for rid in injected[b] if rid in detected_at)
+        p95 = lats[min(int(0.95 * len(lats)), len(lats) - 1)] if lats else 0.0
+        rows.append({
+            "name": b,
+            "replicas": REPLICAS_PER_BACKEND,
+            "hosts": sum(1 for p in by_backend[b]),
+            "ram_limit_gb": backend.ram_limit_gb(),
+            "reward_scale": backend.reward_scale,
+            "completed": completed_by[b],
+            "failed": failed_by[b],
+            "traj_per_min": round(60.0 * completed_by[b] / makespan, 2),
+            "injected_silent": len(injected[b]),
+            "silent_detected": len(injected[b] & set(detected_at)),
+            "silent_quarantined": len(injected[b] & set(quarantined_at)),
+            "detection_p95_vs": round(p95, 2),
+        })
+
+    # ------------------------------------------------ learner (mixed stream)
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.data.replay_buffer import ReplayBuffer
+    from repro.models import build_model
+    from repro.pipeline.ingest import IngestConfig, TrajectoryIngestor
+    from repro.pipeline.learner import LearnerConfig, LearnerLoop
+    from repro.pipeline.policy_store import PolicyVersionStore
+    from repro.train.ppo import PPOConfig, PPOTrainer
+
+    cfg = get_reduced("qwen3-1.7b", vocab_size=264)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    trainer = PPOTrainer(model, params, cfg=PPOConfig(), seed=seed)
+    replay = ReplayBuffer(capacity=4096, seed=stable_seed(seed, "replay"),
+                          backend="soa", seq_len=192)
+    store = PolicyVersionStore(trainer.params)
+    ingestor = TrajectoryIngestor(
+        replay, store, registry=registry, trainer=trainer,
+        cfg=IngestConfig(seq_len=192, micro_batch=32,
+                         flush_wall_s=float("inf"),
+                         flush_virtual_s=float("inf")),
+        telemetry=tele)
+    writer.drain(timeout=30.0)
+    for traj in writer.trajectories:
+        ingestor(traj)
+    ingestor.flush()
+    learner = LearnerLoop(trainer, replay, store,
+                          cfg=LearnerConfig(algo="ppo", batch_size=8,
+                                            seq_len=192),
+                          telemetry=tele)
+    while learner.ready() and learner.updates < MAX_UPDATES:
+        learner.step()
+    trend = learner.loss_trend()
+    backend_totals = {b: tele.counter(f"backend_total:{b}") for b in BACKENDS}
+
+    # ------------------------------------------------------------- asserts
+    n_tasks = len(tasks)
+    assert report.completed >= 0.99 * n_tasks, (
+        f"only {report.completed}/{n_tasks} episodes completed — the "
+        f"mixed fleet did not absorb the load")
+    for row in rows:
+        assert row["completed"] > 0, (
+            f"backend {row['name']} completed no episodes — it is not "
+            f"being served through the gateway")
+    assert not violations, (
+        f"{len(violations)} episodes were routed to a pool of the wrong "
+        f"backend: {violations[:5]}")
+    assert not missed, (
+        f"{len(missed)}/{len(all_injected)} silently-broken runners were "
+        f"never detected by their backend's canary: {sorted(missed)[:5]}")
+    assert not unquarantined, (
+        f"{len(unquarantined)} detected runners were never quarantined")
+    assert not late_writes, (
+        f"{len(late_writes)} corrupted trajectories reached the writer "
+        f"AFTER their runner was quarantined: {late_writes[:5]}")
+    assert all(backend_totals[b] > 0 for b in BACKENDS), (
+        f"learner stream is missing a backend: {backend_totals}")
+    assert learner.updates >= 3, (
+        f"only {learner.updates} learner updates — no loss trend")
+    assert trend["decreased"], (
+        f"learner loss did not decrease on the mixed stream: "
+        f"{trend['first_third']:.4f} -> {trend['last_third']:.4f}")
+
+    gate = {
+        "completed": report.completed,
+        "failed": report.failed,
+        "routing_violations": len(violations),
+        "all_backends_served": all(r["completed"] > 0 for r in rows),
+        "injected_silent": len(all_injected),
+        "all_silent_detected": not missed,
+        "all_silent_quarantined": not unquarantined,
+        "no_corrupt_after_quarantine": not late_writes,
+        "corrupted_written": len(report.corrupted_writes),
+        "total_traj_per_min": round(60.0 * report.completed / makespan, 2),
+        "learner_updates": learner.updates,
+        "loss_decreased": trend["decreased"],
+    }
+    payload = {
+        "benchmark": "heterogeneous mixed fleet: four EnvBackends "
+                     "(simos/swe/browser/mobile) through one gateway, "
+                     "per-backend silent-failure canaries, one PPO "
+                     "learner on the mixed stream",
+        "metric": "per-backend traj/min, canary detection, routing "
+                  "isolation (virtual seconds)",
+        "seed": seed,
+        "replicas_per_backend": REPLICAS_PER_BACKEND,
+        "n_tasks": n_tasks,
+        "kill_at_vs": KILL_AT_VS,
+        "virtual_makespan_s": round(report.virtual_makespan, 2),
+        "reassignments": report.reassignments,
+        "backends": rows,
+        "learner": {
+            "updates": learner.updates,
+            "loss_first_third": round(trend["first_third"], 4),
+            "loss_last_third": round(trend["last_third"], 4),
+            "steps_per_min": round(learner.steps_per_min(), 2),
+            "backend_stream_totals": backend_totals,
+        },
+        "wall_seconds": round(time.monotonic() - t_wall, 2),
+        "wall_budget_s": WALL_BUDGET_S,
+        "gate": gate,
+    }
+    writer.close()
+    cluster.close()
+    return payload
+
+
+def mixed_fleet_table(seed: int = 0):
+    """(rows, derived) in the paper_tables convention for benchmarks/run.py."""
+    payload = run_mixed_fleet_benchmark(seed)
+    g = payload["gate"]
+    per = ", ".join(f"{r['name']} {r['traj_per_min']:.0f}"
+                    for r in payload["backends"])
+    derived = (f"{len(payload['backends'])} backends through one gateway: "
+               f"{g['completed']} episodes ({per} traj/min), "
+               f"{g['routing_violations']} routing violations, "
+               f"{g['injected_silent']} silent breaks all canary-detected, "
+               f"loss decreased over {g['learner_updates']} PPO updates")
+    return [payload], derived
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="assert the run stays under this wall-clock "
+                         "budget (CI guard)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="where to write BENCH_mixedfleet.json")
+    args = ap.parse_args()
+
+    payload = run_mixed_fleet_benchmark(args.seed)
+    g = payload["gate"]
+    print(f"{'backend':>10} {'traj/min':>9} {'completed':>10} "
+          f"{'injected':>9} {'detected':>9} {'det p95 (vs)':>13}")
+    for r in payload["backends"]:
+        print(f"{r['name']:>10} {r['traj_per_min']:>9.1f} "
+              f"{r['completed']:>10} {r['injected_silent']:>9} "
+              f"{r['silent_detected']:>9} {r['detection_p95_vs']:>13.1f}")
+    lrn = payload["learner"]
+    print(f"learner: {lrn['updates']} PPO updates on the mixed stream, "
+          f"loss {lrn['loss_first_third']:.4f} -> "
+          f"{lrn['loss_last_third']:.4f}")
+    if args.budget_s is not None:
+        assert payload["wall_seconds"] <= args.budget_s, (
+            f"mixed-fleet benchmark took {payload['wall_seconds']:.1f}s "
+            f"wall > budget {args.budget_s}s")
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"{g['completed']} episodes across {len(payload['backends'])} "
+          f"backends, {g['routing_violations']} routing violations, "
+          f"all {g['injected_silent']} silent breaks detected; "
+          f"{payload['wall_seconds']:.1f}s wall; baseline -> "
+          f"{os.path.relpath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

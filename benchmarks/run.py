@@ -12,8 +12,8 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import (e2e_pipeline, elastic_cluster, federation,
-                        multitenant, paper_tables, recovery, roofline,
-                        throughput)
+                        mixed_fleet, multitenant, paper_tables, recovery,
+                        roofline, throughput)
 
 OUTDIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
@@ -36,6 +36,7 @@ def main() -> None:
         ("multitenant", multitenant.multitenant_table),
         ("e2e_pipeline", e2e_pipeline.pipeline_table),
         ("federation", federation.federation_table),
+        ("mixed_fleet", mixed_fleet.mixed_fleet_table),
         ("roofline_single_pod", lambda: roofline.report("16_16")),
         ("roofline_multi_pod", lambda: roofline.report("2_16_16")),
     ]

@@ -19,8 +19,9 @@ per-(design, fleet-size) `engine` rows, elastic-cluster baselines carry
 per-cluster `clusters` rows, recovery baselines carry a
 `recovery_curve`, data-plane baselines carry `ingest` + `learner`
 blocks, multi-tenant baselines carry per-scenario `scenarios` rows,
-federation baselines carry per-region `regions` rows, e2e baselines
-carry a bare `gate` block. Gate metrics are direction-aware: MTTR /
+federation baselines carry per-region `regions` rows, mixed-fleet
+baselines carry per-backend `backends` rows, e2e baselines carry a
+bare `gate` block. Gate metrics are direction-aware: MTTR /
 detection-latency / recovery-time / wait-p99 / WAN-byte / USD-per-traj
 names are recognized as lower-is-better, so a *rise* there is the
 regression and a drop flags a stale baseline. Kernel, data-plane,
@@ -138,6 +139,7 @@ LOWER_IS_BETTER_HINTS = (
     "throttled",
     "wan_bytes",
     "usd_per_traj",
+    "violations",
 )
 
 
@@ -419,6 +421,79 @@ def check_federation(base: dict, fresh: dict, tol: float) -> list[str]:
     return problems
 
 
+# mixed-fleet backend rows are virtual-time deterministic per seed:
+# completion counts and traj/min keep the tight band; failure counts and
+# detection latency are costs (a rise is the regression). The canary
+# counters (injected / detected / quarantined) are seeded constants, so
+# any drift at all is a broken gate.
+MIXEDFLEET_METRICS = (
+    ("completed", False),
+    ("failed", True),
+    ("traj_per_min", False),
+    ("injected_silent", False),
+    ("silent_detected", False),
+    ("silent_quarantined", False),
+    ("detection_p95_vs", True),
+)
+
+
+def check_mixedfleet(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Mixed-fleet baselines: per-backend serving/canary rows, strict
+    gate booleans (routing isolation, full canary detection, zero
+    post-quarantine corruption, learner loss decrease), the
+    host-dependent learner rate on a wide band, and the hard wall
+    budget."""
+    problems: list[str] = []
+    base_rows = base.get("backends", [])
+    if not base_rows:
+        problems.append("MALFORMED baseline: no backend rows")
+    fresh_rows = {row["name"]: row for row in fresh.get("backends", [])}
+    for row in base_rows:
+        other = fresh_rows.get(row["name"])
+        if other is None:
+            problems.append(
+                f"MISSING backend[{row['name']}]: not in fresh results")
+            continue
+        for metric, lower_is_better in MIXEDFLEET_METRICS:
+            if metric not in row:
+                continue
+            name = f"{metric}[{row['name']}]"
+            if metric not in other:
+                problems.append(f"MISSING {name}: not in fresh results")
+                continue
+            problems += compare_value(
+                name, row[metric], other[metric], tol,
+                lower_is_better=lower_is_better,
+            )
+    base_lrn = base.get("learner", {})
+    fresh_lrn = fresh.get("learner", {})
+    if base_lrn:
+        rate_tol = max(tol, KERNEL_RATE_TOL_FLOOR)
+        if "updates" in base_lrn:
+            if "updates" not in fresh_lrn:
+                problems.append("MISSING learner.updates: not in fresh results")
+            else:
+                problems += compare_value(
+                    "learner.updates", base_lrn["updates"],
+                    fresh_lrn["updates"], tol)
+        if "steps_per_min" in base_lrn and "steps_per_min" in fresh_lrn:
+            problems += compare_value(
+                "learner.steps_per_min", base_lrn["steps_per_min"],
+                fresh_lrn["steps_per_min"], rate_tol)
+    budget = base.get("wall_budget_s")
+    if budget is not None:
+        wall = fresh.get("wall_seconds")
+        if wall is None:
+            problems.append("MISSING wall_seconds: not in fresh results")
+        elif wall > budget:
+            problems.append(
+                f"REGRESSION wall_seconds: {wall:.1f}s exceeds the "
+                f"baseline wall budget {budget:.1f}s"
+            )
+    problems += check_gate(base, fresh, tol)
+    return problems
+
+
 def check_gate(base: dict, fresh: dict, tol: float) -> list[str]:
     problems: list[str] = []
     base_gate = base.get("gate", {})
@@ -463,6 +538,8 @@ def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
         return check_multitenant(baseline, fresh, tol)
     if "regions" in baseline:
         return check_federation(baseline, fresh, tol)
+    if "backends" in baseline:
+        return check_mixedfleet(baseline, fresh, tol)
     if "gate" in baseline:
         return check_e2e(baseline, fresh, tol)
     return ["MALFORMED baseline: neither engine rows nor a gate block"]

@@ -17,7 +17,7 @@ import math
 from typing import Callable, Optional, Sequence
 
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
-from repro.cluster.host import Host, HostDemand
+from repro.cluster.host import Host, HostDemand, ReplicaFootprint
 from repro.cluster.placement import Placer
 from repro.core.cow_store import CowStore, DiskImage
 from repro.core.event_loop import EventLoop, Timer
@@ -61,6 +61,7 @@ class Cluster:
         telemetry: Optional[Telemetry] = None,
         sample_interval_vs: float = 10.0,
         fault_profile: Optional[Callable[[Host], Optional[dict]]] = None,
+        backends: Optional[Sequence[tuple]] = None,
     ):
         self.seed = seed
         self.node_prefix = node_prefix
@@ -80,18 +81,37 @@ class Cluster:
             for i, spec in enumerate(specs)
         ]
         self._pool_seq = 0
-        plan = Placer(self.hosts).place(n_replicas, pool_size=runners_per_node)
-        pools = [self._build_pool(p.host, p.n) for p in plan]
+        if backends is None:
+            plan = Placer(self.hosts).place(n_replicas, pool_size=runners_per_node)
+            pools = [self._build_pool(p.host, p.n) for p in plan]
+        else:
+            # heterogeneous fleet: each (backend_name, count) group is
+            # bin-packed at its own per-replica footprint. Pools (and
+            # therefore hosts) are single-backend, so headroom_for skips
+            # hosts already dedicated to a different demand shape; the
+            # per-group placement order is deterministic. ``n_replicas``
+            # is ignored — capacity is the sum of the group counts.
+            from repro.envs.base import get_backend  # lazy: avoid cycles
+            pools = []
+            for backend_name, count in backends:
+                backend = get_backend(backend_name)
+                fp = ReplicaFootprint.for_backend(backend)
+                plan = Placer(self.hosts).place(
+                    count, pool_size=runners_per_node, footprint=fp)
+                pools.extend(
+                    self._build_pool(p.host, p.n, backend=backend)
+                    for p in plan
+                )
         self.gateway = Gateway(pools, routing=routing, telemetry=self.telemetry)
         self.autoscaler: Optional[Autoscaler] = None
         if autoscaler is not None:
             self.autoscaler = Autoscaler(self, autoscaler, telemetry=self.telemetry)
         self._loop: Optional[EventLoop] = None
         self._sampler: Optional[Timer] = None
-        # boot-delayed grow timers in flight: (timer, host, n). Flushed on
-        # detach so a reservation whose boot the loop never ran is returned
-        # instead of leaking as phantom placed capacity.
-        self._pending_grows: list[tuple[Timer, Host, int]] = []
+        # boot-delayed grow timers in flight: (timer, host, n, backend).
+        # Flushed on detach so a reservation whose boot the loop never ran
+        # is returned instead of leaking as phantom placed capacity.
+        self._pending_grows: list[tuple] = []
         # pools dropped from routing by L4 eviction: their hosts no longer
         # reference them, but close() must still shut their managers down
         self._evicted_pools: list[RunnerPool] = []
@@ -103,13 +123,20 @@ class Cluster:
         self.peak_placed = self._rs_size  # capacity high-water mark
 
     # ---------------------------------------------------------------- build
-    def _build_pool(self, host: Host, n: int) -> RunnerPool:
-        """One pre-warmed pool on ``host`` (its placement already holds)."""
+    def _build_pool(self, host: Host, n: int, backend=None) -> RunnerPool:
+        """One pre-warmed pool on ``host`` (its placement already holds).
+
+        Fault rates resolve in override order: the cluster's
+        ``fault_profile`` (per-host, e.g. spot tiers) wins, then the
+        backend's calibrated ``fault_rates`` mix, then the SimOS
+        defaults. Seeds are unchanged in every case."""
         i = self._pool_seq
         self._pool_seq += 1
         rates = None
         if self.fault_profile is not None:
             rates = self.fault_profile(host)
+        if rates is None and backend is not None:
+            rates = backend.fault_rates
         if rates is None:
             injector = FaultInjector(seed=stable_seed(self.seed, "faults", i))
         else:
@@ -125,6 +152,7 @@ class Cluster:
             faults=injector,
             seed=stable_seed(self.seed, "pool", i),
             latency=self.latency,
+            backend=backend,
         )
         if pool.size < n:  # resource guard refused part of the placement
             host.release_placement(n - pool.size)
@@ -162,7 +190,7 @@ class Cluster:
         # cancel boot-delayed grows the loop will never run and hand their
         # reservations back — the capacity never booted, so letting it
         # linger would both bill forever and block future scale-ups
-        for timer, host, n in self._pending_grows:
+        for timer, host, n, _backend in self._pending_grows:
             timer.cancel()
             host.release_placement(n)
         self._pending_grows.clear()
@@ -185,40 +213,49 @@ class Cluster:
             pool.close()
 
     # ----------------------------------------------------------- elasticity
-    def request_grow(self, n: int, *, delay_vs: float = 0.0) -> int:
+    def request_grow(self, n: int, *, delay_vs: float = 0.0,
+                     backend=None) -> int:
         """Reserve up to ``n`` replicas against host budgets; returns how
         many were granted. Capacity is charged to the replica-seconds
         integral immediately (provisioning costs money) but only serves
-        after ``delay_vs`` virtual seconds of boot lag."""
+        after ``delay_vs`` virtual seconds of boot lag.
+
+        ``backend`` scopes the grow to hosts that can hold that
+        backend's footprint (mixed fleets replace evicted SWE capacity
+        with SWE capacity, never a different environment kind); ``None``
+        grows at the default SimOS footprint."""
+        fp = ReplicaFootprint.for_backend(backend) if backend is not None \
+            else None
         granted = 0
         for host in self.hosts:
             if granted >= n:
                 break
-            take = min(host.headroom(), n - granted)
+            take = min(host.headroom_for(fp), n - granted)
             if take <= 0:
                 continue
-            host.reserve(take)
+            host.reserve(take, footprint=fp)
             if self._loop is not None and delay_vs > 0:
                 timer = self._loop.call_later(
-                    delay_vs, self._boot_grown, host, take, daemon=True
+                    delay_vs, self._boot_grown, host, take, backend,
+                    daemon=True
                 )
-                self._pending_grows.append((timer, host, take))
+                self._pending_grows.append((timer, host, take, backend))
             else:
-                self._grow_host(host, take)
+                self._grow_host(host, take, backend)
             granted += take
         if granted:
             self._note_capacity()
         return granted
 
-    def _boot_grown(self, host: Host, n: int) -> None:
+    def _boot_grown(self, host: Host, n: int, backend=None) -> None:
         # timers fire in schedule order, so the first match is this one
         for i, p in enumerate(self._pending_grows):
             if p[1] is host and p[2] == n:
                 del self._pending_grows[i]
                 break
-        self._grow_host(host, n)
+        self._grow_host(host, n, backend)
 
-    def _grow_host(self, host: Host, n: int) -> None:
+    def _grow_host(self, host: Host, n: int, backend=None) -> None:
         if host.evicted:
             # raced with an L4 eviction: the reservation was already
             # released by evict_host and the node must never rejoin
@@ -226,7 +263,7 @@ class Cluster:
             # runners from the exhausted host
             return
         if host.pool is None:
-            self.gateway.add_pool(self._build_pool(host, n))
+            self.gateway.add_pool(self._build_pool(host, n, backend=backend))
         else:
             created = host.pool.grow(n)
             if created < n:  # resource guard refused part of the grant
@@ -258,7 +295,7 @@ class Cluster:
         # them so the timer cannot rebuild a pool on the exhausted node
         # (their reservation is part of host.placed, released below)
         for i in range(len(self._pending_grows) - 1, -1, -1):
-            timer, h, _n = self._pending_grows[i]
+            timer, h = self._pending_grows[i][0], self._pending_grows[i][1]
             if h is host:
                 timer.cancel()
                 del self._pending_grows[i]
@@ -272,7 +309,11 @@ class Cluster:
         self._evicted_pools.append(pool)
         self.telemetry.count("cluster_nodes_evicted")
         self._note_capacity()
-        granted = self.request_grow(lost, delay_vs=self.REPLACEMENT_BOOT_VS)
+        # replacement capacity keeps the evicted pool's environment kind:
+        # a drained SWE node is backfilled with SWE replicas, never with
+        # a different backend's footprint
+        granted = self.request_grow(
+            lost, delay_vs=self.REPLACEMENT_BOOT_VS, backend=pool.backend)
         if granted > 0:
             # node-level MTTR: replacement capacity serves after its boot.
             # No observation when nothing was granted — an unreplaced

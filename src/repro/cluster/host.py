@@ -45,6 +45,30 @@ GUARD_HEADROOM_FRAC = 0.10
 
 
 @dataclass(frozen=True)
+class ReplicaFootprint:
+    """Per-replica placement demand of one environment backend.
+
+    Heterogeneous fleets (``repro.envs``) bin-pack per-backend demand:
+    a container-free SWE sandbox reserves 1.5 GB RAM and an 8 MiB CoW
+    delta where an OS VM reserves 6 GB and 64 MiB, so the same machine
+    holds very different replica counts depending on what it serves.
+    The default footprint is the SimOS profile — legacy single-backend
+    placement is bit-identical to the pre-footprint code path."""
+
+    ram_limit_gb: float = REPLICA_RAM_LIMIT_GB
+    cow_bytes: int = EST_COW_PER_REPLICA_BYTES
+
+    @classmethod
+    def for_backend(cls, backend) -> "ReplicaFootprint":
+        """The footprint an ``EnvBackend`` declares (resources + CoW)."""
+        return cls(ram_limit_gb=backend.ram_limit_gb(),
+                   cow_bytes=backend.est_cow_bytes)
+
+
+DEFAULT_FOOTPRINT = ReplicaFootprint()
+
+
+@dataclass(frozen=True)
 class HostDemand:
     """Per-replica CPU demand: idle + Bernoulli(duty) * burst.
 
@@ -87,6 +111,11 @@ class Host:
         self.sim = SimHost(HostSpec(cores=spec.cores, ram_gb=float(spec.ram_gb)))
         self.disk_budget_bytes = spec.disk_gb << 30
         self.placed = 0  # replicas reserved on this host (incl. booting)
+        # the footprint this host's placements reserve at: set on first
+        # reserve, cleared when the host empties. One host serves one
+        # backend at a time (a pool is single-backend), so mixed fleets
+        # dedicate hosts rather than interleave footprints.
+        self.footprint: Optional[ReplicaFootprint] = None
         self.pool: Optional[RunnerPool] = None
         # L4: an evicted host is unschedulable — the recovery ladder
         # declared it exhausted (kernel limits), so replacement capacity
@@ -94,28 +123,52 @@ class Host:
         self.evicted = False
 
     # ------------------------------------------------------------- budgets
-    def replica_capacity(self) -> int:
-        """Replicas this machine can hold before RAM or CoW disk binds."""
+    def capacity_for(self, footprint: ReplicaFootprint) -> int:
+        """Replicas of one footprint this machine can hold before RAM or
+        CoW disk binds."""
         usable_ram = self.spec.ram_gb * (1.0 - GUARD_HEADROOM_FRAC)
         usable_ram -= HOST_OS_BASELINE_GB + GUARD_HEADROOM_GB
-        by_ram = int(usable_ram // REPLICA_RAM_LIMIT_GB)
-        by_disk = int(self.disk_budget_bytes // EST_COW_PER_REPLICA_BYTES)
+        by_ram = int(usable_ram // footprint.ram_limit_gb)
+        by_disk = int(self.disk_budget_bytes // footprint.cow_bytes)
         return max(min(by_ram, by_disk, MAX_REPLICAS_PER_NODE), 0)
+
+    def replica_capacity(self) -> int:
+        """Capacity at the host's current footprint (SimOS by default)."""
+        return self.capacity_for(self.footprint or DEFAULT_FOOTPRINT)
 
     def headroom(self) -> int:
         if self.evicted:
             return 0
         return self.replica_capacity() - self.placed
 
-    def reserve(self, n: int) -> None:
-        assert n <= self.headroom(), (
+    def headroom_for(self, footprint: Optional[ReplicaFootprint]) -> int:
+        """Headroom for *one backend's* footprint.
+
+        A host already serving a different footprint reports zero: pools
+        are single-backend, so mixed fleets dedicate whole hosts instead
+        of interleaving RAM/disk demand shapes on one machine."""
+        fp = footprint or DEFAULT_FOOTPRINT
+        if self.evicted:
+            return 0
+        if self.placed and self.footprint is not None \
+                and self.footprint != fp:
+            return 0
+        return self.capacity_for(fp) - self.placed
+
+    def reserve(self, n: int,
+                footprint: Optional[ReplicaFootprint] = None) -> None:
+        fp = footprint or DEFAULT_FOOTPRINT
+        assert n <= self.headroom_for(fp), (
             f"{self.host_id}: reserving {n} replicas exceeds headroom "
-            f"{self.headroom()}"
+            f"{self.headroom_for(fp)}"
         )
+        self.footprint = fp
         self.placed += n
 
     def release_placement(self, n: int) -> None:
         self.placed = max(self.placed - n, 0)
+        if self.placed == 0:
+            self.footprint = None
 
     # ---------------------------------------------------------- contention
     def contention_factor(self) -> float:
@@ -140,7 +193,8 @@ class Host:
         cpu = self.demand.mean_cores(placed, busy) / self.spec.cores
         ram = self.sim.ram_used_gb / self.spec.ram_gb
         budget = max(self.disk_budget_bytes, 1)
-        disk = self.placed * EST_COW_PER_REPLICA_BYTES / budget
+        cow = (self.footprint or DEFAULT_FOOTPRINT).cow_bytes
+        disk = self.placed * cow / budget
         return {
             "host": self.host_id,
             "replicas": placed,

@@ -11,7 +11,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Sequence
 
-from repro.cluster.host import Host
+from repro.cluster.host import Host, ReplicaFootprint
 
 
 class PlacementError(RuntimeError):
@@ -30,7 +30,8 @@ class Placer:
     def __init__(self, hosts: Sequence[Host]):
         self.hosts = list(hosts)
 
-    def place(self, n_replicas: int, *, pool_size: int = 32) -> list[Placement]:
+    def place(self, n_replicas: int, *, pool_size: int = 32,
+              footprint: ReplicaFootprint = None) -> list[Placement]:
         """Reserve ``n_replicas`` across hosts; one plan entry per host.
 
         Hosts are filled in their given order (first fit), which keeps
@@ -40,7 +41,13 @@ class Placer:
         exhausted does a second pass pack hosts up to their full RAM/disk
         capacity — so any request within the fleet's hard budgets
         succeeds. Reservations are committed on the hosts as the plan is
-        built and fully rolled back if the request cannot be satisfied."""
+        built and fully rolled back if the request cannot be satisfied.
+
+        ``footprint`` is the per-replica RAM/CoW demand being placed
+        (heterogeneous backends pack very different counts per machine);
+        ``None`` keeps the default SimOS footprint, bit-identical to the
+        pre-footprint behavior. Hosts already dedicated to a different
+        footprint report zero headroom and are skipped."""
         assert n_replicas > 0, "place at least one replica"
         counts: dict[int, int] = {}  # host index -> replicas placed
         remaining = n_replicas
@@ -48,12 +55,12 @@ class Placer:
             for i, host in enumerate(self.hosts):
                 if remaining == 0:
                     break
-                take = min(host.headroom(), remaining)
+                take = min(host.headroom_for(footprint), remaining)
                 if cap_to_pool_size:
                     take = min(take, pool_size - counts.get(i, 0))
                 if take <= 0:
                     continue
-                host.reserve(take)
+                host.reserve(take, footprint=footprint)
                 counts[i] = counts.get(i, 0) + take
                 remaining -= take
         if remaining:

@@ -84,6 +84,13 @@ class Gateway:
         # sorting per acquire is O(n log n) per event and dominates routing
         # at 1000+ nodes (65k-replica fleets sweep this on every wakeup)
         self._node_ring = sorted(self.pools)
+        # backend-constrained sub-rings (repro.envs): a task tagged with a
+        # backend only ever routes to pools of that backend, so a SWE
+        # episode cannot land on a browser pool. Cached per backend and
+        # rebuilt with the node ring; key None is the unconstrained ring,
+        # which on a single-backend fleet is the same list — identical
+        # hash start index, bit-identical routing to the pre-backend stack
+        self._backend_rings: dict[Optional[str], list[str]] = {}
         self.health_interval_s = health_interval_s
         self.unhealthy_threshold = unhealthy_threshold
         self.routing = routing
@@ -222,6 +229,7 @@ class Gateway:
             self.pools[pool.node_id] = pool
             self.status[pool.node_id] = NodeStatus()
             self._node_ring = sorted(self.pools)
+            self._backend_rings.clear()
         if self._loop is not None:
             pool.attach_loop(self._loop, release_cv=self._release_cv)
             self._release_cv.notify_all()
@@ -238,6 +246,7 @@ class Gateway:
             pool = self.pools.pop(node_id)
             self.status.pop(node_id)
             self._node_ring = sorted(self.pools)
+            self._backend_rings.clear()
             if pool.n_busy > 0:
                 self._retired[node_id] = pool
                 return pool
@@ -275,9 +284,29 @@ class Gateway:
             self.telemetry.observe(f"acquire_wait_vs:{tenant}", waited_vs)
 
     # ------------------------------------------------------------ routing
-    def _affinity_order(self, task_id: str) -> list[str]:
+    def _ring_for(self, backend: Optional[str]) -> list[str]:
+        """The hash ring restricted to one backend's pools (None = all).
+
+        On a heterogeneous fleet this is what keeps a SWE episode off a
+        browser pool; on a single-backend fleet the restricted ring *is*
+        the full ring, so routing is bit-identical to the unconstrained
+        path. Cached until the pool set changes."""
+        ring = self._backend_rings.get(backend)
+        if ring is None:
+            if backend is None:
+                ring = self._node_ring
+            else:
+                ring = [n for n in self._node_ring
+                        if self.pools[n].backend_name == backend]
+            self._backend_rings[backend] = ring
+        return ring
+
+    def _affinity_order(self, task_id: str,
+                        backend: Optional[str] = None) -> list[str]:
         """Stable hash ring: preferred node first, failover order after."""
-        nodes = self._node_ring
+        nodes = self._ring_for(backend)
+        if not nodes:
+            return []
         h = int.from_bytes(
             hashlib.blake2b(task_id.encode(), digest_size=8).digest(),
             "little")
@@ -293,13 +322,14 @@ class Gateway:
         busy = 1.0 - (p.n_free / p.size) if p.size else 1.0
         return busy + max(p.latency_scale() - 1.0, 0.0)
 
-    def _route_order(self, task_id: str) -> list[str]:
+    def _route_order(self, task_id: str,
+                     backend: Optional[str] = None) -> list[str]:
         """Candidate order for one acquire attempt, per routing mode.
 
         ``least_loaded`` sorts by the live load score and uses the hash
         ring's order as a deterministic tie-break, so an idle fleet
         routes exactly like affinity mode."""
-        order = self._affinity_order(task_id)
+        order = self._affinity_order(task_id, backend)
         if self.routing == "affinity" or len(order) <= 1:
             return order
         rank = {n: i for i, n in enumerate(order)}
@@ -307,14 +337,16 @@ class Gateway:
                       key=lambda n: (round(self._load_score(n), 9), rank[n]))
 
     def acquire(self, task_id: str, timeout: Optional[float] = 1.0,
-                exclude: Collection[str] = ()
+                exclude: Collection[str] = (),
+                backend: Optional[str] = None
                 ) -> Optional[tuple[str, Runner]]:
         """Acquire a runner, honoring affinity and skipping unhealthy nodes.
 
         ``exclude`` removes specific nodes from consideration — used by the
         rollout engine to fail an aborted episode over to a *different* node
-        even when the faulty one still reports healthy."""
-        order = self._route_order(task_id)
+        even when the faulty one still reports healthy. ``backend``
+        restricts candidates to pools of that EnvBackend (None = any)."""
+        order = self._route_order(task_id, backend)
         for attempt, node in enumerate(order):
             if node in exclude:
                 continue
@@ -330,14 +362,17 @@ class Gateway:
                 return node, r
         return None
 
-    def try_acquire(self, task_id: str, exclude: Collection[str] = ()
+    def try_acquire(self, task_id: str, exclude: Collection[str] = (),
+                    backend: Optional[str] = None
                     ) -> Optional[tuple[str, Runner]]:
         """Non-blocking acquire: returns immediately, None if nothing free."""
-        return self.acquire(task_id, timeout=0.0, exclude=exclude)
+        return self.acquire(task_id, timeout=0.0, exclude=exclude,
+                            backend=backend)
 
     def acquire_ev(self, task_id: str, timeout: Optional[float] = 1.0,
                    exclude: Collection[str] = (),
-                   tenant: Optional[str] = None):
+                   tenant: Optional[str] = None,
+                   backend: Optional[str] = None):
         """Event-loop acquire: ``got = yield from gw.acquire_ev(...)``.
 
         Same affinity/health/exclusion semantics as ``acquire``, but the
@@ -348,6 +383,7 @@ class Gateway:
         ``tenant`` tags this acquire's wait sample (window + telemetry
         series ``acquire_wait_vs:<tenant>``) so per-tenant latency SLOs
         can be tracked; ``None`` keeps the untagged single-tenant path.
+        ``backend`` restricts candidates to pools of that EnvBackend.
 
         The candidate order is recomputed on every wakeup: pools added or
         removed while this task was parked (elastic scaling) are seen on
@@ -359,7 +395,8 @@ class Gateway:
                     else self._loop.now + timeout)
         while True:
             candidates = 0
-            if not any(p.n_free for p in self.pools.values()):
+            ring = self._ring_for(backend)
+            if not any(self.pools[n].n_free for n in ring):
                 # saturation fast path: release() wakes *every* parked
                 # waiter (exclusion-aware, see runner_pool), so under a
                 # deep backlog most wakeups find the one freed runner
@@ -368,11 +405,12 @@ class Gateway:
                 # candidates (for the nothing-can-help early return) and
                 # skip the load-score sort. Bit-identical to the full
                 # scan, which skips every empty pool anyway.
-                for node in self._node_ring:
+                for node in ring:
                     if node not in exclude and self.status[node].healthy:
                         candidates += 1
             else:
-                for attempt, node in enumerate(self._route_order(task_id)):
+                for attempt, node in enumerate(
+                        self._route_order(task_id, backend)):
                     if node in exclude or not self.status[node].healthy:
                         continue
                     candidates += 1
@@ -445,7 +483,8 @@ class Gateway:
     def submit(self, task_id: str,
                fn: Callable[[str, Runner], object], *,
                acquire_timeout: Optional[float] = 5.0,
-               exclude: Collection[str] = ()) -> Future:
+               exclude: Collection[str] = (),
+               backend: Optional[str] = None) -> Future:
         """Non-blocking task submission.
 
         Acquires a runner asynchronously (affinity + failover as in
@@ -461,7 +500,7 @@ class Gateway:
 
         def job():
             got = self.acquire(task_id, timeout=acquire_timeout,
-                               exclude=exclude)
+                               exclude=exclude, backend=backend)
             if got is None:
                 raise NoRunnerAvailable(task_id)
             node, runner = got

@@ -78,7 +78,18 @@ class ReplicaResources:
 
 
 class SimOSReplica:
-    """A full-featured (simulated) OS sandbox with GUI."""
+    """A full-featured (simulated) OS sandbox with GUI.
+
+    Also the reference implementation of the ``EnvBackend`` replica
+    protocol (``repro.envs``): the lifecycle methods below (boot /
+    configure / reset / step / evaluate / close, plus ``canary_probe``)
+    and the ``alive`` / ``state`` / ``silent_broken`` attributes are the
+    contract every backend's replica satisfies. Backend replicas
+    subclass this and override ``_expected`` (their own known-answer
+    canary) and, where episode semantics differ, ``evaluate``."""
+
+    #: which EnvBackend family this replica implements (see repro.envs)
+    backend_name = "simos"
 
     def __init__(
         self,
@@ -238,16 +249,23 @@ class SimOSReplica:
         if not self.alive:
             return False, cost
         got = self._observation()
-        want = expected_observation(self.replica_id, self.obs_nonce, self.step_count)
+        want = self._expected()
         got_sum = hashlib.blake2b(got.tobytes(), digest_size=8).digest()
         want_sum = hashlib.blake2b(want.tobytes(), digest_size=8).digest()
         return got_sum == want_sum, cost
+
+    def _expected(self) -> np.ndarray:
+        """The known-answer observation for this replica's visible state.
+
+        Backend replicas (``repro.envs``) override this with their own
+        backend-salted reference so each backend has a distinct canary."""
+        return expected_observation(self.replica_id, self.obs_nonce, self.step_count)
 
     def _observation(self) -> np.ndarray:
         if self.silent_broken:
             # kernel-limit exhaustion: frames come back blank, silently
             return np.zeros(SCREEN, np.uint8)
-        return expected_observation(self.replica_id, self.obs_nonce, self.step_count)
+        return self._expected()
 
 
 _OBS_WORDS = (SCREEN[0] * SCREEN[1] * SCREEN[2]) // 8  # uint64 per frame

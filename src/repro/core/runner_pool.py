@@ -21,7 +21,7 @@ from repro.core.cow_store import DiskImage
 from repro.core.event_loop import Condition as VirtualCondition
 from repro.core.event_loop import EventLoop, Timer
 from repro.core.faults import FaultInjector
-from repro.core.replica import SimOSReplica, LatencyModel
+from repro.core.replica import LatencyModel
 from repro.core.state_manager import ReplicaStateManager
 
 
@@ -193,9 +193,20 @@ class RunnerPool:
                  faults: Optional[FaultInjector] = None,
                  tune_limits: bool = True, seed: int = 0,
                  latency: Optional[LatencyModel] = None,
-                 task_timeout_vs: float = 600.0):
+                 task_timeout_vs: float = 600.0,
+                 backend=None):
         self.node_id = node_id
         self.base_image = base_image
+        if backend is None:
+            # lazy: repro.envs sits above the replica layer (it subclasses
+            # SimOSReplica), so the default backend is resolved at pool
+            # construction, never at module import
+            from repro.envs.simos import SimOSBackend
+            backend = SimOSBackend()
+        # which EnvBackend this pool's runners implement: every runner is
+        # built by the backend's factory, and the gateway routes tasks
+        # only to pools whose backend matches the task's
+        self.backend = backend
         self.host = host or SimHost()
         if tune_limits:
             self.host.tune_limits()
@@ -235,7 +246,10 @@ class RunnerPool:
             return None
         try:
             rid = f"{self.node_id}/r{i}"
-            rep = SimOSReplica(
+            # delegated to the pool's EnvBackend; the SimOS backend
+            # forwards these arguments to SimOSReplica verbatim, so the
+            # default path is bit-identical to direct construction
+            rep = self.backend.make_replica(
                 rid, self.base_image,
                 faults=self._faults.scaled(1.0),
                 seed=self._seed + i, latency=self._latency)
@@ -611,6 +625,12 @@ class RunnerPool:
 
     # ------------------------------------------------------------ metrics
     @property
+    def backend_name(self) -> str:
+        """Routing key: the gateway's backend-constrained rings match a
+        task's ``backend`` tag against this."""
+        return self.backend.name
+
+    @property
     def size(self) -> int:
         return len(self._all)
 
@@ -642,7 +662,8 @@ class RunnerPool:
                 if r.silent_broken:
                     broken += 1
             n_quarantined = len(self.quarantined)
-        return {"node": self.node_id, "size": self.size, "alive": alive,
+        return {"node": self.node_id, "backend": self.backend_name,
+                "size": self.size, "alive": alive,
                 "free": self.n_free,
                 "healthy": healthy,
                 "silent_broken": broken,

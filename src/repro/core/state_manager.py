@@ -6,7 +6,9 @@ style public methods (configure / reset / step / evaluate / close) plus
 private low-level health & recovery methods. Faults are handled where they
 occur: step-retryable errors are retried per policy; crashes trigger an
 autonomous local recovery (re-clone disk from base, reboot, re-configure) —
-failures never propagate beyond the replica.
+failures never propagate beyond the replica. The manager is
+backend-agnostic: it drives any replica honoring the ``EnvBackend``
+lifecycle protocol (``repro.envs``), not just the SimOS oracle.
 
 The baselines model the coordination cost the paper argues against: every
 operation through a centralized manager serializes behind one dispatcher

@@ -39,11 +39,13 @@ class TaskSpec:
     horizon: int                      # steps per trajectory (10-25)
     setup_software: tuple = ()
     scenario: str = ""                # registry name; "" for legacy tasks
+    backend: str = "simos"            # EnvBackend the episode must run on
 
     def to_dict(self) -> dict:
         return {"task_id": self.task_id, "task_type": self.task_type,
                 "domain": self.domain, "description": self.description,
-                "horizon": self.horizon, "scenario": self.scenario}
+                "horizon": self.horizon, "scenario": self.scenario,
+                "backend": self.backend}
 
 
 class TaskSuite:

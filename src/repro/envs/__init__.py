@@ -1,0 +1,47 @@
+"""Pluggable environment backends (``EnvBackend`` protocol).
+
+One control plane, many calibrated environments: ``simos`` (the original
+full-OS VM, bit-identical to the pre-protocol stack), ``swe``
+(container-free repo-edit + test-run episodes), ``browser`` (headless
+browser farm), and ``mobile`` (device emulator). See
+``docs/ENVIRONMENTS.md`` for the protocol contract and calibration
+tables."""
+
+from repro.envs.base import (
+    BackendReplica,
+    EnvBackend,
+    RewardSpec,
+    UnknownBackendError,
+    UnknownFamilyError,
+    backend_names,
+    expected_backend_observation,
+    get_backend,
+    register_backend,
+)
+from repro.envs.simos import SimOSBackend
+from repro.envs.swe import SWEBackend, SWEReplica
+from repro.envs.browser import BrowserBackend, BrowserReplica
+from repro.envs.mobile import MobileBackend, MobileReplica
+
+for _backend in (SimOSBackend(), SWEBackend(), BrowserBackend(), MobileBackend()):
+    register_backend(_backend)
+del _backend
+
+__all__ = [
+    "BackendReplica",
+    "BrowserBackend",
+    "BrowserReplica",
+    "EnvBackend",
+    "MobileBackend",
+    "MobileReplica",
+    "RewardSpec",
+    "SWEBackend",
+    "SWEReplica",
+    "SimOSBackend",
+    "UnknownBackendError",
+    "UnknownFamilyError",
+    "backend_names",
+    "expected_backend_observation",
+    "get_backend",
+    "register_backend",
+]

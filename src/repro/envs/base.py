@@ -1,0 +1,265 @@
+"""The ``EnvBackend`` protocol: pluggable environment backends behind one
+control plane.
+
+OSGym's pitch is *general-purpose* computer-use infrastructure: the same
+pools / gateway / recovery ladder / learner pipeline should serve any
+environment family (cf. Gym-Anything's "turn any software into an agent
+environment"). This module defines the contract a backend must satisfy so
+every layer above the replica stays backend-agnostic:
+
+- **Lifecycle** — ``make_replica`` returns a replica object implementing
+  the SimOS lifecycle: ``boot() -> vs``, ``configure(task) -> vs``,
+  ``reset() -> (obs, vs)``, ``step(action) -> (obs, r, done, info, vs)``,
+  ``evaluate() -> (score, vs)``, ``close() -> vs``, ``crash()``, plus the
+  ``alive`` / ``state`` / ``silent_broken`` / ``step_count`` attributes
+  the state manager and recovery ladder read. Snapshots ride on the CoW
+  disk layer (``replica.disk``), which every backend inherits.
+- **Resources** — per-backend :class:`~repro.core.replica.ReplicaResources`
+  (RAM/CPU envelope) and ``est_cow_bytes`` (CoW disk delta per replica),
+  so placement can bin-pack heterogeneous demand onto hosts.
+- **Latency / fault profile** — a calibrated
+  :class:`~repro.core.replica.LatencyModel` and an optional fault-rate
+  mix; ``None`` means "use the fleet default", which is how the SimOS
+  backend stays bit-identical to the pre-protocol stack.
+- **Rewards** — per-family :class:`RewardSpec` defaults live *on the
+  backend* (single source of truth; the scenario registry reads them via
+  :meth:`EnvBackend.reward_spec`, which raises on an unknown family
+  instead of silently falling back), plus a ``reward_scale`` applied at
+  ingest so one learner can consume the cross-domain mix without one
+  backend's return magnitude dominating.
+- **Canary** — a known-answer ``canary_probe`` contract: every backend's
+  replica must reproduce a precomputed observation bit-for-bit when
+  healthy, so the L3 quarantine layer detects silent corruption on any
+  backend without backend-specific probes. Backends get *distinct* known
+  answers via :func:`expected_backend_observation` (the backend name
+  salts the digest), so a cross-wired probe cannot pass by accident.
+
+``SimOSBackend`` (``repro.envs.simos``) is the extracted oracle; the
+calibrated SWE / browser / mobile backends live beside it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.faults import FaultInjector, FaultType
+from repro.core.replica import (
+    LatencyModel,
+    ReplicaResources,
+    SimOSReplica,
+    expected_observation,
+)
+
+
+@dataclass(frozen=True)
+class RewardSpec:
+    """Per-family shaping of the scenario outcome into RL rewards.
+
+    ``evaluate()`` returns a raw score in [0, 1]; the spec turns it into
+    the learner's objective: a success criterion (``success_threshold``),
+    a terminal reward (success bonus + efficiency bonus for finishing
+    under the horizon, or partial credit for near-misses), and a per-step
+    penalty that prices each environment step so the policy is pushed
+    toward short successful episodes — the grounding that makes scenario
+    outcomes matter to training (cf. Gym-Anything). Defaults per family
+    live on the owning :class:`EnvBackend`."""
+
+    success_threshold: float = 0.5
+    success_bonus: float = 1.0
+    efficiency_bonus: float = 0.25  # scaled by unused fraction of horizon
+    partial_weight: float = 0.25  # credit for sub-threshold scores
+    step_penalty: float = 0.01
+
+    def success(self, score: float) -> bool:
+        return score >= self.success_threshold
+
+    def terminal_reward(self, score: float, n_steps: int, horizon: int) -> float:
+        if self.success(score):
+            spare = max(horizon - n_steps, 0) / max(horizon, 1)
+            return self.success_bonus + self.efficiency_bonus * spare
+        return self.partial_weight * score
+
+    def step_rewards(self, score: float, n_steps: int, horizon: int) -> np.ndarray:
+        """Dense per-step reward vector: -step_penalty everywhere, with
+        the shaped terminal reward added on the final step."""
+        n = max(n_steps, 1)
+        r = np.full(n, -self.step_penalty, np.float32)
+        r[-1] += self.terminal_reward(score, n_steps, horizon)
+        return r
+
+    def episode_return(self, score: float, n_steps: int, horizon: int) -> float:
+        return float(self.step_rewards(score, n_steps, horizon).sum())
+
+
+class UnknownBackendError(KeyError):
+    """Lookup of a backend name nobody registered."""
+
+
+class UnknownFamilyError(KeyError):
+    """Reward lookup for a scenario family the backend does not define.
+
+    Raised instead of silently falling back to a generic spec: a family
+    string with no reward table is a wiring bug, and training on default
+    shaping would hide it."""
+
+
+def expected_backend_observation(
+    backend: str, replica_id: str, obs_nonce: int, step_count: int
+) -> np.ndarray:
+    """Known-answer observation for a non-SimOS backend's replica.
+
+    Same Philox synthesis as :func:`~repro.core.replica.expected_observation`
+    but the backend name salts the digest, so each backend has its own
+    known answer: a probe wired to the wrong backend's reference fails
+    loudly instead of passing by coincidence."""
+    return expected_observation(f"{backend}::{replica_id}", obs_nonce, step_count)
+
+
+class BackendReplica(SimOSReplica):
+    """Base replica for non-SimOS backends.
+
+    Reuses the SimOS machinery wholesale — CoW disk, fault sampling,
+    deterministic latency streams, lifecycle states — and swaps in the
+    backend-salted known answer, so the canary contract holds with a
+    backend-specific reference. Subclasses override class attributes
+    (``backend_name``) and, where the episode semantics differ,
+    ``evaluate`` (e.g. SWE pass/fail)."""
+
+    backend_name = "abstract"
+
+    def _expected(self) -> np.ndarray:
+        return expected_backend_observation(
+            self.backend_name, self.replica_id, self.obs_nonce, self.step_count
+        )
+
+
+class EnvBackend:
+    """A calibrated environment backend: descriptor + replica factory.
+
+    Stateless by design — one instance can serve any number of pools.
+    Subclasses set the class attributes and (optionally) override the
+    latency/resources hooks; ``None`` from either hook means "keep the
+    replica's own defaults", which is how :class:`SimOSBackend
+    <repro.envs.simos.SimOSBackend>` stays bit-identical to the
+    pre-protocol stack."""
+
+    #: registry key; also stamped on tasks / pools / telemetry
+    name = "abstract"
+    #: one-line operator description (docs + health output)
+    description = ""
+    #: replica class the factory instantiates
+    replica_cls: type = SimOSReplica
+    #: per-family reward shaping (the scenario registry's source of truth)
+    reward_defaults: dict[str, RewardSpec] = {}
+    #: fault-rate mix for pools of this backend; None = fleet default
+    fault_rates: Optional[dict[FaultType, float]] = None
+    #: ingest-time scale on shaped rewards (cross-domain normalization)
+    reward_scale: float = 1.0
+    #: estimated CoW disk delta per replica (heterogeneous bin-packing)
+    est_cow_bytes: int = 64 << 20
+
+    # ------------------------------------------------------------ profiles
+    def latency(self) -> Optional[LatencyModel]:
+        """Calibrated latency bands; None keeps the replica default."""
+        return None
+
+    def resources(self) -> Optional[ReplicaResources]:
+        """Per-replica RAM/CPU envelope; None keeps the replica default."""
+        return None
+
+    def ram_limit_gb(self) -> float:
+        """Placement-visible RAM demand of one replica."""
+        res = self.resources()
+        return (res or ReplicaResources()).ram_limit_gb
+
+    # ------------------------------------------------------------- factory
+    def make_replica(
+        self,
+        replica_id: str,
+        base_image,
+        *,
+        faults: Optional[FaultInjector] = None,
+        seed: int = 0,
+        latency: Optional[LatencyModel] = None,
+    ):
+        """Build one replica. An explicit ``latency`` (a fleet-wide
+        calibration override) wins over the backend's own bands."""
+        return self.replica_cls(
+            replica_id,
+            base_image,
+            faults=faults,
+            seed=seed,
+            latency=latency if latency is not None else self.latency(),
+            resources=self.resources(),
+        )
+
+    # ------------------------------------------------------------- rewards
+    def families(self) -> list[str]:
+        return list(self.reward_defaults)
+
+    def reward_spec(self, family: str) -> RewardSpec:
+        """The family's reward shaping; unknown families raise."""
+        try:
+            return self.reward_defaults[family]
+        except KeyError:
+            raise UnknownFamilyError(
+                f"backend {self.name!r} has no reward defaults for family "
+                f"{family!r} (known: {sorted(self.reward_defaults)})"
+            ) from None
+
+    # ------------------------------------------------------------- canary
+    def expected_canary(
+        self, replica_id: str, obs_nonce: int, step_count: int
+    ) -> np.ndarray:
+        """The known answer a healthy replica of this backend must
+        produce — the reference the conformance suite checks the live
+        ``canary_probe`` against."""
+        if self.replica_cls is SimOSReplica:
+            return expected_observation(replica_id, obs_nonce, step_count)
+        return expected_backend_observation(
+            self.name, replica_id, obs_nonce, step_count
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<EnvBackend {self.name}>"
+
+
+# ------------------------------------------------------------------ registry
+_BACKENDS: dict[str, EnvBackend] = {}
+
+
+def register_backend(backend: EnvBackend) -> EnvBackend:
+    """Register a backend instance under its name (idempotent per name
+    only for the identical instance; a second distinct registration is a
+    wiring bug and raises)."""
+    existing = _BACKENDS.get(backend.name)
+    if existing is not None and existing is not backend:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> EnvBackend:
+    """Look up a registered backend; unknown names raise."""
+    # the built-ins self-register when the package initializes; importing
+    # lazily here keeps `repro.envs.base` a leaf module (no cycle through
+    # the backend modules, which subclass classes defined above)
+    if not _BACKENDS:
+        import repro.envs  # noqa: F401  (registers the built-ins)
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise UnknownBackendError(
+            f"no EnvBackend named {name!r} (known: {sorted(_BACKENDS)})"
+        ) from None
+
+
+def backend_names() -> list[str]:
+    if not _BACKENDS:
+        import repro.envs  # noqa: F401
+
+        assert _BACKENDS, "repro.envs import registered no backends"
+    return sorted(_BACKENDS)

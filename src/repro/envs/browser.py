@@ -1,0 +1,73 @@
+"""Browser backend: headless browser farm episodes.
+
+A dedicated browser-automation environment (distinct from SimOS's
+"browser app inside the OS VM" family): each replica is a headless
+browser process with its own profile directory on the CoW store. Steps
+are DOM actions, so they are fast; the fault mix is network-shaped —
+connection failures and page-load timeouts dominate, with the occasional
+tab crash. Resource demand sits between SWE sandboxes and OS VMs
+(~2 GB RAM limit, 24 MiB profile delta), which is what makes the
+heterogeneous bin-packing in ``cluster/placement.py`` non-trivial.
+
+The canary replays a scripted about:blank navigation whose rendered
+frame is precomputed from the backend-salted digest.
+"""
+
+from __future__ import annotations
+
+from repro.core.faults import FaultType
+from repro.core.replica import LatencyModel, ReplicaResources
+from repro.envs.base import BackendReplica, EnvBackend, RewardSpec
+
+
+class BrowserReplica(BackendReplica):
+    """Headless browser process with a CoW-backed profile."""
+
+    backend_name = "browser"
+
+
+class BrowserBackend(EnvBackend):
+    """Headless browser farm (navigation / form-filling episodes)."""
+
+    name = "browser"
+    description = "headless browser farm (DOM actions, network-bound faults)"
+    replica_cls = BrowserReplica
+    reward_scale = 1.0
+    est_cow_bytes = 24 << 20  # profile dir + cache delta
+
+    # network-shaped: connection errors and load timeouts dominate
+    fault_rates = {
+        FaultType.CONNECTION: 0.030,
+        FaultType.TIMEOUT: 0.018,
+        FaultType.RUNTIME: 0.008,
+        FaultType.CRASH: 0.004,  # tab / renderer crash
+        FaultType.HANG: 0.003,
+    }
+
+    reward_defaults = {
+        "web_nav": RewardSpec(success_threshold=0.45, step_penalty=0.015),
+        "web_form": RewardSpec(
+            success_threshold=0.55, step_penalty=0.012, partial_weight=0.30
+        ),
+    }
+
+    def latency(self) -> LatencyModel:
+        return LatencyModel(
+            boot_s=3.5,  # browser process + profile load
+            configure_s=1.2,  # open the start URL
+            reset_s=1.5,  # clear cookies, fresh tab
+            step_s=0.9,  # DOM action
+            evaluate_s=0.8,  # assert final DOM state
+            sigma=0.50,  # network jitter
+            hang_timeout_s=15.0,
+            canary_s=0.10,
+        )
+
+    def resources(self) -> ReplicaResources:
+        return ReplicaResources(
+            ram_gb=1.6,
+            ram_limit_gb=2.0,
+            cpu_peak_cores=1.5,
+            cpu_duty=0.3,
+            cpu_idle_cores=0.05,
+        )

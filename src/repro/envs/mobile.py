@@ -1,0 +1,70 @@
+"""Mobile backend: device-emulator episodes.
+
+Each replica is a mobile-device emulator restored from a CoW snapshot:
+the slowest backend to provision (cold boot dominates, which is why the
+pre-warmed pool layer matters most here) and the heaviest non-VM disk
+delta. Steps are UI events against the emulated device; faults skew
+toward app crashes and ANR-style timeouts. Resource demand is closer to
+an OS VM (~4 GB RAM limit) but with a distinct CPU envelope, so mixed
+placement cannot treat it as either a SimOS VM or a browser process.
+
+The canary replays a scripted home-screen wake whose frame is
+precomputed from the backend-salted digest.
+"""
+
+from __future__ import annotations
+
+from repro.core.faults import FaultType
+from repro.core.replica import LatencyModel, ReplicaResources
+from repro.envs.base import BackendReplica, EnvBackend, RewardSpec
+
+
+class MobileReplica(BackendReplica):
+    """Device emulator restored from a CoW snapshot."""
+
+    backend_name = "mobile"
+
+
+class MobileBackend(EnvBackend):
+    """Mobile device emulator (app / settings episodes)."""
+
+    name = "mobile"
+    description = "device emulator (UI events, app-crash/ANR fault mix)"
+    replica_cls = MobileReplica
+    reward_scale = 0.9
+    est_cow_bytes = 128 << 20  # emulator snapshot delta
+
+    # app crashes and ANR timeouts dominate
+    fault_rates = {
+        FaultType.CONNECTION: 0.006,
+        FaultType.TIMEOUT: 0.015,  # ANR: activity not responding
+        FaultType.RUNTIME: 0.010,
+        FaultType.CRASH: 0.006,  # app crash
+        FaultType.HANG: 0.004,
+    }
+
+    reward_defaults = {
+        "mobile_app": RewardSpec(success_threshold=0.50, step_penalty=0.009),
+        "mobile_settings": RewardSpec(success_threshold=0.60, step_penalty=0.006),
+    }
+
+    def latency(self) -> LatencyModel:
+        return LatencyModel(
+            boot_s=25.0,  # emulator cold boot — prewarming matters most here
+            configure_s=4.0,  # app install
+            reset_s=2.5,  # activity restart
+            step_s=1.6,  # UI event round-trip
+            evaluate_s=1.2,  # UI-state assertion
+            sigma=0.40,
+            hang_timeout_s=25.0,
+            canary_s=0.30,
+        )
+
+    def resources(self) -> ReplicaResources:
+        return ReplicaResources(
+            ram_gb=3.0,
+            ram_limit_gb=4.0,
+            cpu_peak_cores=3.0,
+            cpu_duty=0.35,
+            cpu_idle_cores=0.2,
+        )

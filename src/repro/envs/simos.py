@@ -1,0 +1,53 @@
+"""SimOS backend: the extracted oracle.
+
+This is the original full-OS-in-a-VM environment (``SimOSReplica``)
+repackaged behind the :class:`~repro.envs.base.EnvBackend` protocol. The
+extraction is a pure re-plumbing — every hook returns ``None`` (keep the
+replica's own calibrated defaults) and the factory forwards its arguments
+verbatim, so a SimOS fleet built through the backend is **bit-identical**
+to the pre-protocol stack: same RNG streams, same event order, same
+committed benchmark baselines. ``tests/test_envs.py`` holds that line.
+
+The per-family reward defaults that used to be duplicated as a dict
+literal inside ``rollout/scenarios.py`` now live here (the backend is the
+single source of truth); the scenario registry reads them via
+``reward_spec``, which raises on an unknown family.
+"""
+
+from __future__ import annotations
+
+from repro.envs.base import EnvBackend, RewardSpec
+from repro.core.replica import SimOSReplica
+
+
+class SimOSBackend(EnvBackend):
+    """Full simulated OS sandbox with GUI (KVM-VM stand-in)."""
+
+    name = "simos"
+    description = "full OS VM with GUI apps (office/browser/terminal/...)"
+    replica_cls = SimOSReplica
+    # the fleet defaults *are* this backend's calibration: latency() and
+    # resources() stay None so the factory path is byte-for-byte the old
+    # direct SimOSReplica construction
+    fault_rates = None
+    reward_scale = 1.0
+    est_cow_bytes = 64 << 20  # == cluster.host.EST_COW_PER_REPLICA_BYTES
+
+    # Per-family reward shaping (previously the ``rewards`` dict literal
+    # in ``default_registry``): step penalties track the family's step
+    # cost (slow browser/image steps are expensive; terminal steps are
+    # cheap), thresholds track how sharply the family's evaluator
+    # separates success from failure, and the multi-app workflows give
+    # more partial credit because partial completion is still useful.
+    reward_defaults = {
+        "office": RewardSpec(success_threshold=0.50, step_penalty=0.010),
+        "browser": RewardSpec(success_threshold=0.45, step_penalty=0.020),
+        "email": RewardSpec(success_threshold=0.50, step_penalty=0.010),
+        "media": RewardSpec(success_threshold=0.40, step_penalty=0.008),
+        "coding": RewardSpec(success_threshold=0.55, step_penalty=0.012),
+        "image": RewardSpec(success_threshold=0.50, step_penalty=0.018),
+        "terminal": RewardSpec(success_threshold=0.60, step_penalty=0.005),
+        "multi_app": RewardSpec(
+            success_threshold=0.35, step_penalty=0.008, partial_weight=0.40
+        ),
+    }

@@ -282,7 +282,8 @@ class FederatedGateway:
     # ------------------------------------------------------------- acquire
     def acquire_ev(self, task_id: str, timeout: Optional[float] = 1.0,
                    exclude: Collection[str] = (),
-                   tenant: Optional[str] = None):
+                   tenant: Optional[str] = None,
+                   backend: Optional[str] = None):
         """Event-loop acquire: route once, then park — never poll.
 
         The spill decision is made when the acquire arrives (and again
@@ -299,7 +300,8 @@ class FederatedGateway:
         fed = self.fed
         if len(fed.regions) == 1:
             return (yield from fed.regions[0].gateway.acquire_ev(
-                task_id, timeout=timeout, exclude=exclude, tenant=tenant))
+                task_id, timeout=timeout, exclude=exclude, tenant=tenant,
+                backend=backend))
         loop = fed._loop
         assert loop is not None, "attach_loop() before acquire_ev()"
         home = fed.home_region(task_id)
@@ -335,7 +337,7 @@ class FederatedGateway:
                         return None
                 got = yield from target.gateway.acquire_ev(
                     task_id, timeout=remaining, exclude=exclude,
-                    tenant=tenant)
+                    tenant=tenant, backend=backend)
                 if got is not None:
                     if target is not home:
                         fed.telemetry.count("episodes_spilled")
@@ -353,7 +355,8 @@ class FederatedGateway:
                 yield Sleep(t)
 
     def acquire(self, task_id: str, timeout: Optional[float] = 1.0,
-                exclude: Collection[str] = ()):
+                exclude: Collection[str] = (),
+                backend: Optional[str] = None):
         """Threaded acquire (parity surface): home first, then reachable
         peers in spill order. No WAN pricing — wall-clock mode has no
         virtual clock to charge; the event path is the measured one."""
@@ -370,7 +373,7 @@ class FederatedGateway:
             break  # one spill candidate is enough for the threaded path
         for region in order:
             got = region.gateway.acquire(task_id, timeout=timeout,
-                                         exclude=exclude)
+                                         exclude=exclude, backend=backend)
             if got is not None:
                 return got
         return None

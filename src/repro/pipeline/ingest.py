@@ -50,6 +50,7 @@ from repro.core.telemetry import Telemetry
 from repro.data.pipeline import Trajectory, encode_trajectory, pad_stack
 from repro.data.replay_buffer import ReplayBuffer
 from repro.data.tokenizer import ByteTokenizer
+from repro.envs.base import get_backend
 from repro.pipeline.policy_store import PolicyVersionStore
 from repro.rollout.scenarios import ScenarioRegistry, get_default_registry
 
@@ -140,6 +141,13 @@ class TrajectoryIngestor:
         n_steps = len(traj.steps)
         step_rewards = scenario.reward.step_rewards(traj.score, n_steps, horizon)
         success = scenario.reward.success(traj.score)
+        # cross-domain shaping: one learner drains a mixed stream, so each
+        # backend's reward magnitude is normalized by its calibrated scale
+        # before credit assignment. SimOS scales at exactly 1.0 and the
+        # guard skips the multiply, keeping the legacy path bit-identical.
+        scale = get_backend(scenario.backend).reward_scale
+        if scale != 1.0:
+            step_rewards = step_rewards * np.float32(scale)
 
         with self.telemetry.timer("encode_vs"):
             ids, mask, step_ends = encode_for_rl(
@@ -172,6 +180,7 @@ class TrajectoryIngestor:
             "task_id": traj.task_id,
             "scenario": scenario.name,
             "family": scenario.family,
+            "backend": scenario.backend,
             "score": traj.score,
             "success": success,
             "n_steps": n_steps,
@@ -207,9 +216,11 @@ class TrajectoryIngestor:
 
         self.telemetry.count("ingested")
         self.telemetry.count(f"family_total:{scenario.family}")
+        self.telemetry.count(f"backend_total:{scenario.backend}")
         if success:
             self.telemetry.count("ingest_success")
             self.telemetry.count(f"family_success:{scenario.family}")
+            self.telemetry.count(f"backend_success:{scenario.backend}")
         self.telemetry.observe("episode_return", sample["episode_return"])
         self.telemetry.observe("encoded_len", float(len(ids)))
         self.telemetry.gauge("replay_depth", float(len(self.replay)))

@@ -6,7 +6,12 @@ catches: a replica whose host exhausted an untuned kernel limit keeps
 without a single exception. The only way to see it is to *ask a question
 whose answer is known*: the probe runs a scripted no-op reset/step whose
 observation is exactly predictable from the replica's visible state and
-checksums the frame against :func:`repro.core.replica.expected_observation`.
+checksums the frame against the replica's own known-answer contract
+(``canary_probe``). Every ``repro.envs`` backend implements that
+contract — SimOS answers with
+:func:`repro.core.replica.expected_observation`, other backends salt
+the same digest with their backend name — so the whole recovery ladder
+works unchanged on a heterogeneous fleet.
 
 A probe costs ``LatencyModel.canary_s`` deterministic virtual seconds
 (no jitter — probing never perturbs a replica's latency RNG stream) and

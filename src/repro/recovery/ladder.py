@@ -27,6 +27,12 @@ Every repair observes ``recovery_mttr_vs:<layer>`` in telemetry, and
 every canary detection observes ``silent_detection_latency_vs`` against
 the instant the runner broke — the Fig. 6 recovery benchmark's per-layer
 MTTR table reads straight out of these series.
+
+The ladder is backend-agnostic: it speaks only the ``EnvBackend``
+replica protocol (alive / recover / reboot / ``canary_probe``), so the
+same L0–L4 escalation protects SWE sandboxes, headless browsers and
+device emulators exactly as it protects OS VMs — each backend's
+known-answer canary is what makes L3 detection possible off-platform.
 """
 
 from __future__ import annotations

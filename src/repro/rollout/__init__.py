@@ -8,6 +8,6 @@ from repro.rollout.engine import (EpisodeResult, RolloutConfig, RolloutEngine,
                                   RolloutReport)
 from repro.rollout.scenarios import (RewardSpec, Scenario, ScenarioProfile,
                                      ScenarioRegistry, default_registry,
-                                     get_default_registry)
+                                     get_default_registry, mixed_registry)
 from repro.rollout.writer import (TrajectoryWriter, VirtualWriterGate,
                                   WriterStats)

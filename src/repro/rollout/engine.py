@@ -240,15 +240,18 @@ class RolloutEngine:
             scenario = self.registry.resolve(task)
             for attempt in range(cfg.max_attempts):
                 result.attempts = attempt + 1
+                backend = task.get("backend")
                 got = self.gateway.acquire(
                     task["task_id"], timeout=cfg.acquire_timeout_s,
-                    exclude=excluded)
+                    exclude=excluded, backend=backend)
                 if got is None and excluded:
                     # every other node is busy/unhealthy: fall back to the
                     # full fleet rather than deadlocking on exclusions
+                    # (backend-constrained routing still applies)
                     excluded.clear()
                     got = self.gateway.acquire(
-                        task["task_id"], timeout=cfg.acquire_timeout_s)
+                        task["task_id"], timeout=cfg.acquire_timeout_s,
+                        backend=backend)
                 if got is None:
                     result.error = f"no runner available ({task['task_id']})"
                     break
@@ -537,16 +540,18 @@ class RolloutEngine:
             scenario = self.registry.resolve(task)
             for attempt in range(cfg.max_attempts):
                 result.attempts = attempt + 1
+                backend = task.get("backend")
                 got = yield from self.gateway.acquire_ev(
                     task["task_id"], timeout=cfg.acquire_timeout_vs,
-                    exclude=excluded, tenant=tenant)
+                    exclude=excluded, tenant=tenant, backend=backend)
                 if got is None and excluded:
                     # every other node is busy/unhealthy: fall back to the
                     # full fleet rather than deadlocking on exclusions
+                    # (backend-constrained routing still applies)
                     excluded.clear()
                     got = yield from self.gateway.acquire_ev(
                         task["task_id"], timeout=cfg.acquire_timeout_vs,
-                        tenant=tenant)
+                        tenant=tenant, backend=backend)
                 if got is None:
                     result.error = f"no runner available ({task['task_id']})"
                     break

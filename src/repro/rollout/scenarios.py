@@ -17,51 +17,14 @@ from typing import Callable, Iterator, Optional
 import numpy as np
 
 from repro.core.tasks import TaskSpec, TABLE3_ROWS
+# RewardSpec's canonical home is the backend layer: per-family defaults
+# are owned by each EnvBackend (single source of truth) and the registry
+# looks them up through the backend. Re-exported here so existing
+# ``from repro.rollout.scenarios import RewardSpec`` callers keep working.
+from repro.envs.base import RewardSpec, get_backend
 
 # (obs, step_idx) -> (thought, action)
 Policy = Callable[[object, int], tuple[str, str]]
-
-
-@dataclass(frozen=True)
-class RewardSpec:
-    """Per-family shaping of the scenario outcome into RL rewards.
-
-    ``evaluate()`` returns a raw score in [0, 1]; the spec turns it into
-    the learner's objective: a success criterion (``success_threshold``),
-    a terminal reward (success bonus + efficiency bonus for finishing
-    under the horizon, or partial credit for near-misses), and a per-step
-    penalty that prices each environment step so the policy is pushed
-    toward short successful episodes — the grounding that makes scenario
-    outcomes matter to training (cf. Gym-Anything)."""
-
-    success_threshold: float = 0.5
-    success_bonus: float = 1.0
-    efficiency_bonus: float = 0.25   # scaled by unused fraction of horizon
-    partial_weight: float = 0.25     # credit for sub-threshold scores
-    step_penalty: float = 0.01
-
-    def success(self, score: float) -> bool:
-        return score >= self.success_threshold
-
-    def terminal_reward(self, score: float, n_steps: int,
-                        horizon: int) -> float:
-        if self.success(score):
-            spare = max(horizon - n_steps, 0) / max(horizon, 1)
-            return self.success_bonus + self.efficiency_bonus * spare
-        return self.partial_weight * score
-
-    def step_rewards(self, score: float, n_steps: int,
-                     horizon: int) -> np.ndarray:
-        """Dense per-step reward vector: -step_penalty everywhere, with
-        the shaped terminal reward added on the final step."""
-        n = max(n_steps, 1)
-        r = np.full(n, -self.step_penalty, np.float32)
-        r[-1] += self.terminal_reward(score, n_steps, horizon)
-        return r
-
-    def episode_return(self, score: float, n_steps: int,
-                       horizon: int) -> float:
-        return float(self.step_rewards(score, n_steps, horizon).sum())
 
 
 @dataclass(frozen=True)
@@ -99,6 +62,7 @@ class Scenario:
     profile: ScenarioProfile = field(default_factory=ScenarioProfile)
     weight: float = 1.0            # sampling weight (Table-3 trajectory mix)
     reward: RewardSpec = field(default_factory=RewardSpec)
+    backend: str = "simos"         # EnvBackend this family's episodes need
 
     def make_task(self, index: int, rng: random.Random) -> TaskSpec:
         return TaskSpec(
@@ -108,7 +72,8 @@ class Scenario:
             description=self.description,
             horizon=rng.randint(*self.profile.horizon),
             setup_software=(self.domain,),
-            scenario=self.name)
+            scenario=self.name,
+            backend=self.backend)
 
 
 class ScenarioRegistry:
@@ -121,6 +86,9 @@ class ScenarioRegistry:
     def register(self, scenario: Scenario) -> Scenario:
         if scenario.name in self._scenarios:
             raise ValueError(f"scenario {scenario.name!r} already registered")
+        # every scenario binds to a real backend — an unregistered backend
+        # name would strand its tasks at routing time, so it fails here
+        get_backend(scenario.backend)
         self._scenarios[scenario.name] = scenario
         return scenario
 
@@ -160,6 +128,15 @@ class ScenarioRegistry:
     def by_family(self, family: str) -> list[Scenario]:
         return [s for s in self._scenarios.values() if s.family == family]
 
+    def backends(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for s in self._scenarios.values():
+            seen.setdefault(s.backend)
+        return list(seen)
+
+    def by_backend(self, backend: str) -> list[Scenario]:
+        return [s for s in self._scenarios.values() if s.backend == backend]
+
     def domains(self) -> list[str]:
         seen: dict[str, None] = {}
         for s in self._scenarios.values():
@@ -168,12 +145,14 @@ class ScenarioRegistry:
 
     # ------------------------------------------------------------- sampling
     def sample(self, n: int, *, seed: int = 0,
-               families: Optional[list[str]] = None) -> list[TaskSpec]:
+               families: Optional[list[str]] = None,
+               backends: Optional[list[str]] = None) -> list[TaskSpec]:
         """Weighted sample of task specs across (a subset of) scenarios."""
         rng = random.Random(seed)
         pool = [s for s in self._scenarios.values()
-                if families is None or s.family in families]
-        assert pool, "no scenarios match the requested families"
+                if (families is None or s.family in families)
+                and (backends is None or s.backend in backends)]
+        assert pool, "no scenarios match the requested families/backends"
         weights = [s.weight for s in pool]
         picks = rng.choices(pool, weights=weights, k=n)
         return [s.make_task(i, rng) for i, s in enumerate(picks)]
@@ -299,22 +278,11 @@ def default_registry() -> ScenarioRegistry:
     mid = ScenarioProfile(step_mean_s=2.15)
     long = ScenarioProfile(step_mean_s=2.4, configure_s=5.0)
 
-    # Per-family reward shaping: step penalties track the family's step
-    # cost (slow browser/image steps are expensive; terminal steps are
-    # cheap), thresholds track how sharply the family's evaluator
-    # separates success from failure, and the multi-app workflows give
-    # more partial credit because partial completion is still useful.
-    rewards = {
-        "office": RewardSpec(success_threshold=0.50, step_penalty=0.010),
-        "browser": RewardSpec(success_threshold=0.45, step_penalty=0.020),
-        "email": RewardSpec(success_threshold=0.50, step_penalty=0.010),
-        "media": RewardSpec(success_threshold=0.40, step_penalty=0.008),
-        "coding": RewardSpec(success_threshold=0.55, step_penalty=0.012),
-        "image": RewardSpec(success_threshold=0.50, step_penalty=0.018),
-        "terminal": RewardSpec(success_threshold=0.60, step_penalty=0.005),
-        "multi_app": RewardSpec(success_threshold=0.35, step_penalty=0.008,
-                                partial_weight=0.40),
-    }
+    # Per-family reward shaping lives on the backend (the single source
+    # of truth — see SimOSBackend.reward_defaults); reward_spec() raises
+    # on a family the backend does not define, so a typo'd family string
+    # fails registration instead of silently training on generic shaping.
+    simos = get_backend("simos")
 
     rows = {domain: (ttype, desc, weight)
             for ttype, domain, desc, weight, _steps in TABLE3_ROWS}
@@ -330,7 +298,7 @@ def default_registry() -> ScenarioRegistry:
             policy=_cycle_policy(actions),
             profile=replace(profile, horizon=horizon),
             weight=float(weight),
-            reward=rewards[family]))
+            reward=simos.reward_spec(family)))
 
     add("office_writer", "office", "LibreOffice Writer", OFFICE_ACTIONS, mid)
     add("office_calc", "office", "LibreOffice Calc", OFFICE_ACTIONS, mid)
@@ -342,6 +310,80 @@ def default_registry() -> ScenarioRegistry:
     add("image_gimp", "image", "GIMP", OFFICE_ACTIONS, slow)
     add("terminal_os", "terminal", "OS", TERMINAL_ACTIONS, fast)
     add("multi_app", "multi_app", "Multi-Apps", MULTI_APP_ACTIONS, long)
+    return reg
+
+
+SWE_ACTIONS = [
+    ("Reading the failing test output", "exec('pytest -x -q 2>&1 | tail')"),
+    ("Opening the implicated module", "open('src/parser.py')"),
+    ("Patching the boundary condition", "edit('src/parser.py', 'n + 1', 'n')"),
+    ("Re-running the focused test", "exec('pytest tests/test_parser.py -q')"),
+]
+WEB_NAV_ACTIONS = [
+    ("Loading the landing page", "goto('https://example.org')"),
+    ("Querying for the target item", "fill('#search', 'quarterly totals')"),
+    ("Submitting the search", "press('#search', 'Enter')"),
+    ("Following the top hit", "click('.result a')"),
+]
+WEB_FORM_ACTIONS = [
+    ("Opening the signup form", "goto('https://example.org/signup')"),
+    ("Filling the email field", "fill('#email', 'agent@example.org')"),
+    ("Accepting the terms", "check('#tos')"),
+    ("Submitting the form", "click('#submit')"),
+]
+MOBILE_ACTIONS = [
+    ("Waking the device", "key('wakeup')"),
+    ("Opening the target app", "tap(96, 480)"),
+    ("Scrolling to the setting", "swipe(160, 600, 160, 200)"),
+    ("Toggling the switch", "tap(288, 344)"),
+]
+
+
+def mixed_registry() -> ScenarioRegistry:
+    """The default SimOS families plus one scenario per non-SimOS family.
+
+    This is the heterogeneous-fleet task source: every scenario is bound
+    to its backend, so the gateway's backend-constrained routing keeps
+    each episode on a matching pool. Profiles mirror the backends'
+    calibrated latency models (the profile feeds the virtual-time
+    calibration; the replica's own ``LatencyModel`` drives the engine),
+    and rewards come from each backend's ``reward_defaults``."""
+    from repro.envs import get_backend as _gb
+
+    reg = default_registry()
+
+    def add(name, family, backend_name, domain, desc, actions, profile,
+            weight):
+        reg.register(Scenario(
+            name=name, family=family, domain=domain, description=desc,
+            policy=_cycle_policy(actions), profile=profile,
+            weight=float(weight), reward=_gb(backend_name).reward_spec(family),
+            backend=backend_name))
+
+    add("swe_bugfix", "swe_bugfix", "swe", "Git Repo", "Bug Fixing",
+        SWE_ACTIONS,
+        ScenarioProfile(step_mean_s=1.4, step_sigma=0.55, configure_s=2.5,
+                        reset_s=0.9, evaluate_s=6.0, horizon=(6, 14)), 300)
+    add("swe_feature", "swe_feature", "swe", "Git Repo", "Feature Patch",
+        SWE_ACTIONS,
+        ScenarioProfile(step_mean_s=1.4, step_sigma=0.55, configure_s=2.5,
+                        reset_s=0.9, evaluate_s=6.0, horizon=(8, 18)), 200)
+    add("web_nav", "web_nav", "browser", "Headless Web", "Site Navigation",
+        WEB_NAV_ACTIONS,
+        ScenarioProfile(step_mean_s=0.9, step_sigma=0.50, configure_s=1.2,
+                        reset_s=1.5, evaluate_s=0.8, horizon=(8, 20)), 300)
+    add("web_form", "web_form", "browser", "Headless Web", "Form Filling",
+        WEB_FORM_ACTIONS,
+        ScenarioProfile(step_mean_s=0.9, step_sigma=0.50, configure_s=1.2,
+                        reset_s=1.5, evaluate_s=0.8, horizon=(6, 14)), 200)
+    add("mobile_app", "mobile_app", "mobile", "Device Emulator", "App Flow",
+        MOBILE_ACTIONS,
+        ScenarioProfile(step_mean_s=1.6, step_sigma=0.40, configure_s=4.0,
+                        reset_s=2.5, evaluate_s=1.2, horizon=(8, 18)), 300)
+    add("mobile_settings", "mobile_settings", "mobile", "Device Emulator",
+        "Settings Change", MOBILE_ACTIONS,
+        ScenarioProfile(step_mean_s=1.6, step_sigma=0.40, configure_s=4.0,
+                        reset_s=2.5, evaluate_s=1.2, horizon=(6, 12)), 200)
     return reg
 
 

@@ -447,6 +447,84 @@ def test_federation_wall_budget_and_missing_region():
     assert any("MISSING region[" in p for p in problems)
 
 
+def test_committed_mixedfleet_baseline_self_passes():
+    base = _baseline("BENCH_mixedfleet.json")
+    assert cb.check(base, copy.deepcopy(base), 0.10) == []
+
+
+def test_mixedfleet_backend_row_regression_fails():
+    base = _baseline("BENCH_mixedfleet.json")
+    perturbed = copy.deepcopy(base)
+    for row in perturbed["backends"]:
+        if row["name"] == "swe":
+            row["traj_per_min"] *= 0.85
+    problems = cb.check(base, perturbed, 0.10)
+    assert len(problems) == 1
+    assert "REGRESSION" in problems[0] and "swe" in problems[0]
+
+
+def test_mixedfleet_canary_and_routing_gates_are_strict():
+    """The mixed-fleet booleans are the tentpole claims: every backend's
+    canary detects its silent breaks, nothing corrupt lands after
+    quarantine, and routing never crosses backends. Flipping any of them
+    must fail regardless of tolerance; a single routing violation (0 ->
+    1) is out of band at any tolerance because the baseline is zero."""
+    base = _baseline("BENCH_mixedfleet.json")
+    assert base["gate"]["all_silent_detected"] is True
+    assert base["gate"]["no_corrupt_after_quarantine"] is True
+    assert base["gate"]["routing_violations"] == 0
+    perturbed = copy.deepcopy(base)
+    perturbed["gate"]["all_silent_detected"] = False
+    perturbed["gate"]["no_corrupt_after_quarantine"] = False
+    perturbed["gate"]["routing_violations"] = 1
+    problems = cb.check(base, perturbed, 0.50)
+    assert any("all_silent_detected" in p for p in problems)
+    assert any("no_corrupt_after_quarantine" in p for p in problems)
+    assert any("routing_violations" in p for p in problems)
+
+
+def test_mixedfleet_detection_latency_rise_is_a_regression():
+    base = _baseline("BENCH_mixedfleet.json")
+    perturbed = copy.deepcopy(base)
+    for row in perturbed["backends"]:
+        row["detection_p95_vs"] = row["detection_p95_vs"] * 1.5 + 10.0
+    problems = cb.check(base, perturbed, 0.10)
+    assert problems
+    assert all("REGRESSION" in p for p in problems
+               if "detection_p95_vs" in p)
+
+
+def test_mixedfleet_learner_rate_gets_the_wide_band():
+    """learner steps/min is wall-clock (host speed): a 40% dip passes
+    the wide band, a 90% collapse fails; the deterministic update count
+    keeps the tight band."""
+    base = _baseline("BENCH_mixedfleet.json")
+    noisy = copy.deepcopy(base)
+    noisy["learner"]["steps_per_min"] *= 0.60
+    assert cb.check(base, noisy, 0.10) == []
+    collapsed = copy.deepcopy(base)
+    collapsed["learner"]["steps_per_min"] *= 0.10
+    problems = cb.check(base, collapsed, 0.10)
+    assert any("learner.steps_per_min" in p for p in problems)
+    fewer = copy.deepcopy(base)
+    fewer["learner"]["updates"] = int(base["learner"]["updates"] * 0.5)
+    problems = cb.check(base, fewer, 0.10)
+    assert any("learner.updates" in p for p in problems)
+
+
+def test_mixedfleet_wall_budget_and_missing_backend():
+    base = _baseline("BENCH_mixedfleet.json")
+    over = copy.deepcopy(base)
+    over["wall_seconds"] = base["wall_budget_s"] * 1.5
+    problems = cb.check(base, over, 0.10)
+    assert any("wall budget" in p for p in problems)
+    missing = copy.deepcopy(base)
+    missing["backends"] = [r for r in missing["backends"]
+                           if r["name"] != "mobile"]
+    problems = cb.check(base, missing, 0.10)
+    assert any("MISSING backend[mobile]" in p for p in problems)
+
+
 def test_malformed_payloads_are_rejected():
     assert cb.check({}, {}, 0.10) == [
         "MALFORMED baseline: neither engine rows nor a gate block"

@@ -1,0 +1,316 @@
+"""EnvBackend protocol conformance + SimOS-extraction bit-exactness.
+
+Every registered backend must honor the same contract the control plane
+assumes: the SimOS lifecycle ordering, the known-answer canary (salted
+per backend, so a cross-wired probe cannot pass by accident), resource
+accounting the placer can bin-pack, and per-family reward defaults that
+raise on unknown families. The extraction itself is gated twice: a
+replica built by ``SimOSBackend`` must be *bit-identical* to a directly
+constructed ``SimOSReplica`` (same durations, same observation bytes,
+same fault stream), and a full engine run over explicitly-backended
+pools must replay bit-for-bit against the pre-protocol default path on
+both event kernels."""
+import numpy as np
+import pytest
+
+from repro.cluster import Cluster, default_specs
+from repro.cluster.host import DEFAULT_FOOTPRINT, ReplicaFootprint
+from repro.core import (CowStore, DiskImage, EventLoop, FaultInjector,
+                        Gateway, RunnerPool)
+from repro.core.faults import ReplicaError
+from repro.core.replica import SimOSReplica, expected_observation
+from repro.core.runner_pool import HOST_OS_BASELINE_GB
+from repro.envs import (EnvBackend, RewardSpec, SimOSBackend,
+                        UnknownBackendError, UnknownFamilyError,
+                        backend_names, expected_backend_observation,
+                        get_backend, register_backend)
+from repro.rollout import (RolloutConfig, RolloutEngine, TrajectoryWriter,
+                           get_default_registry)
+from repro.rollout.scenarios import mixed_registry
+
+BUILTIN_BACKENDS = ("simos", "swe", "browser", "mobile")
+# conformance parametrizes over the live registry: a newly registered
+# backend is picked up by the protocol suite automatically
+ALL_BACKENDS = tuple(backend_names())
+KERNELS = ("scalar", "batched")
+
+
+def _base(size=8 << 20):
+    store = CowStore(block_size=1 << 20)
+    return DiskImage.create_base(store, "ubuntu", size)
+
+
+def _task():
+    return get_default_registry().sample(1, seed=3)[0].to_dict()
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_serves_all_four_backends():
+    assert set(BUILTIN_BACKENDS) <= set(backend_names())
+    for name in BUILTIN_BACKENDS:
+        b = get_backend(name)
+        assert b.name == name
+        assert b is get_backend(name), "registry must return one instance"
+        assert b.description
+    with pytest.raises(UnknownBackendError, match="no EnvBackend"):
+        get_backend("vr-headset")
+
+
+def test_duplicate_registration_of_a_distinct_instance_raises():
+    # idempotent for the same instance...
+    b = get_backend("simos")
+    assert register_backend(b) is b
+    # ...but a second, distinct object under a taken name is a wiring bug
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend(SimOSBackend())
+
+
+# ---------------------------------------------------- lifecycle conformance
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_lifecycle_ordering_is_enforced(name):
+    backend = get_backend(name)
+    rep = backend.make_replica(
+        f"{name}/r0", _base(), faults=FaultInjector(enabled=False), seed=1)
+    # operating on a cold (never-booted) replica is a crash, not a no-op
+    with pytest.raises(ReplicaError):
+        rep.step("click")
+    with pytest.raises(ReplicaError):
+        rep.configure(_task())
+    rep.boot()
+    with pytest.raises(AssertionError, match="configure before reset"):
+        rep.reset()
+    rep.configure(_task())
+    obs, dur = rep.reset()
+    assert obs.dtype == np.uint8 and dur > 0.0
+    for action in ("open", "type", "submit"):
+        obs, reward, done, info, dur = rep.step(action)
+        assert obs.dtype == np.uint8 and dur > 0.0
+    score, _ = rep.evaluate()
+    assert 0.0 <= score <= 1.0
+    rep.close()
+    with pytest.raises(ReplicaError):
+        rep.step("after close")
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_canary_known_answer_contract(name):
+    backend = get_backend(name)
+    rep = backend.make_replica(
+        f"{name}/r0", _base(), faults=FaultInjector(enabled=False), seed=2)
+    rep.boot()
+    rep.configure(_task())
+    obs, _ = rep.reset()
+    # the healthy observation IS the backend's known answer, bit for bit
+    want = backend.expected_canary(rep.replica_id, rep.obs_nonce,
+                                   rep.step_count)
+    assert obs.tobytes() == want.tobytes()
+    healthy, lat = rep.canary_probe()
+    assert healthy and lat > 0.0
+    # silent corruption (the §3.4 kernel-limit failure mode) must trip
+    # the same probe on every backend — no backend-specific detector
+    rep.silent_broken = True
+    healthy, _ = rep.canary_probe()
+    assert not healthy
+
+
+def test_backend_salted_canaries_are_pairwise_distinct():
+    """A probe wired to the wrong backend's reference must fail loudly:
+    the four backends' known answers for the *same* replica coordinates
+    are all different."""
+    answers = {
+        name: get_backend(name).expected_canary("r7", 3, 5).tobytes()
+        for name in BUILTIN_BACKENDS
+    }
+    assert len(set(answers.values())) == len(BUILTIN_BACKENDS)
+    # the simos reference is the unsalted pre-protocol function...
+    assert answers["simos"] == expected_observation("r7", 3, 5).tobytes()
+    # ...and the salted helper is what the others use
+    assert answers["swe"] == expected_backend_observation(
+        "swe", "r7", 3, 5).tobytes()
+
+
+# ------------------------------------------------------ resource accounting
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_replica_resources_and_footprint_agree(name):
+    backend = get_backend(name)
+    rep = backend.make_replica(
+        f"{name}/r0", _base(), faults=FaultInjector(enabled=False), seed=0)
+    assert rep.resources.ram_limit_gb == backend.ram_limit_gb()
+    fp = ReplicaFootprint.for_backend(backend)
+    assert fp.ram_limit_gb == backend.ram_limit_gb()
+    assert fp.cow_bytes == backend.est_cow_bytes
+    if name == "simos":
+        # the extracted oracle's footprint IS the fleet default — value
+        # equality is what keeps legacy placement math bit-identical
+        assert fp == DEFAULT_FOOTPRINT
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_pool_charges_the_backend_ram_envelope(name):
+    backend = get_backend(name)
+    pool = RunnerPool(f"{name}-n0", _base(32 << 20), size=4,
+                      faults=FaultInjector(enabled=False), backend=backend)
+    assert pool.backend_name == name
+    assert pool.health()["backend"] == name
+    assert pool.host.ram_used_gb == pytest.approx(
+        HOST_OS_BASELINE_GB + 4 * backend.ram_limit_gb())
+    for runner in pool._all.values():
+        assert runner.manager.replica.resources.ram_limit_gb == \
+            backend.ram_limit_gb()
+
+
+def test_backend_latency_bands_reach_the_replica():
+    for name in ("swe", "browser", "mobile"):
+        backend = get_backend(name)
+        rep = backend.make_replica(f"{name}/r0", _base(), seed=0)
+        assert rep.latency is backend.latency() or \
+            rep.latency == backend.latency()
+        # an explicit fleet-wide calibration override wins over the bands
+        simos_lat = SimOSReplica("x", _base()).latency
+        rep2 = backend.make_replica(f"{name}/r1", _base(), seed=0,
+                                    latency=simos_lat)
+        assert rep2.latency is simos_lat
+
+
+# ------------------------------------------------------------------ rewards
+def test_reward_defaults_live_on_the_backend():
+    for name in ALL_BACKENDS:
+        backend = get_backend(name)
+        assert backend.families(), f"{name} declares no reward families"
+        for family in backend.families():
+            assert isinstance(backend.reward_spec(family), RewardSpec)
+        with pytest.raises(UnknownFamilyError, match="no reward defaults"):
+            backend.reward_spec("definitely-not-a-family")
+        assert 0.0 < backend.reward_scale <= 1.0
+
+
+def test_default_registry_rewards_come_from_the_simos_backend():
+    simos = get_backend("simos")
+    registry = get_default_registry()
+    assert set(registry.families()) == set(simos.families())
+    for scenario in registry:
+        assert scenario.backend == "simos"
+        assert scenario.reward == simos.reward_spec(scenario.family)
+
+
+def test_mixed_registry_binds_every_backend():
+    registry = mixed_registry()
+    assert set(registry.backends()) == set(BUILTIN_BACKENDS)
+    for scenario in registry:
+        backend = get_backend(scenario.backend)
+        assert scenario.reward == backend.reward_spec(scenario.family)
+
+
+# ----------------------------------------------- extraction: bit-exactness
+def _scripted_run(rep):
+    """Drive one replica through a fixed script; record every observable."""
+    trace = []
+    trace.append(("boot", rep.boot()))
+    task = _task()
+    trace.append(("configure", rep.configure(task)))
+    obs, dur = rep.reset()
+    trace.append(("reset", dur, obs.tobytes()))
+    for i in range(6):
+        try:
+            obs, reward, done, info, dur = rep.step(f"action-{i}")
+            trace.append(("step", i, reward, done, dur, obs.tobytes()))
+        except ReplicaError as e:
+            trace.append(("fault", i, e.fault.value))
+            trace.append(("reboot", rep.boot()))
+            trace.append(("reconfigure", rep.configure(task)))
+    score, dur = rep.evaluate()
+    trace.append(("evaluate", score, dur))
+    healthy, lat = rep.canary_probe()
+    trace.append(("canary", healthy, lat))
+    trace.append(("close", rep.close()))
+    return trace
+
+
+def test_simos_backend_replica_is_bit_identical_to_direct_construction():
+    """The extracted factory path must change *nothing*: same latency
+    draws, same fault stream, same observation bytes as constructing
+    SimOSReplica by hand — faults enabled, so the RNG streams are pinned
+    too."""
+    for seed in (0, 7, 1234):
+        direct = _scripted_run(SimOSReplica(
+            "r0", _base(), faults=FaultInjector(seed=seed), seed=seed))
+        via_backend = _scripted_run(SimOSBackend().make_replica(
+            "r0", _base(), faults=FaultInjector(seed=seed), seed=seed))
+        assert direct == via_backend
+
+
+def _engine_report(kernel, *, explicit_backend):
+    """A small live-engine run; the full observable surface, exactly."""
+    base = _base(64 << 20)
+    backend = SimOSBackend() if explicit_backend else None
+    pools = [RunnerPool(f"n{i}", base, size=4,
+                        faults=FaultInjector(seed=i), seed=i,
+                        backend=backend)
+             for i in range(2)]
+    gw = Gateway(pools)
+    writer = TrajectoryWriter(capacity=32, retain=False)
+    engine = RolloutEngine(gw, writer, config=RolloutConfig(max_inflight=8))
+    tasks = get_default_registry().sample(16, seed=11)
+    rep = engine.run_event_driven(tasks, loop=EventLoop(kernel=kernel))
+    writer.drain(timeout=10.0)
+    out = {
+        "completed": rep.completed,
+        "failed": rep.failed,
+        "total_steps": rep.total_steps,
+        "virtual_seconds": rep.virtual_seconds,
+        "virtual_makespan": rep.virtual_makespan,
+        "results": [(r.task["task_id"], r.ok, r.steps, r.attempts,
+                     tuple(r.nodes), r.score, r.virtual_seconds)
+                    for r in rep.results],
+        "writer": (writer.stats.written, writer.stats.consumed,
+                   writer.stats.steps),
+    }
+    writer.close()
+    gw.stop()
+    return out
+
+
+def test_extracted_stack_replays_bit_identically_on_both_kernels():
+    """Engine-level extraction gate: pools built with an explicit
+    ``SimOSBackend`` replay bit-for-bit against the default (pre-protocol
+    signature) path — same event order, same virtual timestamps — on the
+    scalar heap oracle AND the batched time-wheel kernel."""
+    reports = {}
+    for kernel in KERNELS:
+        legacy = _engine_report(kernel, explicit_backend=False)
+        extracted = _engine_report(kernel, explicit_backend=True)
+        assert legacy == extracted, f"extraction drift on {kernel}"
+        reports[kernel] = extracted
+    assert reports["scalar"] == reports["batched"]
+
+
+# --------------------------------------------------- mixed-fleet routing
+def test_mixed_cluster_routes_by_backend():
+    """Two backends behind one gateway: every episode lands only on
+    pools of its own backend, and both backends complete work."""
+    cluster = Cluster(default_specs(16, runners_per_node=8), 16,
+                      runners_per_node=8, seed=0,
+                      backends=[("swe", 8), ("browser", 8)])
+    node_backend = {p.node_id: p.backend_name for p in cluster.pools}
+    assert set(node_backend.values()) == {"swe", "browser"}
+    registry = mixed_registry()
+    writer = TrajectoryWriter(capacity=64, retain=False)
+    engine = RolloutEngine(cluster, writer, registry=registry,
+                           config=RolloutConfig(max_inflight=16,
+                                                acquire_timeout_vs=600.0))
+    tasks = registry.sample(24, seed=5, backends=["swe", "browser"])
+    report = engine.run_event_driven(tasks, loop=EventLoop())
+    writer.drain(timeout=10.0)
+    writer.close()
+    cluster.close()
+    completed_by = {"swe": 0, "browser": 0}
+    for r in report.results:
+        want = r.task["backend"]
+        for node in r.nodes:
+            assert node_backend[node] == want, (
+                f"task {r.task['task_id']} ({want}) routed to "
+                f"{node_backend[node]} pool {node}")
+        if r.ok:
+            completed_by[want] += 1
+    assert completed_by["swe"] > 0 and completed_by["browser"] > 0
+    assert report.completed == sum(completed_by.values())

@@ -269,7 +269,7 @@ def test_evicted_host_pending_grow_never_boots():
     assert granted == 4 and cluster._pending_grows
     cluster.evict_host(node_id)
     # the pending grow for the evicted host is gone
-    assert all(h is not sick for _t, h, _n in cluster._pending_grows)
+    assert all(p[1] is not sick for p in cluster._pending_grows)
 
     def clock_driver():
         yield Sleep(40.0)
